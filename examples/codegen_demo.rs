@@ -1,0 +1,26 @@
+//! Codegen demo: run the CFA compiler pass end to end and print the HLS C
+//! it generates (the paper's Fig 12 copy loops + Fig 13 DATAFLOW top).
+//!
+//! Run with: `cargo run --release --example codegen_demo [-- --benchmark gaussian]`
+
+use cfa::harness::workloads;
+use cfa::layout::cfa::Cfa;
+use cfa::poly::deps::DepPattern;
+use cfa::poly::tiling::Tiling;
+use cfa::util::cli::{env_args, Command};
+
+fn main() -> anyhow::Result<()> {
+    let cmd = Command::new("codegen_demo", "emit HLS C")
+        .opt("benchmark", "Table I benchmark", Some("jacobi2d5p"))
+        .opt("tile", "tile sizes", Some("16x16x16"));
+    let a = cmd.parse(&env_args(0)).map_err(anyhow::Error::msg)?;
+    let name = a.get_or("benchmark", "jacobi2d5p");
+    let tile = a.get_sizes("tile").map_err(anyhow::Error::msg)?.unwrap();
+    let w = workloads::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown benchmark '{name}'"))?;
+    let deps = DepPattern::new(w.deps.clone())?;
+    let tiling = Tiling::new(w.space_for(&tile, 3), tile);
+    let cfa = Cfa::new(tiling, deps)?;
+    print!("{}", cfa::hlsgen::generate_c(&cfa, name));
+    Ok(())
+}

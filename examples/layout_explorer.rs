@@ -1,0 +1,97 @@
+//! Layout explorer: feed an arbitrary uniform dependence pattern (or a
+//! Table I benchmark) and inspect what every allocation does with it —
+//! facet shapes, burst plans, footprints, simulated bandwidth.
+//!
+//! Run with:
+//!   cargo run --release --example layout_explorer -- --benchmark gaussian
+//!   cargo run --release --example layout_explorer -- \
+//!       --deps "-1,0,0;-1,-1,-1;0,0,-2" --tile 8x8x8
+//!
+//! Custom patterns must be backwards (all components <= 0); forward
+//! patterns are skew-normalized automatically when possible.
+
+use cfa::coordinator::AllocKind;
+use cfa::harness::figures::measure_bandwidth;
+use cfa::harness::workloads::{self, Workload};
+use cfa::layout::cfa::Cfa;
+use cfa::layout::Allocation;
+use cfa::memsim::MemConfig;
+use cfa::poly::deps::{normalize, DepPattern};
+use cfa::poly::tiling::Tiling;
+use cfa::util::cli::{env_args, Command};
+
+fn parse_deps(s: &str) -> anyhow::Result<Vec<Vec<i64>>> {
+    s.split(';')
+        .map(|v| {
+            v.split(',')
+                .map(|x| x.trim().parse::<i64>().map_err(|e| anyhow::anyhow!("{e}")))
+                .collect()
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let cmd = Command::new("layout_explorer", "inspect allocations")
+        .opt("benchmark", "Table I name (overrides --deps)", None)
+        .opt("deps", "custom pattern: \"-1,0;-1,-1\" (';'-separated)", None)
+        .opt("tile", "tile sizes", Some("16x16x16"))
+        .opt("tiles-per-dim", "tiles per dim", Some("3"));
+    let a = cmd.parse(&env_args(0)).map_err(anyhow::Error::msg)?;
+    let tile = a.get_sizes("tile").map_err(anyhow::Error::msg)?.unwrap();
+    let tpd = a.get_usize("tiles-per-dim", 3).map_err(anyhow::Error::msg)? as i64;
+
+    let w: Workload = if let Some(name) = a.get("benchmark") {
+        workloads::by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown benchmark '{name}'"))?
+    } else if let Some(d) = a.get("deps") {
+        let raw = parse_deps(d)?;
+        let (skew, pat) = normalize(&raw)?;
+        if !skew.is_identity() {
+            println!("pattern skew-normalized with factors {:?}", skew.factors);
+        }
+        Workload {
+            name: "custom",
+            equivalent: "user pattern",
+            dims: pat.dims(),
+            deps: pat.vecs().to_vec(),
+            tile_sizes: vec![tile.clone()],
+        }
+    } else {
+        workloads::by_name("jacobi2d5p").unwrap()
+    };
+    anyhow::ensure!(tile.len() == w.dims, "tile dims must match pattern dims");
+
+    let deps = DepPattern::new(w.deps.clone())?;
+    println!("pattern: {deps}");
+    println!("facet widths w_k: {:?}\n", deps.widths());
+    let tiling = Tiling::new(w.space_for(&tile, tpd), tile.clone());
+
+    // CFA internals
+    let cfa = Cfa::new(tiling.clone(), deps.clone())?;
+    let names: Vec<&str> = (0..w.dims).map(|d| cfa::hlsgen::AXIS_NAMES[d]).collect();
+    println!("CFA facet arrays:");
+    for fa in cfa.facet_arrays() {
+        println!(
+            "  {}  contiguity axis: {}",
+            fa.describe(&names),
+            fa.contig.map(|c| names[c]).unwrap_or("-")
+        );
+    }
+
+    // every allocation side by side
+    let mem = MemConfig::default();
+    println!("\n{:<10} {:>12} {:>8} {:>10} {:>10}", "alloc", "footprint", "txns", "raw MB/s", "eff MB/s");
+    for alloc in AllocKind::ALL {
+        let built = alloc.build(&tiling, &deps)?;
+        let p = measure_bandwidth(&w, &tile, alloc, &mem, tpd)?;
+        println!(
+            "{:<10} {:>12} {:>8} {:>10.1} {:>10.1}",
+            p.alloc,
+            built.footprint(),
+            p.transactions,
+            p.raw_mb_s,
+            p.effective_mb_s
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Quickstart: build a Canonical Facet Allocation for a Jacobi stencil,
+//! inspect the layout it constructs, and compare its simulated memory
+//! bandwidth against the three baseline allocations of the paper.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use cfa::coordinator::AllocKind;
+use cfa::harness::figures::measure_bandwidth;
+use cfa::harness::workloads;
+use cfa::layout::cfa::Cfa;
+use cfa::layout::Allocation;
+use cfa::memsim::MemConfig;
+use cfa::poly::deps::DepPattern;
+use cfa::poly::tiling::Tiling;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Pick a benchmark from Table I and a tile size.
+    let w = workloads::by_name("jacobi2d5p").unwrap();
+    let tile = vec![16, 16, 16];
+    println!("benchmark: {} ({} deps)\n", w.name, w.n_deps());
+
+    // 2. Build the CFA layout: one facet array per active axis, with the
+    //    paper's data tiling and dimension permutations applied.
+    let deps = DepPattern::new(w.deps.clone())?;
+    let tiling = Tiling::new(w.space_for(&tile, 3), tile.clone());
+    let cfa = Cfa::new(tiling, deps)?;
+    println!("facet arrays (total {} elements off-chip):", cfa.footprint());
+    for fa in cfa.facet_arrays() {
+        println!("  {}", fa.describe(&["t", "u", "v"]));
+    }
+
+    // 3. Inspect an interior tile's transfer plan: a handful of long
+    //    bursts (the paper's "4 transactions per 3-D tile").
+    let plan = cfa.plan(&[1, 1, 1]);
+    println!(
+        "\ninterior tile: {} read bursts ({} elems), {} write bursts ({} elems)",
+        plan.read_runs.len(),
+        plan.read_raw(),
+        plan.write_runs.len(),
+        plan.write_raw()
+    );
+
+    // 4. Simulate the memory-bound rig (Fig 14) for all four allocations.
+    let mem = MemConfig::default();
+    println!(
+        "\nbandwidth on the simulated ZC706 HP port (roofline {} MB/s):",
+        mem.peak_mb_s()
+    );
+    for alloc in AllocKind::ALL {
+        let p = measure_bandwidth(&w, &tile, alloc, &mem, 3)?;
+        println!(
+            "  {:<9} raw {:>6.1} MB/s   effective {:>6.1} MB/s   {} transactions",
+            p.alloc, p.raw_mb_s, p.effective_mb_s, p.transactions
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,157 @@
+"""AOT lowering: JAX tile programs -> HLO *text* artifacts for the Rust
+PJRT runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact is one (benchmark, tile size) specialization of an L2 tile
+program; tile position / grid size stay runtime scalars, so one artifact
+serves every tile of a run. A ``manifest.json`` records shapes and
+parameters for the Rust side.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True: the Rust
+    side unwraps with ``to_tuple``)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32():
+    return jax.ShapeDtypeStruct((), jnp.int32)
+
+
+def stencil_artifact(name, weights, tt, ti, tj):
+    """Lower one stencil tile program; returns (hlo_text, manifest entry)."""
+    w = np.asarray(weights)
+    r = (w.shape[0] - 1) // 2
+    h = 2 * r
+    fn = model.make_stencil_tile(tt, ti, tj, w)
+    args = (
+        i32(), i32(), i32(), i32(), i32(),
+        f32((ti + h, tj + h)),
+        f32((max(tt - 1, 1), h, tj + h)),
+        f32((max(tt - 1, 1), ti, h)),
+    )
+    lowered = jax.jit(fn).lower(*args)
+    entry = {
+        "kind": "stencil",
+        "name": name,
+        "radius": r,
+        "tile": [tt, ti, tj],
+        "inputs": {
+            "scalars": ["t0", "u0", "v0", "n", "m"],
+            "prev_plane": [ti + h, tj + h],
+            "halo_u": [max(tt - 1, 1), h, tj + h],
+            "halo_v": [max(tt - 1, 1), ti, h],
+        },
+        "outputs": {
+            "facet_t": [ti, tj],
+            "facet_u": [tt, h, tj],
+            "facet_v": [tt, ti, h],
+        },
+    }
+    return to_hlo_text(lowered), entry
+
+
+def sw3_artifact(si, sj, sk):
+    fn = model.make_sw3_tile(si, sj, sk)
+    args = (
+        f32((si,)), f32((sj,)), f32((sk,)),
+        f32((sj + 1, sk + 1)), f32((si, sk + 1)), f32((si, sj)),
+    )
+    lowered = jax.jit(fn).lower(*args)
+    entry = {
+        "kind": "sw3",
+        "name": "smith-waterman-3seq",
+        "tile": [si, sj, sk],
+        "inputs": {
+            "a": [si], "b": [sj], "c": [sk],
+            "halo_i": [sj + 1, sk + 1],
+            "halo_j": [si, sk + 1],
+            "halo_k": [si, sj],
+        },
+        "outputs": {
+            "facet_i": [sj, sk],
+            "facet_j": [si, sk],
+            "facet_k": [si, sj],
+        },
+    }
+    return to_hlo_text(lowered), entry
+
+
+#: artifact set built by ``make artifacts`` (e2e examples + tests use these)
+DEFAULT_CONFIGS = [
+    ("jacobi2d5p_t4x16x16", "jacobi5p", (4, 16, 16)),
+    ("jacobi2d5p_t8x32x32", "jacobi5p", (8, 32, 32)),
+    ("jacobi2d9p_t4x16x16", "jacobi9p", (4, 16, 16)),
+    ("gaussian_t4x16x16", "gaussian", (4, 16, 16)),
+    ("sw3_t16x16x16", "sw3", (16, 16, 16)),
+]
+
+WEIGHTS = {
+    "jacobi5p": ref.jacobi5p_weights,
+    "jacobi9p": ref.jacobi9p_weights,
+    "gaussian": ref.gaussian5x5_weights,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(legacy) single-file mode")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    for fname, kind, tile in DEFAULT_CONFIGS:
+        if kind == "sw3":
+            hlo, entry = sw3_artifact(*tile)
+        else:
+            hlo, entry = stencil_artifact(fname, WEIGHTS[kind](), *tile)
+        path = os.path.join(out_dir, f"{fname}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(hlo)
+        entry["file"] = f"{fname}.hlo.txt"
+        manifest[fname] = entry
+        print(f"wrote {path} ({len(hlo)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    # `make artifacts` stamps on model.hlo.txt: keep it a real artifact
+    # (copy of the e2e default) so loaders can open it directly.
+    import shutil
+    shutil.copyfile(
+        os.path.join(out_dir, "jacobi2d5p_t8x32x32.hlo.txt"),
+        os.path.join(out_dir, "model.hlo.txt"),
+    )
+    print(f"wrote {out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

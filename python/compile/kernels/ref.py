@@ -1,0 +1,127 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels and L2 tile models.
+
+Everything here is written in the most obvious way possible (shifted-slice
+sums, explicit loops) so it can serve as ground truth for:
+
+* the Pallas stencil kernel (``stencil.py``) -- ``stencil_step_ref``;
+* the tile model's facet dataflow (``model.py``) -- ``run_stencil_global``
+  executes the *whole* iteration space one plane at a time, no tiling,
+  which is what a correct tile decomposition must reproduce;
+* the Smith-Waterman wavefront kernel (``sw.py``) -- ``sw3_ref`` is a
+  dynamic-programming triple loop in numpy.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def stencil_step_ref(padded, weights):
+    """One stencil step on a one-sided-padded plane.
+
+    ``padded``  : (H + 2r, W + 2r) -- covers [u0-2r, u0+H) x [v0-2r, v0+W).
+    ``weights`` : (2r+1, 2r+1) tap weights in *original* (di, dj) order.
+
+    Returns the (H, W) updated interior. In skew-normalized coordinates the
+    original-space tap (di, dj) reads padded[x + di + r, y + dj + r], i.e. a
+    plain "valid" correlation.
+    """
+    k = weights.shape[0]
+    r = (k - 1) // 2
+    h = 2 * r
+    out_h = padded.shape[0] - h
+    out_w = padded.shape[1] - h
+    acc = jnp.zeros((out_h, out_w), padded.dtype)
+    for a in range(k):
+        for b in range(k):
+            acc = acc + weights[a, b] * padded[a : a + out_h, b : b + out_w]
+    return acc
+
+
+def jacobi5p_weights(dtype=jnp.float32):
+    """Heat-equation 5-point stencil: c*center + (1-c)/4 * cross."""
+    c = 0.5
+    w = np.zeros((3, 3), dtype=np.float64)
+    w[1, 1] = c
+    w[0, 1] = w[2, 1] = w[1, 0] = w[1, 2] = (1.0 - c) / 4.0
+    return jnp.asarray(w, dtype=dtype)
+
+
+def jacobi9p_weights(dtype=jnp.float32):
+    """9-point smoothing stencil (3x3 convolution, normalized)."""
+    w = np.array(
+        [[1.0, 2.0, 1.0], [2.0, 4.0, 2.0], [1.0, 2.0, 1.0]], dtype=np.float64
+    )
+    w /= w.sum()
+    return jnp.asarray(w, dtype=dtype)
+
+
+def gaussian5x5_weights(dtype=jnp.float32):
+    """5x5 Gaussian blur kernel (binomial approximation)."""
+    b = np.array([1.0, 4.0, 6.0, 4.0, 1.0])
+    w = np.outer(b, b)
+    w /= w.sum()
+    return jnp.asarray(w, dtype=dtype)
+
+
+def run_stencil_global(grid0, weights, steps):
+    """Reference run of ``steps`` stencil updates over a full grid with a
+    zero (Dirichlet) boundary, in ORIGINAL (unskewed) coordinates.
+
+    ``grid0``: (N, M) initial state. Returns (N, M) after ``steps`` updates.
+    """
+    k = weights.shape[0]
+    r = (k - 1) // 2
+    g = grid0
+    for _ in range(steps):
+        padded = jnp.pad(g, r)  # zero boundary
+        acc = jnp.zeros_like(g)
+        for a in range(k):
+            for b in range(k):
+                acc = acc + weights[a, b] * padded[a : a + g.shape[0], b : b + g.shape[1]]
+        g = acc
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Smith-Waterman, three sequences (Table I: smith-waterman-3seq).
+# ---------------------------------------------------------------------------
+
+#: gap penalty per unmatched axis step (max-plus DP)
+SW_GAP = -1.0
+#: triple-match reward / mismatch penalty
+SW_MATCH = 2.0
+SW_MISMATCH = -1.0
+
+
+def sw3_score(a, b, c):
+    """Score of aligning symbols a, b, c (numpy broadcasting semantics)."""
+    return np.where((a == b) & (b == c), SW_MATCH, SW_MISMATCH)
+
+
+def sw3_ref(A, B, C):
+    """Full-table 3-sequence alignment DP, numpy triple loop.
+
+    H[i,j,k] = max over the 7 backward neighbors of H[..] + move cost
+    (global-style, no clamping, zero boundary). Out-of-table neighbors
+    read 0. Returns the (len(A), len(B), len(C)) table.
+    """
+    A = np.asarray(A)
+    B = np.asarray(B)
+    C = np.asarray(C)
+    ni, nj, nk = len(A), len(B), len(C)
+    H = np.zeros((ni + 1, nj + 1, nk + 1), dtype=np.float32)
+    for i in range(1, ni + 1):
+        for j in range(1, nj + 1):
+            for k in range(1, nk + 1):
+                s = sw3_score(A[i - 1], B[j - 1], C[k - 1])
+                cands = [
+                    H[i - 1, j - 1, k - 1] + s,
+                    H[i - 1, j, k] + SW_GAP,
+                    H[i, j - 1, k] + SW_GAP,
+                    H[i, j, k - 1] + SW_GAP,
+                    H[i - 1, j - 1, k] + 2 * SW_GAP,
+                    H[i - 1, j, k - 1] + 2 * SW_GAP,
+                    H[i, j - 1, k - 1] + 2 * SW_GAP,
+                ]
+                H[i, j, k] = max(cands)
+    return H[1:, 1:, 1:]

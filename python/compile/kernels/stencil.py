@@ -1,0 +1,114 @@
+"""L1 Pallas kernel: one stencil time-step over a one-sided-padded plane.
+
+This is the compute hot-spot of the stencil benchmarks (jacobi2d5p,
+jacobi2d9p, gaussian). The kernel is written for TPU-style execution:
+
+* the output plane is blocked on a grid; each program instance computes one
+  (BH, BW) block in VMEM -- the BlockSpec plays the role of the paper's
+  on-chip scratchpad buffers (DESIGN.md section Hardware-Adaptation);
+* the input stays unblocked (one-sided halo of 2r makes neighbor blocks
+  overlap); each instance dynamically slices its (BH+2r, BW+2r) window,
+  which expresses the HBM->VMEM halo schedule the paper expresses with
+  copy loops;
+* taps are unrolled at trace time (weights are static), so the inner body
+  is 2D vector arithmetic -- VPU-friendly, no gather.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; correctness is validated through the interpreter and the
+pure-jnp oracle (ref.py), per the repo's AOT recipe.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stencil_block_kernel(in_ref, out_ref, *, weights, r, bh, bw):
+    """Compute one (bh, bw) output block from its (bh+2r, bw+2r) window."""
+    h = 2 * r
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    window = pl.load(
+        in_ref,
+        (pl.dslice(i * bh, bh + h), pl.dslice(j * bw, bw + h)),
+    )
+    acc = jnp.zeros((bh, bw), window.dtype)
+    k = weights.shape[0]
+    for a in range(k):
+        for b in range(k):
+            w = float(weights[a, b])
+            if w == 0.0:
+                continue
+            acc = acc + w * jax.lax.dynamic_slice(window, (a, b), (bh, bw))
+    out_ref[...] = acc
+
+
+def _pick_block(n, preferred):
+    """Largest divisor of n that is <= preferred (block must tile evenly)."""
+    b = min(preferred, n)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("r", "weights_key"))
+def _noop(*a, **k):  # pragma: no cover - placeholder to keep jit imports used
+    raise NotImplementedError
+
+
+def stencil_step(padded, weights, *, block=(32, 128)):
+    """One stencil step: (H+2r, W+2r) padded plane -> (H, W) plane.
+
+    ``weights`` must be a concrete (2r+1, 2r+1) array (static taps).
+    Blocks default to (32, 128): 8-lane-sublane friendly shapes; a 32x128
+    f32 block is 16 KiB -- two input/output blocks fit VMEM with room for
+    double buffering.
+    """
+    import numpy as np
+
+    w = np.asarray(weights)
+    k = w.shape[0]
+    r = (k - 1) // 2
+    h = 2 * r
+    out_h = padded.shape[0] - h
+    out_w = padded.shape[1] - h
+    bh = _pick_block(out_h, block[0])
+    bw = _pick_block(out_w, block[1])
+    grid = (out_h // bh, out_w // bw)
+    kernel = functools.partial(
+        _stencil_block_kernel, weights=w, r=r, bh=bh, bw=bw
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(padded.shape, lambda i, j: (0, 0))],
+        out_specs=pl.BlockSpec((bh, bw), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((out_h, out_w), padded.dtype),
+        interpret=True,
+    )(padded)
+
+
+def vmem_report(out_h, out_w, r, block=(32, 128), elem_bytes=4):
+    """Static VMEM/MXU structure estimate for DESIGN.md section Perf.
+
+    Returns a dict with the per-instance VMEM footprint (input window +
+    output block, double-buffered) and the arithmetic intensity of the
+    unrolled tap loop. interpret=True wall-clock is not a TPU proxy; this
+    is the quantity we optimize instead.
+    """
+    bh = _pick_block(out_h, block[0])
+    bw = _pick_block(out_w, block[1])
+    h = 2 * r
+    window = (bh + h) * (bw + h) * elem_bytes
+    out = bh * bw * elem_bytes
+    taps = (2 * r + 1) ** 2
+    return {
+        "block": (bh, bw),
+        "vmem_bytes_single": window + out,
+        "vmem_bytes_double_buffered": 2 * (window + out),
+        "flops_per_elem": 2 * taps,
+        "bytes_per_elem_hbm": 2 * elem_bytes,  # read + write, halo amortized
+        "arith_intensity": (2 * taps) / (2 * elem_bytes),
+    }

@@ -1,0 +1,91 @@
+"""L1 kernel for smith-waterman-3seq: the plane-combine hot-spot.
+
+The 3-sequence alignment DP has seven uniform dependencies ({0,-1}^3 \\ 0).
+Splitting them per plane i:
+
+* three reach the previous i-plane -- ``sw_base_kernel`` (Pallas) computes
+  ``base[j,k] = max(Hprev[j-1,k-1] + s[j,k], Hprev[j,k] + g, Hprev[j,k-1] + 2g,
+  Hprev[j-1,k] + 2g)`` for a whole (sj, sk) plane at once: elementwise max
+  over shifted windows, fully vectorizable;
+* four stay in-plane; rows are combined with a max-plus *scan*: with linear
+  gap ``g``, ``x[k] = max(c[k], x[k-1] + g)`` solves to
+  ``x = cummax(c - k*g) + k*g`` -- an associative scan, no sequential loop
+  over k (model.py uses this).
+
+This is the paper's "rethink for the hardware" step: the wavefront DP's
+inner dependence becomes a parallel prefix instead of a serial chain.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _sw_base_body(hprev_ref, score_ref, out_ref, *, gap):
+    """base[j,k] over one padded previous plane.
+
+    hprev_ref: (sj+1, sk+1) plane i-1, padded low by 1 in j and k
+               (hprev[j+1, k+1] is the in-tile point (j, k)).
+    score_ref: (sj, sk) triple-match scores for plane i.
+    out_ref:   (sj, sk).
+    """
+    hp = hprev_ref[...]
+    s = score_ref[...]
+    sj, sk = s.shape
+    diag = jax.lax.dynamic_slice(hp, (0, 0), (sj, sk)) + s        # (i-1,j-1,k-1)
+    up = jax.lax.dynamic_slice(hp, (1, 1), (sj, sk)) + gap        # (i-1,j,k)
+    upk = jax.lax.dynamic_slice(hp, (1, 0), (sj, sk)) + 2.0 * gap  # (i-1,j,k-1)
+    upj = jax.lax.dynamic_slice(hp, (0, 1), (sj, sk)) + 2.0 * gap  # (i-1,j-1,k)
+    out_ref[...] = jnp.maximum(jnp.maximum(diag, up), jnp.maximum(upk, upj))
+
+
+def sw_base(hprev_padded, scores, gap=ref.SW_GAP):
+    """Pallas call computing the previous-plane contribution for a plane."""
+    sj, sk = scores.shape
+    body = functools.partial(_sw_base_body, gap=float(gap))
+    return pl.pallas_call(
+        body,
+        out_shape=jax.ShapeDtypeStruct((sj, sk), scores.dtype),
+        interpret=True,
+    )(hprev_padded, scores)
+
+
+def sw_base_ref(hprev_padded, scores, gap=ref.SW_GAP):
+    """jnp oracle for sw_base."""
+    sj, sk = scores.shape
+    hp = hprev_padded
+    diag = hp[0:sj, 0:sk] + scores
+    up = hp[1 : sj + 1, 1 : sk + 1] + gap
+    upk = hp[1 : sj + 1, 0:sk] + 2.0 * gap
+    upj = hp[0:sj, 1 : sk + 1] + 2.0 * gap
+    return jnp.maximum(jnp.maximum(diag, up), jnp.maximum(upk, upj))
+
+
+def maxplus_row_scan(c, x_left, gap=ref.SW_GAP):
+    """Solve x[k] = max(c[k], x[k-1] + gap) with x[-1] = x_left.
+
+    Associative-scan closed form: x[k] = max_{m<=k} (c'[m] + (k-m) gap)
+    where c'[-1] = x_left; computed as cummax(c' - idx*gap) + idx*gap.
+    """
+    sk = c.shape[0]
+    x0 = jnp.reshape(x_left, (1,)).astype(c.dtype)
+    cext = jnp.concatenate([x0, c])
+    idx = jnp.arange(sk + 1, dtype=c.dtype)
+    shifted = cext - idx * gap
+    run = jax.lax.cummax(shifted)
+    x = run + idx * gap
+    return x[1:]
+
+
+def maxplus_row_scan_ref(c, x_left, gap=ref.SW_GAP):
+    """Sequential oracle for maxplus_row_scan."""
+    out = []
+    x = x_left
+    for k in range(c.shape[0]):
+        x = jnp.maximum(c[k], x + gap)
+        out.append(x)
+    return jnp.stack(out)

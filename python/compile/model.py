@@ -1,0 +1,285 @@
+"""L2: JAX tile programs over CFA facets, calling the L1 Pallas kernels.
+
+A tile program is the ``execute`` stage of the paper's read-execute-write
+template (Fig 13) expressed over exactly the CFA data sets:
+
+* **inputs** are the tile's flow-in pieces -- the previous-time plane padded
+  with one-sided halos, plus per-step halo slabs read from the neighbor
+  tiles' facets;
+* **outputs** are the tile's flow-out **facets** (the last w_k planes along
+  each axis), which L3 writes to global memory with single-burst stores.
+
+Programs are shape-specialized per (benchmark, tile size) and AOT-lowered
+by ``aot.py``; tile position and grid size are *runtime scalars* so one
+artifact serves every tile, including boundary masking.
+
+Coordinate convention for stencils (skew-normalized space, DESIGN.md):
+iteration point (t, u, v) carries original grid cell (i, j) = (u - t, v - t)
+at time t; points with (i, j) outside the grid are masked to zero, which
+implements the Dirichlet boundary of the reference (ref.run_stencil_global).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels import sw as swk
+from .kernels.stencil import stencil_step
+
+
+def make_stencil_tile(tt, ti, tj, weights):
+    """Build the tile program for a stencil benchmark.
+
+    Static: tt, ti, tj (tile size), weights ((2r+1)^2 taps).
+    Runtime inputs:
+      t0, u0, v0 : i32 scalars -- tile origin in the skewed space;
+      n, m       : i32 scalars -- original grid size (N rows, M cols);
+      prev_plane : (ti+h, tj+h) f32 -- plane t0-1 over
+                   [u0-h, u0+ti) x [v0-h, v0+tj);
+      halo_u     : (tt-1, h, tj+h) f32 -- u-halo rows for local steps >= 1;
+      halo_v     : (tt-1, ti, h) f32 -- v-halo cols for local steps >= 1.
+    Outputs (flow-out facets):
+      facet_t (ti, tj), facet_u (tt, h, tj), facet_v (tt, ti, h)
+    with h = 2r.
+    """
+    w = np.asarray(weights)
+    r = (w.shape[0] - 1) // 2
+    h = 2 * r
+    assert ti >= h and tj >= h, "tile too small for the halo"
+
+    def mask_plane(plane, s, t0, u0, v0, n, m):
+        # skew u = i + r*t (the factor that normalizes radius-r deps)
+        t = t0 + s
+        uu = u0 + jnp.arange(ti, dtype=jnp.int32)[:, None]
+        vv = v0 + jnp.arange(tj, dtype=jnp.int32)[None, :]
+        i = uu - r * t
+        j = vv - r * t
+        valid = (i >= 0) & (i < n) & (j >= 0) & (j < m)
+        return jnp.where(valid, plane, jnp.zeros_like(plane))
+
+    def tile_fn(t0, u0, v0, n, m, prev_plane, halo_u, halo_v):
+        interior0 = mask_plane(
+            stencil_step(prev_plane, w), 0, t0, u0, v0, n, m
+        )
+        fac_u0 = jnp.zeros((tt, h, tj), prev_plane.dtype)
+        fac_v0 = jnp.zeros((tt, ti, h), prev_plane.dtype)
+        fac_u0 = fac_u0.at[0].set(interior0[ti - h :, :])
+        fac_v0 = fac_v0.at[0].set(interior0[:, tj - h :])
+
+        def body(s, carry):
+            interior, fac_u, fac_v = carry
+            hu = jax.lax.dynamic_index_in_dim(halo_u, s - 1, 0, keepdims=False)
+            hv = jax.lax.dynamic_index_in_dim(halo_v, s - 1, 0, keepdims=False)
+            padded = jnp.concatenate(
+                [hu, jnp.concatenate([hv, interior], axis=1)], axis=0
+            )
+            nxt = mask_plane(stencil_step(padded, w), s, t0, u0, v0, n, m)
+            fac_u = jax.lax.dynamic_update_index_in_dim(
+                fac_u, nxt[ti - h :, :], s, 0
+            )
+            fac_v = jax.lax.dynamic_update_index_in_dim(
+                fac_v, nxt[:, tj - h :], s, 0
+            )
+            return nxt, fac_u, fac_v
+
+        if tt > 1:
+            interior, fac_u, fac_v = jax.lax.fori_loop(
+                1, tt, body, (interior0, fac_u0, fac_v0)
+            )
+        else:
+            interior, fac_u, fac_v = interior0, fac_u0, fac_v0
+        return interior, fac_u, fac_v
+
+    return tile_fn
+
+
+def make_sw3_tile(si, sj, sk):
+    """Build the tile program for smith-waterman-3seq.
+
+    Runtime inputs:
+      a (si,), b (sj,), c (sk,) : f32 symbol chunks for this tile;
+      halo_i : (sj+1, sk+1) -- plane i0-1 over [j0-1, ..) x [k0-1, ..);
+      halo_j : (si, sk+1)   -- H[i, j0-1, k] rows, k from k0-1;
+      halo_k : (si, sj)     -- H[i, j, k0-1] columns.
+    Outputs (facets, w = 1 on every axis):
+      facet_i (sj, sk), facet_j (si, sk), facet_k (si, sj).
+    """
+    gap = ref.SW_GAP
+
+    def plane(prev_padded, a_i, b, c, hj_row, hk_col):
+        # scores s[j,k] for this i-plane
+        s = jnp.where(
+            (a_i == b[:, None]) & (b[:, None] == c[None, :]),
+            jnp.float32(ref.SW_MATCH),
+            jnp.float32(ref.SW_MISMATCH),
+        )
+        base = swk.sw_base(prev_padded, s)  # (sj, sk) pallas kernel
+
+        def row_step(prev_row_padded, inputs):
+            base_row, hk = inputs  # (sk,), scalar H[i, j, k0-1]
+            c_row = jnp.maximum(
+                base_row,
+                jnp.maximum(
+                    prev_row_padded[1:] + gap, prev_row_padded[:-1] + 2.0 * gap
+                ),
+            )
+            row = swk.maxplus_row_scan(c_row, hk, gap)
+            # next row's padded predecessor: [H[i, j, k0-1], row]
+            nxt = jnp.concatenate([jnp.reshape(hk, (1,)).astype(row.dtype), row])
+            return nxt, row
+
+        # row j0-1 of this plane, padded from k0-1: hj_row is (sk+1,)
+        _, rows = jax.lax.scan(row_step, hj_row, (base, hk_col))
+        pl_ = rows  # (sj, sk)
+        # assemble next prev_padded for plane i+1
+        top = hj_row[None, :]  # will be replaced by caller; see scan below
+        del top
+        return pl_
+
+    def tile_fn(a, b, c, halo_i, halo_j, halo_k):
+        def i_step(prev_padded, inputs):
+            a_i, hj_row, hk_col = inputs
+            pl_ = plane(prev_padded, a_i, b, c, hj_row, hk_col)
+            nxt = jnp.concatenate(
+                [hj_row[None, :],
+                 jnp.concatenate([hk_col[:, None], pl_], axis=1)],
+                axis=0,
+            )
+            return nxt, (pl_[-1, :], pl_[:, -1], pl_)
+
+        # NB: the padded predecessor of plane i+1 uses HALO rows of plane i
+        # (H[i, j0-1, *] and H[i, *, k0-1]) -- exactly halo_j[i] / halo_k[i].
+        last, (fj, fk, planes) = jax.lax.scan(
+            i_step, halo_i, (a, halo_j, halo_k)
+        )
+        del last
+        facet_i = planes[-1]  # (sj, sk)
+        return facet_i, fj, fk
+
+    return tile_fn
+
+
+# ---------------------------------------------------------------------------
+# Python-level tile orchestration (build-time validation of the dataflow the
+# Rust coordinator implements; pytest drives this against the global refs).
+# ---------------------------------------------------------------------------
+
+def run_stencil_tiled(grid0, weights, steps, tt, ti, tj):
+    """Execute the full stencil with the tile program, assembling halos the
+    way the Rust coordinator does (from neighbor facets), and compare-ready
+    against ref.run_stencil_global.
+
+    Uses a dense skewed-space scratch array as stand-in for global memory
+    (the point here is the tile dataflow, not the allocation).
+    """
+    w = np.asarray(weights)
+    r = (w.shape[0] - 1) // 2
+    h = 2 * r
+    n, m = grid0.shape
+    T = steps
+    U, V = n + r * T, m + r * T  # skewed extents (padded up; masked anyway)
+    assert T % tt == 0 and U % ti == 0 and V % tj == 0, "tiles must divide"
+    tile = make_stencil_tile(tt, ti, tj, w)
+
+    # value[t, u, v] for t in [-1, T); t=-1 holds the initial grid
+    val = np.zeros((T + 1, U + h, V + h), dtype=np.float32)  # +h: low pads
+
+    def get(t, u, v):
+        # value of skewed point; zero outside grid (mask semantics).
+        # u, v may dip into [-h, 0): the initial plane (t = -1) lives at
+        # skewed coordinates u = i - r, which start at -r.
+        i, j = u - r * t, v - r * t
+        if t < -1 or u < -h or v < -h:
+            return 0.0
+        if 0 <= i < n and 0 <= j < m:
+            return val[t + 1, u + h, v + h]
+        return 0.0
+
+    # seed the initial plane t = -1: u = i - r may be negative -> the +h pad
+    for i in range(n):
+        for j in range(m):
+            u, v = i - r, j - r
+            val[0, u + h, v + h] = float(grid0[i, j])
+
+    for bt in range(T // tt):
+        for bu in range(U // ti):
+            for bv in range(V // tj):
+                t0, u0, v0 = bt * tt, bu * ti, bv * tj
+                prev = np.zeros((ti + h, tj + h), np.float32)
+                for x in range(ti + h):
+                    for y in range(tj + h):
+                        prev[x, y] = get(t0 - 1, u0 - h + x, v0 - h + y)
+                hu = np.zeros((max(tt - 1, 1), h, tj + h), np.float32)
+                hv = np.zeros((max(tt - 1, 1), ti, h), np.float32)
+                for s in range(1, tt):
+                    for x in range(h):
+                        for y in range(tj + h):
+                            hu[s - 1, x, y] = get(t0 + s - 1, u0 - h + x, v0 - h + y)
+                    for x in range(ti):
+                        for y in range(h):
+                            hv[s - 1, x, y] = get(t0 + s - 1, u0 + x, v0 - h + y)
+                fac_t, fac_u, fac_v = tile(
+                    jnp.int32(t0), jnp.int32(u0), jnp.int32(v0),
+                    jnp.int32(n), jnp.int32(m),
+                    jnp.asarray(prev), jnp.asarray(hu), jnp.asarray(hv),
+                )
+                fac_t = np.asarray(fac_t)
+                fac_u = np.asarray(fac_u)
+                fac_v = np.asarray(fac_v)
+                # write facets back (facets overlap on corners; identical
+                # values, so order does not matter)
+                for s in range(tt):
+                    t = t0 + s
+                    for x in range(h):
+                        for y in range(tj):
+                            val[t + 1, u0 + ti - h + x + h, v0 + y + h] = fac_u[s, x, y]
+                    for x in range(ti):
+                        for y in range(h):
+                            val[t + 1, u0 + x + h, v0 + tj - h + y + h] = fac_v[s, x, y]
+                val[t0 + tt - 1 + 1, u0 + h : u0 + ti + h, v0 + h : v0 + tj + h] = fac_t
+
+    # extract the final grid from plane T-1: i = u - r*(T-1)
+    out = np.zeros((n, m), np.float32)
+    for i in range(n):
+        for j in range(m):
+            out[i, j] = get(T - 1, i + r * (T - 1), j + r * (T - 1))
+    return out
+
+
+def run_sw3_tiled(A, B, C, si, sj, sk):
+    """Execute the full 3-seq DP with the tile program (halo assembly in
+    numpy), producing the final facets; compare against ref.sw3_ref."""
+    A = np.asarray(A, np.float32)
+    B = np.asarray(B, np.float32)
+    C = np.asarray(C, np.float32)
+    ni, nj, nk = len(A), len(B), len(C)
+    assert ni % si == 0 and nj % sj == 0 and nk % sk == 0
+    tile = make_sw3_tile(si, sj, sk)
+    H = np.zeros((ni + 1, nj + 1, nk + 1), np.float32)  # +1: zero boundary
+    for bi in range(ni // si):
+        for bj in range(nj // sj):
+            for bk in range(nk // sk):
+                i0, j0, k0 = bi * si, bj * sj, bk * sk
+                halo_i = H[i0, j0 : j0 + sj + 1, k0 : k0 + sk + 1]
+                halo_j = H[i0 + 1 : i0 + si + 1, j0, k0 : k0 + sk + 1]
+                halo_k = H[i0 + 1 : i0 + si + 1, j0 + 1 : j0 + sj + 1, k0]
+                fi, fj, fk = tile(
+                    jnp.asarray(A[i0 : i0 + si]),
+                    jnp.asarray(B[j0 : j0 + sj]),
+                    jnp.asarray(C[k0 : k0 + sk]),
+                    jnp.asarray(halo_i),
+                    jnp.asarray(halo_j),
+                    jnp.asarray(halo_k),
+                )
+                # facets are the tile's boundary planes; the DP needs the
+                # full tile interior for verification, so recompute it the
+                # slow way is avoided by storing facets only -- sufficient
+                # because downstream tiles read only facets. For the final
+                # comparison we also need interiors, so store what we have:
+                H[i0 + si, j0 + 1 : j0 + sj + 1, k0 + 1 : k0 + sk + 1] = np.asarray(fi)
+                H[i0 + 1 : i0 + si + 1, j0 + sj, k0 + 1 : k0 + sk + 1] = np.asarray(fj)
+                H[i0 + 1 : i0 + si + 1, j0 + 1 : j0 + sj + 1, k0 + sk] = np.asarray(fk)
+    return H

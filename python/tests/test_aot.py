@@ -1,0 +1,72 @@
+"""AOT path: tile programs lower to valid HLO text with stable signatures."""
+
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile import aot
+from compile.kernels import ref
+
+
+class TestLowering:
+    def test_stencil_artifact_text(self):
+        hlo, entry = aot.stencil_artifact(
+            "t", ref.jacobi5p_weights(), 2, 8, 8
+        )
+        assert hlo.startswith("HloModule")
+        assert "f32[10,10]" in hlo  # prev_plane (8+2, 8+2)
+        assert entry["outputs"]["facet_t"] == [8, 8]
+        assert entry["radius"] == 1
+
+    def test_gaussian_artifact_halo_width(self):
+        hlo, entry = aot.stencil_artifact(
+            "g", ref.gaussian5x5_weights(), 2, 8, 8
+        )
+        assert entry["radius"] == 2
+        assert entry["inputs"]["prev_plane"] == [12, 12]  # h = 4
+        assert "f32[12,12]" in hlo
+
+    def test_sw3_artifact_text(self):
+        hlo, entry = aot.sw3_artifact(4, 4, 4)
+        assert hlo.startswith("HloModule")
+        assert entry["outputs"]["facet_i"] == [4, 4]
+
+    def test_default_configs_cover_table1(self):
+        kinds = {k for _, k, _ in aot.DEFAULT_CONFIGS}
+        assert {"jacobi5p", "jacobi9p", "gaussian", "sw3"} <= kinds
+
+
+class TestArtifactsOnDisk:
+    """Validate the artifacts `make artifacts` produced (skip if absent)."""
+
+    ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+    @pytest.fixture()
+    def manifest(self):
+        path = os.path.join(self.ART, "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built")
+        with open(path) as f:
+            return json.load(f)
+
+    def test_manifest_files_exist(self, manifest):
+        assert len(manifest) >= 5
+        for name, entry in manifest.items():
+            p = os.path.join(self.ART, entry["file"])
+            assert os.path.exists(p), p
+            with open(p) as f:
+                head = f.read(64)
+            assert head.startswith("HloModule"), name
+
+    def test_manifest_shapes_consistent(self, manifest):
+        for name, entry in manifest.items():
+            if entry["kind"] == "stencil":
+                tt, ti, tj = entry["tile"]
+                h = 2 * entry["radius"]
+                assert entry["inputs"]["prev_plane"] == [ti + h, tj + h]
+                assert entry["outputs"]["facet_u"] == [tt, h, tj]

@@ -1,0 +1,125 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Hypothesis sweeps shapes, dtypes and weights; assert_allclose against
+ref.py. This is the core build-time correctness signal for the compute
+layer (the Rust runtime then loads bit-identical HLO).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile.kernels import ref
+from compile.kernels import sw as swk
+from compile.kernels.stencil import stencil_step, vmem_report
+
+
+def rand(shape, seed, dtype=np.float32):
+    return jnp.asarray(np.random.RandomState(seed).rand(*shape).astype(dtype))
+
+
+class TestStencilKernel:
+    @pytest.mark.parametrize(
+        "weights_fn,r",
+        [
+            (ref.jacobi5p_weights, 1),
+            (ref.jacobi9p_weights, 1),
+            (ref.gaussian5x5_weights, 2),
+        ],
+    )
+    def test_named_benchmarks_match_ref(self, weights_fn, r):
+        w = weights_fn()
+        P = rand((16 + 2 * r, 32 + 2 * r), seed=r)
+        got = stencil_step(P, w)
+        exp = ref.stencil_step_ref(P, w)
+        np.testing.assert_allclose(got, exp, rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        h=st.integers(1, 24),
+        wd=st.integers(1, 48),
+        r=st.integers(1, 2),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_random_shapes_and_weights(self, h, wd, r, seed):
+        rng = np.random.RandomState(seed)
+        w = jnp.asarray(rng.randn(2 * r + 1, 2 * r + 1).astype(np.float32))
+        P = jnp.asarray(rng.randn(h + 2 * r, wd + 2 * r).astype(np.float32))
+        got = stencil_step(P, w)
+        exp = ref.stencil_step_ref(P, w)
+        assert got.shape == (h, wd)
+        np.testing.assert_allclose(got, exp, rtol=1e-4, atol=1e-4)
+
+    def test_float64(self):
+        w = np.asarray(ref.jacobi5p_weights(), dtype=np.float32)
+        P = rand((10, 10), seed=3)
+        got = stencil_step(P, w)
+        exp = ref.stencil_step_ref(P, jnp.asarray(w))
+        np.testing.assert_allclose(got, exp, rtol=1e-6)
+
+    def test_impulse_response_is_weights(self):
+        # a centered impulse reproduces the flipped tap pattern exactly
+        r = 1
+        w = ref.jacobi5p_weights()
+        P = np.zeros((5, 5), np.float32)
+        P[2, 2] = 1.0
+        got = np.asarray(stencil_step(jnp.asarray(P), w))
+        # out[x,y] = sum w[a,b] P[x+a, y+b] -> impulse at (2,2) spreads w
+        # reversed around (2-r... ) == w by symmetry of our kernels
+        exp = np.asarray(ref.stencil_step_ref(jnp.asarray(P), w))
+        np.testing.assert_allclose(got, exp)
+        assert got[1, 1] == pytest.approx(float(np.asarray(w)[1, 1]))
+
+    def test_block_divisor_logic(self):
+        # odd sizes must still tile exactly (block picked as a divisor)
+        w = ref.jacobi5p_weights()
+        P = rand((7 + 2, 13 + 2), seed=9)
+        got = stencil_step(P, w)
+        exp = ref.stencil_step_ref(P, w)
+        np.testing.assert_allclose(got, exp, rtol=1e-5, atol=1e-6)
+
+    def test_vmem_report_structure(self):
+        rep = vmem_report(32, 128, r=1)
+        assert rep["vmem_bytes_double_buffered"] == 2 * rep["vmem_bytes_single"]
+        assert rep["block"] == (32, 128)
+        assert rep["flops_per_elem"] == 18
+        # double buffering must fit comfortably in 16 MiB VMEM
+        assert rep["vmem_bytes_double_buffered"] < 16 * 1024 * 1024
+
+
+class TestSwKernels:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        sj=st.integers(1, 24),
+        sk=st.integers(1, 24),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_sw_base_matches_ref(self, sj, sk, seed):
+        rng = np.random.RandomState(seed)
+        hp = jnp.asarray(rng.randn(sj + 1, sk + 1).astype(np.float32))
+        sc = jnp.asarray(rng.randn(sj, sk).astype(np.float32))
+        np.testing.assert_allclose(
+            swk.sw_base(hp, sc), swk.sw_base_ref(hp, sc), rtol=1e-5, atol=1e-5
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(1, 64),
+        seed=st.integers(0, 2**31 - 1),
+        left=st.floats(-5, 5),
+    )
+    def test_maxplus_scan_matches_sequential(self, n, seed, left):
+        c = jnp.asarray(np.random.RandomState(seed).randn(n).astype(np.float32))
+        got = swk.maxplus_row_scan(c, jnp.float32(left))
+        exp = swk.maxplus_row_scan_ref(c, jnp.float32(left))
+        np.testing.assert_allclose(got, exp, rtol=1e-5, atol=1e-5)
+
+    def test_scan_gap_semantics(self):
+        # with c = [-inf-ish ...] the scan is pure gap decay from x_left
+        c = jnp.full((4,), -1e9, jnp.float32)
+        got = np.asarray(swk.maxplus_row_scan(c, jnp.float32(10.0), gap=-1.0))
+        np.testing.assert_allclose(got, [9.0, 8.0, 7.0, 6.0])

@@ -1,0 +1,60 @@
+//! Ablation: how much each CFA contiguity level contributes (§IV.G–I).
+//! Toggles inter-tile merging, the intra-tile facet choice, and the Fig-11
+//! over-approximation on jacobi2d9p-gol (the deepest pattern, w = 2,2,2)
+//! and reports transactions + bandwidth per configuration.
+//!
+//! Run: `cargo bench --bench ablation_contiguity`
+
+use cfa::harness::workloads;
+use cfa::layout::cfa::{Cfa, CfaOpts};
+use cfa::layout::Allocation;
+use cfa::memsim::{Dir, MemConfig, MemSim, Txn};
+use cfa::poly::deps::DepPattern;
+use cfa::poly::tiling::Tiling;
+
+fn measure(tiling: &Tiling, deps: &DepPattern, opts: CfaOpts, mem: &MemConfig) -> (u64, f64, f64) {
+    let cfa = Cfa::with_opts(tiling.clone(), deps.clone(), opts).unwrap();
+    let mut sim = MemSim::new(mem.clone());
+    let (mut raw, mut useful, mut txns) = (0u64, 0u64, 0u64);
+    for coords in tiling.tiles() {
+        let plan = cfa.plan(&coords);
+        for r in plan.read_runs.iter() {
+            sim.submit(&Txn { dir: Dir::Read, addr: r.addr, len: r.len });
+        }
+        for r in plan.write_runs.iter() {
+            sim.submit(&Txn { dir: Dir::Write, addr: r.addr, len: r.len });
+        }
+        raw += plan.read_raw() + plan.write_raw();
+        useful += plan.read_useful + plan.write_useful;
+        txns += plan.transactions() as u64;
+    }
+    let secs = mem.secs(sim.now().max(1));
+    (
+        txns,
+        raw as f64 * mem.elem_bytes as f64 / 1e6 / secs,
+        useful as f64 * mem.elem_bytes as f64 / 1e6 / secs,
+    )
+}
+
+fn main() {
+    let w = workloads::by_name("jacobi2d9p-gol").unwrap();
+    let deps = DepPattern::new(w.deps.clone()).unwrap();
+    let mem = MemConfig::default();
+    println!("ablation on {} (widths {:?}), tile 32x32x32, 3^3 tiles\n", w.name, deps.widths());
+    println!(
+        "{:<34} {:>8} {:>10} {:>10}",
+        "configuration", "txns", "raw MB/s", "eff MB/s"
+    );
+    let tiling = Tiling::new(w.space_for(&[32, 32, 32], 3), vec![32, 32, 32]);
+    let configs = [
+        ("full CFA (inter+intra+overapprox)", CfaOpts { inter_tile: true, intra_tile: true, bbox_expand: true }),
+        ("no inter-tile merging", CfaOpts { inter_tile: false, intra_tile: true, bbox_expand: true }),
+        ("no intra-tile facet choice", CfaOpts { inter_tile: true, intra_tile: false, bbox_expand: true }),
+        ("no Fig-11 over-approximation", CfaOpts { inter_tile: true, intra_tile: true, bbox_expand: false }),
+        ("full-tile contiguity only", CfaOpts { inter_tile: false, intra_tile: false, bbox_expand: false }),
+    ];
+    for (name, opts) in configs {
+        let (txns, raw, eff) = measure(&tiling, &deps, opts, &mem);
+        println!("{name:<34} {txns:>8} {raw:>10.1} {eff:>10.1}");
+    }
+}

@@ -1,0 +1,49 @@
+//! Fig 15 regeneration: raw + effective bandwidth for every allocation ×
+//! benchmark × tile size, on the simulated ZC706 HP0 port (800 MB/s
+//! roofline, f64 elements — the paper's exact rig).
+//!
+//! Run: `cargo bench --bench fig15_bandwidth [-- --quick]`
+//! Writes bench_results/fig15.csv and prints the stacked-bar panels.
+
+use cfa::harness::{figures, workloads};
+use cfa::memsim::MemConfig;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let wl = workloads::table1(quick);
+    let mem = MemConfig::default();
+    eprintln!(
+        "fig15: {} benchmarks x {} tile sizes x 4 allocations (quick={quick})",
+        wl.len(),
+        wl[0].tile_sizes.len()
+    );
+    let t0 = std::time::Instant::now();
+    let pts = figures::fig15_sweep(&wl, &mem, 3);
+    for w in &wl {
+        print!("{}", figures::render_fig15(&pts, w.name, &mem));
+    }
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/fig15.csv", figures::fig15_csv(&pts)).ok();
+    std::fs::write(
+        "bench_results/fig15.json",
+        figures::fig15_json(&pts, &mem).to_string_pretty(),
+    )
+    .ok();
+    // headline summary: best effective bandwidth per allocation
+    println!("summary (effective bandwidth as % of the 800 MB/s roofline):");
+    for alloc in ["cfa", "original", "bbox", "datatile"] {
+        let effs: Vec<f64> = pts
+            .iter()
+            .filter(|p| p.alloc == alloc)
+            .map(|p| 100.0 * p.effective_mb_s / mem.peak_mb_s())
+            .collect();
+        let avg = effs.iter().sum::<f64>() / effs.len().max(1) as f64;
+        let max = effs.iter().cloned().fold(0.0, f64::max);
+        println!("  {alloc:<9} mean {avg:5.1}%   best {max:5.1}%");
+    }
+    println!(
+        "\n{} points in {:.1}s -> bench_results/fig15.csv",
+        pts.len(),
+        t0.elapsed().as_secs_f64()
+    );
+}

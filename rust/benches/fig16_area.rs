@@ -1,0 +1,47 @@
+//! Fig 16 regeneration: slice and DSP occupancy of CFA vs the aggregated
+//! baselines, per benchmark (min–max spans, % of xc7z045 resources).
+//!
+//! Run: `cargo bench --bench fig16_area [-- --quick]`
+
+use cfa::area::Device;
+use cfa::harness::{figures, workloads};
+use cfa::util::table::{span_chart, SpanRow};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let wl = workloads::table1(quick);
+    let pts = figures::area_sweep(&wl, 8, 3);
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/fig16.csv", figures::area_csv(&pts)).ok();
+
+    for (title, metric) in [
+        (
+            "Fig 16a — logic slice occupancy (% of xc7z045)",
+            Box::new(|e: &cfa::area::AreaEstimate, d: &Device| e.slice_pct(d))
+                as Box<dyn Fn(&cfa::area::AreaEstimate, &Device) -> f64>,
+        ),
+        (
+            "Fig 16b — DSP occupancy (% of xc7z045)",
+            Box::new(|e: &cfa::area::AreaEstimate, d: &Device| e.dsp_pct(d)),
+        ),
+    ] {
+        let agg = figures::fig16_aggregate(&pts, &metric);
+        let mut rows = Vec::new();
+        for (b, cmin, cmax, bmin, bmax) in &agg {
+            rows.push(SpanRow {
+                label: format!("{b} cfa"),
+                min: *cmin,
+                max: *cmax,
+                marker: None,
+            });
+            rows.push(SpanRow {
+                label: format!("{b} base"),
+                min: *bmin,
+                max: *bmax,
+                marker: None,
+            });
+        }
+        println!("{}", span_chart(title, &rows, 10.0, 50, "%"));
+    }
+    println!("wrote bench_results/fig16.csv ({} points)", pts.len());
+}

@@ -1,0 +1,46 @@
+//! Fig 17 regeneration: BRAM occupancy per allocation and benchmark (% of
+//! the xc7z045's 545 BRAM36). The claim to reproduce: CFA ≈ original
+//! (CFA does not change the on-chip allocation); bbox and data tiling pay
+//! for holding their redundant transfers on chip.
+//!
+//! Run: `cargo bench --bench fig17_bram [-- --quick]`
+
+use cfa::area::Device;
+use cfa::harness::{figures, workloads};
+use cfa::util::table::{span_chart, SpanRow};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let wl = workloads::table1(quick);
+    let pts = figures::area_sweep(&wl, 8, 3);
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/fig17.csv", figures::area_csv(&pts)).ok();
+    let dev = Device::default();
+    for w in &wl {
+        let mut rows = Vec::new();
+        for alloc in ["cfa", "original", "bbox", "datatile"] {
+            let vals: Vec<f64> = pts
+                .iter()
+                .filter(|p| p.benchmark == w.name && p.alloc == alloc)
+                .map(|p| p.est.bram_pct(&dev))
+                .collect();
+            rows.push(SpanRow {
+                label: alloc.to_string(),
+                min: vals.iter().cloned().fold(f64::INFINITY, f64::min),
+                max: vals.iter().cloned().fold(0.0, f64::max),
+                marker: None,
+            });
+        }
+        println!(
+            "{}",
+            span_chart(
+                &format!("Fig 17 — BRAM occupancy, {}", w.name),
+                &rows,
+                100.0,
+                50,
+                "%"
+            )
+        );
+    }
+    println!("wrote bench_results/fig17.csv");
+}

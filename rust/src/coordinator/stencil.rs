@@ -1,0 +1,231 @@
+//! End-to-end stencil driver: heat diffusion & friends through the full
+//! stack (CFA/baseline layout → burst plans → AXI/DRAM timing → PJRT tile
+//! compute → verification).
+//!
+//! Coordinate convention matches `python/compile/model.py`: the iteration
+//! space is the skew-normalized (t, u, v) box with u = i + r·t; the initial
+//! grid is the program input (CFA only re-allocates read-write arrays,
+//! §IV.E) and is served from its own buffer at t = -1.
+
+use crate::accel::{Pipeline, TileCost};
+use crate::coordinator::reference::{stencil_reference, StencilKind};
+use crate::coordinator::{AllocKind, HostMemory, RunReport};
+use crate::memsim::{MemConfig, MemSim};
+use crate::poly::deps::DepPattern;
+use crate::poly::tiling::Tiling;
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::time::Instant;
+
+/// Configuration of one end-to-end stencil run.
+#[derive(Clone, Debug)]
+pub struct StencilRun {
+    /// Artifact name in `artifacts/manifest.json`.
+    pub artifact: String,
+    pub kind: StencilKind,
+    /// Original grid size.
+    pub n: i64,
+    pub m: i64,
+    /// Time steps.
+    pub steps: i64,
+    pub alloc: AllocKind,
+    /// Modeled compute parallelism (ops/cycle) for the exec stage.
+    pub pe_ops_per_cycle: u64,
+    pub seed: u64,
+}
+
+impl StencilRun {
+    /// Heat-diffusion default sized for the 8x32x32 jacobi artifact.
+    pub fn heat_default(alloc: AllocKind) -> StencilRun {
+        StencilRun {
+            artifact: "jacobi2d5p_t8x32x32".into(),
+            kind: StencilKind::Jacobi5p,
+            n: 96,
+            m: 96,
+            steps: 32,
+            alloc,
+            pe_ops_per_cycle: 64,
+            seed: 42,
+        }
+    }
+}
+
+/// Execute the run; returns the report (verification included).
+pub fn run_stencil(rt: &Runtime, cfg: &StencilRun, mem_cfg: &MemConfig) -> Result<RunReport> {
+    let wall0 = Instant::now();
+    let exe = rt.load(&cfg.artifact)?;
+    let (tt, ti, tj) = match exe.info.tile[..] {
+        [a, b, c] => (a, b, c),
+        _ => bail!("artifact {} has no 3-d tile", cfg.artifact),
+    };
+    let r = exe.info.radius;
+    if r != cfg.kind.radius() {
+        bail!(
+            "artifact radius {r} does not match benchmark {:?}",
+            cfg.kind
+        );
+    }
+    let h = 2 * r;
+    let (n, m, steps) = (cfg.n, cfg.m, cfg.steps);
+    let (uu, vv) = (n + r * steps, m + r * steps);
+    if steps % tt != 0 || uu % ti != 0 || vv % tj != 0 {
+        bail!(
+            "tile ({tt},{ti},{tj}) must divide the skewed space ({steps},{uu},{vv}); \
+             pick n,m,steps accordingly"
+        );
+    }
+
+    let deps = DepPattern::new(cfg.kind.skewed_deps()).context("building deps")?;
+    let tiling = Tiling::new(vec![steps, uu, vv], vec![tt, ti, tj]);
+    let alloc = cfg.alloc.build(&tiling, &deps)?;
+    let mut host = HostMemory::new(alloc.footprint());
+
+    // program input: the initial grid (not a read-write array, kept as-is)
+    let mut rng = Rng::new(cfg.seed);
+    let init: Vec<f32> = (0..(n * m) as usize)
+        .map(|_| rng.gen_f64() as f32)
+        .collect();
+
+    let sample = |host: &HostMemory, t: i64, u: i64, v: i64| -> f32 {
+        if t < 0 {
+            // initial plane t = -1 in skewed coords: i = u - r*t = u + r
+            let (i, j) = (u + r, v + r);
+            if (0..n).contains(&i) && (0..m).contains(&j) {
+                init[(i * m + j) as usize]
+            } else {
+                0.0
+            }
+        } else if (0..steps).contains(&t) && (0..uu).contains(&u) && (0..vv).contains(&v) {
+            let (_, addr) = alloc.read_loc(&[t, u, v]);
+            host.read(addr)
+        } else {
+            0.0
+        }
+    };
+
+    let mut sim = MemSim::new(mem_cfg.clone());
+    let mut pipe = Pipeline::new();
+    let mut raw_elems = 0u64;
+    let mut useful_elems = 0u64;
+    let mut transactions = 0u64;
+    let flops_per_point = 2 * ((2 * r + 1) * (2 * r + 1)) as u64;
+
+    let halo_t = (tt - 1).max(1);
+    for coords in tiling.tiles() {
+        let (bt, bu, bv) = (coords[0], coords[1], coords[2]);
+        let (t0, u0, v0) = (bt * tt, bu * ti, bv * tj);
+
+        // ---- assemble flow-in (the read stage's result)
+        let mut prev = vec![0f32; ((ti + h) * (tj + h)) as usize];
+        for x in 0..ti + h {
+            for y in 0..tj + h {
+                prev[(x * (tj + h) + y) as usize] =
+                    sample(&host, t0 - 1, u0 - h + x, v0 - h + y);
+            }
+        }
+        let mut halo_u = vec![0f32; (halo_t * h * (tj + h)) as usize];
+        let mut halo_v = vec![0f32; (halo_t * ti * h) as usize];
+        for s in 1..tt {
+            for x in 0..h {
+                for y in 0..tj + h {
+                    halo_u[(((s - 1) * h + x) * (tj + h) + y) as usize] =
+                        sample(&host, t0 + s - 1, u0 - h + x, v0 - h + y);
+                }
+            }
+            for x in 0..ti {
+                for y in 0..h {
+                    halo_v[(((s - 1) * ti + x) * h + y) as usize] =
+                        sample(&host, t0 + s - 1, u0 + x, v0 - h + y);
+                }
+            }
+        }
+
+        // ---- execute on PJRT
+        let out = exe.execute(
+            &[t0 as i32, u0 as i32, v0 as i32, n as i32, m as i32],
+            &[
+                (&prev, &[ti + h, tj + h]),
+                (&halo_u, &[halo_t, h, tj + h]),
+                (&halo_v, &[halo_t, ti, h]),
+            ],
+        )?;
+        let (facet_t, facet_u, facet_v) = (&out[0], &out[1], &out[2]);
+
+        // ---- write flow-out facets to global memory
+        let store = |host: &mut HostMemory, p: &[i64], v: f32| {
+            for (_, addr) in alloc.write_locs(p) {
+                host.write(addr, v);
+            }
+        };
+        for x in 0..ti {
+            for y in 0..tj {
+                store(
+                    &mut host,
+                    &[t0 + tt - 1, u0 + x, v0 + y],
+                    facet_t[(x * tj + y) as usize],
+                );
+            }
+        }
+        for s in 0..tt {
+            for x in 0..h {
+                for y in 0..tj {
+                    store(
+                        &mut host,
+                        &[t0 + s, u0 + ti - h + x, v0 + y],
+                        facet_u[((s * h + x) * tj + y) as usize],
+                    );
+                }
+            }
+            for x in 0..ti {
+                for y in 0..h {
+                    store(
+                        &mut host,
+                        &[t0 + s, u0 + x, v0 + tj - h + y],
+                        facet_v[((s * ti + x) * h + y) as usize],
+                    );
+                }
+            }
+        }
+
+        // ---- timing through the memory simulator + task pipeline
+        let plan = alloc.plan(&coords);
+        let (rd, wr) = crate::accel::tile_mem_cycles(&mut sim, &plan.read_runs, &plan.write_runs);
+        let vol = tiling.tile_rect(&coords).volume();
+        pipe.push(TileCost {
+            read: rd,
+            exec: vol * flops_per_point / cfg.pe_ops_per_cycle.max(1),
+            write: wr,
+        });
+        raw_elems += plan.read_raw() + plan.write_raw();
+        useful_elems += plan.read_useful + plan.write_useful;
+        transactions += plan.transactions() as u64;
+    }
+    let stats = pipe.finish();
+
+    // ---- verification against the native reference
+    let reference = stencil_reference(&init, n as usize, m as usize, cfg.kind, steps as usize);
+    let mut max_err = 0f64;
+    for i in 0..n {
+        for j in 0..m {
+            let (u, v) = (i + r * (steps - 1), j + r * (steps - 1));
+            let (_, addr) = alloc.read_loc(&[steps - 1, u, v]);
+            let got = host.read(addr);
+            let want = reference[(i * m + j) as usize];
+            max_err = max_err.max((got - want).abs() as f64);
+        }
+    }
+
+    Ok(RunReport {
+        benchmark: format!("{:?}/{}x{}x{}", cfg.kind, steps, n, m).to_lowercase(),
+        alloc: cfg.alloc.name().to_string(),
+        tiles: tiling.num_tiles(),
+        makespan_cycles: stats.makespan,
+        mem_busy_cycles: stats.mem_busy,
+        raw_bytes: raw_elems * mem_cfg.elem_bytes,
+        useful_bytes: useful_elems * mem_cfg.elem_bytes,
+        transactions,
+        max_abs_err: max_err,
+        wall_secs: wall0.elapsed().as_secs_f64(),
+    })
+}

@@ -1,0 +1,371 @@
+//! Figure regeneration: the sweeps behind Fig 15 (bandwidth), Fig 16
+//! (slices/DSP) and Fig 17 (BRAM), with the paper's memory-bound rig
+//! (Fig 14: read and write engines only, one AXI HP port, f64 elements).
+
+use crate::area::{AreaEstimate, AreaModel, Device};
+use crate::coordinator::AllocKind;
+use crate::harness::workloads::Workload;
+use crate::layout::Allocation;
+use crate::memsim::{Dir, MemConfig, MemSim, Txn};
+use crate::poly::deps::DepPattern;
+use crate::poly::tiling::Tiling;
+use crate::util::table::{stacked_bars, StackedBar};
+
+/// One Fig-15 data point.
+#[derive(Clone, Debug)]
+pub struct BandwidthPoint {
+    pub benchmark: String,
+    pub tile: Vec<i64>,
+    pub alloc: String,
+    pub raw_mb_s: f64,
+    pub effective_mb_s: f64,
+    pub transactions: u64,
+    pub raw_bytes: u64,
+    pub useful_bytes: u64,
+}
+
+/// Build (tiling, deps, allocation) for a sweep point.
+pub fn build_alloc(
+    w: &Workload,
+    tile: &[i64],
+    alloc: AllocKind,
+    tiles_per_dim: i64,
+) -> anyhow::Result<(Tiling, DepPattern, Box<dyn Allocation>)> {
+    let deps = DepPattern::new(w.deps.clone())?;
+    let space = w.space_for(tile, tiles_per_dim);
+    let tiling = Tiling::new(space, tile.to_vec());
+    let a = alloc.build(&tiling, &deps)?;
+    Ok((tiling, deps, a))
+}
+
+/// Simulate the paper's memory-bound rig for one sweep point: all tiles'
+/// planned bursts played back-to-back through the AXI/DRAM model.
+pub fn measure_bandwidth(
+    w: &Workload,
+    tile: &[i64],
+    alloc: AllocKind,
+    mem_cfg: &MemConfig,
+    tiles_per_dim: i64,
+) -> anyhow::Result<BandwidthPoint> {
+    let (tiling, _deps, a) = build_alloc(w, tile, alloc, tiles_per_dim)?;
+    let mut sim = MemSim::new(mem_cfg.clone());
+    let mut raw = 0u64;
+    let mut useful = 0u64;
+    let mut txn_count = 0u64;
+    let mut txns: Vec<Txn> = Vec::new();
+    for coords in tiling.tiles() {
+        let plan = a.plan(&coords);
+        txns.clear();
+        txns.extend(plan.read_runs.iter().map(|r| Txn {
+            dir: Dir::Read,
+            addr: r.addr,
+            len: r.len,
+        }));
+        txns.extend(plan.write_runs.iter().map(|r| Txn {
+            dir: Dir::Write,
+            addr: r.addr,
+            len: r.len,
+        }));
+        for t in &txns {
+            sim.submit(t);
+        }
+        raw += plan.read_raw() + plan.write_raw();
+        useful += plan.read_useful + plan.write_useful;
+        txn_count += plan.transactions() as u64;
+    }
+    let cycles = sim.now().max(1);
+    let secs = mem_cfg.secs(cycles);
+    Ok(BandwidthPoint {
+        benchmark: w.name.to_string(),
+        tile: tile.to_vec(),
+        alloc: alloc.name().to_string(),
+        raw_mb_s: raw as f64 * mem_cfg.elem_bytes as f64 / 1e6 / secs,
+        effective_mb_s: useful as f64 * mem_cfg.elem_bytes as f64 / 1e6 / secs,
+        transactions: txn_count,
+        raw_bytes: raw * mem_cfg.elem_bytes,
+        useful_bytes: useful * mem_cfg.elem_bytes,
+    })
+}
+
+/// Full Fig-15 sweep over the registry.
+pub fn fig15_sweep(
+    workloads: &[Workload],
+    mem_cfg: &MemConfig,
+    tiles_per_dim: i64,
+) -> Vec<BandwidthPoint> {
+    let mut out = Vec::new();
+    for w in workloads {
+        for tile in &w.tile_sizes {
+            for alloc in AllocKind::ALL {
+                match measure_bandwidth(w, tile, alloc, mem_cfg, tiles_per_dim) {
+                    Ok(p) => out.push(p),
+                    Err(e) => eprintln!("skip {}/{:?}/{}: {e}", w.name, tile, alloc.name()),
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Render one benchmark's Fig-15 panel as stacked ASCII bars.
+pub fn render_fig15(points: &[BandwidthPoint], benchmark: &str, mem_cfg: &MemConfig) -> String {
+    let mut out = String::new();
+    let mut tiles: Vec<Vec<i64>> = Vec::new();
+    for p in points.iter().filter(|p| p.benchmark == benchmark) {
+        if !tiles.contains(&p.tile) {
+            tiles.push(p.tile.clone());
+        }
+    }
+    for tile in tiles {
+        let bars: Vec<StackedBar> = points
+            .iter()
+            .filter(|p| p.benchmark == benchmark && p.tile == tile)
+            .map(|p| StackedBar {
+                label: p.alloc.clone(),
+                effective: p.effective_mb_s,
+                raw: p.raw_mb_s,
+            })
+            .collect();
+        let title = format!(
+            "{} tile {}",
+            benchmark,
+            tile.iter()
+                .map(|x| x.to_string())
+                .collect::<Vec<_>>()
+                .join("x")
+        );
+        out.push_str(&stacked_bars(&title, &bars, mem_cfg.peak_mb_s(), 48, "MB/s"));
+        out.push('\n');
+    }
+    out
+}
+
+/// One Fig-16/17 data point.
+#[derive(Clone, Debug)]
+pub struct AreaPoint {
+    pub benchmark: String,
+    pub tile: Vec<i64>,
+    pub alloc: String,
+    pub est: AreaEstimate,
+}
+
+/// Area sweep (drives both Fig 16 and Fig 17).
+pub fn area_sweep(
+    workloads: &[Workload],
+    elem_bytes: u64,
+    tiles_per_dim: i64,
+) -> Vec<AreaPoint> {
+    let model = AreaModel::default();
+    let mut out = Vec::new();
+    for w in workloads {
+        for tile in &w.tile_sizes {
+            for alloc in AllocKind::ALL {
+                if let Ok((_t, _d, a)) = build_alloc(w, tile, alloc, tiles_per_dim) {
+                    out.push(AreaPoint {
+                        benchmark: w.name.to_string(),
+                        tile: tile.clone(),
+                        alloc: alloc.name().to_string(),
+                        est: model.estimate(a.as_ref(), elem_bytes),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Aggregate CFA vs all-other-baselines min/max, Fig-16 style.
+pub fn fig16_aggregate(points: &[AreaPoint], metric: impl Fn(&AreaEstimate, &Device) -> f64) -> Vec<(String, f64, f64, f64, f64)> {
+    // returns (benchmark, cfa_min, cfa_max, base_min, base_max)
+    let dev = Device::default();
+    let mut benches: Vec<String> = Vec::new();
+    for p in points {
+        if !benches.contains(&p.benchmark) {
+            benches.push(p.benchmark.clone());
+        }
+    }
+    benches
+        .into_iter()
+        .map(|b| {
+            let vals = |is_cfa: bool| -> (f64, f64) {
+                let xs: Vec<f64> = points
+                    .iter()
+                    .filter(|p| p.benchmark == b && ((p.alloc == "cfa") == is_cfa))
+                    .map(|p| metric(&p.est, &dev))
+                    .collect();
+                (
+                    xs.iter().cloned().fold(f64::INFINITY, f64::min),
+                    xs.iter().cloned().fold(0.0, f64::max),
+                )
+            };
+            let (cmin, cmax) = vals(true);
+            let (bmin, bmax) = vals(false);
+            (b, cmin, cmax, bmin, bmax)
+        })
+        .collect()
+}
+
+/// JSON export of a bandwidth sweep (machine-readable experiment record).
+pub fn fig15_json(points: &[BandwidthPoint], mem_cfg: &MemConfig) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::obj(vec![
+        ("figure", Json::str("fig15")),
+        ("roofline_mb_s", Json::num(mem_cfg.peak_mb_s())),
+        (
+            "points",
+            Json::arr(points.iter().map(|p| {
+                Json::obj(vec![
+                    ("benchmark", Json::str(p.benchmark.clone())),
+                    (
+                        "tile",
+                        Json::arr(p.tile.iter().map(|&x| Json::num(x as f64))),
+                    ),
+                    ("alloc", Json::str(p.alloc.clone())),
+                    ("raw_mb_s", Json::num(p.raw_mb_s)),
+                    ("effective_mb_s", Json::num(p.effective_mb_s)),
+                    ("transactions", Json::num(p.transactions as f64)),
+                ])
+            })),
+        ),
+    ])
+}
+
+/// CSV export of a bandwidth sweep.
+pub fn fig15_csv(points: &[BandwidthPoint]) -> String {
+    let mut t = crate::util::table::Table::new(&[
+        "benchmark",
+        "tile",
+        "alloc",
+        "raw_mb_s",
+        "effective_mb_s",
+        "transactions",
+        "raw_bytes",
+        "useful_bytes",
+    ]);
+    for p in points {
+        t.row(&[
+            p.benchmark.clone(),
+            p.tile
+                .iter()
+                .map(|x| x.to_string())
+                .collect::<Vec<_>>()
+                .join("x"),
+            p.alloc.clone(),
+            format!("{:.2}", p.raw_mb_s),
+            format!("{:.2}", p.effective_mb_s),
+            p.transactions.to_string(),
+            p.raw_bytes.to_string(),
+            p.useful_bytes.to_string(),
+        ]);
+    }
+    t.to_csv()
+}
+
+/// CSV export of an area sweep.
+pub fn area_csv(points: &[AreaPoint]) -> String {
+    let dev = Device::default();
+    let mut t = crate::util::table::Table::new(&[
+        "benchmark", "tile", "alloc", "slices", "slice_pct", "dsp", "dsp_pct", "bram36",
+        "bram_pct",
+    ]);
+    for p in points {
+        t.row(&[
+            p.benchmark.clone(),
+            p.tile
+                .iter()
+                .map(|x| x.to_string())
+                .collect::<Vec<_>>()
+                .join("x"),
+            p.alloc.clone(),
+            p.est.slices.to_string(),
+            format!("{:.2}", p.est.slice_pct(&dev)),
+            p.est.dsp.to_string(),
+            format!("{:.2}", p.est.dsp_pct(&dev)),
+            p.est.bram36.to_string(),
+            format!("{:.2}", p.est.bram_pct(&dev)),
+        ]);
+    }
+    t.to_csv()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::workloads::table1;
+
+    #[test]
+    fn quick_sweep_has_paper_shape() {
+        // CFA reaches near-roofline effective bandwidth; original has zero
+        // redundancy but lower raw; bbox has raw >> effective.
+        let w = &table1(true)[0]; // jacobi2d5p
+        let cfg = MemConfig::default();
+        let mut by_alloc = std::collections::BTreeMap::new();
+        for alloc in AllocKind::ALL {
+            let p = measure_bandwidth(w, &[16, 16, 16], alloc, &cfg, 3).unwrap();
+            by_alloc.insert(p.alloc.clone(), p);
+        }
+        let cfa = &by_alloc["cfa"];
+        let orig = &by_alloc["original"];
+        let bbox = &by_alloc["bbox"];
+        assert!(
+            cfa.effective_mb_s > 0.8 * cfg.peak_mb_s(),
+            "CFA effective {:.1} not near roofline",
+            cfa.effective_mb_s
+        );
+        assert!(cfa.effective_mb_s > orig.effective_mb_s);
+        assert!(cfa.effective_mb_s > bbox.effective_mb_s);
+        assert!(bbox.raw_mb_s > bbox.effective_mb_s * 1.2, "bbox should be redundant");
+        assert_eq!(orig.raw_bytes, orig.useful_bytes);
+        // CFA uses far fewer transactions than the original layout
+        assert!(cfa.transactions * 4 < orig.transactions);
+    }
+
+    #[test]
+    fn fig15_render_contains_all_allocs() {
+        let w = &table1(true)[0];
+        let cfg = MemConfig::default();
+        let pts: Vec<BandwidthPoint> = AllocKind::ALL
+            .iter()
+            .map(|&a| measure_bandwidth(w, &[16, 16, 16], a, &cfg, 2).unwrap())
+            .collect();
+        let s = render_fig15(&pts, "jacobi2d5p", &cfg);
+        for a in ["cfa", "original", "bbox", "datatile"] {
+            assert!(s.contains(a), "{s}");
+        }
+    }
+
+    #[test]
+    fn fig15_json_round_trips() {
+        let w = &table1(true)[0];
+        let cfg = MemConfig::default();
+        let pts = vec![measure_bandwidth(w, &[16, 16, 16], AllocKind::Cfa, &cfg, 2).unwrap()];
+        let j = fig15_json(&pts, &cfg);
+        let text = j.to_string_pretty();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("figure").unwrap().as_str(), Some("fig15"));
+        let p0 = back.get("points").unwrap().idx(0).unwrap();
+        assert_eq!(p0.get("alloc").unwrap().as_str(), Some("cfa"));
+        assert!(p0.get("effective_mb_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn area_sweep_produces_all_points() {
+        let wl = table1(true);
+        let pts = area_sweep(&wl[..1], 8, 2);
+        assert_eq!(pts.len(), wl[0].tile_sizes.len() * 4);
+        let csv = area_csv(&pts);
+        assert!(csv.lines().count() == pts.len() + 1);
+    }
+
+    #[test]
+    fn fig16_aggregate_shapes() {
+        let wl = table1(true);
+        let pts = area_sweep(&wl[..2], 8, 2);
+        let agg = fig16_aggregate(&pts, |e, d| e.slice_pct(d));
+        assert_eq!(agg.len(), 2);
+        for (b, cmin, cmax, bmin, bmax) in agg {
+            assert!(cmin <= cmax && bmin <= bmax, "{b}");
+            assert!(cmin > 0.0);
+        }
+    }
+}

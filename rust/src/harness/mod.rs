@@ -1,0 +1,8 @@
+//! Benchmark harness: Table-I workload registry and the sweeps that
+//! regenerate every figure of the paper's evaluation (§VI).
+
+pub mod figures;
+pub mod workloads;
+
+pub use figures::{area_sweep, fig15_sweep, measure_bandwidth, render_fig15};
+pub use workloads::{by_name, table1, Workload};

@@ -1,0 +1,253 @@
+//! Benchmark registry — Table I of the paper.
+//!
+//! Each workload is a uniform dependence pattern in skew-normalized form
+//! (every vector non-positive; `poly::skew` documents the basis change)
+//! plus the tile-size sweep the paper uses: 16³ → 128³, with 1:1, 1.5:1
+//! and 2:1 aspect ratios (gaussian: 4×16² → 4×128², time-tile fixed at 4).
+
+use crate::poly::vec::IVec;
+
+/// One Table-I benchmark.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub name: &'static str,
+    /// "Equivalent application" column of Table I.
+    pub equivalent: &'static str,
+    pub dims: usize,
+    /// Skew-normalized dependence vectors.
+    pub deps: Vec<IVec>,
+    /// Tile-size sweep (already ratio-expanded).
+    pub tile_sizes: Vec<IVec>,
+}
+
+impl Workload {
+    /// Iteration-space sizes for a tile: `tiles_per_dim` tiles per axis.
+    pub fn space_for(&self, tile: &[i64], tiles_per_dim: i64) -> IVec {
+        tile.iter().map(|t| t * tiles_per_dim).collect()
+    }
+
+    /// Dependence count (the "Nb of deps" column).
+    pub fn n_deps(&self) -> usize {
+        self.deps.len()
+    }
+}
+
+/// 3x3 stencil support at t-1, skewed by r=1: (-1, di-1, dj-1).
+fn skewed_taps(support: &[(i64, i64)], r: i64) -> Vec<IVec> {
+    support
+        .iter()
+        .map(|&(di, dj)| vec![-1, di - r, dj - r])
+        .collect()
+}
+
+fn cube_sizes(bases: &[i64], ratios: bool) -> Vec<IVec> {
+    let mut out = Vec::new();
+    for &b in bases {
+        out.push(vec![b, b, b]);
+        if ratios {
+            out.push(vec![b, 3 * b / 2, b]); // 1.5:1
+            out.push(vec![b, 2 * b, b]); // 2:1
+        }
+    }
+    out
+}
+
+fn gaussian_sizes(bases: &[i64], ratios: bool) -> Vec<IVec> {
+    let mut out = Vec::new();
+    for &b in bases {
+        out.push(vec![4, b, b]);
+        if ratios {
+            out.push(vec![4, 3 * b / 2, b]);
+            out.push(vec![4, 2 * b, b]);
+        }
+    }
+    out
+}
+
+/// Build the full Table-I registry. `quick` restricts the tile sweep to two
+/// sizes without ratio variants (used by tests and `--quick` benches).
+pub fn table1(quick: bool) -> Vec<Workload> {
+    let bases: &[i64] = if quick { &[16, 32] } else { &[16, 32, 64, 128] };
+    let ratios = !quick;
+
+    // jacobi2d5p: 5-point cross at t-1 (Laplace equation)
+    let cross = [(0, 0), (-1, 0), (1, 0), (0, -1), (0, 1)];
+    // jacobi2d9p: full 3x3 at t-1 (3x3 convolution)
+    let full3: Vec<(i64, i64)> = (-1..=1)
+        .flat_map(|a| (-1..=1).map(move |b| (a, b)))
+        .collect();
+    // jacobi2d9p-gol: 2nd-order finite difference — 8-neighborhood at t-1
+    // plus the center at t-2 (wave-equation style); reaches two time planes,
+    // so w = (2, 2, 2).
+    let mut gol = skewed_taps(
+        &full3
+            .iter()
+            .copied()
+            .filter(|&(a, b)| (a, b) != (0, 0))
+            .collect::<Vec<_>>(),
+        1,
+    );
+    gol.push(vec![-2, -2, -2]); // center at t-2, skewed by r=1
+    // gaussian: 5x5 at t-1, r=2
+    let full5: Vec<(i64, i64)> = (-2..=2)
+        .flat_map(|a| (-2..=2).map(move |b| (a, b)))
+        .collect();
+    // smith-waterman 3 sequences: {0,-1}^3 \ 0, naturally backwards
+    let mut sw = Vec::new();
+    for di in [-1i64, 0] {
+        for dj in [-1i64, 0] {
+            for dk in [-1i64, 0] {
+                if (di, dj, dk) != (0, 0, 0) {
+                    sw.push(vec![di, dj, dk]);
+                }
+            }
+        }
+    }
+
+    vec![
+        Workload {
+            name: "jacobi2d5p",
+            equivalent: "Laplace equation",
+            dims: 3,
+            deps: skewed_taps(&cross, 1),
+            tile_sizes: cube_sizes(bases, ratios),
+        },
+        Workload {
+            name: "jacobi2d9p",
+            equivalent: "3x3 convolution",
+            dims: 3,
+            deps: skewed_taps(&full3, 1),
+            tile_sizes: cube_sizes(bases, ratios),
+        },
+        Workload {
+            name: "jacobi2d9p-gol",
+            equivalent: "2nd-order finite difference",
+            dims: 3,
+            deps: gol,
+            tile_sizes: cube_sizes(bases, ratios),
+        },
+        Workload {
+            name: "gaussian",
+            equivalent: "5x5 Gaussian Blur",
+            dims: 3,
+            deps: skewed_taps(&full5, 2),
+            tile_sizes: gaussian_sizes(bases, ratios),
+        },
+        Workload {
+            name: "smith-waterman-3seq",
+            equivalent: "Alignment of 3 sequences",
+            dims: 3,
+            deps: sw,
+            tile_sizes: cube_sizes(bases, ratios),
+        },
+    ]
+}
+
+/// Extension workload beyond Table I: a 3-D heat stencil over time — a
+/// 4-D iteration space, which exercises the paper's §IV.J observation that
+/// k-th-level neighbors with k >= d of contiguity directions cannot all be
+/// served contiguously (C(4,2) = 6 pairs > 4 facets). Not part of the
+/// paper's sweep; used by the 4-D tests and available to `layout_explorer`.
+pub fn heat3d() -> Workload {
+    // 7-point 3-D stencil at t-1, skewed by 1 in each spatial dim.
+    let mut deps = Vec::new();
+    for (di, dj, dk) in [
+        (0, 0, 0),
+        (-1, 0, 0),
+        (1, 0, 0),
+        (0, -1, 0),
+        (0, 1, 0),
+        (0, 0, -1),
+        (0, 0, 1),
+    ] {
+        deps.push(vec![-1, di - 1, dj - 1, dk - 1]);
+    }
+    Workload {
+        name: "heat3d",
+        equivalent: "3-D heat equation (4-D space, beyond Table I)",
+        dims: 4,
+        deps,
+        tile_sizes: vec![vec![4, 8, 8, 8], vec![4, 16, 16, 16]],
+    }
+}
+
+/// Find a workload by name.
+pub fn by_name(name: &str) -> Option<Workload> {
+    table1(false).into_iter().find(|w| w.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poly::deps::DepPattern;
+
+    #[test]
+    fn dep_counts_match_table1() {
+        let t = table1(false);
+        let counts: Vec<(&str, usize)> = t.iter().map(|w| (w.name, w.n_deps())).collect();
+        assert_eq!(
+            counts,
+            vec![
+                ("jacobi2d5p", 5),
+                ("jacobi2d9p", 9),
+                ("jacobi2d9p-gol", 9),
+                ("gaussian", 25),
+                ("smith-waterman-3seq", 7),
+            ]
+        );
+    }
+
+    #[test]
+    fn all_patterns_are_backwards_and_valid() {
+        for w in table1(false) {
+            let deps = DepPattern::new(w.deps.clone())
+                .unwrap_or_else(|e| panic!("{}: {e}", w.name));
+            assert_eq!(deps.dims(), 3, "{}", w.name);
+            assert!(!deps.active_axes().is_empty());
+        }
+    }
+
+    #[test]
+    fn facet_widths_match_design_doc() {
+        let widths: Vec<Vec<i64>> = table1(false)
+            .iter()
+            .map(|w| DepPattern::new(w.deps.clone()).unwrap().widths())
+            .collect();
+        assert_eq!(widths[0], vec![1, 2, 2]); // jacobi2d5p
+        assert_eq!(widths[1], vec![1, 2, 2]); // jacobi2d9p
+        assert_eq!(widths[2], vec![2, 2, 2]); // gol: reaches t-2
+        assert_eq!(widths[3], vec![1, 4, 4]); // gaussian
+        assert_eq!(widths[4], vec![1, 1, 1]); // sw3
+    }
+
+    #[test]
+    fn tile_sweeps_cover_paper_range() {
+        let t = table1(false);
+        let jac = &t[0];
+        assert!(jac.tile_sizes.contains(&vec![16, 16, 16]));
+        assert!(jac.tile_sizes.contains(&vec![128, 128, 128]));
+        assert!(jac.tile_sizes.contains(&vec![16, 24, 16])); // 1.5:1
+        let g = &t[3];
+        assert!(g.tile_sizes.iter().all(|s| s[0] == 4));
+        assert!(g.tile_sizes.contains(&vec![4, 128, 128]));
+    }
+
+    #[test]
+    fn quick_mode_is_smaller() {
+        assert!(table1(true)[0].tile_sizes.len() < table1(false)[0].tile_sizes.len());
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("gaussian").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn heat3d_is_4d_and_backwards() {
+        let w = heat3d();
+        let deps = DepPattern::new(w.deps.clone()).unwrap();
+        assert_eq!(deps.dims(), 4);
+        assert_eq!(deps.widths(), vec![1, 2, 2, 2]);
+    }
+}

@@ -1,0 +1,205 @@
+//! Bounding-box baseline (Pouchet et al. [8], §VI.A.1).
+//!
+//! The layout stays row-major, but each tile transfers the **rectangular
+//! bounding box** of its flow-in / flow-out sets, trading redundant traffic
+//! for long bursts: rows of the box are contiguous, and boxes covering full
+//! trailing dimensions collapse into single transactions. The unused part
+//! of the box is transferred and discarded (the grey area of Fig 15).
+
+use crate::layout::{
+    linearize, merge_runs, runs_of_box, write_set, AddrGenProfile, Allocation, Piece, TilePlan,
+};
+use crate::poly::deps::DepPattern;
+use crate::poly::flow::flow_in;
+use crate::poly::tiling::Tiling;
+
+/// Row-major allocation with bounding-box transfers.
+#[derive(Clone, Debug)]
+pub struct BoundingBox {
+    tiling: Tiling,
+    deps: DepPattern,
+}
+
+impl BoundingBox {
+    pub fn new(tiling: Tiling, deps: DepPattern) -> BoundingBox {
+        BoundingBox { tiling, deps }
+    }
+
+}
+
+impl Allocation for BoundingBox {
+    fn name(&self) -> &str {
+        "bbox"
+    }
+
+    fn tiling(&self) -> &Tiling {
+        &self.tiling
+    }
+
+    fn footprint(&self) -> u64 {
+        self.tiling.space_rect().volume()
+    }
+
+    fn num_arrays(&self) -> usize {
+        1
+    }
+
+    fn holds(&self, array: usize, p: &[i64]) -> bool {
+        array == 0 && self.tiling.space_rect().contains(p)
+    }
+
+    fn addr_of(&self, array: usize, p: &[i64]) -> u64 {
+        assert!(self.holds(array, p));
+        linearize(p, &self.tiling.space)
+    }
+
+    fn plan(&self, coords: &[i64]) -> TilePlan {
+        let fin = flow_in(&self.tiling, &self.deps, coords);
+        let fout = write_set(&self.tiling, &self.deps, coords);
+        let mut plan = TilePlan {
+            read_useful: fin.volume(),
+            write_useful: fout.volume(),
+            ..TilePlan::default()
+        };
+        if let Some(bb) = fin.bbox() {
+            plan.read_runs = merge_runs(runs_of_box(&bb, &self.tiling.space, 0));
+            // marshaling still moves only the useful points
+            plan.read_pieces = fin
+                .rects()
+                .iter()
+                .map(|r| Piece {
+                    array: 0,
+                    iter_box: r.clone(),
+                })
+                .collect();
+        }
+        if let Some(bb) = fout.bbox() {
+            plan.write_runs = merge_runs(runs_of_box(&bb, &self.tiling.space, 0));
+            plan.write_pieces = fout
+                .rects()
+                .iter()
+                .map(|r| Piece {
+                    array: 0,
+                    iter_box: r.clone(),
+                })
+                .collect();
+        }
+        plan
+    }
+
+    fn read_loc(&self, p: &[i64]) -> (usize, u64) {
+        (0, self.addr_of(0, p))
+    }
+
+    fn write_locs(&self, p: &[i64]) -> Vec<(usize, u64)> {
+        vec![(0, self.addr_of(0, p))]
+    }
+
+    fn addrgen(&self) -> AddrGenProfile {
+        // Same affine generator as the original layout, but fewer burst
+        // starts (one box per direction).
+        let mut prof = OriginalProfileHelper::profile(&self.tiling);
+        let counts = self.tiling.tile_counts();
+        let mid: Vec<i64> = counts.iter().map(|&c| (c - 1).min(1)).collect();
+        prof.bursts_per_tile = self.plan(&mid).transactions() as f64;
+        prof
+    }
+}
+
+/// Shared affine-addressing cost for row-major baselines.
+pub(crate) struct OriginalProfileHelper;
+
+impl OriginalProfileHelper {
+    pub(crate) fn profile(tiling: &Tiling) -> AddrGenProfile {
+        let st = crate::layout::strides(&tiling.space);
+        let mut prof = AddrGenProfile {
+            arrays: 1,
+            ..AddrGenProfile::default()
+        };
+        for &s in &st {
+            if s > 1 {
+                if s.is_power_of_two() {
+                    prof.shift_ops += 1;
+                } else {
+                    prof.mul_ops += 1;
+                }
+                prof.add_ops += 1;
+            }
+        }
+        prof.add_ops += tiling.dims();
+        let fp: u64 = tiling.space_rect().volume();
+        prof.counter_bits = 64 - fp.leading_zeros() as usize;
+        prof
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poly::deps::DepPattern;
+
+    fn setup() -> BoundingBox {
+        let tiling = Tiling::new(vec![12, 12], vec![4, 4]);
+        let deps = DepPattern::new(vec![vec![-1, 0], vec![0, -1], vec![-1, -1]]).unwrap();
+        BoundingBox::new(tiling, deps)
+    }
+
+    #[test]
+    fn redundancy_present_for_interior_tiles() {
+        let b = setup();
+        let plan = b.plan(&[1, 1]);
+        // flow-in is an L-shaped halo; its bbox strictly contains it
+        assert!(plan.read_raw() > plan.read_useful);
+        assert!(plan.read_useful > 0);
+    }
+
+    #[test]
+    fn fewer_bursts_than_original() {
+        let b = setup();
+        let o = crate::layout::original::OriginalLayout::new(
+            b.tiling().clone(),
+            DepPattern::new(vec![vec![-1, 0], vec![0, -1], vec![-1, -1]]).unwrap(),
+        );
+        use crate::layout::Allocation as _;
+        let pb = b.plan(&[1, 1]);
+        let po = o.plan(&[1, 1]);
+        assert!(
+            pb.read_runs.len() <= po.read_runs.len(),
+            "bbox {} vs original {}",
+            pb.read_runs.len(),
+            po.read_runs.len()
+        );
+    }
+
+    #[test]
+    fn bbox_runs_cover_every_flow_in_address() {
+        let b = setup();
+        for tc in b.tiling().tiles() {
+            let plan = b.plan(&tc);
+            for pc in &plan.read_pieces {
+                for p in pc.iter_box.points() {
+                    let a = b.addr_of(0, &p);
+                    assert!(plan.read_runs.iter().any(|r| a >= r.addr && a < r.end()));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn corner_tile_has_empty_plan() {
+        let b = setup();
+        let plan = b.plan(&[0, 0]);
+        assert!(plan.read_runs.is_empty());
+        assert_eq!(plan.read_useful, 0);
+    }
+
+    #[test]
+    fn useful_never_exceeds_raw() {
+        let b = setup();
+        for tc in b.tiling().tiles() {
+            let plan = b.plan(&tc);
+            assert!(plan.read_raw() >= plan.read_useful);
+            assert!(plan.write_raw() >= plan.write_useful);
+        }
+    }
+}

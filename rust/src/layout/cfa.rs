@@ -1,0 +1,786 @@
+//! Canonical Facet Allocation (§IV) — the paper's contribution.
+//!
+//! For each active axis k (w_k > 0) CFA builds a **facet array** holding the
+//! last `w_k` planes of every tile along k, combining:
+//!
+//! * **multi-projection** (§IV.F): one data space per canonical hyperplane,
+//!   as thick as the dependence pattern plunges into neighbor tiles
+//!   (`w_k = max_q |e_k · B_q|`);
+//! * **single-assignment replication** (§IV.F.4): the tile coordinate along
+//!   k is an extra array dimension, so no two tiles share storage;
+//! * **data tiling** (§IV.G): the facet of one tile is one contiguous data
+//!   tile → every flow-out facet is written in a single burst
+//!   (*full-tile contiguity*);
+//! * **dimension permutation** (§IV.H): each facet has an inter-tile
+//!   contiguity axis `c_k`; its tile coordinate is the fastest outer
+//!   dimension and its intra coordinate the slowest inner dimension, so a
+//!   second-level-neighbor extension is a contiguous tail of the preceding
+//!   data tile (*inter-tile contiguity*);
+//! * **inner ordering** (§IV.I): tails nest as suffixes, so the third-level
+//!   corner set S_3 is one contiguous chunk (*intra-tile contiguity*).
+//!
+//! The contiguity axes are assigned **cyclically over the active axes**
+//! (c_i=j, c_j=k, c_k=i in 3D), which covers every second-level pair like
+//! the paper's per-case choices do (the paper's printed 3D layouts contain
+//! a typo — facet_k is missing its `[i]` dimension — the cyclic rule is the
+//! consistent generalization of its §IV.H procedure).
+//!
+//! One deliberate deviation: the paper stores the thickness dimension as
+//! `x_k mod w_k`. For tile sizes not divisible by w_k that map cyclically
+//! rotates the tail (breaking monotonicity), so we store the equivalent
+//! *offset-from-tail* index `x_k - (tile_end_k - w_k)` — same footprint,
+//! identical when `w_k | t_k` up to rotation, and order-preserving, which
+//! keeps partial facet reads contiguous.
+
+use crate::layout::{
+    linearize, merge_runs, runs_of_box, AddrGenProfile, Allocation, Piece, TilePlan,
+};
+use crate::poly::deps::DepPattern;
+use crate::poly::flow::flow_in;
+use crate::poly::rect::Rect;
+use crate::poly::tiling::Tiling;
+use crate::poly::vec::IVec;
+
+/// Feature toggles for the contiguity-level ablation
+/// (`benches/ablation_contiguity.rs`).
+#[derive(Clone, Copy, Debug)]
+pub struct CfaOpts {
+    /// Merge bursts across adjacent data tiles (§IV.H). Off → one burst
+    /// set per facet piece.
+    pub inter_tile: bool,
+    /// Choose the facet serving a k≥3-level piece by measured contiguity
+    /// (§IV.I). Off → always the lowest-numbered candidate axis.
+    pub intra_tile: bool,
+    /// Rectangular over-approximation of partial facet reads (Fig 11).
+    /// Off → exact (possibly fragmented) reads.
+    pub bbox_expand: bool,
+}
+
+impl Default for CfaOpts {
+    fn default() -> Self {
+        CfaOpts {
+            inter_tile: true,
+            intra_tile: true,
+            bbox_expand: true,
+        }
+    }
+}
+
+/// One facet array (projection of the iteration space along `axis`).
+#[derive(Clone, Debug)]
+pub struct FacetArray {
+    /// Axis k this facet projects along.
+    pub axis: usize,
+    /// Inter-tile contiguity axis c_k (None in 1-D spaces).
+    pub contig: Option<usize>,
+    /// Facet thickness w_k.
+    pub w: i64,
+    /// Tile-coordinate dimensions, storage order: `[k, others…, c_k]`.
+    pub outer_order: Vec<usize>,
+    /// Intra-tile dimensions (projected axes), storage order:
+    /// `[c_k, others ascending]`.
+    pub inner_order: Vec<usize>,
+    /// Storage extents: outer tile counts, inner tile sizes, then w.
+    pub dims: Vec<i64>,
+    /// Base element offset of this array in global memory.
+    pub base: u64,
+}
+
+impl FacetArray {
+    /// Elements allocated.
+    pub fn size(&self) -> u64 {
+        self.dims.iter().map(|&d| d as u64).product()
+    }
+
+    /// Human-readable layout, e.g. `facet_1[jj][ii][kk][k][i][j:2]`.
+    pub fn describe(&self, names: &[&str]) -> String {
+        let nm = |a: usize| names.get(a).copied().unwrap_or("?");
+        let mut s = format!("facet_{}", nm(self.axis));
+        for &o in &self.outer_order {
+            s.push_str(&format!("[{}{}]", nm(o), nm(o)));
+        }
+        for &i in &self.inner_order {
+            s.push_str(&format!("[{}]", nm(i)));
+        }
+        s.push_str(&format!("[{}:{}]", nm(self.axis), self.w));
+        s
+    }
+}
+
+/// Canonical Facet Allocation over a tiling and a backwards pattern.
+#[derive(Clone, Debug)]
+pub struct Cfa {
+    tiling: Tiling,
+    deps: DepPattern,
+    facets: Vec<FacetArray>,
+    opts: CfaOpts,
+    total: u64,
+}
+
+/// Construction errors.
+#[derive(Debug, thiserror::Error)]
+pub enum CfaError {
+    #[error("facet width {w} exceeds tile size {t} along axis {axis}: flow would reach beyond the adjacent tile")]
+    WidthExceedsTile { axis: usize, w: i64, t: i64 },
+    #[error("dependence pattern has no active axis (no inter-tile flow)")]
+    NoActiveAxis,
+}
+
+impl Cfa {
+    pub fn new(tiling: Tiling, deps: DepPattern) -> Result<Cfa, CfaError> {
+        Cfa::with_opts(tiling, deps, CfaOpts::default())
+    }
+
+    pub fn with_opts(tiling: Tiling, deps: DepPattern, opts: CfaOpts) -> Result<Cfa, CfaError> {
+        let d = tiling.dims();
+        let active = deps.active_axes();
+        if active.is_empty() {
+            return Err(CfaError::NoActiveAxis);
+        }
+        for &k in &active {
+            let (w, t) = (deps.width(k), tiling.tile[k]);
+            if w > t {
+                return Err(CfaError::WidthExceedsTile { axis: k, w, t });
+            }
+        }
+        let counts = tiling.tile_counts();
+        let mut facets = Vec::with_capacity(active.len());
+        let mut base = 0u64;
+        for (pos, &k) in active.iter().enumerate() {
+            // Cyclic contiguity-axis assignment over the active axes; if the
+            // next active axis is k itself (single active axis) fall back to
+            // any projected axis.
+            let contig = if d == 1 {
+                None
+            } else {
+                let next = active[(pos + 1) % active.len()];
+                Some(if next != k {
+                    next
+                } else {
+                    (0..d).find(|&a| a != k).unwrap()
+                })
+            };
+            // outer: k first (single-assignment dim), then the rest with the
+            // contiguity axis last (fastest-varying).
+            let mut outer: Vec<usize> = vec![k];
+            let mut rest: Vec<usize> = (0..d).filter(|&a| a != k).collect();
+            if let Some(c) = contig {
+                rest.retain(|&a| a != c);
+                outer.extend(rest.iter().copied());
+                outer.push(c);
+            } else {
+                outer.extend(rest.iter().copied());
+            }
+            // inner: contiguity axis first (slowest intra), rest ascending.
+            let mut inner: Vec<usize> = Vec::new();
+            if let Some(c) = contig {
+                inner.push(c);
+                inner.extend((0..d).filter(|&a| a != k && a != c));
+            }
+            let w = deps.width(k);
+            let mut dims: Vec<i64> = outer.iter().map(|&o| counts[o]).collect();
+            dims.extend(inner.iter().map(|&i| tiling.tile[i]));
+            dims.push(w);
+            let fa = FacetArray {
+                axis: k,
+                contig,
+                w,
+                outer_order: outer,
+                inner_order: inner,
+                dims,
+                base,
+            };
+            base += fa.size();
+            facets.push(fa);
+        }
+        Ok(Cfa {
+            tiling,
+            deps,
+            facets,
+            opts,
+            total: base,
+        })
+    }
+
+    pub fn facet_arrays(&self) -> &[FacetArray] {
+        &self.facets
+    }
+
+    pub fn deps(&self) -> &DepPattern {
+        &self.deps
+    }
+
+    /// Index of the facet array for axis k.
+    fn facet_index(&self, axis: usize) -> Option<usize> {
+        self.facets.iter().position(|f| f.axis == axis)
+    }
+
+    /// Start of the w-tail of tile `tc` along `axis` (clamped tiles keep a
+    /// w-thick tail unless thinner than w).
+    fn tail_start(&self, tc: &[i64], axis: usize) -> i64 {
+        let t = self.tiling.tile_rect(tc);
+        (t.hi[axis] - self.deps.width(axis)).max(t.lo[axis])
+    }
+
+    /// Map an iteration box contained in one tile's k-tail to the facet
+    /// array's coordinate box (array dims order).
+    fn box_to_array(&self, fi: usize, tc: &[i64], bx: &Rect) -> Rect {
+        let fa = &self.facets[fi];
+        let trect = self.tiling.tile_rect(tc);
+        let tail0 = self.tail_start(tc, fa.axis);
+        debug_assert!(bx.lo[fa.axis] >= tail0, "box not inside facet tail");
+        let mut lo = Vec::with_capacity(fa.dims.len());
+        let mut hi = Vec::with_capacity(fa.dims.len());
+        for &o in &fa.outer_order {
+            lo.push(tc[o]);
+            hi.push(tc[o] + 1);
+        }
+        for &i in &fa.inner_order {
+            lo.push(bx.lo[i] - trect.lo[i]);
+            hi.push(bx.hi[i] - trect.lo[i]);
+        }
+        lo.push(bx.lo[fa.axis] - tail0);
+        hi.push(bx.hi[fa.axis] - tail0);
+        Rect::new(lo, hi)
+    }
+
+    /// The whole data tile of tile `tc` in facet `fi` (actual extents —
+    /// boundary tiles underfill their allocation).
+    fn data_tile_box(&self, fi: usize, tc: &[i64]) -> Rect {
+        let fa = &self.facets[fi];
+        let trect = self.tiling.tile_rect(tc);
+        let mut facet_rect = trect.clone();
+        facet_rect.lo[fa.axis] = self.tail_start(tc, fa.axis);
+        self.box_to_array(fi, tc, &facet_rect)
+    }
+
+    /// Split a flow region into per-producer-tile boxes, each annotated
+    /// with its *crossing axes*: the axes along which the producer tile
+    /// differs from the consumer (the neighbor level of §IV.D). The box is
+    /// guaranteed to sit in the producer's tail along every crossing axis
+    /// (appendix theorem), so any of them selects a facet holding it —
+    /// crossing axes, not incidental tail membership, are what determine
+    /// the mergeable facet (§IV.H).
+    fn split_by_producer(
+        &self,
+        region: &crate::poly::rect::Region,
+        consumer: &[i64],
+    ) -> Vec<(IVec, Rect, Vec<usize>)> {
+        let mut out = Vec::new();
+        for r in region.rects() {
+            let lo_t = self.tiling.tile_of(&r.lo);
+            let hi_pt: IVec = r.hi.iter().map(|h| h - 1).collect();
+            let hi_t = self.tiling.tile_of(&hi_pt);
+            let trange = Rect::new(lo_t, hi_t.iter().map(|c| c + 1).collect());
+            for tc in trange.points() {
+                let sub = r.intersect(&self.tiling.tile_rect(&tc));
+                if sub.is_empty() {
+                    continue;
+                }
+                let crossing: Vec<usize> = (0..self.tiling.dims())
+                    .filter(|&a| tc[a] != consumer[a])
+                    .collect();
+                debug_assert!(!crossing.is_empty(), "flow-in piece inside consumer");
+                for &a in &crossing {
+                    debug_assert!(
+                        sub.lo[a] >= self.tail_start(&tc, a),
+                        "coverage violation: {sub:?} not in tail {a} of {tc:?}"
+                    );
+                }
+                out.push((tc, sub, crossing));
+            }
+        }
+        out
+    }
+
+    /// Choose which facet serves a flow-in piece (§IV.H–I).
+    fn choose_facet(&self, tc: &[i64], bx: &Rect, tails: &[usize]) -> usize {
+        let axis = match tails.len() {
+            0 => unreachable!("piece outside all tails"),
+            1 => tails[0],
+            2 => {
+                let (a, b) = (tails[0], tails[1]);
+                let ca = self.facets[self.facet_index(a).unwrap()].contig;
+                let cb = self.facets[self.facet_index(b).unwrap()].contig;
+                if ca == Some(b) {
+                    a
+                } else if cb == Some(a) {
+                    b
+                } else {
+                    a
+                }
+            }
+            _ if !self.opts.intra_tile => tails[0],
+            _ => {
+                // k-th level piece: pick the facet whose layout yields the
+                // fewest runs (in 3D this reproduces the S_3 suffix trick).
+                *tails
+                    .iter()
+                    .min_by_key(|&&a| {
+                        let fi = self.facet_index(a).unwrap();
+                        let abox = self.box_to_array(fi, tc, bx);
+                        runs_of_box(&abox, &self.facets[fi].dims, 0).len()
+                    })
+                    .unwrap()
+            }
+        };
+        self.facet_index(axis).unwrap()
+    }
+}
+
+impl Allocation for Cfa {
+    fn name(&self) -> &str {
+        "cfa"
+    }
+
+    fn tiling(&self) -> &Tiling {
+        &self.tiling
+    }
+
+    fn footprint(&self) -> u64 {
+        self.total
+    }
+
+    fn num_arrays(&self) -> usize {
+        self.facets.len()
+    }
+
+    fn holds(&self, array: usize, p: &[i64]) -> bool {
+        let fa = &self.facets[array];
+        let tc = self.tiling.tile_of(p);
+        self.tiling.space_rect().contains(p) && p[fa.axis] >= self.tail_start(&tc, fa.axis)
+    }
+
+    fn addr_of(&self, array: usize, p: &[i64]) -> u64 {
+        assert!(self.holds(array, p), "facet {array} does not hold {p:?}");
+        let fa = &self.facets[array];
+        let tc = self.tiling.tile_of(p);
+        let trect = self.tiling.tile_rect(&tc);
+        let mut coords = Vec::with_capacity(fa.dims.len());
+        for &o in &fa.outer_order {
+            coords.push(tc[o]);
+        }
+        for &i in &fa.inner_order {
+            coords.push(p[i] - trect.lo[i]);
+        }
+        coords.push(p[fa.axis] - self.tail_start(&tc, fa.axis));
+        fa.base + linearize(&coords, &fa.dims)
+    }
+
+    fn plan(&self, coords: &[i64]) -> TilePlan {
+        let fin = flow_in(&self.tiling, &self.deps, coords);
+        // useful writes = the facet union (no double counting of corner
+        // points duplicated across facet arrays; see layout::write_set).
+        let wset = crate::layout::write_set(&self.tiling, &self.deps, coords);
+        let mut plan = TilePlan {
+            read_useful: fin.volume(),
+            write_useful: wset.volume(),
+            ..TilePlan::default()
+        };
+
+        // ---- reads: assign pieces to facets, over-approximate, linearize
+        let pieces = self.split_by_producer(&fin, coords);
+        // (facet, producer) -> hull of array boxes (Fig 11 rectangular
+        // over-approximation), plus the exact pieces for marshaling.
+        let mut groups: Vec<(usize, IVec, Rect)> = Vec::new();
+        for (tc, bx, tails) in &pieces {
+            let fi = self.choose_facet(tc, bx, tails);
+            plan.read_pieces.push(Piece {
+                array: fi,
+                iter_box: bx.clone(),
+            });
+            let abox = self.box_to_array(fi, tc, bx);
+            if self.opts.bbox_expand {
+                if let Some(g) = groups
+                    .iter_mut()
+                    .find(|(gfi, gtc, _)| *gfi == fi && gtc == tc)
+                {
+                    g.2 = g.2.hull(&abox);
+                    continue;
+                }
+            }
+            groups.push((fi, tc.clone(), abox));
+        }
+        // Fig 11 rectangular over-approximation: widen each facet read to a
+        // *single contiguous run* of its data tile. Scanning the intra
+        // dimensions in storage order, every dimension after the first one
+        // with extent > 1 is widened to the full tile extent; leading
+        // singleton dimensions stay fixed. A few redundant elements are
+        // transferred (counted in raw, not useful), and a read ending at
+        // the tail of its data tile becomes address-adjacent to the next
+        // data tile along the contiguity axis, so merge_runs fuses the
+        // extension with the neighboring facet read (§IV.H) — this is what
+        // keeps an interior 3-D tile at ~4 read transactions.
+        if self.opts.bbox_expand {
+            for (fi, _tc, abox) in groups.iter_mut() {
+                let fa = &self.facets[*fi];
+                let inner0 = fa.outer_order.len();
+                let q = (inner0..abox.dims()).find(|&k| abox.extent(k) > 1);
+                if let Some(q) = q {
+                    // widen q to the end of the data tile (suffix form) and
+                    // everything after it fully: the box becomes one run
+                    // that terminates at the data-tile boundary, where it
+                    // can fuse with the next data tile's read.
+                    abox.hi[q] = fa.dims[q];
+                    for k in q + 1..abox.dims() {
+                        abox.lo[k] = 0;
+                        abox.hi[k] = fa.dims[k];
+                    }
+                }
+            }
+        }
+        let mut read_runs = Vec::new();
+        for (fi, _, abox) in &groups {
+            let fa = &self.facets[*fi];
+            let rs = runs_of_box(abox, &fa.dims, fa.base);
+            if self.opts.inter_tile {
+                read_runs.extend(rs);
+            } else {
+                // no cross-tile merging: each group keeps its own bursts
+                plan.read_runs.extend(merge_runs(rs));
+            }
+        }
+        if self.opts.inter_tile {
+            plan.read_runs = merge_runs(read_runs);
+        }
+
+        // ---- writes: every facet of this tile, one data tile each (§IV.A:
+        // all write accesses are bursts).
+        for (fi, fa) in self.facets.iter().enumerate() {
+            let dt = self.data_tile_box(fi, coords);
+            if dt.is_empty() {
+                continue;
+            }
+            let rs = merge_runs(runs_of_box(&dt, &fa.dims, fa.base));
+            plan.write_runs.extend(rs);
+            let trect = self.tiling.tile_rect(coords);
+            let mut facet_rect = trect.clone();
+            facet_rect.lo[fa.axis] = self.tail_start(coords, fa.axis);
+            plan.write_pieces.push(Piece {
+                array: fi,
+                iter_box: facet_rect,
+            });
+        }
+        plan
+    }
+
+    fn read_loc(&self, p: &[i64]) -> (usize, u64) {
+        let tc = self.tiling.tile_of(p);
+        for (fi, fa) in self.facets.iter().enumerate() {
+            if p[fa.axis] >= self.tail_start(&tc, fa.axis) {
+                return (fi, self.addr_of(fi, p));
+            }
+        }
+        panic!("point {p:?} is in no facet (not a flow point)");
+    }
+
+    fn write_locs(&self, p: &[i64]) -> Vec<(usize, u64)> {
+        let tc = self.tiling.tile_of(p);
+        let mut out = Vec::new();
+        for (fi, fa) in self.facets.iter().enumerate() {
+            if p[fa.axis] >= self.tail_start(&tc, fa.axis) {
+                out.push((fi, self.addr_of(fi, p)));
+            }
+        }
+        out
+    }
+
+    fn addrgen(&self) -> AddrGenProfile {
+        let mut prof = AddrGenProfile {
+            arrays: self.facets.len(),
+            ..AddrGenProfile::default()
+        };
+        for fa in &self.facets {
+            let st = crate::layout::strides(&fa.dims);
+            // off-chip base address: one multiply-add per outer dim
+            for (k, _) in fa.outer_order.iter().enumerate() {
+                let s = st[k];
+                if s > 1 {
+                    if s.is_power_of_two() {
+                        prof.shift_ops += 1;
+                    } else {
+                        prof.mul_ops += 1;
+                    }
+                    prof.add_ops += 1;
+                }
+            }
+            // on-chip address reconstruction per beat (Fig 12): the copy
+            // loop divides the linear counter back into intra coordinates.
+            prof.div_mod_ops += fa.inner_order.len();
+            prof.add_ops += fa.inner_order.len() + 1;
+            let vol: u64 = fa.dims[fa.outer_order.len()..]
+                .iter()
+                .map(|&x| x as u64)
+                .product();
+            prof.counter_bits += 64 - vol.leading_zeros() as usize;
+        }
+        // representative interior tile for the FSM burst count
+        let counts = self.tiling.tile_counts();
+        let mid: IVec = counts.iter().map(|&c| (c - 1).min(1)).collect();
+        prof.bursts_per_tile = self.plan(&mid).transactions() as f64;
+        prof
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poly::deps::DepPattern;
+    use crate::util::prop::{run, Config};
+
+    /// Fig-5-like configuration: 3D, 5^3 tiles, w = (1, 2, 2).
+    fn fig5() -> Cfa {
+        let tiling = Tiling::new(vec![15, 15, 15], vec![5, 5, 5]);
+        let deps = DepPattern::new(vec![
+            vec![-1, 0, 0],
+            vec![0, -2, 0],
+            vec![0, 0, -2],
+            vec![-1, -1, -1],
+        ])
+        .unwrap();
+        Cfa::new(tiling, deps).unwrap()
+    }
+
+    #[test]
+    fn facet_arrays_have_paper_structure() {
+        let cfa = fig5();
+        let f = cfa.facet_arrays();
+        assert_eq!(f.len(), 3);
+        // facet_i: replication dim first, cyclic contiguity axis j
+        assert_eq!(f[0].axis, 0);
+        assert_eq!(f[0].contig, Some(1));
+        assert_eq!(f[0].outer_order, vec![0, 2, 1]);
+        assert_eq!(f[0].inner_order, vec![1, 2]);
+        assert_eq!(f[0].w, 1);
+        // dims: counts (3,3,3) then inner (5,5) then w=1
+        assert_eq!(f[0].dims, vec![3, 3, 3, 5, 5, 1]);
+        // facet_j: c_j = k
+        assert_eq!(f[1].axis, 1);
+        assert_eq!(f[1].contig, Some(2));
+        assert_eq!(f[1].outer_order, vec![1, 0, 2]);
+        assert_eq!(f[1].inner_order, vec![2, 0]);
+        assert_eq!(f[1].dims, vec![3, 3, 3, 5, 5, 2]);
+        // facet_k: c_k = i (cyclic wrap)
+        assert_eq!(f[2].axis, 2);
+        assert_eq!(f[2].contig, Some(0));
+        assert_eq!(f[2].outer_order, vec![2, 1, 0]);
+        assert_eq!(f[2].inner_order, vec![0, 1]);
+    }
+
+    #[test]
+    fn footprint_is_sum_of_facets() {
+        let cfa = fig5();
+        let expect: u64 = 27 * 25 * 1 + 27 * 25 * 2 + 27 * 25 * 2;
+        assert_eq!(cfa.footprint(), expect);
+    }
+
+    #[test]
+    fn describe_is_readable() {
+        let cfa = fig5();
+        let d = cfa.facet_arrays()[1].describe(&["i", "j", "k"]);
+        assert_eq!(d, "facet_j[jj][ii][kk][k][i][j:2]");
+    }
+
+    #[test]
+    fn width_exceeding_tile_is_error() {
+        let tiling = Tiling::new(vec![10], vec![2]);
+        let deps = DepPattern::new(vec![vec![-3]]).unwrap();
+        assert!(matches!(
+            Cfa::new(tiling, deps),
+            Err(CfaError::WidthExceedsTile { .. })
+        ));
+    }
+
+    #[test]
+    fn addr_bijective_within_each_facet() {
+        let cfa = fig5();
+        for fi in 0..cfa.num_arrays() {
+            let mut seen = std::collections::HashSet::new();
+            for p in cfa.tiling().space_rect().points() {
+                if cfa.holds(fi, &p) {
+                    let a = cfa.addr_of(fi, &p);
+                    assert!(seen.insert(a), "address {a} reused (facet {fi}, {p:?})");
+                    assert!(a < cfa.footprint());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_assignment_across_tiles() {
+        // facet address ranges of distinct tiles are disjoint: collect the
+        // write runs of every tile and check for overlap.
+        let cfa = fig5();
+        let mut intervals: Vec<(u64, u64)> = Vec::new();
+        for tc in cfa.tiling().tiles() {
+            for r in cfa.plan(&tc).write_runs {
+                intervals.push((r.addr, r.end()));
+            }
+        }
+        intervals.sort();
+        for w in intervals.windows(2) {
+            assert!(w[0].1 <= w[1].0, "write overlap: {w:?}");
+        }
+    }
+
+    #[test]
+    fn flow_out_facet_writes_are_single_bursts() {
+        // full-tile contiguity (§IV.G): interior tiles write each facet in
+        // exactly one transaction.
+        let cfa = fig5();
+        let plan = cfa.plan(&[1, 1, 1]);
+        assert_eq!(plan.write_runs.len(), 3, "{:?}", plan.write_runs);
+        // sizes: 25*w
+        let mut lens: Vec<u64> = plan.write_runs.iter().map(|r| r.len).collect();
+        lens.sort_unstable();
+        assert_eq!(lens, vec![25, 50, 50]);
+    }
+
+    #[test]
+    fn interior_tile_reads_are_few_long_bursts() {
+        // the paper's "small number of burst transfers per tile (4 in the
+        // case of 3-dimensional tiles)".
+        let cfa = fig5();
+        let plan = cfa.plan(&[1, 1, 1]);
+        assert!(
+            plan.read_runs.len() <= 4,
+            "expected <=4 read bursts, got {:?}",
+            plan.read_runs
+        );
+        assert!(plan.read_raw() >= plan.read_useful);
+    }
+
+    #[test]
+    fn plan_reads_cover_flow_in() {
+        // every flow-in point's canonical address is covered by a read run,
+        // and every read piece's points are covered too.
+        let cfa = fig5();
+        for tc in cfa.tiling().tiles() {
+            let plan = cfa.plan(&tc);
+            let covered = |a: u64| plan.read_runs.iter().any(|r| a >= r.addr && a < r.end());
+            for pc in &plan.read_pieces {
+                for p in pc.iter_box.points() {
+                    let a = cfa.addr_of(pc.array, &p);
+                    assert!(covered(a), "tile {tc:?}: point {p:?} addr {a} uncovered");
+                }
+            }
+            let fin = flow_in(cfa.tiling(), cfa.deps(), &tc);
+            let piece_vol: u64 = plan.read_pieces.iter().map(|p| p.iter_box.volume()).sum();
+            assert_eq!(piece_vol, fin.volume(), "pieces partition flow-in");
+        }
+    }
+
+    #[test]
+    fn write_pieces_cover_flow_out() {
+        let cfa = fig5();
+        for tc in cfa.tiling().tiles() {
+            let plan = cfa.plan(&tc);
+            let fout = crate::poly::flow::flow_out(cfa.tiling(), cfa.deps(), &tc);
+            for p in fout.all_points() {
+                let held = plan
+                    .write_pieces
+                    .iter()
+                    .any(|pc| pc.iter_box.contains(&p));
+                assert!(held, "flow-out point {p:?} of tile {tc:?} not written");
+            }
+        }
+    }
+
+    #[test]
+    fn read_and_write_locs_agree() {
+        // the canonical read location of a flow point is among its write
+        // locations (the coordinator relies on this).
+        let cfa = fig5();
+        for p in cfa.tiling().space_rect().points() {
+            let locs = cfa.write_locs(&p);
+            if locs.is_empty() {
+                continue; // interior point, never leaves chip
+            }
+            let rl = cfa.read_loc(&p);
+            assert!(locs.contains(&rl), "{p:?}: {rl:?} not in {locs:?}");
+        }
+    }
+
+    #[test]
+    fn ablation_options_change_transaction_count() {
+        let tiling = Tiling::new(vec![20, 20, 20], vec![5, 5, 5]);
+        let deps = DepPattern::new(vec![
+            vec![-1, 0, 0],
+            vec![0, -2, 0],
+            vec![0, 0, -2],
+            vec![-1, -2, -2],
+        ])
+        .unwrap();
+        let full = Cfa::with_opts(tiling.clone(), deps.clone(), CfaOpts::default()).unwrap();
+        let no_inter = Cfa::with_opts(
+            tiling.clone(),
+            deps.clone(),
+            CfaOpts {
+                inter_tile: false,
+                ..CfaOpts::default()
+            },
+        )
+        .unwrap();
+        let mid = vec![2, 2, 2];
+        let t_full = full.plan(&mid).read_runs.len();
+        let t_no_inter = no_inter.plan(&mid).read_runs.len();
+        assert!(
+            t_full <= t_no_inter,
+            "inter-tile merging should not increase bursts ({t_full} vs {t_no_inter})"
+        );
+    }
+
+    #[test]
+    fn addrgen_profile_is_populated() {
+        let prof = fig5().addrgen();
+        assert_eq!(prof.arrays, 3);
+        assert!(prof.add_ops > 0);
+        assert!(prof.bursts_per_tile >= 1.0);
+        assert!(prof.counter_bits > 0);
+    }
+
+    #[test]
+    fn prop_cfa_invariants_random() {
+        run("CFA invariants on random configs", Config::small(25), |g| {
+            let d = g.usize(2, 3);
+            let tile: IVec = (0..d).map(|_| g.i64(2, 4)).collect();
+            let space: IVec = tile.iter().map(|t| t * g.i64(2, 3)).collect();
+            let tiling = Tiling::new(space, tile.clone());
+            let mut vecs = Vec::new();
+            for _ in 0..g.usize(1, 3) {
+                let v: IVec = (0..d).map(|k| g.i64(-tile[k].min(2), 0)).collect();
+                if !crate::poly::vec::is_zero(&v) {
+                    vecs.push(v);
+                }
+            }
+            if vecs.is_empty() {
+                return;
+            }
+            let deps = DepPattern::new(vecs).unwrap();
+            let cfa = match Cfa::new(tiling.clone(), deps.clone()) {
+                Ok(c) => c,
+                Err(_) => return,
+            };
+            for tc in tiling.tiles() {
+                let plan = cfa.plan(&tc);
+                // raw >= useful on both directions
+                assert!(plan.read_raw() >= plan.read_useful);
+                assert!(plan.write_raw() >= plan.write_useful);
+                // planned reads cover every piece point
+                for pc in &plan.read_pieces {
+                    for p in pc.iter_box.points() {
+                        let a = cfa.addr_of(pc.array, &p);
+                        assert!(
+                            plan.read_runs.iter().any(|r| a >= r.addr && a < r.end()),
+                            "uncovered read {p:?} tile {tc:?}"
+                        );
+                    }
+                }
+                // all runs within footprint
+                for r in plan.read_runs.iter().chain(&plan.write_runs) {
+                    assert!(r.end() <= cfa.footprint());
+                }
+            }
+        });
+    }
+}

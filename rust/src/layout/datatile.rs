@@ -1,0 +1,333 @@
+//! Data-tiling baseline (Ozturk et al. [19], §VI.A.1).
+//!
+//! The arrays are reorganized into **data tiles** of size `c_1 × … × c_d`
+//! (≤ the iteration tile in every dimension, per §VI.A.1: "the best
+//! performing tile size that is less or equal to the iteration tile size");
+//! any data tile touched by a flow set is transferred **whole**, in one
+//! burst per data tile (adjacent tiles merge). Long bursts, but every
+//! partially-used data tile is redundancy — and unlike CFA the data-tile
+//! grid is not aligned with the flow sets, so tile surfaces touch many
+//! barely-used data tiles.
+
+use crate::layout::{
+    linearize, merge_runs, write_set, AddrGenProfile, Allocation, Piece, Run, TilePlan,
+};
+use crate::poly::deps::DepPattern;
+use crate::poly::flow::flow_in;
+use crate::poly::rect::{Rect, Region};
+use crate::poly::tiling::Tiling;
+use crate::poly::vec::IVec;
+
+/// Data-tiled row-major allocation.
+#[derive(Clone, Debug)]
+pub struct DataTiling {
+    tiling: Tiling,
+    deps: DepPattern,
+    /// Data-tile grid over the iteration space (sizes = `c`).
+    grid: Tiling,
+}
+
+impl DataTiling {
+    /// `c` is clamped to the iteration-tile size per dimension.
+    pub fn new(tiling: Tiling, deps: DepPattern, c: IVec) -> DataTiling {
+        assert_eq!(c.len(), tiling.dims());
+        let c: IVec = c
+            .iter()
+            .zip(&tiling.tile)
+            .map(|(ci, t)| (*ci).clamp(1, *t))
+            .collect();
+        let grid = Tiling::new(tiling.space.clone(), c);
+        DataTiling { tiling, deps, grid }
+    }
+
+    /// The data-tile edge sizes in use.
+    pub fn data_tile(&self) -> &IVec {
+        &self.grid.tile
+    }
+
+    /// Full volume of one (interior) data tile.
+    fn dt_volume(&self) -> u64 {
+        self.grid.tile.iter().map(|&c| c as u64).product()
+    }
+
+    /// Linear index of a data tile (row-major over the data-tile grid).
+    fn dt_index(&self, dtc: &[i64]) -> u64 {
+        linearize(dtc, &self.grid.tile_counts())
+    }
+
+    /// Bursts transferring every data tile touched by `region`, whole.
+    /// Dedup by linear tile index (sort + dedup — `Vec::contains` would be
+    /// quadratic in the tens of thousands of tiles a 128³ surface touches;
+    /// see EXPERIMENTS.md §Perf).
+    fn region_bursts(&self, region: &Region) -> Vec<Run> {
+        let mut idxs: Vec<u64> = Vec::new();
+        for r in region.rects() {
+            let lo_t = self.grid.tile_of(&r.lo);
+            let hi_pt: IVec = r.hi.iter().map(|h| h - 1).collect();
+            let hi_t = self.grid.tile_of(&hi_pt);
+            let trange = Rect::new(lo_t, hi_t.iter().map(|c| c + 1).collect());
+            for tc in trange.points() {
+                idxs.push(self.dt_index(&tc));
+            }
+        }
+        idxs.sort_unstable();
+        idxs.dedup();
+        let vol = self.dt_volume();
+        merge_runs(
+            idxs.iter()
+                .map(|i| Run {
+                    addr: i * vol,
+                    len: vol,
+                })
+                .collect(),
+        )
+    }
+}
+
+impl Allocation for DataTiling {
+    fn name(&self) -> &str {
+        "datatile"
+    }
+
+    fn tiling(&self) -> &Tiling {
+        &self.tiling
+    }
+
+    fn footprint(&self) -> u64 {
+        // allocation pads boundary data tiles to full size
+        self.grid.num_tiles() * self.dt_volume()
+    }
+
+    fn num_arrays(&self) -> usize {
+        1
+    }
+
+    fn holds(&self, array: usize, p: &[i64]) -> bool {
+        array == 0 && self.tiling.space_rect().contains(p)
+    }
+
+    fn addr_of(&self, array: usize, p: &[i64]) -> u64 {
+        assert!(self.holds(array, p));
+        let dtc = self.grid.tile_of(p);
+        let dtr = self.grid.tile_rect(&dtc);
+        let intra: IVec = p.iter().zip(&dtr.lo).map(|(x, l)| x - l).collect();
+        self.dt_index(&dtc) * self.dt_volume() + linearize(&intra, &self.grid.tile)
+    }
+
+    fn plan(&self, coords: &[i64]) -> TilePlan {
+        let fin = flow_in(&self.tiling, &self.deps, coords);
+        let fout = write_set(&self.tiling, &self.deps, coords);
+        TilePlan {
+            read_useful: fin.volume(),
+            write_useful: fout.volume(),
+            read_runs: self.region_bursts(&fin),
+            write_runs: self.region_bursts(&fout),
+            read_pieces: fin
+                .rects()
+                .iter()
+                .map(|r| Piece {
+                    array: 0,
+                    iter_box: r.clone(),
+                })
+                .collect(),
+            write_pieces: fout
+                .rects()
+                .iter()
+                .map(|r| Piece {
+                    array: 0,
+                    iter_box: r.clone(),
+                })
+                .collect(),
+        }
+    }
+
+    fn read_loc(&self, p: &[i64]) -> (usize, u64) {
+        (0, self.addr_of(0, p))
+    }
+
+    fn write_locs(&self, p: &[i64]) -> Vec<(usize, u64)> {
+        vec![(0, self.addr_of(0, p))]
+    }
+
+    fn addrgen(&self) -> AddrGenProfile {
+        let mut prof = AddrGenProfile {
+            arrays: 1,
+            ..AddrGenProfile::default()
+        };
+        // data-tile index + intra-tile linearization: two-level addressing
+        let all_dims: Vec<i64> = self
+            .grid
+            .tile_counts()
+            .into_iter()
+            .chain(self.grid.tile.iter().copied())
+            .collect();
+        for &s in crate::layout::strides(&all_dims).iter() {
+            if s > 1 {
+                if s.is_power_of_two() {
+                    prof.shift_ops += 1;
+                } else {
+                    prof.mul_ops += 1;
+                }
+                prof.add_ops += 1;
+            }
+        }
+        // runtime div/mod to split point coords into (tile, intra)
+        prof.div_mod_ops += self.tiling.dims();
+        prof.counter_bits = 64 - self.footprint().leading_zeros() as usize;
+        let counts = self.tiling.tile_counts();
+        let mid: Vec<i64> = counts.iter().map(|&c| (c - 1).min(1)).collect();
+        prof.bursts_per_tile = self.plan(&mid).transactions() as f64;
+        prof
+    }
+}
+
+/// Sweep data-tile sizes (powers of two per dim, ≤ iteration tile) and pick
+/// "the best performing tile size" (§VI.A.1): each candidate's
+/// representative-tile plan is timed on the AXI/DRAM model and the
+/// configuration with the highest *effective bandwidth* wins — exactly the
+/// trade the paper describes (longer bursts vs. redundant transfer).
+pub fn best_data_tiling(tiling: &Tiling, deps: &DepPattern) -> DataTiling {
+    use crate::memsim::{Dir, MemConfig, MemSim, Txn};
+    let d = tiling.dims();
+    // The paper applies data tiling to the *original arrays* (§VI.A.1,
+    // Ozturk et al.), sweeping a single tile-size scalar. A strictly
+    // sequential axis (every dependence negative there — the time axis of
+    // an iterative stencil) is a version dimension introduced by the
+    // single-assignment expansion, not an original array dimension, so the
+    // data-tile size is pinned to 1 along it; the remaining axes get the
+    // cubic sweep. Anything stronger would be an anisotropic oracle the
+    // paper's baseline does not have.
+    let sequential: Vec<bool> = (0..d)
+        .map(|a| deps.vecs().iter().all(|v| v[a] < 0))
+        .collect();
+    let maxt = tiling.tile.iter().copied().max().unwrap_or(1);
+    let mut cands: Vec<IVec> = Vec::new();
+    let mut c = 1i64;
+    while c <= maxt {
+        cands.push(
+            (0..d)
+                .map(|k| if sequential[k] { 1 } else { c.min(tiling.tile[k]) })
+                .collect(),
+        );
+        c *= 2;
+    }
+    cands.dedup();
+    let counts = tiling.tile_counts();
+    let mid: IVec = counts.iter().map(|&c| (c - 1).min(1)).collect();
+    let cfg = MemConfig::default();
+    let mut best: Option<(f64, DataTiling)> = None;
+    for c in cands {
+        let dt = DataTiling::new(tiling.clone(), deps.clone(), c);
+        let plan = dt.plan(&mid);
+        let mut sim = MemSim::new(cfg.clone());
+        let txns: Vec<Txn> = plan
+            .read_runs
+            .iter()
+            .map(|r| Txn { dir: Dir::Read, addr: r.addr, len: r.len })
+            .chain(plan.write_runs.iter().map(|r| Txn {
+                dir: Dir::Write,
+                addr: r.addr,
+                len: r.len,
+            }))
+            .collect();
+        let cycles = sim.run(&txns).max(1);
+        let useful = (plan.read_useful + plan.write_useful) as f64;
+        let eff = useful / cycles as f64;
+        let better = match &best {
+            None => true,
+            Some((be, _)) => eff > *be + 1e-12,
+        };
+        if better {
+            best = Some((eff, dt));
+        }
+    }
+    best.unwrap().1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poly::deps::DepPattern;
+
+    fn setup(c: IVec) -> DataTiling {
+        let tiling = Tiling::new(vec![16, 16], vec![8, 8]);
+        let deps = DepPattern::new(vec![vec![-1, 0], vec![0, -1], vec![-1, -1]]).unwrap();
+        DataTiling::new(tiling, deps, c)
+    }
+
+    #[test]
+    fn addressing_is_tiled_row_major() {
+        let dt = setup(vec![4, 4]);
+        assert_eq!(dt.addr_of(0, &[0, 0]), 0);
+        assert_eq!(dt.addr_of(0, &[0, 3]), 3);
+        // next data tile along the fast axis
+        assert_eq!(dt.addr_of(0, &[0, 4]), 16);
+        assert_eq!(dt.addr_of(0, &[1, 0]), 4);
+    }
+
+    #[test]
+    fn addr_bijective() {
+        let dt = setup(vec![4, 4]);
+        let mut seen = std::collections::HashSet::new();
+        for p in dt.tiling().space_rect().points() {
+            assert!(seen.insert(dt.addr_of(0, &p)));
+        }
+    }
+
+    #[test]
+    fn whole_tiles_transferred() {
+        let dt = setup(vec![4, 4]);
+        let plan = dt.plan(&[1, 1]);
+        // every burst length is a multiple of the data tile volume
+        for r in plan.read_runs.iter().chain(&plan.write_runs) {
+            assert_eq!(r.len % 16, 0, "{r:?}");
+        }
+        assert!(plan.read_raw() >= plan.read_useful);
+        // flow-in is a thin halo; whole-tile transfer is heavily redundant
+        assert!(plan.read_raw() > 2 * plan.read_useful);
+    }
+
+    #[test]
+    fn unit_tiles_degenerate_to_exact() {
+        let dt = setup(vec![1, 1]);
+        let plan = dt.plan(&[1, 1]);
+        assert_eq!(plan.read_raw(), plan.read_useful);
+    }
+
+    #[test]
+    fn oversize_request_clamps_to_iteration_tile() {
+        let dt = setup(vec![100, 100]);
+        assert_eq!(dt.data_tile(), &vec![8, 8]);
+    }
+
+    #[test]
+    fn best_sweep_beats_worst() {
+        let tiling = Tiling::new(vec![16, 16], vec![8, 8]);
+        let deps = DepPattern::new(vec![vec![-1, 0], vec![0, -1], vec![-1, -1]]).unwrap();
+        let best = best_data_tiling(&tiling, &deps);
+        let worst = DataTiling::new(tiling, deps, vec![8, 8]);
+        let pb = best.plan(&[1, 1]);
+        let pw = worst.plan(&[1, 1]);
+        let ratio = |p: &TilePlan| {
+            (p.read_raw() + p.write_raw()) as f64 / (p.read_useful + p.write_useful) as f64
+        };
+        assert!(ratio(&pb) <= ratio(&pw) + 1e-9);
+    }
+
+    #[test]
+    fn plan_covers_flow_addresses() {
+        let dt = setup(vec![4, 2]);
+        for tc in dt.tiling().tiles() {
+            let plan = dt.plan(&tc);
+            for pc in &plan.read_pieces {
+                for p in pc.iter_box.points() {
+                    let a = dt.addr_of(0, &p);
+                    assert!(
+                        plan.read_runs.iter().any(|r| a >= r.addr && a < r.end()),
+                        "uncovered {p:?}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,406 @@
+//! Off-chip memory layouts and burst transfer planning (§IV–V).
+//!
+//! An [`Allocation`] decides *where* every iteration's result lives in
+//! one-dimensional off-chip memory (§II.H: access function ∘ memory layout)
+//! and derives, for each tile, a [`TilePlan`]: the burst transactions that
+//! move its flow-in on chip and its flow-out off chip. Four allocations are
+//! implemented, matching the paper's evaluation (§VI.A.1):
+//!
+//! * [`cfa::Cfa`] — Canonical Facet Allocation (the contribution),
+//! * [`original::OriginalLayout`] — best-effort bursts on the unchanged
+//!   layout (Bayliss et al.),
+//! * [`bbox::BoundingBox`] — rectangular over-approximation (Pouchet et al.),
+//! * [`datatile::DataTiling`] — whole-data-tile transfers (Ozturk et al.).
+//!
+//! Addresses are in **elements**; the memory simulator converts to bytes.
+
+pub mod bbox;
+pub mod cfa;
+pub mod datatile;
+pub mod original;
+
+use crate::poly::rect::{Rect, Region};
+use crate::poly::vec::IVec;
+
+pub use bbox::BoundingBox;
+pub use cfa::{Cfa, CfaOpts};
+pub use datatile::DataTiling;
+pub use original::OriginalLayout;
+
+/// One contiguous burst transaction, in elements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Run {
+    pub addr: u64,
+    pub len: u64,
+}
+
+impl Run {
+    pub fn end(&self) -> u64 {
+        self.addr + self.len
+    }
+}
+
+/// A rectangular chunk of iteration points an array stores / a plan moves,
+/// used by the coordinator to marshal values between host memory and the
+/// on-chip buffers (the timing path uses the [`Run`]s instead).
+#[derive(Clone, Debug)]
+pub struct Piece {
+    /// Index of the allocation-internal array holding the points.
+    pub array: usize,
+    /// Iteration-space box of points.
+    pub iter_box: Rect,
+}
+
+/// Burst transfer plan of one tile (§V.C).
+#[derive(Clone, Debug, Default)]
+pub struct TilePlan {
+    /// Flow-in bursts, issue order.
+    pub read_runs: Vec<Run>,
+    /// Flow-out bursts, issue order.
+    pub write_runs: Vec<Run>,
+    /// Iteration-point chunks behind the read bursts.
+    pub read_pieces: Vec<Piece>,
+    /// Iteration-point chunks behind the write bursts.
+    pub write_pieces: Vec<Piece>,
+    /// Application-useful elements read (= |flow-in|).
+    pub read_useful: u64,
+    /// Application-useful elements written (= |flow-out|).
+    pub write_useful: u64,
+}
+
+impl TilePlan {
+    /// Raw elements read (burst lengths summed, redundancy included).
+    pub fn read_raw(&self) -> u64 {
+        self.read_runs.iter().map(|r| r.len).sum()
+    }
+
+    /// Raw elements written.
+    pub fn write_raw(&self) -> u64 {
+        self.write_runs.iter().map(|r| r.len).sum()
+    }
+
+    /// Total transaction count.
+    pub fn transactions(&self) -> usize {
+        self.read_runs.len() + self.write_runs.len()
+    }
+}
+
+/// Address-generator complexity profile, consumed by the area model
+/// (§VI.B.3: "the cost of CFA itself in terms of hardware is the address
+/// generators").
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AddrGenProfile {
+    /// Distinct off-chip arrays addressed.
+    pub arrays: usize,
+    /// Multiplications by non-power-of-two strides (map to DSP blocks).
+    pub mul_ops: usize,
+    /// Power-of-two stride multiplications (map to wiring/LUT shifts).
+    pub shift_ops: usize,
+    /// Additions in address expressions.
+    pub add_ops: usize,
+    /// Runtime division/modulo units (none for loop-generated code).
+    pub div_mod_ops: usize,
+    /// Total counter bits across the copy loop nests.
+    pub counter_bits: usize,
+    /// Average burst transactions per tile (FSM complexity driver).
+    pub bursts_per_tile: f64,
+}
+
+/// A memory layout for a tiled uniform-dependence program.
+pub trait Allocation {
+    /// Short identifier (used in reports: "cfa", "original", …).
+    fn name(&self) -> &str;
+
+    /// The tiling this allocation was built for.
+    fn tiling(&self) -> &crate::poly::tiling::Tiling;
+
+    /// Total off-chip storage, in elements.
+    fn footprint(&self) -> u64;
+
+    /// Number of internal arrays (CFA: one facet array per active axis).
+    fn num_arrays(&self) -> usize;
+
+    /// True iff `array` stores the value of iteration point `p`.
+    fn holds(&self, array: usize, p: &[i64]) -> bool;
+
+    /// Element address of `p` within `array`. Panics if `!holds(array, p)`.
+    fn addr_of(&self, array: usize, p: &[i64]) -> u64;
+
+    /// Burst transfer plan for tile `coords`.
+    fn plan(&self, coords: &[i64]) -> TilePlan;
+
+    /// Canonical location a consumer reads `p` from.
+    fn read_loc(&self, p: &[i64]) -> (usize, u64);
+
+    /// All locations the producer tile writes `p` to (CFA duplicates
+    /// tail-intersection points into several facet arrays).
+    fn write_locs(&self, p: &[i64]) -> Vec<(usize, u64)>;
+
+    /// Address-generator complexity (for the area model).
+    fn addrgen(&self) -> AddrGenProfile;
+}
+
+/// The **write set** of a tile: the union of its facets (§IV.A: "all write
+/// accesses are burst accesses"). This is what any scratchpad-recycling
+/// implementation must evict — every facet point is either read by a later
+/// tile (flow-out) or is live-out program state on a space-boundary tile —
+/// so the whole union counts as application-useful; only the physical
+/// duplication of corner points across CFA's facet arrays is redundancy.
+/// All four allocations transfer this same logical set, which is what makes
+/// the paper's bandwidth comparison apples-to-apples.
+pub fn write_set(
+    tiling: &crate::poly::tiling::Tiling,
+    deps: &crate::poly::deps::DepPattern,
+    coords: &[i64],
+) -> Region {
+    crate::poly::flow::facet_union(tiling, deps, coords)
+}
+
+/// Row-major strides for `dims` (last dim fastest). Empty dims → stride 1.
+pub fn strides(dims: &[i64]) -> Vec<u64> {
+    let mut s = vec![1u64; dims.len()];
+    for k in (0..dims.len().saturating_sub(1)).rev() {
+        s[k] = s[k + 1] * dims[k + 1] as u64;
+    }
+    s
+}
+
+/// Linearize `coords` under row-major `dims`.
+pub fn linearize(coords: &[i64], dims: &[i64]) -> u64 {
+    debug_assert_eq!(coords.len(), dims.len());
+    let s = strides(dims);
+    coords
+        .iter()
+        .zip(&s)
+        .map(|(c, st)| {
+            debug_assert!(*c >= 0);
+            *c as u64 * st
+        })
+        .sum()
+}
+
+/// Maximal contiguous address runs of a box within a row-major array.
+///
+/// `bx` must satisfy `0 <= lo <= hi <= dims` per dimension. Runs are emitted
+/// in ascending address order. A box that covers full trailing dimensions
+/// collapses into fewer, longer runs — the formal core of "full-tile
+/// contiguity" (§IV.G): a facet box covering its whole data tile is one run.
+pub fn runs_of_box(bx: &Rect, dims: &[i64], base: u64) -> Vec<Run> {
+    assert_eq!(bx.dims(), dims.len());
+    if bx.is_empty() {
+        return Vec::new();
+    }
+    for k in 0..dims.len() {
+        assert!(
+            bx.lo[k] >= 0 && bx.hi[k] <= dims[k],
+            "box {bx:?} out of array bounds {dims:?}"
+        );
+    }
+    let d = dims.len();
+    if d == 0 {
+        return vec![Run { addr: base, len: 1 }];
+    }
+    // Longest suffix of dims fully covered by the box.
+    let mut m = d; // first index of the full suffix
+    while m > 0 && bx.lo[m - 1] == 0 && bx.hi[m - 1] == dims[m - 1] {
+        m -= 1;
+    }
+    if m == 0 {
+        // whole array
+        return vec![Run {
+            addr: base,
+            len: dims.iter().map(|&x| x as u64).product(),
+        }];
+    }
+    // Runs vary over dims [0, m-1); the run dim is m-1; dims >= m are full.
+    let st = strides(dims);
+    let run_len = bx.extent(m - 1) as u64 * st[m - 1];
+    let outer = Rect::new(bx.lo[..m - 1].to_vec(), bx.hi[..m - 1].to_vec());
+    let mut out = Vec::with_capacity(outer.volume() as usize);
+    let mut emit = |coords: &[i64]| {
+        let mut addr = base + bx.lo[m - 1] as u64 * st[m - 1];
+        for (k, c) in coords.iter().enumerate() {
+            addr += *c as u64 * st[k];
+        }
+        out.push(Run {
+            addr,
+            len: run_len,
+        });
+    };
+    if m == 1 {
+        emit(&[]);
+    } else {
+        for coords in outer.points() {
+            emit(&coords);
+        }
+    }
+    out
+}
+
+/// Sort runs by address and merge overlapping / exactly-adjacent ones —
+/// inter-tile contiguity in action (§IV.H): a facet read extending into the
+/// neighboring data tile becomes a single burst here.
+pub fn merge_runs(mut runs: Vec<Run>) -> Vec<Run> {
+    if runs.is_empty() {
+        return runs;
+    }
+    runs.sort_by_key(|r| r.addr);
+    let mut out: Vec<Run> = Vec::with_capacity(runs.len());
+    for r in runs {
+        if r.len == 0 {
+            continue;
+        }
+        match out.last_mut() {
+            Some(last) if r.addr <= last.end() => {
+                let new_end = last.end().max(r.end());
+                last.len = new_end - last.addr;
+            }
+            _ => out.push(r),
+        }
+    }
+    out
+}
+
+/// Runs of a whole region (used by the original-layout baseline: exact
+/// accesses, merged where the layout happens to be contiguous).
+pub fn runs_of_region(region: &Region, dims: &[i64], base: u64) -> Vec<Run> {
+    let mut runs = Vec::new();
+    for r in region.rects() {
+        runs.extend(runs_of_box(r, dims, base));
+    }
+    merge_runs(runs)
+}
+
+/// Convenience: all iteration points behind a plan's pieces (tests only).
+pub fn piece_points(pieces: &[Piece]) -> Vec<(usize, IVec)> {
+    let mut out = Vec::new();
+    for pc in pieces {
+        for p in pc.iter_box.points() {
+            out.push((pc.array, p));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{run, Config};
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(strides(&[4, 3, 2]), vec![6, 2, 1]);
+        assert_eq!(strides(&[5]), vec![1]);
+        assert_eq!(strides(&[]), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn linearize_matches_manual() {
+        assert_eq!(linearize(&[1, 2, 1], &[4, 3, 2]), 6 + 4 + 1);
+        assert_eq!(linearize(&[0, 0, 0], &[4, 3, 2]), 0);
+    }
+
+    #[test]
+    fn runs_full_array_is_one() {
+        let bx = Rect::new(vec![0, 0], vec![3, 4]);
+        let runs = runs_of_box(&bx, &[3, 4], 100);
+        assert_eq!(runs, vec![Run { addr: 100, len: 12 }]);
+    }
+
+    #[test]
+    fn runs_full_rows_merge() {
+        // rows 1..3 of a 4x5 array: contiguous block of 10
+        let bx = Rect::new(vec![1, 0], vec![3, 5]);
+        assert_eq!(
+            runs_of_box(&bx, &[4, 5], 0),
+            vec![Run { addr: 5, len: 10 }]
+        );
+    }
+
+    #[test]
+    fn runs_partial_rows_fragment() {
+        // columns 1..3 of a 4x5 array: one run per row
+        let bx = Rect::new(vec![0, 1], vec![4, 3]);
+        let runs = runs_of_box(&bx, &[4, 5], 0);
+        assert_eq!(runs.len(), 4);
+        assert_eq!(runs[0], Run { addr: 1, len: 2 });
+        assert_eq!(runs[3], Run { addr: 16, len: 2 });
+    }
+
+    #[test]
+    fn runs_3d_middle_full() {
+        // box full in last dim only
+        let bx = Rect::new(vec![0, 1, 0], vec![2, 2, 4]);
+        let runs = runs_of_box(&bx, &[2, 3, 4], 0);
+        assert_eq!(
+            runs,
+            vec![Run { addr: 4, len: 4 }, Run { addr: 16, len: 4 }]
+        );
+    }
+
+    #[test]
+    fn merge_adjacent_and_overlapping() {
+        let merged = merge_runs(vec![
+            Run { addr: 10, len: 5 },
+            Run { addr: 0, len: 4 },
+            Run { addr: 15, len: 5 },
+            Run { addr: 4, len: 2 },
+        ]);
+        assert_eq!(
+            merged,
+            vec![Run { addr: 0, len: 6 }, Run { addr: 10, len: 10 }]
+        );
+    }
+
+    #[test]
+    fn prop_runs_cover_box_exactly() {
+        run("runs_of_box covers exactly the box", Config::small(80), |g| {
+            let d = g.usize(1, 3);
+            let dims: Vec<i64> = (0..d).map(|_| g.i64(1, 5)).collect();
+            let lo: Vec<i64> = dims.iter().map(|&n| g.i64(0, n - 1)).collect();
+            let hi: Vec<i64> = lo
+                .iter()
+                .zip(&dims)
+                .map(|(l, n)| g.i64(*l, *n))
+                .collect();
+            let bx = Rect::new(lo, hi);
+            let runs = runs_of_box(&bx, &dims, 0);
+            // build the address set from runs
+            let mut from_runs: Vec<u64> = runs
+                .iter()
+                .flat_map(|r| (r.addr..r.end()).collect::<Vec<u64>>())
+                .collect();
+            from_runs.sort_unstable();
+            // and from points
+            let mut from_points: Vec<u64> =
+                bx.points().map(|p| linearize(&p, &dims)).collect();
+            from_points.sort_unstable();
+            assert_eq!(from_runs, from_points);
+            // runs are maximal: no two adjacent
+            for w in runs.windows(2) {
+                assert!(w[0].end() < w[1].addr);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_merge_preserves_address_set() {
+        run("merge_runs preserves covered addresses", Config::small(80), |g| {
+            let n = g.usize(0, 6);
+            let runs: Vec<Run> = (0..n)
+                .map(|_| Run {
+                    addr: g.i64(0, 30) as u64,
+                    len: g.i64(0, 8) as u64,
+                })
+                .collect();
+            let merged = merge_runs(runs.clone());
+            let covered = |rs: &[Run], a: u64| rs.iter().any(|r| a >= r.addr && a < r.end());
+            for a in 0..50u64 {
+                assert_eq!(covered(&runs, a), covered(&merged, a), "addr {a}");
+            }
+            for w in merged.windows(2) {
+                assert!(w[0].end() < w[1].addr, "not maximal: {merged:?}");
+            }
+        });
+    }
+}

@@ -1,0 +1,199 @@
+//! Original-layout baseline (Bayliss et al. [16], §VI.A.1).
+//!
+//! The program's arrays keep their original row-major layout (the
+//! single-assignment expanded iteration space, as polyhedral HLS flows
+//! produce); a *best-effort* burst access pattern is derived: the exact
+//! flow-in/flow-out sets are transferred with **no redundancy**, coalescing
+//! only where the unchanged layout happens to be contiguous. This gives the
+//! shortest bursts of all baselines but a perfect raw = effective ratio.
+
+use crate::layout::{
+    linearize, runs_of_region, write_set, AddrGenProfile, Allocation, Piece, TilePlan,
+};
+use crate::poly::deps::DepPattern;
+use crate::poly::flow::flow_in;
+use crate::poly::tiling::Tiling;
+
+/// Row-major allocation of the full iteration space.
+#[derive(Clone, Debug)]
+pub struct OriginalLayout {
+    tiling: Tiling,
+    deps: DepPattern,
+}
+
+impl OriginalLayout {
+    pub fn new(tiling: Tiling, deps: DepPattern) -> OriginalLayout {
+        OriginalLayout { tiling, deps }
+    }
+
+}
+
+impl Allocation for OriginalLayout {
+    fn name(&self) -> &str {
+        "original"
+    }
+
+    fn tiling(&self) -> &Tiling {
+        &self.tiling
+    }
+
+    fn footprint(&self) -> u64 {
+        self.tiling.space_rect().volume()
+    }
+
+    fn num_arrays(&self) -> usize {
+        1
+    }
+
+    fn holds(&self, array: usize, p: &[i64]) -> bool {
+        array == 0 && self.tiling.space_rect().contains(p)
+    }
+
+    fn addr_of(&self, array: usize, p: &[i64]) -> u64 {
+        assert!(self.holds(array, p));
+        linearize(p, &self.tiling.space)
+    }
+
+    fn plan(&self, coords: &[i64]) -> TilePlan {
+        let fin = flow_in(&self.tiling, &self.deps, coords);
+        let fout = write_set(&self.tiling, &self.deps, coords);
+        let read_runs = runs_of_region(&fin, &self.tiling.space, 0);
+        let write_runs = runs_of_region(&fout, &self.tiling.space, 0);
+        TilePlan {
+            read_useful: fin.volume(),
+            write_useful: fout.volume(),
+            read_pieces: fin
+                .rects()
+                .iter()
+                .map(|r| Piece {
+                    array: 0,
+                    iter_box: r.clone(),
+                })
+                .collect(),
+            write_pieces: fout
+                .rects()
+                .iter()
+                .map(|r| Piece {
+                    array: 0,
+                    iter_box: r.clone(),
+                })
+                .collect(),
+            read_runs,
+            write_runs,
+        }
+    }
+
+    fn read_loc(&self, p: &[i64]) -> (usize, u64) {
+        (0, self.addr_of(0, p))
+    }
+
+    fn write_locs(&self, p: &[i64]) -> Vec<(usize, u64)> {
+        vec![(0, self.addr_of(0, p))]
+    }
+
+    fn addrgen(&self) -> AddrGenProfile {
+        let d = self.tiling.dims();
+        let st = crate::layout::strides(&self.tiling.space);
+        let mut prof = AddrGenProfile {
+            arrays: 1,
+            ..AddrGenProfile::default()
+        };
+        // the scattered access pattern needs a full affine address
+        // computation per burst start (one mul-add per dimension)
+        for &s in &st {
+            if s > 1 {
+                if s.is_power_of_two() {
+                    prof.shift_ops += 1;
+                } else {
+                    prof.mul_ops += 1;
+                }
+                prof.add_ops += 1;
+            }
+        }
+        prof.add_ops += d;
+        prof.counter_bits = 64 - self.footprint().leading_zeros() as usize;
+        let counts = self.tiling.tile_counts();
+        let mid: Vec<i64> = counts.iter().map(|&c| (c - 1).min(1)).collect();
+        prof.bursts_per_tile = self.plan(&mid).transactions() as f64;
+        prof
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poly::deps::DepPattern;
+    use crate::poly::vec::IVec;
+
+    fn setup() -> OriginalLayout {
+        let tiling = Tiling::new(vec![12, 12], vec![4, 4]);
+        let deps = DepPattern::new(vec![vec![-1, 0], vec![0, -1], vec![-1, -1]]).unwrap();
+        OriginalLayout::new(tiling, deps)
+    }
+
+    #[test]
+    fn no_redundancy_ever() {
+        let o = setup();
+        for tc in o.tiling().tiles() {
+            let plan = o.plan(&tc);
+            assert_eq!(plan.read_raw(), plan.read_useful, "tile {tc:?}");
+            assert_eq!(plan.write_raw(), plan.write_useful, "tile {tc:?}");
+        }
+    }
+
+    #[test]
+    fn bursts_are_short_rows() {
+        // flow-in of an interior tile: a column piece (one element per row,
+        // 4+1 rows) and a row piece (contiguous). Expect several short runs.
+        let o = setup();
+        let plan = o.plan(&[1, 1]);
+        assert!(plan.read_runs.len() >= 4, "{:?}", plan.read_runs);
+        // every run is within the footprint
+        for r in &plan.read_runs {
+            assert!(r.end() <= o.footprint());
+        }
+    }
+
+    #[test]
+    fn addresses_are_row_major() {
+        let o = setup();
+        assert_eq!(o.addr_of(0, &[0, 0]), 0);
+        assert_eq!(o.addr_of(0, &[0, 11]), 11);
+        assert_eq!(o.addr_of(0, &[1, 0]), 12);
+        assert_eq!(o.read_loc(&[2, 3]), (0, 27));
+        assert_eq!(o.write_locs(&[2, 3]), vec![(0, 27)]);
+    }
+
+    #[test]
+    fn plan_covers_flow_in_addresses() {
+        let o = setup();
+        for tc in o.tiling().tiles() {
+            let plan = o.plan(&tc);
+            for pc in &plan.read_pieces {
+                for p in pc.iter_box.points() {
+                    let a = o.addr_of(0, &p);
+                    assert!(plan.read_runs.iter().any(|r| a >= r.addr && a < r.end()));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn contiguous_flow_merges() {
+        // 1-D space: flow-in along the only axis is contiguous → 1 burst.
+        let tiling = Tiling::new(vec![12], vec![4]);
+        let deps = DepPattern::new(vec![vec![-2]]).unwrap();
+        let o = OriginalLayout::new(tiling, deps);
+        let plan = o.plan(&[1]);
+        assert_eq!(plan.read_runs.len(), 1);
+        assert_eq!(plan.read_runs[0].len, 2);
+    }
+
+    #[test]
+    fn footprint_is_space_volume() {
+        let o = setup();
+        assert_eq!(o.footprint(), 144);
+        let mid: IVec = vec![1, 1];
+        assert!(o.plan(&mid).transactions() > 0);
+    }
+}

@@ -1,0 +1,32 @@
+//! # CFA — Canonical Facet Allocation
+//!
+//! Production-grade reproduction of *"Increasing FPGA Accelerators Memory
+//! Bandwidth with a Burst-Friendly Memory Layout"* (Ferry, Yuki, Derrien,
+//! Rajopadhye — CS.AR 2022).
+//!
+//! The crate implements the paper's full system as a three-layer stack:
+//!
+//! * **L3 (this crate)** — the polyhedral layout engine (CFA + the three
+//!   baseline allocations of §VI), a cycle-approximate AXI/DRAM memory
+//!   simulator standing in for the Zynq testbed, the read-execute-write
+//!   accelerator pipeline, an FPGA area model, an HLS code generator
+//!   (Fig 12/13), and the coordinator that drives tile execution.
+//! * **L2/L1 (build-time Python)** — JAX tile programs calling Pallas
+//!   stencil kernels, AOT-lowered to HLO text in `artifacts/`.
+//! * **runtime** — a PJRT CPU client (the `xla` crate) that loads those
+//!   artifacts so tile compute runs from Rust with Python never on the
+//!   request path.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod accel;
+pub mod area;
+pub mod coordinator;
+pub mod harness;
+pub mod hlsgen;
+pub mod layout;
+pub mod memsim;
+pub mod poly;
+pub mod runtime;
+pub mod util;

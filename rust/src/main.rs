@@ -1,0 +1,256 @@
+//! `cfa` — command-line front end for the Canonical Facet Allocation stack.
+//!
+//! Subcommands:
+//!   list       Table I benchmark registry
+//!   plan       show the CFA layout + burst plan for a benchmark/tile
+//!   run        end-to-end run (layout + memsim + PJRT compute + verify)
+//!   bench      regenerate a figure sweep (fig15 | fig16 | fig17)
+//!   codegen    emit the HLS C the compiler pass produces (Fig 12/13)
+
+use cfa::coordinator::reference::StencilKind;
+use cfa::coordinator::stencil::{run_stencil, StencilRun};
+use cfa::coordinator::sw::{run_sw, SwRun};
+use cfa::coordinator::AllocKind;
+use cfa::harness::{figures, workloads};
+use cfa::layout::cfa::Cfa;
+use cfa::memsim::MemConfig;
+use cfa::poly::deps::DepPattern;
+use cfa::poly::tiling::Tiling;
+use cfa::runtime::Runtime;
+use cfa::util::cli::{env_args, Command};
+use cfa::util::table::{Align, Table};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let sub = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match sub {
+        "list" => cmd_list(),
+        "plan" => cmd_plan(),
+        "run" => cmd_run(),
+        "bench" => cmd_bench(),
+        "codegen" => cmd_codegen(),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "cfa — Canonical Facet Allocation (Ferry et al., 2022) reproduction\n\n\
+         usage: cfa <subcommand> [options]\n\n\
+         subcommands:\n\
+         \x20 list                 print the Table I benchmark registry\n\
+         \x20 plan                 show layout + burst plan (--benchmark, --tile, --alloc)\n\
+         \x20 run                  end-to-end verified run (--benchmark, --alloc, ...)\n\
+         \x20 bench                figure sweeps (--figure fig15|fig16|fig17, --quick)\n\
+         \x20 codegen              emit HLS C (--benchmark, --tile)\n"
+    );
+}
+
+fn cmd_list() -> anyhow::Result<()> {
+    let mut t = Table::new(&["benchmark", "deps", "tile sweep", "equivalent application"])
+        .aligns(&[Align::Left, Align::Right, Align::Left, Align::Left]);
+    for w in workloads::table1(false) {
+        let first = &w.tile_sizes[0];
+        let last = w.tile_sizes.last().unwrap();
+        let fmt = |v: &Vec<i64>| {
+            v.iter()
+                .map(|x| x.to_string())
+                .collect::<Vec<_>>()
+                .join("x")
+        };
+        t.row(&[
+            w.name.to_string(),
+            w.n_deps().to_string(),
+            format!("{} -> {}", fmt(first), fmt(last)),
+            w.equivalent.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_plan() -> anyhow::Result<()> {
+    let cmd = Command::new("cfa plan", "show layout + burst plan")
+        .opt("benchmark", "Table I benchmark name", Some("jacobi2d5p"))
+        .opt("tile", "tile sizes, e.g. 16x16x16", Some("16x16x16"))
+        .opt("tiles-per-dim", "tiles per dimension", Some("3"));
+    let a = cmd.parse(&env_args(1)).map_err(anyhow::Error::msg)?;
+    let bench = a.get_or("benchmark", "jacobi2d5p").to_string();
+    let tile = a
+        .get_sizes("tile")
+        .map_err(anyhow::Error::msg)?
+        .unwrap();
+    let tpd = a.get_usize("tiles-per-dim", 3).map_err(anyhow::Error::msg)? as i64;
+    let w = workloads::by_name(&bench)
+        .ok_or_else(|| anyhow::anyhow!("unknown benchmark '{bench}' (see `cfa list`)"))?;
+    let deps = DepPattern::new(w.deps.clone())?;
+    let tiling = Tiling::new(w.space_for(&tile, tpd), tile.clone());
+    let cfa = Cfa::new(tiling.clone(), deps.clone())?;
+    println!("benchmark: {} ({})", w.name, w.equivalent);
+    println!("deps: {deps}   widths: {:?}", deps.widths());
+    println!("space: {:?}  tile: {:?}\n", tiling.space, tiling.tile);
+    use cfa::layout::Allocation as _;
+    println!("facet arrays ({} elements total):", cfa.footprint());
+    let names: Vec<&str> = (0..tiling.dims())
+        .map(|d| cfa::hlsgen::AXIS_NAMES[d])
+        .collect();
+    for fa in cfa.facet_arrays() {
+        println!("  {}  ({} elems)", fa.describe(&names), fa.size());
+    }
+    let counts = tiling.tile_counts();
+    let mid: Vec<i64> = counts.iter().map(|&c| (c - 1).min(1)).collect();
+    let plan = cfa.plan(&mid);
+    println!("\ninterior tile {mid:?} plan:");
+    println!(
+        "  reads : {} bursts, {} elems raw / {} useful",
+        plan.read_runs.len(),
+        plan.read_raw(),
+        plan.read_useful
+    );
+    for r in &plan.read_runs {
+        println!("    @{:<10} len {}", r.addr, r.len);
+    }
+    println!(
+        "  writes: {} bursts, {} elems raw / {} useful",
+        plan.write_runs.len(),
+        plan.write_raw(),
+        plan.write_useful
+    );
+    for r in &plan.write_runs {
+        println!("    @{:<10} len {}", r.addr, r.len);
+    }
+    Ok(())
+}
+
+fn cmd_run() -> anyhow::Result<()> {
+    let cmd = Command::new("cfa run", "end-to-end verified run")
+        .opt("benchmark", "jacobi2d5p | jacobi2d9p | gaussian | sw3", Some("jacobi2d5p"))
+        .opt("alloc", "cfa | original | bbox | datatile | all", Some("all"))
+        .opt("artifacts", "artifacts directory", Some("artifacts"))
+        .opt("n", "grid rows (stencils) / seq len (sw3)", None)
+        .opt("steps", "time steps (stencils)", None);
+    let a = cmd.parse(&env_args(1)).map_err(anyhow::Error::msg)?;
+    let rt = Runtime::open(a.get_or("artifacts", "artifacts"))?;
+    println!("PJRT platform: {}", rt.platform());
+    let mem = MemConfig {
+        elem_bytes: 4,
+        ..MemConfig::default()
+    };
+    let allocs: Vec<AllocKind> = match a.get_or("alloc", "all") {
+        "all" => AllocKind::ALL.to_vec(),
+        s => vec![AllocKind::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown alloc '{s}'"))?],
+    };
+    let bench = a.get_or("benchmark", "jacobi2d5p").to_string();
+    for alloc in allocs {
+        let report = match bench.as_str() {
+            "sw3" | "smith-waterman-3seq" => {
+                let mut cfg = SwRun::default_run(alloc);
+                if let Some(n) = a.get("n") {
+                    let n: i64 = n.parse().map_err(|_| anyhow::anyhow!("bad --n"))?;
+                    cfg.ni = n;
+                    cfg.nj = n;
+                    cfg.nk = n;
+                }
+                run_sw(&rt, &cfg, &mem)?
+            }
+            name => {
+                let (artifact, kind) = match name {
+                    "jacobi2d5p" => ("jacobi2d5p_t8x32x32", StencilKind::Jacobi5p),
+                    "jacobi2d9p" => ("jacobi2d9p_t4x16x16", StencilKind::Jacobi9p),
+                    "gaussian" => ("gaussian_t4x16x16", StencilKind::Gaussian),
+                    _ => anyhow::bail!("unknown benchmark '{name}'"),
+                };
+                let mut cfg = StencilRun::heat_default(alloc);
+                cfg.artifact = artifact.to_string();
+                cfg.kind = kind;
+                if name != "jacobi2d5p" {
+                    // 16-cube artifacts: pick matching defaults
+                    let r = kind.radius();
+                    cfg.steps = 8;
+                    cfg.n = 32 - r * cfg.steps;
+                    cfg.m = cfg.n;
+                }
+                if let Some(n) = a.get("n") {
+                    cfg.n = n.parse().map_err(|_| anyhow::anyhow!("bad --n"))?;
+                    cfg.m = cfg.n;
+                }
+                if let Some(s) = a.get("steps") {
+                    cfg.steps = s.parse().map_err(|_| anyhow::anyhow!("bad --steps"))?;
+                }
+                run_stencil(&rt, &cfg, &mem)?
+            }
+        };
+        println!("{}", report.summary(&mem));
+        if report.max_abs_err > 1e-4 {
+            anyhow::bail!("verification FAILED: err {:.3e}", report.max_abs_err);
+        }
+    }
+    println!("verification: OK");
+    Ok(())
+}
+
+fn cmd_bench() -> anyhow::Result<()> {
+    let cmd = Command::new("cfa bench", "figure sweeps")
+        .opt("figure", "fig15 | fig16 | fig17", Some("fig15"))
+        .flag("quick", "restrict tile sweep")
+        .opt("out", "CSV output path", None);
+    let a = cmd.parse(&env_args(1)).map_err(anyhow::Error::msg)?;
+    let quick = a.flag("quick");
+    let wl = workloads::table1(quick);
+    let mem = MemConfig::default();
+    match a.get_or("figure", "fig15") {
+        "fig15" => {
+            let pts = figures::fig15_sweep(&wl, &mem, 3);
+            for w in &wl {
+                print!("{}", figures::render_fig15(&pts, w.name, &mem));
+            }
+            if let Some(path) = a.get("out") {
+                std::fs::write(path, figures::fig15_csv(&pts))?;
+                println!("wrote {path}");
+            }
+        }
+        "fig16" | "fig17" => {
+            let pts = figures::area_sweep(&wl, mem.elem_bytes, 3);
+            if let Some(path) = a.get("out") {
+                std::fs::write(path, figures::area_csv(&pts))?;
+                println!("wrote {path}");
+            } else {
+                println!("{}", figures::area_csv(&pts));
+            }
+        }
+        f => anyhow::bail!("unknown figure '{f}'"),
+    }
+    Ok(())
+}
+
+fn cmd_codegen() -> anyhow::Result<()> {
+    let cmd = Command::new("cfa codegen", "emit HLS C")
+        .opt("benchmark", "Table I benchmark name", Some("jacobi2d5p"))
+        .opt("tile", "tile sizes", Some("16x16x16"))
+        .opt("out", "output .c path", None);
+    let a = cmd.parse(&env_args(1)).map_err(anyhow::Error::msg)?;
+    let bench = a.get_or("benchmark", "jacobi2d5p").to_string();
+    let tile = a.get_sizes("tile").map_err(anyhow::Error::msg)?.unwrap();
+    let w = workloads::by_name(&bench)
+        .ok_or_else(|| anyhow::anyhow!("unknown benchmark '{bench}'"))?;
+    let deps = DepPattern::new(w.deps.clone())?;
+    let tiling = Tiling::new(w.space_for(&tile, 3), tile);
+    let cfa = Cfa::new(tiling, deps)?;
+    let code = cfa::hlsgen::generate_c(&cfa, &bench);
+    match a.get("out") {
+        Some(p) => {
+            std::fs::write(p, code)?;
+            println!("wrote {p}");
+        }
+        None => print!("{code}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,249 @@
+//! Multi-port memory extension (§VII future work): "the machine model we
+//! have considered may be extended to multi-port memory accesses, such as
+//! high-bandwidth memory … one has to find an adequate repartition of data
+//! over each memory port to balance accesses."
+//!
+//! [`MultiPortSim`] aggregates N independent AXI channels (each its own
+//! [`MemSim`]); a [`PortMap`] decides which channel serves each
+//! transaction:
+//!
+//! * [`PortMap::Interleaved`] — address-striped at a fixed granularity
+//!   (what a memory controller does to an unmodified layout);
+//! * [`PortMap::ByRange`] — explicit address ranges per port. CFA's facet
+//!   arrays are contiguous and independent, so mapping *one facet array
+//!   per port* is the natural balanced repartition the paper anticipates —
+//!   reads and writes of different facets then proceed concurrently.
+
+use crate::memsim::{MemConfig, MemSim, Txn};
+
+/// Transaction-to-port routing policy.
+#[derive(Clone, Debug)]
+pub enum PortMap {
+    /// `port = (byte_addr / stripe_bytes) % ports`.
+    Interleaved { stripe_bytes: u64 },
+    /// Half-open element-address ranges, one entry per port boundary:
+    /// port p serves addresses in `[bounds[p], bounds[p+1])`; the last
+    /// port serves everything above `bounds[ports-1]`.
+    ByRange { bounds: Vec<u64> },
+}
+
+impl PortMap {
+    /// Port index for an element address.
+    pub fn port_of(&self, addr: u64, elem_bytes: u64, ports: usize) -> usize {
+        match self {
+            PortMap::Interleaved { stripe_bytes } => {
+                ((addr * elem_bytes / (*stripe_bytes).max(1)) % ports as u64) as usize
+            }
+            PortMap::ByRange { bounds } => {
+                debug_assert_eq!(bounds.len(), ports);
+                match bounds.binary_search(&addr) {
+                    Ok(i) => i.min(ports - 1),
+                    Err(0) => 0,
+                    Err(i) => (i - 1).min(ports - 1),
+                }
+            }
+        }
+    }
+}
+
+/// N-channel memory interface.
+pub struct MultiPortSim {
+    channels: Vec<MemSim>,
+    map: PortMap,
+    elem_bytes: u64,
+}
+
+impl MultiPortSim {
+    pub fn new(cfg: MemConfig, ports: usize, map: PortMap) -> MultiPortSim {
+        assert!(ports >= 1);
+        let elem_bytes = cfg.elem_bytes;
+        MultiPortSim {
+            channels: (0..ports).map(|_| MemSim::new(cfg.clone())).collect(),
+            map,
+            elem_bytes,
+        }
+    }
+
+    pub fn ports(&self) -> usize {
+        self.channels.len()
+    }
+
+    /// Submit a transaction; interleaved maps may split it across ports.
+    pub fn submit(&mut self, txn: &Txn) {
+        let ports = self.channels.len();
+        if ports == 1 {
+            self.channels[0].submit(txn);
+            return;
+        }
+        match &self.map {
+            PortMap::ByRange { .. } => {
+                let p = self.map.port_of(txn.addr, self.elem_bytes, ports);
+                self.channels[p].submit(txn);
+            }
+            PortMap::Interleaved { stripe_bytes } => {
+                // split the run at stripe boundaries; each piece goes to
+                // its stripe's port.
+                let stripe_elems = (stripe_bytes / self.elem_bytes).max(1);
+                let mut addr = txn.addr;
+                let mut remaining = txn.len;
+                while remaining > 0 {
+                    let in_stripe = stripe_elems - (addr % stripe_elems);
+                    let chunk = remaining.min(in_stripe);
+                    let p = self.map.port_of(addr, self.elem_bytes, ports);
+                    self.channels[p].submit(&Txn {
+                        dir: txn.dir,
+                        addr,
+                        len: chunk,
+                    });
+                    addr += chunk;
+                    remaining -= chunk;
+                }
+            }
+        }
+    }
+
+    /// Completion time = the slowest channel (they run concurrently).
+    pub fn now(&self) -> u64 {
+        self.channels.iter().map(|c| c.now()).max().unwrap_or(0)
+    }
+
+    /// Per-channel busy report (balance diagnostics).
+    pub fn channel_times(&self) -> Vec<u64> {
+        self.channels.iter().map(|c| c.now()).collect()
+    }
+
+    /// Load imbalance: max channel time / mean channel time (1.0 = ideal).
+    pub fn imbalance(&self) -> f64 {
+        let times = self.channel_times();
+        let max = *times.iter().max().unwrap_or(&0) as f64;
+        let mean = times.iter().sum::<u64>() as f64 / times.len().max(1) as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    pub fn reset(&mut self) {
+        for c in &mut self.channels {
+            c.reset();
+        }
+    }
+}
+
+/// The facet-per-port repartition for a CFA allocation: port boundaries at
+/// the facet arrays' base addresses, round-robin when there are more facets
+/// than ports.
+pub fn cfa_port_map(cfa: &crate::layout::cfa::Cfa, ports: usize) -> PortMap {
+    // With ports >= facets this is exactly one facet array per port; with
+    // fewer ports, consecutive facet arrays share a port (they are still
+    // contiguous ranges, preserving ByRange semantics).
+    let facets = cfa.facet_arrays();
+    let per_port = facets.len().div_ceil(ports);
+    let mut bounds = Vec::with_capacity(ports);
+    for p in 0..ports {
+        let fi = (p * per_port).min(facets.len() - 1);
+        bounds.push(if p == 0 { 0 } else { facets[fi].base });
+    }
+    PortMap::ByRange { bounds }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::Dir;
+
+    fn cfg() -> MemConfig {
+        MemConfig::default()
+    }
+
+    #[test]
+    fn single_port_equals_memsim() {
+        let txns: Vec<Txn> = (0..32)
+            .map(|i| Txn {
+                dir: Dir::Read,
+                addr: i * 100,
+                len: 64,
+            })
+            .collect();
+        let mut single = MemSim::new(cfg());
+        let t_ref = single.run(&txns);
+        let mut mp = MultiPortSim::new(cfg(), 1, PortMap::Interleaved { stripe_bytes: 4096 });
+        for t in &txns {
+            mp.submit(t);
+        }
+        assert_eq!(mp.now(), t_ref);
+    }
+
+    #[test]
+    fn range_map_routes_and_scales() {
+        // two disjoint streams on two ports finish in about half the time
+        let stream = |base: u64| -> Vec<Txn> {
+            (0..64)
+                .map(|i| Txn {
+                    dir: Dir::Read,
+                    addr: base + i * 1024,
+                    len: 1024,
+                })
+                .collect()
+        };
+        let all: Vec<Txn> = stream(0).into_iter().chain(stream(1 << 24)).collect();
+        let mut one = MultiPortSim::new(cfg(), 1, PortMap::ByRange { bounds: vec![0] });
+        for t in &all {
+            one.submit(t);
+        }
+        let mut two = MultiPortSim::new(
+            cfg(),
+            2,
+            PortMap::ByRange {
+                bounds: vec![0, 1 << 24],
+            },
+        );
+        for t in &all {
+            two.submit(t);
+        }
+        let speedup = one.now() as f64 / two.now() as f64;
+        assert!(speedup > 1.8, "speedup {speedup}");
+        assert!(two.imbalance() < 1.1);
+    }
+
+    #[test]
+    fn interleaved_splits_at_stripes() {
+        let mut mp = MultiPortSim::new(cfg(), 2, PortMap::Interleaved { stripe_bytes: 256 });
+        // 64 elems * 8B = 512B: spans 2 stripes → both channels busy
+        mp.submit(&Txn {
+            dir: Dir::Read,
+            addr: 0,
+            len: 64,
+        });
+        let times = mp.channel_times();
+        assert!(times.iter().all(|&t| t > 0), "{times:?}");
+    }
+
+    #[test]
+    fn port_of_range_boundaries() {
+        let m = PortMap::ByRange {
+            bounds: vec![0, 100, 200],
+        };
+        assert_eq!(m.port_of(0, 8, 3), 0);
+        assert_eq!(m.port_of(99, 8, 3), 0);
+        assert_eq!(m.port_of(100, 8, 3), 1);
+        assert_eq!(m.port_of(250, 8, 3), 2);
+    }
+
+    #[test]
+    fn cfa_map_assigns_facets_to_ports() {
+        use crate::poly::deps::DepPattern;
+        use crate::poly::tiling::Tiling;
+        let tiling = Tiling::new(vec![24, 24, 24], vec![8, 8, 8]);
+        let deps = DepPattern::new(vec![vec![-1, 0, 0], vec![0, -1, 0], vec![0, 0, -2]])
+            .unwrap();
+        let cfa = crate::layout::cfa::Cfa::new(tiling, deps).unwrap();
+        let map = cfa_port_map(&cfa, 3);
+        let facets = cfa.facet_arrays();
+        for (i, fa) in facets.iter().enumerate() {
+            assert_eq!(map.port_of(fa.base, 8, 3), i, "facet {i}");
+            assert_eq!(map.port_of(fa.base + fa.size() - 1, 8, 3), i);
+        }
+    }
+}

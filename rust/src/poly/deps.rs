@@ -1,0 +1,272 @@
+//! Uniform dependence patterns and skew normalization.
+//!
+//! A dependence vector `B` means iteration `x` reads the value produced by
+//! iteration `x + B` (§II.G). CFA's construction (§IV.E) assumes every
+//! vector is *backwards* in every dimension (`B·e_k <= 0` for all k); the
+//! paper expects a pre-processing basis change when that does not hold
+//! (e.g. raw Jacobi has `(-1, +1)` components). [`Skew`] implements that
+//! change of basis for the common outer-sequential case.
+
+use crate::poly::vec::{all_non_positive, ceil_div, is_zero, IVec};
+use std::fmt;
+
+/// Errors from pattern construction / normalization.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum DepError {
+    #[error("dependence vector {0:?} is zero")]
+    ZeroVector(Vec<i64>),
+    #[error("dependence vectors have inconsistent dimensions")]
+    DimMismatch,
+    #[error("dependence vector {0:?} is not backwards (some component > 0)")]
+    NotBackwards(Vec<i64>),
+    #[error("cannot skew-normalize: vector {0:?} has a positive component but a zero leading component")]
+    NotSkewable(Vec<i64>),
+}
+
+/// A set of uniform dependence vectors, all backwards in all dimensions.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DepPattern {
+    vecs: Vec<IVec>,
+    dims: usize,
+}
+
+impl DepPattern {
+    /// Build a validated backwards pattern.
+    pub fn new(vecs: Vec<IVec>) -> Result<DepPattern, DepError> {
+        let dims = vecs.first().map(|v| v.len()).unwrap_or(0);
+        for v in &vecs {
+            if v.len() != dims {
+                return Err(DepError::DimMismatch);
+            }
+            if is_zero(v) {
+                return Err(DepError::ZeroVector(v.clone()));
+            }
+            if !all_non_positive(v) {
+                return Err(DepError::NotBackwards(v.clone()));
+            }
+        }
+        Ok(DepPattern { vecs, dims })
+    }
+
+    pub fn dims(&self) -> usize {
+        self.dims
+    }
+
+    pub fn vecs(&self) -> &[IVec] {
+        &self.vecs
+    }
+
+    pub fn len(&self) -> usize {
+        self.vecs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vecs.is_empty()
+    }
+
+    /// Facet thickness along axis k (§IV.F.3):
+    /// `w_k = max_q | e_k · B_q |`.
+    pub fn width(&self, k: usize) -> i64 {
+        self.vecs.iter().map(|v| v[k].abs()).max().unwrap_or(0)
+    }
+
+    /// All facet thicknesses.
+    pub fn widths(&self) -> IVec {
+        (0..self.dims).map(|k| self.width(k)).collect()
+    }
+
+    /// Axes with non-zero thickness (axes that actually carry flow).
+    pub fn active_axes(&self) -> Vec<usize> {
+        (0..self.dims).filter(|&k| self.width(k) > 0).collect()
+    }
+}
+
+impl fmt::Display for DepPattern {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let parts: Vec<String> = self
+            .vecs
+            .iter()
+            .map(|v| crate::poly::vec::fmt_vec(v))
+            .collect();
+        write!(f, "{{{}}}", parts.join(", "))
+    }
+}
+
+/// A skewing basis change `x'_k = x_k + f_k * x_0` (f_0 = 0), the standard
+/// normalization that makes stencil-like patterns backwards when the outer
+/// (time) dimension is strictly sequential.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Skew {
+    pub factors: IVec,
+}
+
+impl Skew {
+    /// Identity skew for `dims` dimensions.
+    pub fn identity(dims: usize) -> Skew {
+        Skew {
+            factors: vec![0; dims],
+        }
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.factors.iter().all(|&f| f == 0)
+    }
+
+    /// Apply to a point.
+    pub fn apply(&self, x: &[i64]) -> IVec {
+        let mut out = x.to_vec();
+        for k in 1..x.len() {
+            out[k] += self.factors[k] * x[0];
+        }
+        out
+    }
+
+    /// Inverse transform.
+    pub fn unapply(&self, x: &[i64]) -> IVec {
+        let mut out = x.to_vec();
+        for k in 1..x.len() {
+            out[k] -= self.factors[k] * x[0];
+        }
+        out
+    }
+
+    /// Apply to a dependence vector (dependence vectors transform like
+    /// points because the map is linear).
+    pub fn apply_dep(&self, b: &[i64]) -> IVec {
+        self.apply(b)
+    }
+}
+
+/// Normalize an arbitrary uniform pattern into a backwards one using a skew.
+///
+/// Requires: every vector with a positive component somewhere has a strictly
+/// negative leading component (outer-sequential programs: stencils over
+/// time, wavefront DP…). Returns the skew and the normalized pattern.
+pub fn normalize(vecs: &[IVec]) -> Result<(Skew, DepPattern), DepError> {
+    let dims = vecs.first().map(|v| v.len()).unwrap_or(0);
+    for v in vecs {
+        if v.len() != dims {
+            return Err(DepError::DimMismatch);
+        }
+        if is_zero(v) {
+            return Err(DepError::ZeroVector(v.clone()));
+        }
+    }
+    let mut factors = vec![0i64; dims];
+    for k in 1..dims {
+        let mut f = 0i64;
+        for v in vecs {
+            if v[k] > 0 {
+                if v[0] >= 0 {
+                    return Err(DepError::NotSkewable(v.clone()));
+                }
+                // need v[k] + f * v[0] <= 0  =>  f >= v[k] / -v[0]
+                f = f.max(ceil_div(v[k], -v[0]));
+            }
+        }
+        factors[k] = f;
+    }
+    let skew = Skew { factors };
+    let skewed: Vec<IVec> = vecs.iter().map(|v| skew.apply_dep(v)).collect();
+    let pat = DepPattern::new(skewed)?;
+    Ok((skew, pat))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{run, Config};
+
+    #[test]
+    fn widths_of_figure5_pattern() {
+        // Fig 5a-like pattern: thickness 1 along i, 2 along k.
+        let p = DepPattern::new(vec![vec![-1, 0, -1], vec![0, -1, -2], vec![0, 0, -1]])
+            .unwrap();
+        assert_eq!(p.widths(), vec![1, 1, 2]);
+        assert_eq!(p.active_axes(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn rejects_zero_and_forward() {
+        assert_eq!(
+            DepPattern::new(vec![vec![0, 0]]),
+            Err(DepError::ZeroVector(vec![0, 0]))
+        );
+        assert_eq!(
+            DepPattern::new(vec![vec![-1, 1]]),
+            Err(DepError::NotBackwards(vec![-1, 1]))
+        );
+        assert_eq!(
+            DepPattern::new(vec![vec![-1], vec![-1, 0]]),
+            Err(DepError::DimMismatch)
+        );
+    }
+
+    #[test]
+    fn jacobi_5p_normalizes_with_unit_skew() {
+        // A_t[i,j] uses A_{t-1}[i+di, j+dj], di/dj in cross pattern.
+        let raw = vec![
+            vec![-1, 0, 0],
+            vec![-1, 1, 0],
+            vec![-1, -1, 0],
+            vec![-1, 0, 1],
+            vec![-1, 0, -1],
+        ];
+        let (skew, pat) = normalize(&raw).unwrap();
+        assert_eq!(skew.factors, vec![0, 1, 1]);
+        assert_eq!(pat.widths(), vec![1, 2, 2]);
+        // skew round-trips points
+        let x = vec![3, 5, 7];
+        assert_eq!(skew.unapply(&skew.apply(&x)), x);
+    }
+
+    #[test]
+    fn gaussian_5x5_normalizes_with_skew_two() {
+        let mut raw = Vec::new();
+        for di in -2..=2 {
+            for dj in -2..=2 {
+                raw.push(vec![-1, di, dj]);
+            }
+        }
+        let (skew, pat) = normalize(&raw).unwrap();
+        assert_eq!(skew.factors, vec![0, 2, 2]);
+        assert_eq!(pat.widths(), vec![1, 4, 4]);
+    }
+
+    #[test]
+    fn already_backwards_needs_no_skew() {
+        let raw = vec![vec![0, -1, 0], vec![-1, -1, -1], vec![0, 0, -1]];
+        let (skew, pat) = normalize(&raw).unwrap();
+        assert!(skew.is_identity());
+        assert_eq!(pat.vecs().len(), 3);
+    }
+
+    #[test]
+    fn unskewable_is_an_error() {
+        // positive component with zero leading component
+        let raw = vec![vec![0, 1]];
+        assert!(matches!(normalize(&raw), Err(DepError::NotSkewable(_))));
+    }
+
+    #[test]
+    fn prop_normalize_yields_backwards() {
+        run("normalize => all non-positive", Config::small(120), |g| {
+            let d = g.usize(2, 4);
+            let n = g.usize(1, 6);
+            let vecs: Vec<IVec> = (0..n)
+                .map(|_| {
+                    let mut v: IVec = (0..d).map(|_| g.i64(-3, 3)).collect();
+                    v[0] = g.i64(-3, -1); // outer-sequential
+                    v
+                })
+                .collect();
+            let (skew, pat) = normalize(&vecs).expect("skewable");
+            for v in pat.vecs() {
+                assert!(all_non_positive(v), "{v:?}");
+            }
+            // skew is a bijection on points
+            let p: IVec = (0..d).map(|_| g.i64(-10, 10)).collect();
+            assert_eq!(skew.unapply(&skew.apply(&p)), p);
+        });
+    }
+}

@@ -1,0 +1,311 @@
+//! Flow-in / flow-out sets and facets (§II.F, §IV.F, Appendix).
+//!
+//! For a tile T under a backwards uniform dependence pattern:
+//!
+//! * **flow-in(T)**  = iterations *outside* T whose results T reads
+//!   (`{ y ∉ T : ∃j, ∃x ∈ T : x + B_j = y }` = ∪_j (T + B_j) \ T, clipped
+//!   to the iteration space);
+//! * **flow-out(T)** = iterations *of* T read by some other tile
+//!   (`{ x ∈ T : ∃j : x - B_j ∈ E \ T }`);
+//! * **facet S_k(T)** = the last `w_k` planes of T along axis k; the
+//!   appendix proves flow-in(T) ⊆ ∪ facets of producer tiles, which is the
+//!   correctness basis of CFA.
+
+use crate::poly::deps::DepPattern;
+use crate::poly::rect::{Rect, Region};
+use crate::poly::tiling::Tiling;
+use crate::poly::vec::{neg, IVec};
+
+/// Flow-in region of tile `coords` (exact, disjoint union of rects).
+pub fn flow_in(tiling: &Tiling, deps: &DepPattern, coords: &[i64]) -> Region {
+    let t = tiling.tile_rect(coords);
+    let space = tiling.space_rect();
+    let mut out = Region::empty();
+    for b in deps.vecs() {
+        // producers read by T: T shifted by B, minus T itself.
+        let shifted = t.shift(b).intersect(&space);
+        for piece in shifted.subtract(&t) {
+            out.add(piece);
+        }
+    }
+    out
+}
+
+/// Flow-out region of tile `coords` (exact).
+pub fn flow_out(tiling: &Tiling, deps: &DepPattern, coords: &[i64]) -> Region {
+    let t = tiling.tile_rect(coords);
+    let space = tiling.space_rect();
+    let mut out = Region::empty();
+    for b in deps.vecs() {
+        // consumers of x ∈ T live at x - B; x is flow-out iff x - B is a
+        // valid iteration outside T.
+        let consumers_outside = t.shift(&neg(b)).intersect(&space);
+        for piece in consumers_outside.subtract(&t) {
+            out.add(piece.shift(b).intersect(&t));
+        }
+    }
+    out
+}
+
+/// Facet S_k(T): the last `w_k` planes of tile T along axis k (§Appendix:
+/// `S_k(T) = { x ∈ T : x_k mod t_k >= t_k - w_k }`). For boundary-clamped
+/// tiles the facet is the last `w_k` planes of the *actual* tile extent.
+pub fn facet(tiling: &Tiling, deps: &DepPattern, coords: &[i64], k: usize) -> Rect {
+    let t = tiling.tile_rect(coords);
+    let w = deps.width(k);
+    let mut lo = t.lo.clone();
+    lo[k] = (t.hi[k] - w).max(t.lo[k]);
+    Rect::new(lo, t.hi)
+}
+
+/// All facets of a tile, one per active axis, in axis order.
+pub fn facets(tiling: &Tiling, deps: &DepPattern, coords: &[i64]) -> Vec<(usize, Rect)> {
+    deps.active_axes()
+        .into_iter()
+        .map(|k| (k, facet(tiling, deps, coords, k)))
+        .collect()
+}
+
+/// Union of all facets of a tile.
+pub fn facet_union(tiling: &Tiling, deps: &DepPattern, coords: &[i64]) -> Region {
+    let mut out = Region::empty();
+    for (_, f) in facets(tiling, deps, coords) {
+        out.add(f);
+    }
+    out
+}
+
+/// The appendix theorem, checked pointwise: every flow-in point of `coords`
+/// lies in a facet of the tile that produced it. Returns the offending point
+/// if the property fails (used by property tests; `None` = holds).
+pub fn coverage_violation(
+    tiling: &Tiling,
+    deps: &DepPattern,
+    coords: &[i64],
+) -> Option<IVec> {
+    let fin = flow_in(tiling, deps, coords);
+    for y in fin.all_points() {
+        let producer = tiling.tile_of(&y);
+        let in_some_facet = deps
+            .active_axes()
+            .iter()
+            .any(|&k| facet(tiling, deps, &producer, k).contains(&y));
+        if !in_some_facet {
+            return Some(y);
+        }
+    }
+    None
+}
+
+/// Neighbor tiles a tile reads from: the producer-tile coordinates of its
+/// flow-in, with the neighbor level (number of differing coordinates).
+/// For backwards patterns with w_k <= t_k these are exactly the tiles at
+/// offsets δ ∈ {0,-1}^d \ {0} that actually carry flow (§IV.G–I).
+pub fn producer_tiles(
+    tiling: &Tiling,
+    deps: &DepPattern,
+    coords: &[i64],
+) -> Vec<(IVec, usize)> {
+    let fin = flow_in(tiling, deps, coords);
+    let mut seen: Vec<IVec> = Vec::new();
+    for r in fin.rects() {
+        // a rect can span several producer tiles; enumerate the tile range
+        // it covers.
+        let lo_t = tiling.tile_of(&r.lo);
+        let hi_pt: IVec = r.hi.iter().map(|h| h - 1).collect();
+        let hi_t = tiling.tile_of(&hi_pt);
+        let range = Rect::new(lo_t, hi_t.iter().map(|c| c + 1).collect());
+        for c in range.points() {
+            if !seen.contains(&c) {
+                seen.push(c);
+            }
+        }
+    }
+    seen.sort();
+    seen.into_iter()
+        .map(|c| {
+            let lvl = crate::poly::vec::neighbor_level(&c, coords);
+            (c, lvl)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{run, Config};
+
+    fn fig5_setup() -> (Tiling, DepPattern) {
+        // 3D space tiled 5x5x5 like the paper's Figure 5; pattern with
+        // w = (1, 1, 2).
+        let tiling = Tiling::new(vec![15, 15, 15], vec![5, 5, 5]);
+        let deps = DepPattern::new(vec![
+            vec![-1, 0, 0],
+            vec![0, -1, -1],
+            vec![0, 0, -2],
+            vec![-1, -1, -1],
+        ])
+        .unwrap();
+        (tiling, deps)
+    }
+
+    #[test]
+    fn facet_shapes_match_paper() {
+        let (tiling, deps) = fig5_setup();
+        assert_eq!(deps.widths(), vec![1, 1, 2]);
+        // facet along i: rightmost plane, 5x5x... wait — last w_0=1 plane
+        let f0 = facet(&tiling, &deps, &[1, 1, 1], 0);
+        assert_eq!(f0, Rect::new(vec![9, 5, 5], vec![10, 10, 10]));
+        assert_eq!(f0.volume(), 25);
+        // facet along k: two last planes
+        let f2 = facet(&tiling, &deps, &[1, 1, 1], 2);
+        assert_eq!(f2, Rect::new(vec![5, 5, 8], vec![10, 10, 10]));
+        assert_eq!(f2.volume(), 50);
+    }
+
+    #[test]
+    fn flow_in_of_interior_tile() {
+        let (tiling, deps) = fig5_setup();
+        let fin = flow_in(&tiling, &deps, &[1, 1, 1]);
+        // flow-in must be outside the tile and inside the space
+        let t = tiling.tile_rect(&[1, 1, 1]);
+        for p in fin.all_points() {
+            assert!(!t.contains(&p));
+            assert!(tiling.space_rect().contains(&p));
+        }
+        assert!(fin.volume() > 0);
+    }
+
+    #[test]
+    fn corner_tile_has_no_flow_in() {
+        let (tiling, deps) = fig5_setup();
+        let fin = flow_in(&tiling, &deps, &[0, 0, 0]);
+        assert_eq!(fin.volume(), 0);
+    }
+
+    #[test]
+    fn last_tile_has_no_flow_out() {
+        let (tiling, deps) = fig5_setup();
+        let fout = flow_out(&tiling, &deps, &[2, 2, 2]);
+        assert_eq!(fout.volume(), 0);
+    }
+
+    #[test]
+    fn flow_out_is_inside_facets() {
+        let (tiling, deps) = fig5_setup();
+        let coords = vec![1, 1, 1];
+        let fout = flow_out(&tiling, &deps, &coords);
+        let fu = facet_union(&tiling, &deps, &coords);
+        for p in fout.all_points() {
+            assert!(fu.contains(&p), "flow-out point {p:?} outside facets");
+        }
+        // facets over-approximate: their union is at least the flow-out
+        assert!(fu.volume() >= fout.volume());
+    }
+
+    #[test]
+    fn coverage_theorem_on_fig5() {
+        let (tiling, deps) = fig5_setup();
+        for c in tiling.tiles() {
+            assert_eq!(coverage_violation(&tiling, &deps, &c), None, "tile {c:?}");
+        }
+    }
+
+    #[test]
+    fn flow_in_out_duality() {
+        // Duality: every flow-in point of a tile is a flow-out point of its
+        // producer tile, and total flow-in >= total flow-out (a point at a
+        // tile corner is read by several consumer tiles but counted once as
+        // flow-out).
+        let tiling = Tiling::new(vec![8, 8], vec![4, 4]);
+        let deps = DepPattern::new(vec![vec![-1, 0], vec![0, -1]]).unwrap();
+        let mut total_in = 0u64;
+        for c in tiling.tiles() {
+            let fin = flow_in(&tiling, &deps, &c);
+            total_in += fin.volume();
+            for p in fin.all_points() {
+                let producer = tiling.tile_of(&p);
+                assert!(
+                    flow_out(&tiling, &deps, &producer).contains(&p),
+                    "flow-in point {p:?} of tile {c:?} not flow-out of {producer:?}"
+                );
+            }
+        }
+        let total_out: u64 = tiling
+            .tiles()
+            .map(|c| flow_out(&tiling, &deps, &c).volume())
+            .sum();
+        assert!(total_in >= total_out);
+        assert!(total_out > 0);
+    }
+
+    #[test]
+    fn producer_tiles_are_backward_neighbors() {
+        let (tiling, deps) = fig5_setup();
+        let prods = producer_tiles(&tiling, &deps, &[1, 1, 1]);
+        assert!(!prods.is_empty());
+        for (c, lvl) in &prods {
+            assert!(*lvl >= 1 && *lvl <= 3);
+            for k in 0..3 {
+                assert!(c[k] == 1 || c[k] == 0, "producer {c:?}");
+            }
+        }
+        // includes the third-level corner neighbor (Fig 9)
+        assert!(prods.iter().any(|(c, l)| *l == 3 && c == &vec![0, 0, 0]));
+    }
+
+    #[test]
+    fn prop_coverage_theorem_random() {
+        // The appendix proof, instantiated on random spaces/patterns/tiles.
+        run("flow-in covered by producer facets", Config::small(40), |g| {
+            let d = g.usize(2, 3);
+            let tile: IVec = (0..d).map(|_| g.i64(2, 5)).collect();
+            let space: IVec = tile.iter().map(|t| t * g.i64(2, 3)).collect();
+            let tiling = Tiling::new(space, tile.clone());
+            let nv = g.usize(1, 4);
+            let vecs: Vec<IVec> = (0..nv)
+                .map(|_| {
+                    (0..d)
+                        .map(|k| g.i64(-(tile[k].min(3)), 0))
+                        .collect::<IVec>()
+                })
+                .filter(|v| !crate::poly::vec::is_zero(v))
+                .collect();
+            if vecs.is_empty() {
+                return;
+            }
+            let deps = DepPattern::new(vecs).unwrap();
+            for c in tiling.tiles() {
+                assert_eq!(
+                    coverage_violation(&tiling, &deps, &c),
+                    None,
+                    "tiling {tile:?} deps {deps} tile {c:?}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn prop_flow_sets_disjoint_from_tile_interior_complement() {
+        run("flow-out ⊆ T, flow-in ∩ T = ∅", Config::small(40), |g| {
+            let d = g.usize(1, 3);
+            let tile: IVec = (0..d).map(|_| g.i64(2, 4)).collect();
+            let space: IVec = tile.iter().map(|t| t * 2).collect();
+            let tiling = Tiling::new(space, tile);
+            let v: IVec = (0..d).map(|_| g.i64(-2, 0)).collect();
+            if crate::poly::vec::is_zero(&v) {
+                return;
+            }
+            let deps = DepPattern::new(vec![v]).unwrap();
+            for c in tiling.tiles() {
+                let t = tiling.tile_rect(&c);
+                for p in flow_out(&tiling, &deps, &c).all_points() {
+                    assert!(t.contains(&p));
+                }
+                for p in flow_in(&tiling, &deps, &c).all_points() {
+                    assert!(!t.contains(&p));
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,20 @@
+//! Rectangular-polyhedral substrate (the project's "mini-ISL").
+//!
+//! The paper's hypotheses (§IV.E: uniform dependences, rectangular tiling,
+//! dense data) close the polyhedral model over hyperrectangles: iteration
+//! spaces, tiles, facets and flow sets are all finite unions of integer
+//! boxes, and every transformation CFA needs (modulo projection, data
+//! tiling, dimension permutation) is closed-form. This module implements
+//! that exact algebra; no general ILP/Presburger machinery is required.
+
+pub mod deps;
+pub mod flow;
+pub mod rect;
+pub mod tiling;
+pub mod vec;
+
+pub use deps::{normalize, DepError, DepPattern, Skew};
+pub use flow::{coverage_violation, facet, facet_union, facets, flow_in, flow_out, producer_tiles};
+pub use rect::{Rect, Region};
+pub use tiling::Tiling;
+pub use vec::IVec;

@@ -1,0 +1,406 @@
+//! Hyperrectangles and disjoint rectangle unions.
+//!
+//! Under the paper's hypotheses (rectangular iteration space, rectangular
+//! tiles, uniform dependences) every set we manipulate — tiles, facets,
+//! flow-in / flow-out sets, bounding boxes — is a finite union of integer
+//! hyperrectangles. This module is the project's "mini-ISL": exact set
+//! algebra on half-open boxes.
+
+use crate::poly::vec::IVec;
+
+/// A half-open integer hyperrectangle `{ x : lo <= x < hi }`.
+///
+/// Empty iff `hi[k] <= lo[k]` for some k.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Rect {
+    pub lo: IVec,
+    pub hi: IVec,
+}
+
+impl Rect {
+    pub fn new(lo: IVec, hi: IVec) -> Rect {
+        assert_eq!(lo.len(), hi.len(), "Rect: dimension mismatch");
+        Rect { lo, hi }
+    }
+
+    /// The box `[0, sizes)`.
+    pub fn from_sizes(sizes: &[i64]) -> Rect {
+        Rect::new(vec![0; sizes.len()], sizes.to_vec())
+    }
+
+    pub fn dims(&self) -> usize {
+        self.lo.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lo.iter().zip(&self.hi).any(|(l, h)| h <= l)
+    }
+
+    /// Extent along dimension k (0 if empty along k).
+    pub fn extent(&self, k: usize) -> i64 {
+        (self.hi[k] - self.lo[k]).max(0)
+    }
+
+    /// Number of lattice points.
+    pub fn volume(&self) -> u64 {
+        if self.is_empty() {
+            return 0;
+        }
+        (0..self.dims()).map(|k| self.extent(k) as u64).product()
+    }
+
+    pub fn contains(&self, p: &[i64]) -> bool {
+        assert_eq!(p.len(), self.dims());
+        p.iter()
+            .zip(self.lo.iter().zip(&self.hi))
+            .all(|(x, (l, h))| l <= x && x < h)
+    }
+
+    /// Intersection (possibly empty).
+    pub fn intersect(&self, other: &Rect) -> Rect {
+        assert_eq!(self.dims(), other.dims());
+        Rect::new(
+            self.lo
+                .iter()
+                .zip(&other.lo)
+                .map(|(a, b)| *a.max(b))
+                .collect(),
+            self.hi
+                .iter()
+                .zip(&other.hi)
+                .map(|(a, b)| *a.min(b))
+                .collect(),
+        )
+    }
+
+    /// Translate by `off`.
+    pub fn shift(&self, off: &[i64]) -> Rect {
+        Rect::new(
+            self.lo.iter().zip(off).map(|(a, b)| a + b).collect(),
+            self.hi.iter().zip(off).map(|(a, b)| a + b).collect(),
+        )
+    }
+
+    /// Smallest rect containing both (empty operands ignored).
+    pub fn hull(&self, other: &Rect) -> Rect {
+        if self.is_empty() {
+            return other.clone();
+        }
+        if other.is_empty() {
+            return self.clone();
+        }
+        Rect::new(
+            self.lo
+                .iter()
+                .zip(&other.lo)
+                .map(|(a, b)| *a.min(b))
+                .collect(),
+            self.hi
+                .iter()
+                .zip(&other.hi)
+                .map(|(a, b)| *a.max(b))
+                .collect(),
+        )
+    }
+
+    /// `self \ other` as disjoint rects (slab decomposition, axis by axis).
+    pub fn subtract(&self, other: &Rect) -> Vec<Rect> {
+        let inter = self.intersect(other);
+        if inter.is_empty() {
+            return if self.is_empty() {
+                vec![]
+            } else {
+                vec![self.clone()]
+            };
+        }
+        let mut out = Vec::new();
+        // Peel slabs around the intersection, dimension by dimension;
+        // `core` shrinks toward the intersection.
+        let mut core = self.clone();
+        for k in 0..self.dims() {
+            if core.lo[k] < inter.lo[k] {
+                let mut below = core.clone();
+                below.hi[k] = inter.lo[k];
+                out.push(below);
+            }
+            if inter.hi[k] < core.hi[k] {
+                let mut above = core.clone();
+                above.lo[k] = inter.hi[k];
+                out.push(above);
+            }
+            core.lo[k] = inter.lo[k];
+            core.hi[k] = inter.hi[k];
+        }
+        out.retain(|r| !r.is_empty());
+        out
+    }
+
+    /// Row-major iterator over lattice points. Allocates one point per step;
+    /// use only off the hot path (tests, planning — not the simulator loop).
+    pub fn points(&self) -> PointIter {
+        PointIter {
+            rect: self.clone(),
+            cur: if self.is_empty() {
+                None
+            } else {
+                Some(self.lo.clone())
+            },
+        }
+    }
+}
+
+/// Iterator over a rect's lattice points in row-major (last dim fastest) order.
+pub struct PointIter {
+    rect: Rect,
+    cur: Option<IVec>,
+}
+
+impl Iterator for PointIter {
+    type Item = IVec;
+
+    fn next(&mut self) -> Option<IVec> {
+        let cur = self.cur.as_mut()?;
+        let out = cur.clone();
+        // advance
+        let d = self.rect.dims();
+        let mut k = d;
+        loop {
+            if k == 0 {
+                self.cur = None;
+                break;
+            }
+            k -= 1;
+            cur[k] += 1;
+            if cur[k] < self.rect.hi[k] {
+                break;
+            }
+            cur[k] = self.rect.lo[k];
+        }
+        Some(out)
+    }
+}
+
+/// A finite union of **disjoint** rects. Insertion maintains disjointness by
+/// subtracting existing members from every new rect.
+#[derive(Clone, Debug, Default)]
+pub struct Region {
+    rects: Vec<Rect>,
+}
+
+impl Region {
+    pub fn empty() -> Region {
+        Region { rects: Vec::new() }
+    }
+
+    pub fn of(rect: Rect) -> Region {
+        let mut r = Region::empty();
+        r.add(rect);
+        r
+    }
+
+    pub fn rects(&self) -> &[Rect] {
+        &self.rects
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rects.is_empty()
+    }
+
+    /// Insert a rect, keeping the union disjoint.
+    pub fn add(&mut self, rect: Rect) {
+        if rect.is_empty() {
+            return;
+        }
+        let mut pieces = vec![rect];
+        for existing in &self.rects {
+            let mut next = Vec::new();
+            for p in pieces {
+                next.extend(p.subtract(existing));
+            }
+            pieces = next;
+            if pieces.is_empty() {
+                return;
+            }
+        }
+        self.rects.extend(pieces);
+    }
+
+    /// Union in another region.
+    pub fn add_region(&mut self, other: &Region) {
+        for r in &other.rects {
+            self.add(r.clone());
+        }
+    }
+
+    /// Remove all points of `rect` from the region.
+    pub fn subtract_rect(&mut self, rect: &Rect) {
+        let mut next = Vec::new();
+        for r in &self.rects {
+            next.extend(r.subtract(rect));
+        }
+        self.rects = next;
+    }
+
+    /// Total number of lattice points (exact: members are disjoint).
+    pub fn volume(&self) -> u64 {
+        self.rects.iter().map(|r| r.volume()).sum()
+    }
+
+    pub fn contains(&self, p: &[i64]) -> bool {
+        self.rects.iter().any(|r| r.contains(p))
+    }
+
+    /// Bounding box of the union (empty rect of dim 0 if region is empty).
+    pub fn bbox(&self) -> Option<Rect> {
+        let mut it = self.rects.iter();
+        let first = it.next()?.clone();
+        Some(it.fold(first, |acc, r| acc.hull(r)))
+    }
+
+    /// All lattice points (testing / planning only).
+    pub fn all_points(&self) -> Vec<IVec> {
+        self.rects.iter().flat_map(|r| r.points()).collect()
+    }
+
+    /// Clip every member to `window`.
+    pub fn intersect_rect(&self, window: &Rect) -> Region {
+        let mut out = Region::empty();
+        for r in &self.rects {
+            out.add(r.intersect(window));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{run, Config};
+
+    fn r2(lo: [i64; 2], hi: [i64; 2]) -> Rect {
+        Rect::new(lo.to_vec(), hi.to_vec())
+    }
+
+    #[test]
+    fn basic_geometry() {
+        let r = r2([0, 0], [4, 3]);
+        assert_eq!(r.volume(), 12);
+        assert!(r.contains(&[0, 0]));
+        assert!(r.contains(&[3, 2]));
+        assert!(!r.contains(&[4, 0]));
+        assert!(!r.is_empty());
+        assert!(r2([2, 2], [2, 5]).is_empty());
+    }
+
+    #[test]
+    fn intersect_shift_hull() {
+        let a = r2([0, 0], [4, 4]);
+        let b = r2([2, 1], [6, 3]);
+        let i = a.intersect(&b);
+        assert_eq!(i, r2([2, 1], [4, 3]));
+        assert_eq!(a.shift(&[1, -1]), r2([1, -1], [5, 3]));
+        assert_eq!(a.hull(&b), r2([0, 0], [6, 4]));
+    }
+
+    #[test]
+    fn subtract_produces_disjoint_exact_cover() {
+        let a = r2([0, 0], [5, 5]);
+        let b = r2([1, 1], [3, 4]);
+        let parts = a.subtract(&b);
+        let vol: u64 = parts.iter().map(|p| p.volume()).sum();
+        assert_eq!(vol, 25 - 6);
+        // each point of a is in exactly one of parts ∪ {a∩b}
+        for p in a.points() {
+            let in_parts = parts.iter().filter(|r| r.contains(&p)).count();
+            let in_b = b.contains(&p) as usize;
+            assert_eq!(in_parts + in_b, 1, "point {p:?}");
+        }
+    }
+
+    #[test]
+    fn subtract_disjoint_and_containing() {
+        let a = r2([0, 0], [2, 2]);
+        assert_eq!(a.subtract(&r2([5, 5], [6, 6])), vec![a.clone()]);
+        assert!(a.subtract(&r2([-1, -1], [3, 3])).is_empty());
+    }
+
+    #[test]
+    fn point_iteration_row_major() {
+        let r = r2([1, 1], [3, 3]);
+        let pts: Vec<IVec> = r.points().collect();
+        assert_eq!(
+            pts,
+            vec![vec![1, 1], vec![1, 2], vec![2, 1], vec![2, 2]]
+        );
+        assert_eq!(r2([0, 0], [0, 5]).points().count(), 0);
+    }
+
+    #[test]
+    fn region_union_dedupes_overlap() {
+        let mut reg = Region::empty();
+        reg.add(r2([0, 0], [4, 4]));
+        reg.add(r2([2, 2], [6, 6]));
+        assert_eq!(reg.volume(), 16 + 16 - 4);
+        assert!(reg.contains(&[5, 5]));
+        assert!(!reg.contains(&[5, 0]));
+    }
+
+    #[test]
+    fn region_bbox_and_subtract() {
+        let mut reg = Region::empty();
+        reg.add(r2([0, 0], [2, 2]));
+        reg.add(r2([4, 4], [6, 6]));
+        assert_eq!(reg.bbox().unwrap(), r2([0, 0], [6, 6]));
+        reg.subtract_rect(&r2([0, 0], [6, 5]));
+        assert_eq!(reg.volume(), 2);
+    }
+
+    #[test]
+    fn prop_region_volume_equals_point_count() {
+        run("region volume == |points|", Config::small(60), |g| {
+            let d = g.usize(1, 3);
+            let mut reg = Region::empty();
+            let mut naive: Vec<IVec> = Vec::new();
+            for _ in 0..g.usize(1, 4) {
+                let lo: IVec = (0..d).map(|_| g.i64(-3, 3)).collect();
+                let ext: IVec = (0..d).map(|_| g.i64(0, 4)).collect();
+                let hi: IVec = lo.iter().zip(&ext).map(|(l, e)| l + e).collect();
+                let r = Rect::new(lo, hi);
+                for p in r.points() {
+                    if !naive.contains(&p) {
+                        naive.push(p);
+                    }
+                }
+                reg.add(r);
+            }
+            assert_eq!(reg.volume(), naive.len() as u64);
+            for p in &naive {
+                assert!(reg.contains(p));
+            }
+        });
+    }
+
+    #[test]
+    fn prop_subtract_partition() {
+        run("a\\b ⊎ a∩b partitions a", Config::small(60), |g| {
+            let d = g.usize(1, 3);
+            let mk = |g: &crate::util::prop::Gen| {
+                let lo: IVec = (0..d).map(|_| g.i64(-4, 4)).collect();
+                let ext: IVec = (0..d).map(|_| g.i64(0, 5)).collect();
+                let hi: IVec = lo.iter().zip(&ext).map(|(l, e)| l + e).collect();
+                Rect::new(lo, hi)
+            };
+            let a = mk(g);
+            let b = mk(g);
+            let parts = a.subtract(&b);
+            // disjointness of parts
+            let vol: u64 = parts.iter().map(|r| r.volume()).sum();
+            assert_eq!(vol + a.intersect(&b).volume(), a.volume());
+            for p in a.points() {
+                let n = parts.iter().filter(|r| r.contains(&p)).count()
+                    + b.contains(&p) as usize;
+                assert_eq!(n, 1);
+            }
+        });
+    }
+}

@@ -1,0 +1,172 @@
+//! Rectangular iteration spaces and rectangular tilings (§II.C, §IV.D).
+
+use crate::poly::rect::Rect;
+use crate::poly::vec::{ceil_div, ediv, IVec};
+
+/// A rectangular iteration space `[0, N_1) x ... x [0, N_d)` partitioned
+/// into hyperrectangular tiles of size `t_1 x ... x t_d`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tiling {
+    /// Iteration space sizes N_k.
+    pub space: IVec,
+    /// Tile sizes t_k.
+    pub tile: IVec,
+}
+
+impl Tiling {
+    /// Create a tiling. Panics on inconsistent dimensions or non-positive
+    /// sizes; tile sizes are clamped to the space (a tile larger than the
+    /// space along an axis means "no tiling on that axis", §Appendix).
+    pub fn new(space: IVec, tile: IVec) -> Tiling {
+        assert_eq!(space.len(), tile.len(), "Tiling: dimension mismatch");
+        assert!(space.iter().all(|&n| n > 0), "space sizes must be positive");
+        assert!(tile.iter().all(|&t| t > 0), "tile sizes must be positive");
+        let tile = tile
+            .iter()
+            .zip(&space)
+            .map(|(t, n)| (*t).min(*n))
+            .collect();
+        Tiling { space, tile }
+    }
+
+    pub fn dims(&self) -> usize {
+        self.space.len()
+    }
+
+    /// The full iteration space as a rect.
+    pub fn space_rect(&self) -> Rect {
+        Rect::from_sizes(&self.space)
+    }
+
+    /// Number of tiles along each axis (ceil — boundary tiles may be
+    /// partial when sizes do not divide).
+    pub fn tile_counts(&self) -> IVec {
+        self.space
+            .iter()
+            .zip(&self.tile)
+            .map(|(n, t)| ceil_div(*n, *t))
+            .collect()
+    }
+
+    /// Total number of tiles.
+    pub fn num_tiles(&self) -> u64 {
+        self.tile_counts().iter().map(|&c| c as u64).product()
+    }
+
+    /// True iff every tile size divides its space size (the experiments use
+    /// divisible configurations, as the paper does).
+    pub fn is_exact(&self) -> bool {
+        self.space
+            .iter()
+            .zip(&self.tile)
+            .all(|(n, t)| n % t == 0)
+    }
+
+    /// The iteration rect of tile `coords` (clamped at the space boundary).
+    pub fn tile_rect(&self, coords: &[i64]) -> Rect {
+        assert_eq!(coords.len(), self.dims());
+        let lo: IVec = coords
+            .iter()
+            .zip(&self.tile)
+            .map(|(c, t)| c * t)
+            .collect();
+        let hi: IVec = lo
+            .iter()
+            .zip(self.tile.iter().zip(&self.space))
+            .map(|(l, (t, n))| (l + t).min(*n))
+            .collect();
+        Rect::new(lo, hi)
+    }
+
+    /// Tile coordinates containing iteration point `p` (valid for any
+    /// integer point, including outside the space).
+    pub fn tile_of(&self, p: &[i64]) -> IVec {
+        assert_eq!(p.len(), self.dims());
+        p.iter().zip(&self.tile).map(|(x, t)| ediv(*x, *t)).collect()
+    }
+
+    /// True iff `coords` is a valid tile of this tiling.
+    pub fn tile_in_range(&self, coords: &[i64]) -> bool {
+        coords
+            .iter()
+            .zip(&self.tile_counts())
+            .all(|(c, n)| (0..*n).contains(c))
+    }
+
+    /// Iterate all tile coordinates in lexicographic order — a legal
+    /// schedule for backwards dependence patterns (§II.D: tiles are atomic;
+    /// lexicographic order respects every non-positive dependence).
+    pub fn tiles(&self) -> impl Iterator<Item = IVec> {
+        Rect::from_sizes(&self.tile_counts()).points()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{run, Config};
+
+    #[test]
+    fn exact_tiling_counts() {
+        let t = Tiling::new(vec![32, 64], vec![16, 16]);
+        assert_eq!(t.tile_counts(), vec![2, 4]);
+        assert_eq!(t.num_tiles(), 8);
+        assert!(t.is_exact());
+    }
+
+    #[test]
+    fn partial_boundary_tiles_are_clamped() {
+        let t = Tiling::new(vec![10], vec![4]);
+        assert_eq!(t.tile_counts(), vec![3]);
+        assert!(!t.is_exact());
+        assert_eq!(t.tile_rect(&[2]), Rect::new(vec![8], vec![10]));
+    }
+
+    #[test]
+    fn oversized_tile_clamps_to_space() {
+        let t = Tiling::new(vec![8, 8], vec![100, 4]);
+        assert_eq!(t.tile, vec![8, 4]);
+        assert_eq!(t.tile_counts(), vec![1, 2]);
+    }
+
+    #[test]
+    fn tile_of_points() {
+        let t = Tiling::new(vec![20, 20], vec![5, 5]);
+        assert_eq!(t.tile_of(&[0, 0]), vec![0, 0]);
+        assert_eq!(t.tile_of(&[4, 5]), vec![0, 1]);
+        assert_eq!(t.tile_of(&[-1, 0]), vec![-1, 0]); // outside the space
+        assert!(t.tile_in_range(&[3, 3]));
+        assert!(!t.tile_in_range(&[4, 0]));
+    }
+
+    #[test]
+    fn tiles_iterator_is_lexicographic_and_complete() {
+        let t = Tiling::new(vec![4, 6], vec![2, 3]);
+        let tiles: Vec<IVec> = t.tiles().collect();
+        assert_eq!(tiles.len(), 4);
+        assert_eq!(tiles[0], vec![0, 0]);
+        assert_eq!(tiles[3], vec![1, 1]);
+        let mut sorted = tiles.clone();
+        sorted.sort();
+        assert_eq!(sorted, tiles);
+    }
+
+    #[test]
+    fn prop_tiles_partition_space() {
+        run("tiles partition the space", Config::small(60), |g| {
+            let d = g.usize(1, 3);
+            let space: IVec = (0..d).map(|_| g.i64(1, 12)).collect();
+            let tile: IVec = (0..d).map(|_| g.i64(1, 6)).collect();
+            let t = Tiling::new(space.clone(), tile);
+            // every point belongs to exactly one tile rect
+            for p in Rect::from_sizes(&space).points() {
+                let c = t.tile_of(&p);
+                assert!(t.tile_in_range(&c), "{p:?} -> {c:?}");
+                assert!(t.tile_rect(&c).contains(&p));
+            }
+            // total volume matches
+            let vol: u64 = t.tiles().map(|c| t.tile_rect(&c).volume()).sum();
+            assert_eq!(vol, Rect::from_sizes(&space).volume());
+        });
+    }
+}

@@ -1,0 +1,147 @@
+//! Integer vectors (points, dependence vectors, offsets).
+//!
+//! Dimensions are tiny (2–4 in every benchmark) so a plain `Vec<i64>` with
+//! free functions is the representation; no SIMD or smallvec tricks needed
+//! outside the simulator hot path (which never allocates per point).
+
+/// An integer vector / lattice point.
+pub type IVec = Vec<i64>;
+
+/// Dot product. Panics on dimension mismatch.
+pub fn dot(a: &[i64], b: &[i64]) -> i64 {
+    assert_eq!(a.len(), b.len(), "dot: dimension mismatch");
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Component-wise sum.
+pub fn add(a: &[i64], b: &[i64]) -> IVec {
+    assert_eq!(a.len(), b.len(), "add: dimension mismatch");
+    a.iter().zip(b).map(|(x, y)| x + y).collect()
+}
+
+/// Component-wise difference `a - b`.
+pub fn sub(a: &[i64], b: &[i64]) -> IVec {
+    assert_eq!(a.len(), b.len(), "sub: dimension mismatch");
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// Negation.
+pub fn neg(a: &[i64]) -> IVec {
+    a.iter().map(|x| -x).collect()
+}
+
+/// Scalar multiple.
+pub fn scale(a: &[i64], k: i64) -> IVec {
+    a.iter().map(|x| x * k).collect()
+}
+
+/// True iff every component is `<= 0` (the paper's "backwards in all
+/// dimensions" hypothesis for dependence vectors).
+pub fn all_non_positive(a: &[i64]) -> bool {
+    a.iter().all(|&x| x <= 0)
+}
+
+/// True iff the vector is all zeros.
+pub fn is_zero(a: &[i64]) -> bool {
+    a.iter().all(|&x| x == 0)
+}
+
+/// Euclidean-style modulo with non-negative result (`x mod m`, m > 0).
+pub fn emod(x: i64, m: i64) -> i64 {
+    debug_assert!(m > 0);
+    ((x % m) + m) % m
+}
+
+/// Floor division (`⌊x / m⌋`, m > 0) — tile coordinate of a point coordinate.
+pub fn ediv(x: i64, m: i64) -> i64 {
+    debug_assert!(m > 0);
+    let q = x / m;
+    if x % m < 0 {
+        q - 1
+    } else {
+        q
+    }
+}
+
+/// Ceiling division for non-negative operands.
+pub fn ceil_div(x: i64, m: i64) -> i64 {
+    debug_assert!(m > 0);
+    ediv(x + m - 1, m)
+}
+
+/// Number of coordinates in which `a` and `b` differ — the *neighbor level*
+/// between two tiles (§IV.D: first-level neighbors differ along exactly one
+/// canonical axis, k-th level along exactly k).
+pub fn neighbor_level(a: &[i64], b: &[i64]) -> usize {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).filter(|(x, y)| x != y).count()
+}
+
+/// Render as `(a, b, c)`.
+pub fn fmt_vec(a: &[i64]) -> String {
+    let inner: Vec<String> = a.iter().map(|x| x.to_string()).collect();
+    format!("({})", inner.join(", "))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_and_arith() {
+        assert_eq!(dot(&[1, 2, 3], &[4, 5, 6]), 32);
+        assert_eq!(add(&[1, 2], &[3, -1]), vec![4, 1]);
+        assert_eq!(sub(&[1, 2], &[3, -1]), vec![-2, 3]);
+        assert_eq!(neg(&[1, -2]), vec![-1, 2]);
+        assert_eq!(scale(&[1, -2], 3), vec![3, -6]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dimension mismatch")]
+    fn dot_rejects_mismatch() {
+        dot(&[1], &[1, 2]);
+    }
+
+    #[test]
+    fn predicates() {
+        assert!(all_non_positive(&[0, -1, -3]));
+        assert!(!all_non_positive(&[0, 1]));
+        assert!(is_zero(&[0, 0]));
+        assert!(!is_zero(&[0, 1]));
+    }
+
+    #[test]
+    fn euclidean_mod_div() {
+        assert_eq!(emod(7, 5), 2);
+        assert_eq!(emod(-1, 5), 4);
+        assert_eq!(emod(-5, 5), 0);
+        assert_eq!(ediv(7, 5), 1);
+        assert_eq!(ediv(-1, 5), -1);
+        assert_eq!(ediv(-5, 5), -1);
+        assert_eq!(ediv(-6, 5), -2);
+        // invariant: x == ediv(x,m)*m + emod(x,m)
+        for x in -20..20 {
+            assert_eq!(x, ediv(x, 5) * 5 + emod(x, 5));
+        }
+    }
+
+    #[test]
+    fn ceil_division() {
+        assert_eq!(ceil_div(10, 5), 2);
+        assert_eq!(ceil_div(11, 5), 3);
+        assert_eq!(ceil_div(0, 5), 0);
+    }
+
+    #[test]
+    fn neighbor_levels() {
+        assert_eq!(neighbor_level(&[1, 1, 1], &[1, 1, 1]), 0);
+        assert_eq!(neighbor_level(&[1, 1, 1], &[1, 2, 1]), 1);
+        assert_eq!(neighbor_level(&[1, 1, 1], &[0, 2, 1]), 2);
+        assert_eq!(neighbor_level(&[1, 1, 1], &[0, 2, 0]), 3);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_vec(&[1, -2, 3]), "(1, -2, 3)");
+    }
+}

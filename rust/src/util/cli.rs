@@ -1,0 +1,251 @@
+//! Tiny command-line argument parser (clap is not in the offline crate set).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options and
+//! positional arguments, with generated usage text. Used by `main.rs`,
+//! the examples and the bench binaries.
+
+use std::collections::BTreeMap;
+
+/// Declarative option specification.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// Flags take no value.
+    pub is_flag: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Parse a comma/x-separated size list like "8x32x32" or "8,32,32".
+    pub fn get_sizes(&self, name: &str) -> Result<Option<Vec<i64>>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => {
+                let parts: Result<Vec<i64>, _> = v
+                    .split(|c| c == 'x' || c == ',')
+                    .map(|p| p.trim().parse::<i64>())
+                    .collect();
+                parts
+                    .map(Some)
+                    .map_err(|_| format!("--{name} expects sizes like 8x32x32, got '{v}'"))
+            }
+        }
+    }
+}
+
+/// A command parser: options + usage rendering.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Command {
+        Command {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            is_flag: false,
+            default,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            is_flag: true,
+            default: None,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let head = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <value>", o.name)
+            };
+            let dflt = o
+                .default
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            out.push_str(&format!("{head:<28} {}{dflt}\n", o.help));
+        }
+        out
+    }
+
+    /// Parse a raw argument list. Unknown `--options` are errors.
+    pub fn parse(&self, raw: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.options.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} is a flag and takes no value"));
+                    }
+                    args.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} requires a value"))?
+                        }
+                    };
+                    args.options.insert(key, val);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+/// Collect `std::env::args` after the program name (and an optional
+/// subcommand which the caller has already consumed).
+pub fn env_args(skip: usize) -> Vec<String> {
+    std::env::args().skip(1 + skip).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("t", "test")
+            .opt("size", "tile size", Some("32"))
+            .opt("out", "output path", None)
+            .flag("verbose", "chatty")
+    }
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&v(&[])).unwrap();
+        assert_eq!(a.get("size"), Some("32"));
+        assert_eq!(a.get("out"), None);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = cmd().parse(&v(&["--size", "64", "--out=x.json"])).unwrap();
+        assert_eq!(a.get("size"), Some("64"));
+        assert_eq!(a.get("out"), Some("x.json"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = cmd().parse(&v(&["--verbose", "pos1", "pos2"])).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn unknown_option_is_error() {
+        assert!(cmd().parse(&v(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(cmd().parse(&v(&["--out"])).is_err());
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = cmd().parse(&v(&["--size", "128"])).unwrap();
+        assert_eq!(a.get_usize("size", 0).unwrap(), 128);
+        let bad = cmd().parse(&v(&["--size", "xyz"])).unwrap();
+        assert!(bad.get_usize("size", 0).is_err());
+    }
+
+    #[test]
+    fn size_lists() {
+        let c = Command::new("t", "t").opt("tile", "tile sizes", None);
+        let a = c.parse(&v(&["--tile", "8x32x32"])).unwrap();
+        assert_eq!(a.get_sizes("tile").unwrap(), Some(vec![8, 32, 32]));
+        let a = c.parse(&v(&["--tile", "4,16"])).unwrap();
+        assert_eq!(a.get_sizes("tile").unwrap(), Some(vec![4, 16]));
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = cmd().usage();
+        assert!(u.contains("--size"));
+        assert!(u.contains("default: 32"));
+    }
+}

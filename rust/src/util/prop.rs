@@ -1,0 +1,262 @@
+//! Property-based testing mini-framework.
+//!
+//! `proptest` is not in the offline crate set, so the coordinator invariants
+//! (facet coverage, single-assignment disjointness, address bijectivity,
+//! simulator conservation laws, …) are exercised with this substrate: a
+//! seeded case generator plus a greedy integer-shrinking loop.
+//!
+//! ```no_run
+//! # // no_run: rustdoc test binaries lack the xla_extension rpath the
+//! # // harness injects for regular targets; the snippet is compile-checked.
+//! use cfa::util::prop::{Config, run};
+//! run("add commutes", Config::default(), |g| {
+//!     let a = g.i64(-100, 100);
+//!     let b = g.i64(-100, 100);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+use std::cell::RefCell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Property-test configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed (each case derives its own stream).
+    pub seed: u64,
+    /// Maximum shrink attempts after a failure.
+    pub max_shrink: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 128,
+            seed: 0xCFA0_1234_5678_9ABC,
+            max_shrink: 400,
+        }
+    }
+}
+
+impl Config {
+    /// A lighter configuration for expensive properties.
+    pub fn small(cases: usize) -> Self {
+        Config {
+            cases,
+            ..Config::default()
+        }
+    }
+}
+
+/// Draw source handed to a property. Records every integer drawn so that the
+/// framework can replay a failing case with shrunk values.
+pub struct Gen {
+    rng: RefCell<Rng>,
+    /// When `Some`, draws are replayed from this tape (shrinking mode);
+    /// a tape miss falls back to fresh randomness.
+    tape: Option<Vec<i64>>,
+    pos: RefCell<usize>,
+    record: RefCell<Vec<i64>>,
+}
+
+impl Gen {
+    fn new(seed: u64, tape: Option<Vec<i64>>) -> Self {
+        Gen {
+            rng: RefCell::new(Rng::new(seed)),
+            tape,
+            pos: RefCell::new(0),
+            record: RefCell::new(Vec::new()),
+        }
+    }
+
+    fn draw(&self, lo: i64, hi: i64) -> i64 {
+        let v = if let Some(t) = &self.tape {
+            let mut pos = self.pos.borrow_mut();
+            if *pos < t.len() {
+                let raw = t[*pos];
+                *pos += 1;
+                raw.clamp(lo, hi)
+            } else {
+                self.rng.borrow_mut().gen_i64(lo, hi)
+            }
+        } else {
+            self.rng.borrow_mut().gen_i64(lo, hi)
+        };
+        self.record.borrow_mut().push(v);
+        v
+    }
+
+    /// Integer in `[lo, hi]` inclusive.
+    pub fn i64(&self, lo: i64, hi: i64) -> i64 {
+        self.draw(lo, hi)
+    }
+
+    /// `usize` in `[lo, hi]` inclusive.
+    pub fn usize(&self, lo: usize, hi: usize) -> usize {
+        self.draw(lo as i64, hi as i64) as usize
+    }
+
+    /// Boolean with probability 1/2.
+    pub fn bool(&self) -> bool {
+        self.draw(0, 1) == 1
+    }
+
+    /// Pick an element of a non-empty slice.
+    pub fn choose<'a, T>(&self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(0, xs.len() - 1)]
+    }
+
+    /// A vector of `len` integers in `[lo, hi]`.
+    pub fn vec_i64(&self, len: usize, lo: i64, hi: i64) -> Vec<i64> {
+        (0..len).map(|_| self.i64(lo, hi)).collect()
+    }
+}
+
+/// Outcome of one execution of the property.
+fn run_once(
+    seed: u64,
+    tape: Option<Vec<i64>>,
+    prop: &dyn Fn(&Gen),
+) -> Result<Vec<i64>, (Vec<i64>, String)> {
+    let g = Gen::new(seed, tape);
+    let result = catch_unwind(AssertUnwindSafe(|| prop(&g)));
+    let tape_out = g.record.into_inner();
+    match result {
+        Ok(()) => Ok(tape_out),
+        Err(e) => {
+            let msg = if let Some(s) = e.downcast_ref::<String>() {
+                s.clone()
+            } else if let Some(s) = e.downcast_ref::<&str>() {
+                s.to_string()
+            } else {
+                "<non-string panic>".to_string()
+            };
+            Err((tape_out, msg))
+        }
+    }
+}
+
+/// Run a property; panics with the shrunk counterexample on failure.
+pub fn run<F: Fn(&Gen)>(name: &str, cfg: Config, prop: F) {
+    let prop_ref: &dyn Fn(&Gen) = &prop;
+    for case in 0..cfg.cases {
+        let seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        if let Err((tape, first_msg)) = run_once(seed, None, prop_ref) {
+            // Shrink: greedily try to move each drawn integer toward zero.
+            let mut best = tape;
+            let mut best_msg = first_msg;
+            let mut budget = cfg.max_shrink;
+            let mut progress = true;
+            while progress && budget > 0 {
+                progress = false;
+                for i in 0..best.len() {
+                    if budget == 0 {
+                        break;
+                    }
+                    let orig = best[i];
+                    for cand in shrink_candidates(orig) {
+                        if budget == 0 {
+                            break;
+                        }
+                        budget -= 1;
+                        let mut t = best.clone();
+                        t[i] = cand;
+                        if let Err((tape2, msg2)) = run_once(seed, Some(t), prop_ref) {
+                            best = tape2;
+                            best_msg = msg2;
+                            progress = true;
+                            break;
+                        }
+                    }
+                    let _ = orig;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x})\n  \
+                 counterexample draws: {best:?}\n  failure: {best_msg}"
+            );
+        }
+    }
+}
+
+fn shrink_candidates(v: i64) -> Vec<i64> {
+    let mut out = Vec::new();
+    if v != 0 {
+        out.push(0);
+    }
+    if v > 1 {
+        out.push(1);
+        out.push(v / 2);
+        out.push(v - 1);
+    }
+    if v < -1 {
+        out.push(-1);
+        out.push(v / 2);
+        out.push(v + 1);
+    }
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        run("abs non-negative", Config::small(64), |g| {
+            let x = g.i64(-1000, 1000);
+            assert!(x.abs() >= 0);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_and_shrinks() {
+        let r = std::panic::catch_unwind(|| {
+            run("find big", Config::small(256), |g| {
+                let x = g.i64(0, 1000);
+                // fails for x >= 10; minimal counterexample is 10
+                assert!(x < 10, "x too big: {x}");
+            });
+        });
+        let err = r.expect_err("property should fail");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("failed"), "{msg}");
+        // shrinker should reach the boundary value 10
+        assert!(msg.contains("[10]"), "shrunk message: {msg}");
+    }
+
+    #[test]
+    fn vectors_and_choices_work() {
+        run("vec len", Config::small(32), |g| {
+            let n = g.usize(0, 8);
+            let v = g.vec_i64(n, -5, 5);
+            assert_eq!(v.len(), n);
+            assert!(v.iter().all(|x| (-5..=5).contains(x)));
+            if !v.is_empty() {
+                let c = *g.choose(&v);
+                assert!(v.contains(&c));
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        // Same config twice must draw identical sequences: encode draws into
+        // a signature and compare.
+        let sig = |cfg: &Config| {
+            let mut all = Vec::new();
+            // run collects nothing on success, so record manually
+            let g = Gen::new(cfg.seed, None);
+            for _ in 0..16 {
+                all.push(g.i64(-100, 100));
+            }
+            all
+        };
+        let c = Config::default();
+        assert_eq!(sig(&c), sig(&c));
+    }
+}

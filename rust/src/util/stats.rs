@@ -1,0 +1,247 @@
+//! Small statistics toolkit for the benchmark harness.
+//!
+//! Criterion is not available offline; the benches use [`Bencher`] for
+//! wall-clock measurement with warmup, outlier-robust summaries and a
+//! plain-text report, and [`Summary`] for descriptive statistics of metric
+//! series (bandwidths, cycle counts, areas).
+
+use std::time::Instant;
+
+/// Descriptive statistics over a sample of f64 values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+    pub p05: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    /// Compute a summary; returns `None` for an empty sample.
+    pub fn of(xs: &[f64]) -> Option<Summary> {
+        if xs.is_empty() {
+            return None;
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: s[0],
+            max: s[n - 1],
+            median: percentile_sorted(&s, 0.5),
+            p05: percentile_sorted(&s, 0.05),
+            p95: percentile_sorted(&s, 0.95),
+        })
+    }
+}
+
+/// Linear-interpolated percentile of an already-sorted slice, q in [0,1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Geometric mean (for speedup tables). Ignores non-positive entries.
+pub fn geomean(xs: &[f64]) -> f64 {
+    let pos: Vec<f64> = xs.iter().copied().filter(|&x| x > 0.0).collect();
+    if pos.is_empty() {
+        return 0.0;
+    }
+    (pos.iter().map(|x| x.ln()).sum::<f64>() / pos.len() as f64).exp()
+}
+
+/// Measurement of one benchmark target.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// per-iteration wall time, seconds
+    pub times: Vec<f64>,
+    pub summary: Summary,
+}
+
+impl Measurement {
+    /// Nicely formatted one-line report (median ± robust spread).
+    pub fn line(&self) -> String {
+        let s = &self.summary;
+        format!(
+            "{:<44} {:>12} median  [{} .. {}]  n={}",
+            self.name,
+            fmt_duration(s.median),
+            fmt_duration(s.p05),
+            fmt_duration(s.p95),
+            s.n
+        )
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{:.3} s", secs)
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Minimal criterion-like wall-clock bencher.
+///
+/// Runs `f` for a warmup period, then collects `samples` timed batches,
+/// sizing each batch so one batch is ≥ `min_batch_time`.
+pub struct Bencher {
+    pub warmup_time: f64,
+    pub samples: usize,
+    pub min_batch_time: f64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_time: 0.3,
+            samples: 20,
+            min_batch_time: 0.01,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick preset for slow end-to-end targets.
+    pub fn quick() -> Self {
+        Bencher {
+            warmup_time: 0.05,
+            samples: 5,
+            min_batch_time: 0.0,
+        }
+    }
+
+    /// Measure `f`, returning per-iteration times.
+    pub fn bench<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
+        // Warmup + batch sizing.
+        let start = Instant::now();
+        let mut iters_in_warmup = 0u64;
+        while start.elapsed().as_secs_f64() < self.warmup_time || iters_in_warmup == 0 {
+            f();
+            iters_in_warmup += 1;
+            if iters_in_warmup > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = start.elapsed().as_secs_f64() / iters_in_warmup as f64;
+        let batch = if per_iter > 0.0 {
+            ((self.min_batch_time / per_iter).ceil() as u64).max(1)
+        } else {
+            1
+        };
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            times.push(t0.elapsed().as_secs_f64() / batch as f64);
+        }
+        let summary = Summary::of(&times).unwrap();
+        Measurement {
+            name: name.to_string(),
+            times,
+            summary,
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // `std::hint::black_box` is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.median, 3.0);
+    }
+
+    #[test]
+    fn summary_empty_is_none() {
+        assert!(Summary::of(&[]).is_none());
+    }
+
+    #[test]
+    fn summary_singleton() {
+        let s = Summary::of(&[7.5]).unwrap();
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.median, 7.5);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = [0.0, 10.0];
+        assert!((percentile_sorted(&s, 0.5) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&s, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&s, 1.0), 10.0);
+    }
+
+    #[test]
+    fn geomean_of_ratios() {
+        let g = geomean(&[2.0, 8.0]);
+        assert!((g - 4.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn bencher_measures_something() {
+        let b = Bencher {
+            warmup_time: 0.01,
+            samples: 3,
+            min_batch_time: 0.0,
+        };
+        let mut acc = 0u64;
+        let m = b.bench("noop", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(m.times.len(), 3);
+        assert!(m.summary.median >= 0.0);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(2.0).ends_with(" s"));
+        assert!(fmt_duration(2e-3).ends_with(" ms"));
+        assert!(fmt_duration(2e-6).ends_with(" µs"));
+        assert!(fmt_duration(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,277 @@
+//! Plain-text tables and bar charts for benchmark reports.
+//!
+//! The harness regenerates the paper's figures as ASCII output (plus CSV);
+//! this module is the renderer: aligned tables, horizontal bar charts with
+//! stacked "effective / raw" segments (Fig 15 style), and min–max span rows
+//! (Fig 16 style).
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple aligned text table.
+pub struct Table {
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            aligns: vec![Align::Left; headers.len()],
+            rows: Vec::new(),
+        }
+    }
+
+    /// Set per-column alignment (panics if length mismatches).
+    pub fn aligns(mut self, aligns: &[Align]) -> Table {
+        assert_eq!(aligns.len(), self.headers.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut w = vec![0usize; ncol];
+        for c in 0..ncol {
+            w[c] = self.headers[c].chars().count();
+            for r in &self.rows {
+                w[c] = w[c].max(r[c].chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], w: &[usize], aligns: &[Align]| -> String {
+            let mut line = String::new();
+            for c in 0..ncol {
+                if c > 0 {
+                    line.push_str("  ");
+                }
+                let pad = w[c] - cells[c].chars().count();
+                match aligns[c] {
+                    Align::Left => {
+                        line.push_str(&cells[c]);
+                        line.push_str(&" ".repeat(pad));
+                    }
+                    Align::Right => {
+                        line.push_str(&" ".repeat(pad));
+                        line.push_str(&cells[c]);
+                    }
+                }
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &w, &self.aligns));
+        out.push('\n');
+        out.push_str(&"-".repeat(w.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &w, &self.aligns));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV rendering (quoting cells containing commas/quotes).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(
+            &self
+                .headers
+                .iter()
+                .map(|h| esc(h))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// One bar in a stacked bar chart: `effective` is drawn solid (`#`),
+/// the `raw − effective` remainder hatched (`:`), mirroring the paper's
+/// colored-vs-grey Fig 15 encoding.
+pub struct StackedBar {
+    pub label: String,
+    pub effective: f64,
+    pub raw: f64,
+}
+
+/// Render a horizontal stacked bar chart with a common scale up to `max`
+/// (e.g. the bus bandwidth roofline), `width` characters wide.
+pub fn stacked_bars(title: &str, bars: &[StackedBar], max: f64, width: usize, unit: &str) -> String {
+    let label_w = bars
+        .iter()
+        .map(|b| b.label.chars().count())
+        .max()
+        .unwrap_or(0);
+    let mut out = format!("{title}\n");
+    for b in bars {
+        let eff_w = ((b.effective / max) * width as f64).round().clamp(0.0, width as f64) as usize;
+        let raw_w = ((b.raw / max) * width as f64).round().clamp(0.0, width as f64) as usize;
+        let raw_w = raw_w.max(eff_w);
+        let mut bar = String::new();
+        bar.push_str(&"#".repeat(eff_w));
+        bar.push_str(&":".repeat(raw_w - eff_w));
+        bar.push_str(&" ".repeat(width - raw_w));
+        out.push_str(&format!(
+            "  {:<label_w$} |{bar}| {:7.1}/{:7.1} {unit}\n",
+            b.label, b.effective, b.raw,
+        ));
+    }
+    out.push_str(&format!(
+        "  {:<label_w$}  {}^ {max:.0} {unit} roofline  (# effective, : redundant)\n",
+        "",
+        " ".repeat(width.saturating_sub(1)),
+    ));
+    out
+}
+
+/// A min–max span row (Fig 16 style: vertical lines from min to max).
+pub struct SpanRow {
+    pub label: String,
+    pub min: f64,
+    pub max: f64,
+    pub marker: Option<f64>,
+}
+
+/// Render span rows on a shared `[0, scale]` axis.
+pub fn span_chart(title: &str, rows: &[SpanRow], scale: f64, width: usize, unit: &str) -> String {
+    let label_w = rows
+        .iter()
+        .map(|r| r.label.chars().count())
+        .max()
+        .unwrap_or(0);
+    let pos = |x: f64| ((x / scale) * width as f64).round().clamp(0.0, width as f64) as usize;
+    let mut out = format!("{title}\n");
+    for r in rows {
+        let (a, b) = (pos(r.min), pos(r.max));
+        let mut line: Vec<char> = vec![' '; width + 1];
+        for c in line.iter_mut().take(b + 1).skip(a) {
+            *c = '=';
+        }
+        line[a] = '|';
+        line[b.min(width)] = '|';
+        if let Some(m) = r.marker {
+            line[pos(m).min(width)] = '*';
+        }
+        out.push_str(&format!(
+            "  {:<label_w$} {}  [{:.2} .. {:.2}] {unit}\n",
+            r.label,
+            line.iter().collect::<String>(),
+            r.min,
+            r.max,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment_and_arity() {
+        let mut t = Table::new(&["name", "value"]).aligns(&[Align::Left, Align::Right]);
+        t.row_strs(&["a", "1"]);
+        t.row_strs(&["longer", "23"]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("name"));
+        assert!(lines[2].starts_with("a"));
+        // right-aligned numbers end at the same column
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn csv_quotes() {
+        let mut t = Table::new(&["k", "v"]);
+        t.row_strs(&["x,y", "has \"q\""]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"has \"\"q\"\"\""));
+    }
+
+    #[test]
+    fn stacked_bar_geometry() {
+        let s = stacked_bars(
+            "bw",
+            &[StackedBar {
+                label: "cfa".into(),
+                effective: 50.0,
+                raw: 100.0,
+            }],
+            100.0,
+            20,
+            "MB/s",
+        );
+        // 10 chars solid, 10 hatched
+        assert!(s.contains(&format!("|{}{}|", "#".repeat(10), ":".repeat(10))));
+    }
+
+    #[test]
+    fn stacked_bar_clamps_overflow() {
+        let s = stacked_bars(
+            "bw",
+            &[StackedBar {
+                label: "x".into(),
+                effective: 150.0,
+                raw: 150.0,
+            }],
+            100.0,
+            10,
+            "u",
+        );
+        assert!(s.contains(&"#".repeat(10)));
+    }
+
+    #[test]
+    fn span_chart_renders() {
+        let s = span_chart(
+            "area",
+            &[SpanRow {
+                label: "slices".into(),
+                min: 2.0,
+                max: 5.0,
+                marker: Some(3.0),
+            }],
+            10.0,
+            40,
+            "%",
+        );
+        assert!(s.contains('|'));
+        assert!(s.contains('*'));
+    }
+}

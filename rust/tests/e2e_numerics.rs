@@ -1,0 +1,168 @@
+//! Full-stack integration: layout → host memory → PJRT tile compute →
+//! verification, for every allocation. A wrong address function anywhere
+//! breaks the stencil numerics, so this is the strongest correctness
+//! signal in the repo.
+//!
+//! Requires `make artifacts` (skipped silently otherwise, like the runtime
+//! unit tests).
+
+use cfa::coordinator::reference::StencilKind;
+use cfa::coordinator::stencil::{run_stencil, StencilRun};
+use cfa::coordinator::sw::{run_sw, SwRun};
+use cfa::coordinator::AllocKind;
+use cfa::memsim::MemConfig;
+use cfa::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(Runtime::open(dir).expect("open artifacts"))
+    } else {
+        eprintln!("artifacts/ missing - skipping e2e tests");
+        None
+    }
+}
+
+fn f32_mem() -> MemConfig {
+    MemConfig {
+        elem_bytes: 4,
+        ..MemConfig::default()
+    }
+}
+
+#[test]
+fn jacobi_heat_all_allocations_are_exact() {
+    let Some(rt) = runtime() else { return };
+    // jacobi2d5p_t4x16x16: r=1; steps=8, n=m=24 -> skewed (8, 32, 32)
+    for alloc in AllocKind::ALL {
+        let cfg = StencilRun {
+            artifact: "jacobi2d5p_t4x16x16".into(),
+            kind: StencilKind::Jacobi5p,
+            n: 24,
+            m: 24,
+            steps: 8,
+            alloc,
+            pe_ops_per_cycle: 64,
+            seed: 11,
+        };
+        let report = run_stencil(&rt, &cfg, &f32_mem()).expect("run");
+        assert!(
+            report.max_abs_err < 1e-4,
+            "{}: numeric mismatch {:.3e}",
+            alloc.name(),
+            report.max_abs_err
+        );
+        assert!(report.raw_bytes >= report.useful_bytes);
+        assert!(report.makespan_cycles > 0);
+    }
+}
+
+#[test]
+fn gaussian_blur_cfa_is_exact() {
+    let Some(rt) = runtime() else { return };
+    // gaussian_t4x16x16: r=2; steps=8, n=m=16 -> skewed (8, 32, 32)
+    let cfg = StencilRun {
+        artifact: "gaussian_t4x16x16".into(),
+        kind: StencilKind::Gaussian,
+        n: 16,
+        m: 16,
+        steps: 8,
+        alloc: AllocKind::Cfa,
+        pe_ops_per_cycle: 64,
+        seed: 3,
+    };
+    let report = run_stencil(&rt, &cfg, &f32_mem()).expect("run");
+    assert!(
+        report.max_abs_err < 1e-4,
+        "gaussian mismatch {:.3e}",
+        report.max_abs_err
+    );
+}
+
+#[test]
+fn jacobi9p_cfa_is_exact() {
+    let Some(rt) = runtime() else { return };
+    let cfg = StencilRun {
+        artifact: "jacobi2d9p_t4x16x16".into(),
+        kind: StencilKind::Jacobi9p,
+        n: 24,
+        m: 24,
+        steps: 8,
+        alloc: AllocKind::Cfa,
+        pe_ops_per_cycle: 64,
+        seed: 5,
+    };
+    let report = run_stencil(&rt, &cfg, &f32_mem()).expect("run");
+    assert!(report.max_abs_err < 1e-4, "{:.3e}", report.max_abs_err);
+}
+
+#[test]
+fn smith_waterman_all_allocations_are_exact() {
+    let Some(rt) = runtime() else { return };
+    for alloc in AllocKind::ALL {
+        let cfg = SwRun {
+            artifact: "sw3_t16x16x16".into(),
+            ni: 32,
+            nj: 32,
+            nk: 32,
+            alloc,
+            pe_ops_per_cycle: 64,
+            seed: 9,
+        };
+        let report = run_sw(&rt, &cfg, &f32_mem()).expect("run");
+        assert!(
+            report.max_abs_err < 1e-4,
+            "{}: sw mismatch {:.3e}",
+            alloc.name(),
+            report.max_abs_err
+        );
+    }
+}
+
+#[test]
+fn cfa_beats_baselines_on_effective_bandwidth() {
+    // The paper's headline: CFA's effective bandwidth tops every baseline
+    // on the same workload.
+    let Some(rt) = runtime() else { return };
+    let mem = f32_mem();
+    let mut eff = std::collections::BTreeMap::new();
+    for alloc in AllocKind::ALL {
+        let cfg = StencilRun {
+            artifact: "jacobi2d5p_t4x16x16".into(),
+            kind: StencilKind::Jacobi5p,
+            n: 24,
+            m: 24,
+            steps: 8,
+            alloc,
+            pe_ops_per_cycle: 1_000_000, // memory-bound rig (paper Fig 14)
+            seed: 1,
+        };
+        let report = run_stencil(&rt, &cfg, &mem).expect("run");
+        eff.insert(alloc.name(), report.effective_mb_s(&mem));
+    }
+    let cfa = eff["cfa"];
+    for (name, &e) in &eff {
+        if *name != "cfa" {
+            assert!(
+                cfa >= e * 0.99,
+                "cfa {cfa:.1} MB/s should beat {name} {e:.1} MB/s ({eff:?})"
+            );
+        }
+    }
+}
+
+#[test]
+fn tile_size_mismatch_is_reported() {
+    let Some(rt) = runtime() else { return };
+    let cfg = StencilRun {
+        artifact: "jacobi2d5p_t4x16x16".into(),
+        kind: StencilKind::Jacobi5p,
+        n: 23, // skewed space not divisible
+        m: 24,
+        steps: 8,
+        alloc: AllocKind::Cfa,
+        pe_ops_per_cycle: 64,
+        seed: 0,
+    };
+    assert!(run_stencil(&rt, &cfg, &f32_mem()).is_err());
+}

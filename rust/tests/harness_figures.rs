@@ -1,0 +1,172 @@
+//! Figure-level integration: the quick sweeps must reproduce the *shape*
+//! of the paper's evaluation — who wins, by roughly what factor, and where
+//! the redundancy sits — for every benchmark in Table I.
+
+use cfa::area::{AreaModel, Device};
+use cfa::coordinator::AllocKind;
+use cfa::harness::figures::{area_sweep, fig16_aggregate, measure_bandwidth};
+use cfa::harness::workloads::table1;
+use cfa::memsim::MemConfig;
+
+#[test]
+fn fig15_shape_cfa_wins_effective_bandwidth_everywhere() {
+    let mem = MemConfig::default();
+    for w in table1(true) {
+        for tile in &w.tile_sizes {
+            let mut eff = std::collections::BTreeMap::new();
+            for alloc in AllocKind::ALL {
+                let p = measure_bandwidth(&w, tile, alloc, &mem, 3).unwrap();
+                assert!(p.raw_mb_s <= mem.peak_mb_s() * 1.001, "{} raw over roofline", w.name);
+                assert!(p.effective_mb_s <= p.raw_mb_s * 1.001);
+                eff.insert(p.alloc.clone(), p);
+            }
+            let cfa = &eff["cfa"];
+            for (name, p) in &eff {
+                // Strict dominance once every tile dimension reaches 32;
+                // below that (notably gaussian's 4-deep time tiles, where
+                // the paper itself reports CFA under 80% of the bus until
+                // 4x64x64) the swept data-tiling baseline may lead by a
+                // small margin — CFA must stay within 15%.
+                let slack = if tile.iter().all(|&t| t >= 32) { 0.999 } else { 0.85 };
+                assert!(
+                    cfa.effective_mb_s >= p.effective_mb_s * slack,
+                    "{} tile {tile:?}: cfa {:.1} < {name} {:.1}",
+                    w.name,
+                    cfa.effective_mb_s,
+                    p.effective_mb_s
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fig15_shape_cfa_near_roofline_at_32cubed() {
+    // the paper: "CFA is able to bring the effective bandwidth close to
+    // 100% of the bus bandwidth".
+    let mem = MemConfig::default();
+    for w in table1(true) {
+        let tile = w.tile_sizes.iter().find(|t| t[1] >= 32).unwrap();
+        let p = measure_bandwidth(&w, tile, AllocKind::Cfa, &mem, 3).unwrap();
+        assert!(
+            p.effective_mb_s >= 0.85 * mem.peak_mb_s(),
+            "{}: CFA effective {:.1} MB/s below 85% of roofline",
+            w.name,
+            p.effective_mb_s
+        );
+        assert!(
+            p.raw_mb_s >= 0.95 * mem.peak_mb_s(),
+            "{}: CFA raw {:.1} below 95%",
+            w.name,
+            p.raw_mb_s
+        );
+    }
+}
+
+#[test]
+fn fig15_shape_baseline_signatures() {
+    let mem = MemConfig::default();
+    for w in table1(true) {
+        let tile = &w.tile_sizes[0];
+        let orig = measure_bandwidth(&w, tile, AllocKind::Original, &mem, 3).unwrap();
+        // original: zero redundancy by construction
+        assert_eq!(orig.raw_bytes, orig.useful_bytes, "{}", w.name);
+        // bbox: long bursts, heavy redundancy (raw >> effective)
+        let bbox = measure_bandwidth(&w, tile, AllocKind::BoundingBox, &mem, 3).unwrap();
+        assert!(
+            bbox.raw_mb_s > 1.5 * bbox.effective_mb_s,
+            "{}: bbox raw {:.1} vs eff {:.1} — not redundant enough",
+            w.name,
+            bbox.raw_mb_s,
+            bbox.effective_mb_s
+        );
+        // CFA issues far fewer transactions than the original layout
+        let cfa = measure_bandwidth(&w, tile, AllocKind::Cfa, &mem, 3).unwrap();
+        assert!(
+            cfa.transactions * 5 < orig.transactions,
+            "{}: cfa txns {} vs original {}",
+            w.name,
+            cfa.transactions,
+            orig.transactions
+        );
+    }
+}
+
+#[test]
+fn fig16_shape_area_in_paper_bands() {
+    // slices 2–5%-ish, DSP below ~5%, CFA not significantly different
+    // from the baselines.
+    let dev = Device::default();
+    let pts = area_sweep(&table1(true), 8, 3);
+    for p in &pts {
+        let sl = p.est.slice_pct(&dev);
+        let dp = p.est.dsp_pct(&dev);
+        assert!(
+            (1.0..=8.0).contains(&sl),
+            "{}/{} slice {sl:.2}% out of band",
+            p.benchmark,
+            p.alloc
+        );
+        assert!(dp <= 6.0, "{}/{} dsp {dp:.2}%", p.benchmark, p.alloc);
+    }
+    let agg = fig16_aggregate(&pts, |e, d| e.slice_pct(d));
+    for (bench, cmin, cmax, bmin, bmax) in agg {
+        // CFA's span overlaps or stays close to the baseline span
+        assert!(
+            cmin <= bmax * 1.5 && cmax * 1.5 >= bmin,
+            "{bench}: CFA [{cmin:.2},{cmax:.2}] vs baselines [{bmin:.2},{bmax:.2}]"
+        );
+    }
+}
+
+#[test]
+fn fig17_shape_bram_cfa_matches_original_bbox_pays() {
+    let pts = area_sweep(&table1(true), 8, 3);
+    for w in table1(true) {
+        let get = |alloc: &str, tile: &Vec<i64>| {
+            pts.iter()
+                .find(|p| p.benchmark == w.name && p.alloc == alloc && &p.tile == tile)
+                .map(|p| p.est.bram36)
+                .unwrap()
+        };
+        for tile in &w.tile_sizes {
+            let cfa = get("cfa", tile);
+            let orig = get("original", tile);
+            let bbox = get("bbox", tile);
+            // CFA does not change the on-chip allocation: same ballpark as
+            // the original layout
+            let ratio = cfa as f64 / orig.max(1) as f64;
+            assert!(
+                (0.5..=2.0).contains(&ratio),
+                "{} {tile:?}: cfa {cfa} vs original {orig} BRAM",
+                w.name
+            );
+            // bounding box holds redundant data on chip
+            assert!(
+                bbox >= orig,
+                "{} {tile:?}: bbox {bbox} < original {orig}",
+                w.name
+            );
+        }
+    }
+}
+
+#[test]
+fn bram_is_the_tile_size_limiter() {
+    // §VI.B.3.b: "BRAM was, indeed, the factor limiting tile size" — the
+    // largest paper tile sizes approach/exceed the device at f64.
+    let model = AreaModel::default();
+    let w = &table1(false)[0];
+    let deps = cfa::poly::deps::DepPattern::new(w.deps.clone()).unwrap();
+    let small = cfa::poly::tiling::Tiling::new(vec![48, 48, 48], vec![16, 16, 16]);
+    let large = cfa::poly::tiling::Tiling::new(vec![384, 384, 384], vec![128, 128, 128]);
+    let dev = Device::default();
+    let b_small = model
+        .estimate(&cfa::layout::cfa::Cfa::new(small, deps.clone()).unwrap(), 8)
+        .bram_pct(&dev);
+    let b_large = model
+        .estimate(&cfa::layout::cfa::Cfa::new(large, deps).unwrap(), 8)
+        .bram_pct(&dev);
+    assert!(b_large > 10.0 * b_small.max(0.1), "small {b_small:.1}% large {b_large:.1}%");
+    assert!(b_large > 50.0, "128^3 tiles should strain BRAM: {b_large:.1}%");
+}

@@ -1,0 +1,255 @@
+//! Cross-allocator integration invariants on the real Table-I workloads.
+//!
+//! These run every allocation against every benchmark pattern (small tile
+//! sizes for point-level checks) and verify the properties the paper's
+//! construction guarantees — plus the accounting identities the bandwidth
+//! figures depend on.
+
+use cfa::coordinator::AllocKind;
+use cfa::harness::workloads::table1;
+use cfa::layout::{write_set, Allocation};
+use cfa::poly::deps::DepPattern;
+use cfa::poly::flow::{coverage_violation, flow_in};
+use cfa::poly::tiling::Tiling;
+use cfa::util::prop::{run as prop_run, Config};
+use cfa::util::rng::Rng;
+
+/// Small tiling for point-level checks: tile edge just above the widths.
+fn small_tiling(deps: &DepPattern) -> Tiling {
+    let tile: Vec<i64> = deps.widths().iter().map(|w| (w + 2).max(3)).collect();
+    let space: Vec<i64> = tile.iter().map(|t| t * 3).collect();
+    Tiling::new(space, tile)
+}
+
+#[test]
+fn coverage_theorem_holds_on_all_benchmarks() {
+    for w in table1(true) {
+        let deps = DepPattern::new(w.deps.clone()).unwrap();
+        let tiling = small_tiling(&deps);
+        for tc in tiling.tiles() {
+            assert_eq!(
+                coverage_violation(&tiling, &deps, &tc),
+                None,
+                "{}: tile {tc:?}",
+                w.name
+            );
+        }
+    }
+}
+
+#[test]
+fn every_allocation_covers_every_flow_in_address() {
+    for w in table1(true) {
+        let deps = DepPattern::new(w.deps.clone()).unwrap();
+        let tiling = small_tiling(&deps);
+        for kind in AllocKind::ALL {
+            let alloc = kind.build(&tiling, &deps).unwrap();
+            for tc in tiling.tiles() {
+                let plan = alloc.plan(&tc);
+                let covered =
+                    |a: u64| plan.read_runs.iter().any(|r| a >= r.addr && a < r.end());
+                for pc in &plan.read_pieces {
+                    for p in pc.iter_box.points() {
+                        let a = alloc.addr_of(pc.array, &p);
+                        assert!(
+                            covered(a),
+                            "{}/{}: tile {tc:?} point {p:?} addr {a} uncovered",
+                            w.name,
+                            kind.name()
+                        );
+                    }
+                }
+                // pieces partition the flow-in exactly
+                let fin = flow_in(&tiling, &deps, &tc);
+                let piece_vol: u64 =
+                    plan.read_pieces.iter().map(|p| p.iter_box.volume()).sum();
+                assert_eq!(piece_vol, fin.volume(), "{}/{}", w.name, kind.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn write_accounting_is_consistent_across_allocators() {
+    // all four allocations transfer the same logical write set, so their
+    // useful-write counts must agree, and raw >= useful everywhere.
+    for w in table1(true) {
+        let deps = DepPattern::new(w.deps.clone()).unwrap();
+        let tiling = small_tiling(&deps);
+        for tc in tiling.tiles() {
+            let wset = write_set(&tiling, &deps, &tc).volume();
+            for kind in AllocKind::ALL {
+                let alloc = kind.build(&tiling, &deps).unwrap();
+                let plan = alloc.plan(&tc);
+                assert_eq!(
+                    plan.write_useful,
+                    wset,
+                    "{}/{}: tile {tc:?}",
+                    w.name,
+                    kind.name()
+                );
+                assert!(plan.write_raw() >= plan.write_useful);
+                assert!(plan.read_raw() >= plan.read_useful);
+            }
+        }
+    }
+}
+
+#[test]
+fn cfa_single_assignment_on_all_benchmarks() {
+    for w in table1(true) {
+        let deps = DepPattern::new(w.deps.clone()).unwrap();
+        let tiling = small_tiling(&deps);
+        let alloc = AllocKind::Cfa.build(&tiling, &deps).unwrap();
+        let mut intervals: Vec<(u64, u64)> = Vec::new();
+        for tc in tiling.tiles() {
+            for r in alloc.plan(&tc).write_runs {
+                intervals.push((r.addr, r.addr + r.len));
+            }
+        }
+        intervals.sort();
+        for pair in intervals.windows(2) {
+            assert!(
+                pair[0].1 <= pair[1].0,
+                "{}: overlapping writes {pair:?}",
+                w.name
+            );
+        }
+    }
+}
+
+#[test]
+fn read_write_locs_are_mutually_consistent() {
+    // whatever a consumer reads must have been written by the producer.
+    for w in table1(true) {
+        let deps = DepPattern::new(w.deps.clone()).unwrap();
+        let tiling = small_tiling(&deps);
+        for kind in AllocKind::ALL {
+            let alloc = kind.build(&tiling, &deps).unwrap();
+            let mut rng = Rng::new(0xBEEF);
+            for _ in 0..200 {
+                let p: Vec<i64> = tiling
+                    .space
+                    .iter()
+                    .map(|&n| rng.gen_i64(0, n - 1))
+                    .collect();
+                let locs = alloc.write_locs(&p);
+                if locs.is_empty() {
+                    continue; // interior point that never leaves the chip
+                }
+                let rl = alloc.read_loc(&p);
+                assert!(
+                    locs.contains(&rl),
+                    "{}/{}: read {rl:?} not among writes {locs:?} for {p:?}",
+                    w.name,
+                    kind.name()
+                );
+                // addresses stay within the footprint
+                for (_, a) in &locs {
+                    assert!(*a < alloc.footprint());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn cfa_interior_burst_structure_on_3d_benchmarks() {
+    // the paper's per-tile transaction count: a handful of long bursts,
+    // orders of magnitude below the original layout.
+    for w in table1(true) {
+        let deps = DepPattern::new(w.deps.clone()).unwrap();
+        let tile: Vec<i64> = vec![16, 16, 16];
+        let tiling = Tiling::new(w.space_for(&tile, 3), tile);
+        let cfa = AllocKind::Cfa.build(&tiling, &deps).unwrap();
+        let orig = AllocKind::Original.build(&tiling, &deps).unwrap();
+        let mid = vec![1, 1, 1];
+        let pc = cfa.plan(&mid);
+        let po = orig.plan(&mid);
+        assert!(
+            pc.read_runs.len() <= 8,
+            "{}: {} CFA read bursts",
+            w.name,
+            pc.read_runs.len()
+        );
+        assert!(
+            pc.transactions() * 10 <= po.transactions().max(10),
+            "{}: cfa {} vs original {}",
+            w.name,
+            pc.transactions(),
+            po.transactions()
+        );
+    }
+}
+
+#[test]
+fn prop_random_patterns_full_pipeline_consistency() {
+    prop_run(
+        "random backwards patterns: plans valid for all allocators",
+        Config::small(15),
+        |g| {
+            let d = g.usize(2, 3);
+            let tile: Vec<i64> = (0..d).map(|_| g.i64(3, 5)).collect();
+            let space: Vec<i64> = tile.iter().map(|t| t * g.i64(2, 3)).collect();
+            let tiling = Tiling::new(space, tile.clone());
+            let mut vecs = Vec::new();
+            for _ in 0..g.usize(1, 4) {
+                let v: Vec<i64> = (0..d).map(|k| g.i64(-(tile[k].min(2)), 0)).collect();
+                if v.iter().any(|&x| x != 0) {
+                    vecs.push(v);
+                }
+            }
+            if vecs.is_empty() {
+                return;
+            }
+            let deps = DepPattern::new(vecs).unwrap();
+            for kind in AllocKind::ALL {
+                let Ok(alloc) = kind.build(&tiling, &deps) else {
+                    continue;
+                };
+                for tc in tiling.tiles() {
+                    let plan = alloc.plan(&tc);
+                    for r in plan.read_runs.iter().chain(&plan.write_runs) {
+                        assert!(r.addr + r.len <= alloc.footprint());
+                        assert!(r.len > 0);
+                    }
+                    assert!(plan.read_raw() >= plan.read_useful);
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn four_dimensional_space_is_correct_but_less_contiguous() {
+    // §IV.J: in d >= 4 the number of second-level neighbor pairs (C(d,2))
+    // exceeds the number of facets (d), so not every extension can be
+    // merged — CFA stays *correct* (coverage + plan completeness hold) but
+    // an interior tile needs more than the 3-D count of read bursts.
+    let w = cfa::harness::workloads::heat3d();
+    let deps = DepPattern::new(w.deps.clone()).unwrap();
+    let tiling = Tiling::new(vec![12, 15, 15, 15], vec![4, 5, 5, 5]);
+    for tc in tiling.tiles() {
+        assert_eq!(coverage_violation(&tiling, &deps, &tc), None, "{tc:?}");
+    }
+    let alloc = AllocKind::Cfa.build(&tiling, &deps).unwrap();
+    let mid = vec![1, 1, 1, 1];
+    let plan = alloc.plan(&mid);
+    // completeness: every flow-in point covered
+    for pc in &plan.read_pieces {
+        for p in pc.iter_box.points() {
+            let a = alloc.addr_of(pc.array, &p);
+            assert!(
+                plan.read_runs.iter().any(|r| a >= r.addr && a < r.end()),
+                "uncovered 4-D read {p:?}"
+            );
+        }
+    }
+    // 4 facets written, one burst each (full-tile contiguity generalizes)
+    assert_eq!(plan.write_runs.len(), 4, "{:?}", plan.write_runs);
+    // reads: more than the 3-D "4 bursts", but still far below the
+    // original layout's scatter
+    assert!(plan.read_runs.len() > 4);
+    let orig = AllocKind::Original.build(&tiling, &deps).unwrap();
+    assert!(plan.read_runs.len() * 10 <= orig.plan(&mid).read_runs.len());
+}
