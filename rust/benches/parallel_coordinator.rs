@@ -1,0 +1,96 @@
+//! Serial vs batched-parallel coordinator on the Table-I sweep.
+//!
+//! Two measurements, both with bit-identity *asserted* (the property tests
+//! in `tests/batch_parallel.rs` are the canonical proof; the bench fails
+//! loudly too rather than reporting a speedup for wrong results):
+//!
+//! 1. the full Fig-15 sweep (benchmarks × tile sizes × allocations), fanned
+//!    out across sweep points;
+//! 2. one large wavefront-scheduled run, fanned out across tiles within
+//!    each dependence wave.
+//!
+//! Run: `cargo bench --bench parallel_coordinator [-- --threads N] [-- --quick]`
+
+use cfa::coordinator::batch::{BatchCoordinator, Schedule};
+use cfa::harness::figures::{fig15_sweep, fig15_sweep_parallel};
+use cfa::harness::workloads::{self, table1};
+use cfa::memsim::MemConfig;
+use cfa::poly::deps::DepPattern;
+use cfa::poly::tiling::Tiling;
+use std::time::Instant;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let threads = args
+        .windows(2)
+        .find(|w| w[0] == "--threads")
+        .and_then(|w| w[1].parse().ok())
+        .unwrap_or_else(|| cfa::util::par::default_threads().clamp(4, 8));
+    let quick = args.iter().any(|a| a == "--quick");
+    let mem = MemConfig::default();
+
+    // ---- 1. sweep-level parallelism (what `cfa bench --parallel N` uses)
+    let wl = table1(quick);
+    let points: usize = wl.iter().map(|w| w.tile_sizes.len() * 4).sum();
+    eprintln!("sweep: {points} points (quick={quick}), {threads} threads");
+    let t0 = Instant::now();
+    let serial = fig15_sweep(&wl, &mem, 3);
+    let t_serial = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let parallel = fig15_sweep_parallel(&wl, &mem, 3, threads);
+    let t_parallel = t1.elapsed().as_secs_f64();
+    assert_eq!(serial.len(), parallel.len(), "sweep dropped points");
+    for (s, p) in serial.iter().zip(&parallel) {
+        assert_eq!(
+            s.raw_mb_s.to_bits(),
+            p.raw_mb_s.to_bits(),
+            "{}/{:?}/{}: raw bandwidth differs",
+            s.benchmark,
+            s.tile,
+            s.alloc
+        );
+        assert_eq!(s.effective_mb_s.to_bits(), p.effective_mb_s.to_bits());
+        assert_eq!(s.transactions, p.transactions);
+    }
+    println!(
+        "fig15 sweep        serial {t_serial:7.2}s   {threads} threads {t_parallel:7.2}s   speedup {:.2}x",
+        t_serial / t_parallel.max(1e-9)
+    );
+
+    // ---- 2. wave-level parallelism inside one big coordinated run
+    let w = workloads::by_name("jacobi2d9p").unwrap();
+    let deps = DepPattern::new(w.deps.clone()).unwrap();
+    let (edge, tiles_per_dim) = if quick { (16, 4) } else { (32, 6) };
+    let tile = vec![edge, edge, edge];
+    let tiling = Tiling::new(w.space_for(&tile, tiles_per_dim), tile);
+    let sched = Schedule::wavefront(&tiling, &deps);
+    let alloc = cfa::coordinator::AllocKind::Cfa.build(&tiling, &deps).unwrap();
+    eprintln!(
+        "wavefront: {} tiles in {} waves (max width {})",
+        sched.num_tiles(),
+        sched.num_waves(),
+        sched.max_width()
+    );
+    let t2 = Instant::now();
+    let rep_serial = BatchCoordinator::new(alloc.as_ref(), &sched, mem.clone()).run_timing();
+    let t_wave_serial = t2.elapsed().as_secs_f64();
+    let t3 = Instant::now();
+    let rep_parallel = BatchCoordinator::new(alloc.as_ref(), &sched, mem.clone())
+        .threads(threads)
+        .run_timing();
+    let t_wave_parallel = t3.elapsed().as_secs_f64();
+    assert_eq!(rep_serial, rep_parallel, "wavefront timing diverged");
+    println!(
+        "wavefront run      serial {t_wave_serial:7.2}s   {threads} threads {t_wave_parallel:7.2}s   speedup {:.2}x",
+        t_wave_serial / t_wave_parallel.max(1e-9)
+    );
+    println!(
+        "timing bit-identical across thread counts: {} cycles, {} bursts, {} turnarounds",
+        rep_serial.cycles, rep_serial.timing.axi_bursts, rep_serial.timing.turnarounds
+    );
+
+    let speedup = t_serial / t_parallel.max(1e-9);
+    if threads >= 4 && speedup < 2.0 {
+        eprintln!("WARNING: sweep speedup {speedup:.2}x below the 2x target at {threads} threads");
+    }
+}

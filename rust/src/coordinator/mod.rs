@@ -6,7 +6,12 @@
 //! AOT-compiled tile programs (numerics). One run proves the whole stack:
 //! if any facet address function, burst plan or halo assembly were wrong,
 //! the final grid would not match the native Rust reference.
+//!
+//! [`batch`] adds the scale path: a wavefront scheduler over the tile
+//! dependence graph and a parallel executor whose timing and buffers stay
+//! bit-identical to serial execution.
 
+pub mod batch;
 pub mod reference;
 pub mod stencil;
 pub mod sw;
@@ -66,7 +71,7 @@ impl AllocKind {
 }
 
 /// Simulated host "global memory": one flat f32 store per allocation array.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct HostMemory {
     data: Vec<f32>,
 }
@@ -94,6 +99,11 @@ impl HostMemory {
 
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
+    }
+
+    /// The whole store (verification: bit-compare two runs' buffers).
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
     }
 }
 

@@ -33,6 +33,10 @@ pub struct StencilRun {
     /// Modeled compute parallelism (ops/cycle) for the exec stage.
     pub pe_ops_per_cycle: u64,
     pub seed: u64,
+    /// Worker threads for burst planning (`coordinator::batch::PlanStream`).
+    /// Planning is pure, so this never changes timing or numerics; the
+    /// PJRT compute itself stays on the driver thread.
+    pub parallel: usize,
 }
 
 impl StencilRun {
@@ -47,6 +51,7 @@ impl StencilRun {
             alloc,
             pe_ops_per_cycle: 64,
             seed: 42,
+            parallel: 1,
         }
     }
 }
@@ -112,7 +117,13 @@ pub fn run_stencil(rt: &Runtime, cfg: &StencilRun, mem_cfg: &MemConfig) -> Resul
     let flops_per_point = 2 * ((2 * r + 1) * (2 * r + 1)) as u64;
 
     let halo_t = (tt - 1).max(1);
-    for coords in tiling.tiles() {
+    // burst planning streams ahead of the tile loop: one plan at a time
+    // when serial (the old behavior), a bounded window planned in parallel
+    // with --parallel N. consumption stays in lexicographic order either
+    // way, so simulator state and Timing counters are unchanged
+    let tiles: Vec<Vec<i64>> = tiling.tiles().collect();
+    let plans = crate::coordinator::batch::PlanStream::new(alloc.as_ref(), &tiles, cfg.parallel);
+    for (coords, plan) in tiles.iter().zip(plans) {
         let (bt, bu, bv) = (coords[0], coords[1], coords[2]);
         let (t0, u0, v0) = (bt * tt, bu * ti, bv * tj);
 
@@ -189,9 +200,8 @@ pub fn run_stencil(rt: &Runtime, cfg: &StencilRun, mem_cfg: &MemConfig) -> Resul
         }
 
         // ---- timing through the memory simulator + task pipeline
-        let plan = alloc.plan(&coords);
         let (rd, wr) = crate::accel::tile_mem_cycles(&mut sim, &plan.read_runs, &plan.write_runs);
-        let vol = tiling.tile_rect(&coords).volume();
+        let vol = tiling.tile_rect(coords).volume();
         pipe.push(TileCost {
             read: rd,
             exec: vol * flops_per_point / cfg.pe_ops_per_cycle.max(1),

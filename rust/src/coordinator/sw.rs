@@ -25,6 +25,8 @@ pub struct SwRun {
     pub alloc: AllocKind,
     pub pe_ops_per_cycle: u64,
     pub seed: u64,
+    /// Worker threads for burst planning (pure; timing/numerics unchanged).
+    pub parallel: usize,
 }
 
 impl SwRun {
@@ -37,6 +39,7 @@ impl SwRun {
             alloc,
             pe_ops_per_cycle: 64,
             seed: 7,
+            parallel: 1,
         }
     }
 }
@@ -81,7 +84,13 @@ pub fn run_sw(rt: &Runtime, cfg: &SwRun, mem_cfg: &MemConfig) -> Result<RunRepor
     let mut pipe = Pipeline::new();
     let (mut raw_elems, mut useful_elems, mut transactions) = (0u64, 0u64, 0u64);
 
-    for coords in tiling.tiles() {
+    // burst planning streams ahead of the tile loop: one plan at a time
+    // when serial (the old behavior), a bounded window planned in parallel
+    // with --parallel N. consumption order is unchanged either way, so
+    // timing is bit-identical
+    let tiles: Vec<Vec<i64>> = tiling.tiles().collect();
+    let plans = crate::coordinator::batch::PlanStream::new(alloc.as_ref(), &tiles, cfg.parallel);
+    for (coords, plan) in tiles.iter().zip(plans) {
         let (i0, j0, k0) = (coords[0] * si, coords[1] * sj, coords[2] * sk);
         // ---- flow-in: three halo planes (zero outside the lattice)
         let mut halo_i = vec![0f32; ((sj + 1) * (sk + 1)) as usize];
@@ -153,9 +162,8 @@ pub fn run_sw(rt: &Runtime, cfg: &SwRun, mem_cfg: &MemConfig) -> Result<RunRepor
         }
 
         // ---- timing
-        let plan = alloc.plan(&coords);
         let (rd, wr) = crate::accel::tile_mem_cycles(&mut sim, &plan.read_runs, &plan.write_runs);
-        let vol = tiling.tile_rect(&coords).volume();
+        let vol = tiling.tile_rect(coords).volume();
         pipe.push(TileCost {
             read: rd,
             exec: vol * 14 / cfg.pe_ops_per_cycle.max(1), // 7 max-adds per cell

@@ -3,16 +3,18 @@
 //! (Fig 14: read and write engines only, one AXI HP port, f64 elements).
 
 use crate::area::{AreaEstimate, AreaModel, Device};
+use crate::coordinator::batch::{BatchCoordinator, Schedule};
 use crate::coordinator::AllocKind;
 use crate::harness::workloads::Workload;
 use crate::layout::Allocation;
-use crate::memsim::{Dir, MemConfig, MemSim, Txn};
+use crate::memsim::MemConfig;
 use crate::poly::deps::DepPattern;
 use crate::poly::tiling::Tiling;
+use crate::util::par::parallel_map;
 use crate::util::table::{stacked_bars, StackedBar};
 
 /// One Fig-15 data point.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct BandwidthPoint {
     pub benchmark: String,
     pub tile: Vec<i64>,
@@ -47,43 +49,37 @@ pub fn measure_bandwidth(
     mem_cfg: &MemConfig,
     tiles_per_dim: i64,
 ) -> anyhow::Result<BandwidthPoint> {
+    measure_bandwidth_batched(w, tile, alloc, mem_cfg, tiles_per_dim, 1)
+}
+
+/// [`measure_bandwidth`] with `threads` workers burst-planning the tiles.
+/// Replay stays serial in lexicographic order ([`Schedule::flat`] through
+/// the batch coordinator), so the point is bit-identical for any worker
+/// count.
+pub fn measure_bandwidth_batched(
+    w: &Workload,
+    tile: &[i64],
+    alloc: AllocKind,
+    mem_cfg: &MemConfig,
+    tiles_per_dim: i64,
+    threads: usize,
+) -> anyhow::Result<BandwidthPoint> {
     let (tiling, _deps, a) = build_alloc(w, tile, alloc, tiles_per_dim)?;
-    let mut sim = MemSim::new(mem_cfg.clone());
-    let mut raw = 0u64;
-    let mut useful = 0u64;
-    let mut txn_count = 0u64;
-    let mut txns: Vec<Txn> = Vec::new();
-    for coords in tiling.tiles() {
-        let plan = a.plan(&coords);
-        txns.clear();
-        txns.extend(plan.read_runs.iter().map(|r| Txn {
-            dir: Dir::Read,
-            addr: r.addr,
-            len: r.len,
-        }));
-        txns.extend(plan.write_runs.iter().map(|r| Txn {
-            dir: Dir::Write,
-            addr: r.addr,
-            len: r.len,
-        }));
-        for t in &txns {
-            sim.submit(t);
-        }
-        raw += plan.read_raw() + plan.write_raw();
-        useful += plan.read_useful + plan.write_useful;
-        txn_count += plan.transactions() as u64;
-    }
-    let cycles = sim.now().max(1);
+    let schedule = Schedule::flat(&tiling);
+    let rep = BatchCoordinator::new(a.as_ref(), &schedule, mem_cfg.clone())
+        .threads(threads)
+        .run_timing();
+    let cycles = rep.cycles.max(1);
     let secs = mem_cfg.secs(cycles);
     Ok(BandwidthPoint {
         benchmark: w.name.to_string(),
         tile: tile.to_vec(),
         alloc: alloc.name().to_string(),
-        raw_mb_s: raw as f64 * mem_cfg.elem_bytes as f64 / 1e6 / secs,
-        effective_mb_s: useful as f64 * mem_cfg.elem_bytes as f64 / 1e6 / secs,
-        transactions: txn_count,
-        raw_bytes: raw * mem_cfg.elem_bytes,
-        useful_bytes: useful * mem_cfg.elem_bytes,
+        raw_mb_s: rep.raw_elems as f64 * mem_cfg.elem_bytes as f64 / 1e6 / secs,
+        effective_mb_s: rep.useful_elems as f64 * mem_cfg.elem_bytes as f64 / 1e6 / secs,
+        transactions: rep.transactions,
+        raw_bytes: rep.raw_elems * mem_cfg.elem_bytes,
+        useful_bytes: rep.useful_elems * mem_cfg.elem_bytes,
     })
 }
 
@@ -93,18 +89,35 @@ pub fn fig15_sweep(
     mem_cfg: &MemConfig,
     tiles_per_dim: i64,
 ) -> Vec<BandwidthPoint> {
-    let mut out = Vec::new();
+    fig15_sweep_parallel(workloads, mem_cfg, tiles_per_dim, 1)
+}
+
+/// [`fig15_sweep`] with the sweep points fanned out across `threads`
+/// workers. Every point owns its simulator, so the result is the serial
+/// sweep's output bit-for-bit, in the same order (a point that errors is
+/// skipped in both).
+pub fn fig15_sweep_parallel(
+    workloads: &[Workload],
+    mem_cfg: &MemConfig,
+    tiles_per_dim: i64,
+    threads: usize,
+) -> Vec<BandwidthPoint> {
+    let mut jobs: Vec<(&Workload, &Vec<i64>, AllocKind)> = Vec::new();
     for w in workloads {
         for tile in &w.tile_sizes {
             for alloc in AllocKind::ALL {
-                match measure_bandwidth(w, tile, alloc, mem_cfg, tiles_per_dim) {
-                    Ok(p) => out.push(p),
-                    Err(e) => eprintln!("skip {}/{:?}/{}: {e}", w.name, tile, alloc.name()),
-                }
+                jobs.push((w, tile, alloc));
             }
         }
     }
-    out
+    parallel_map(&jobs, threads, |&(w, tile, alloc)| {
+        measure_bandwidth(w, tile, alloc, mem_cfg, tiles_per_dim)
+            .map_err(|e| eprintln!("skip {}/{:?}/{}: {e}", w.name, tile, alloc.name()))
+            .ok()
+    })
+    .into_iter()
+    .flatten()
+    .collect()
 }
 
 /// Render one benchmark's Fig-15 panel as stacked ASCII bars.
@@ -141,7 +154,7 @@ pub fn render_fig15(points: &[BandwidthPoint], benchmark: &str, mem_cfg: &MemCon
 }
 
 /// One Fig-16/17 data point.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct AreaPoint {
     pub benchmark: String,
     pub tile: Vec<i64>,
@@ -155,23 +168,38 @@ pub fn area_sweep(
     elem_bytes: u64,
     tiles_per_dim: i64,
 ) -> Vec<AreaPoint> {
+    area_sweep_parallel(workloads, elem_bytes, tiles_per_dim, 1)
+}
+
+/// [`area_sweep`] with the sweep points fanned out across `threads`
+/// workers; output is identical to the serial sweep, in the same order.
+pub fn area_sweep_parallel(
+    workloads: &[Workload],
+    elem_bytes: u64,
+    tiles_per_dim: i64,
+    threads: usize,
+) -> Vec<AreaPoint> {
     let model = AreaModel::default();
-    let mut out = Vec::new();
+    let mut jobs: Vec<(&Workload, &Vec<i64>, AllocKind)> = Vec::new();
     for w in workloads {
         for tile in &w.tile_sizes {
             for alloc in AllocKind::ALL {
-                if let Ok((_t, _d, a)) = build_alloc(w, tile, alloc, tiles_per_dim) {
-                    out.push(AreaPoint {
-                        benchmark: w.name.to_string(),
-                        tile: tile.clone(),
-                        alloc: alloc.name().to_string(),
-                        est: model.estimate(a.as_ref(), elem_bytes),
-                    });
-                }
+                jobs.push((w, tile, alloc));
             }
         }
     }
-    out
+    parallel_map(&jobs, threads, |&(w, tile, alloc)| {
+        let (_t, _d, a) = build_alloc(w, tile, alloc, tiles_per_dim).ok()?;
+        Some(AreaPoint {
+            benchmark: w.name.to_string(),
+            tile: tile.clone(),
+            alloc: alloc.name().to_string(),
+            est: model.estimate(a.as_ref(), elem_bytes),
+        })
+    })
+    .into_iter()
+    .flatten()
+    .collect()
 }
 
 /// Aggregate CFA vs all-other-baselines min/max, Fig-16 style.
@@ -292,6 +320,67 @@ pub fn area_csv(points: &[AreaPoint]) -> String {
 mod tests {
     use super::*;
     use crate::harness::workloads::table1;
+    use crate::memsim::{Dir, MemSim, Txn};
+
+    #[test]
+    fn batched_measure_matches_manual_serial_loop() {
+        // refactor guard: the batch-coordinator path must reproduce the
+        // classic tile-by-tile submit loop exactly
+        let w = &table1(true)[0];
+        let tile = vec![16, 16, 16];
+        let cfg = MemConfig::default();
+        for alloc in AllocKind::ALL {
+            let (tiling, _d, a) = build_alloc(w, &tile, alloc, 3).unwrap();
+            let mut sim = MemSim::new(cfg.clone());
+            let (mut raw, mut useful, mut txns) = (0u64, 0u64, 0u64);
+            for coords in tiling.tiles() {
+                let plan = a.plan(&coords);
+                for r in &plan.read_runs {
+                    sim.submit(&Txn {
+                        dir: Dir::Read,
+                        addr: r.addr,
+                        len: r.len,
+                    });
+                }
+                for r in &plan.write_runs {
+                    sim.submit(&Txn {
+                        dir: Dir::Write,
+                        addr: r.addr,
+                        len: r.len,
+                    });
+                }
+                raw += plan.read_raw() + plan.write_raw();
+                useful += plan.read_useful + plan.write_useful;
+                txns += plan.transactions() as u64;
+            }
+            let p = measure_bandwidth(w, &tile, alloc, &cfg, 3).unwrap();
+            assert_eq!(p.transactions, txns, "{}", alloc.name());
+            assert_eq!(p.raw_bytes, raw * cfg.elem_bytes);
+            assert_eq!(p.useful_bytes, useful * cfg.elem_bytes);
+            let secs = cfg.secs(sim.now().max(1));
+            let raw_mb = raw as f64 * cfg.elem_bytes as f64 / 1e6 / secs;
+            assert_eq!(p.raw_mb_s.to_bits(), raw_mb.to_bits(), "{}", alloc.name());
+            // the within-point threaded path is bit-identical too
+            let batched = measure_bandwidth_batched(w, &tile, alloc, &cfg, 3, 4).unwrap();
+            assert_eq!(p, batched, "{}", alloc.name());
+        }
+    }
+
+    #[test]
+    fn parallel_sweep_is_bit_identical_to_serial() {
+        let wl = table1(true);
+        let cfg = MemConfig::default();
+        let serial = fig15_sweep(&wl[..2], &cfg, 2);
+        for threads in [1, 4] {
+            let par = fig15_sweep_parallel(&wl[..2], &cfg, 2, threads);
+            assert_eq!(serial.len(), par.len());
+            for (s, p) in serial.iter().zip(&par) {
+                assert_eq!(s, p, "threads={threads}");
+                assert_eq!(s.raw_mb_s.to_bits(), p.raw_mb_s.to_bits());
+                assert_eq!(s.effective_mb_s.to_bits(), p.effective_mb_s.to_bits());
+            }
+        }
+    }
 
     #[test]
     fn quick_sweep_has_paper_shape() {
@@ -355,6 +444,9 @@ mod tests {
         assert_eq!(pts.len(), wl[0].tile_sizes.len() * 4);
         let csv = area_csv(&pts);
         assert!(csv.lines().count() == pts.len() + 1);
+        // the parallel sweep is the serial sweep, in order
+        let par = area_sweep_parallel(&wl[..1], 8, 2, 4);
+        assert_eq!(pts, par);
     }
 
     #[test]

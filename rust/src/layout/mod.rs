@@ -107,7 +107,12 @@ pub struct AddrGenProfile {
 }
 
 /// A memory layout for a tiled uniform-dependence program.
-pub trait Allocation {
+///
+/// `Send + Sync` is part of the contract: every implementation is plain
+/// data built once and then only read, so the batched coordinator
+/// (`coordinator::batch`) can fan burst planning out across threads while
+/// sharing one allocation by reference.
+pub trait Allocation: Send + Sync {
     /// Short identifier (used in reports: "cfa", "original", …).
     fn name(&self) -> &str;
 
@@ -286,6 +291,18 @@ pub fn piece_points(pieces: &[Piece]) -> Vec<(usize, IVec)> {
 mod tests {
     use super::*;
     use crate::util::prop::{run, Config};
+
+    #[test]
+    fn plan_types_are_send_sync() {
+        // the batched coordinator moves plans between threads; keep the
+        // whole planning vocabulary thread-safe by construction
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Run>();
+        assert_send_sync::<Piece>();
+        assert_send_sync::<TilePlan>();
+        assert_send_sync::<AddrGenProfile>();
+        assert_send_sync::<Box<dyn Allocation>>();
+    }
 
     #[test]
     fn strides_row_major() {

@@ -10,15 +10,18 @@
 //!   baseline allocations of §VI), a cycle-approximate AXI/DRAM memory
 //!   simulator standing in for the Zynq testbed, the read-execute-write
 //!   accelerator pipeline, an FPGA area model, an HLS code generator
-//!   (Fig 12/13), and the coordinator that drives tile execution.
+//!   (Fig 12/13), and the coordinators that drive tile execution — serial
+//!   drivers plus the batched wavefront coordinator
+//!   ([`coordinator::batch`]) that plans and marshals tiles in parallel
+//!   while keeping timing bit-identical to serial replay.
 //! * **L2/L1 (build-time Python)** — JAX tile programs calling Pallas
 //!   stencil kernels, AOT-lowered to HLO text in `artifacts/`.
 //! * **runtime** — a PJRT CPU client (the `xla` crate) that loads those
 //!   artifacts so tile compute runs from Rust with Python never on the
-//!   request path.
+//!   request path. Gated behind the off-by-default `pjrt` feature so the
+//!   tier-1 build needs neither the crate nor `artifacts/`.
 //!
-//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
-//! paper-vs-measured record.
+//! See `DESIGN.md` (repo root) for the system inventory.
 
 pub mod accel;
 pub mod area;

@@ -47,8 +47,8 @@ fn print_help() {
          subcommands:\n\
          \x20 list                 print the Table I benchmark registry\n\
          \x20 plan                 show layout + burst plan (--benchmark, --tile, --alloc)\n\
-         \x20 run                  end-to-end verified run (--benchmark, --alloc, ...)\n\
-         \x20 bench                figure sweeps (--figure fig15|fig16|fig17, --quick)\n\
+         \x20 run                  end-to-end verified run (--benchmark, --alloc, --parallel N, ...)\n\
+         \x20 bench                figure sweeps (--figure fig15|fig16|fig17, --quick, --parallel N)\n\
          \x20 codegen              emit HLS C (--benchmark, --tile)\n"
     );
 }
@@ -135,8 +135,10 @@ fn cmd_run() -> anyhow::Result<()> {
         .opt("alloc", "cfa | original | bbox | datatile | all", Some("all"))
         .opt("artifacts", "artifacts directory", Some("artifacts"))
         .opt("n", "grid rows (stencils) / seq len (sw3)", None)
-        .opt("steps", "time steps (stencils)", None);
+        .opt("steps", "time steps (stencils)", None)
+        .opt("parallel", "worker threads for burst planning", Some("1"));
     let a = cmd.parse(&env_args(1)).map_err(anyhow::Error::msg)?;
+    let parallel = a.get_usize("parallel", 1).map_err(anyhow::Error::msg)?;
     let rt = Runtime::open(a.get_or("artifacts", "artifacts"))?;
     println!("PJRT platform: {}", rt.platform());
     let mem = MemConfig {
@@ -153,6 +155,7 @@ fn cmd_run() -> anyhow::Result<()> {
         let report = match bench.as_str() {
             "sw3" | "smith-waterman-3seq" => {
                 let mut cfg = SwRun::default_run(alloc);
+                cfg.parallel = parallel;
                 if let Some(n) = a.get("n") {
                     let n: i64 = n.parse().map_err(|_| anyhow::anyhow!("bad --n"))?;
                     cfg.ni = n;
@@ -171,6 +174,7 @@ fn cmd_run() -> anyhow::Result<()> {
                 let mut cfg = StencilRun::heat_default(alloc);
                 cfg.artifact = artifact.to_string();
                 cfg.kind = kind;
+                cfg.parallel = parallel;
                 if name != "jacobi2d5p" {
                     // 16-cube artifacts: pick matching defaults
                     let r = kind.radius();
@@ -201,14 +205,16 @@ fn cmd_bench() -> anyhow::Result<()> {
     let cmd = Command::new("cfa bench", "figure sweeps")
         .opt("figure", "fig15 | fig16 | fig17", Some("fig15"))
         .flag("quick", "restrict tile sweep")
+        .opt("parallel", "worker threads for the sweep", Some("1"))
         .opt("out", "CSV output path", None);
     let a = cmd.parse(&env_args(1)).map_err(anyhow::Error::msg)?;
     let quick = a.flag("quick");
+    let threads = a.get_usize("parallel", 1).map_err(anyhow::Error::msg)?;
     let wl = workloads::table1(quick);
     let mem = MemConfig::default();
     match a.get_or("figure", "fig15") {
         "fig15" => {
-            let pts = figures::fig15_sweep(&wl, &mem, 3);
+            let pts = figures::fig15_sweep_parallel(&wl, &mem, 3, threads);
             for w in &wl {
                 print!("{}", figures::render_fig15(&pts, w.name, &mem));
             }
@@ -218,7 +224,7 @@ fn cmd_bench() -> anyhow::Result<()> {
             }
         }
         "fig16" | "fig17" => {
-            let pts = figures::area_sweep(&wl, mem.elem_bytes, 3);
+            let pts = figures::area_sweep_parallel(&wl, mem.elem_bytes, 3, threads);
             if let Some(path) = a.get("out") {
                 std::fs::write(path, figures::area_csv(&pts))?;
                 println!("wrote {path}");

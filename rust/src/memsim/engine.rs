@@ -13,21 +13,40 @@
 use crate::memsim::{Bandwidth, Dir, MemConfig, Txn};
 
 /// Detailed timing of one simulated run.
-#[derive(Clone, Debug, Default)]
+///
+/// Accounting identities (checked by `tests/memsim_identities.rs`):
+/// every AXI burst's first beat is classified as exactly one row hit or
+/// row miss (`row_hits + row_misses == axi_bursts`); rows crossed *inside*
+/// a streaming burst are counted separately in `row_switches`;
+/// `data_cycles` equals the total beats transferred; `turnarounds` equals
+/// the number of read↔write direction changes in the burst stream.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct Timing {
     pub cycles: u64,
     pub data_cycles: u64,
     pub axi_bursts: u64,
     pub row_hits: u64,
     pub row_misses: u64,
+    /// Row activations forced mid-burst by streaming across a row
+    /// boundary (charged a reduced, prefetch-overlapped penalty).
+    pub row_switches: u64,
     pub turnarounds: u64,
 }
 
-/// Memory interface simulator. Holds DRAM bank state across calls so a
-/// tile-by-tile driver observes realistic row locality.
-#[derive(Clone, Debug)]
-pub struct MemSim {
-    cfg: MemConfig,
+/// **Replay-time** state of the memory interface: DRAM bank rows, the
+/// in-flight window, resource clocks and the running counters.
+///
+/// Split out of [`MemSim`] so batched coordinators can treat burst
+/// *planning* (pure, parallelizable) and timing *replay* (stateful,
+/// order-dependent) as separate phases: plans are computed concurrently,
+/// then replayed through one `ReplayState` in a deterministic order —
+/// that fixed replay order is what makes batched runs bit-identical to
+/// serial ones. [`MemSim::snapshot`] / [`MemSim::restore`] additionally
+/// let callers checkpoint and re-run a stretch of the replay (e.g. one
+/// wave) in isolation; the batch coordinator itself replays straight
+/// through and does not need them.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ReplayState {
     /// Open row per bank.
     open_rows: Vec<Option<u64>>,
     /// Completion times of in-flight bursts (ring, max_outstanding).
@@ -42,33 +61,12 @@ pub struct MemSim {
     timing: Timing,
 }
 
-impl MemSim {
-    pub fn new(cfg: MemConfig) -> MemSim {
-        let banks = cfg.banks as usize;
-        MemSim {
-            cfg,
+impl ReplayState {
+    fn for_banks(banks: usize) -> ReplayState {
+        ReplayState {
             open_rows: vec![None; banks],
-            inflight: Vec::new(),
-            cmd_free: 0,
-            bus_free: 0,
-            last_dir: None,
-            timing: Timing::default(),
+            ..ReplayState::default()
         }
-    }
-
-    pub fn cfg(&self) -> &MemConfig {
-        &self.cfg
-    }
-
-    /// Reset time and DRAM state (keeps the configuration).
-    pub fn reset(&mut self) {
-        let banks = self.cfg.banks as usize;
-        self.open_rows = vec![None; banks];
-        self.inflight.clear();
-        self.cmd_free = 0;
-        self.bus_free = 0;
-        self.last_dir = None;
-        self.timing = Timing::default();
     }
 
     /// Current simulated time (cycle when everything issued so far drains).
@@ -78,6 +76,59 @@ impl MemSim {
 
     pub fn timing(&self) -> &Timing {
         &self.timing
+    }
+}
+
+/// Memory interface simulator: plan-time configuration ([`MemConfig`])
+/// plus [`ReplayState`]. Holds DRAM bank state across calls so a
+/// tile-by-tile driver observes realistic row locality.
+#[derive(Clone, Debug)]
+pub struct MemSim {
+    cfg: MemConfig,
+    state: ReplayState,
+}
+
+impl MemSim {
+    pub fn new(cfg: MemConfig) -> MemSim {
+        let banks = cfg.banks as usize;
+        MemSim {
+            cfg,
+            state: ReplayState::for_banks(banks),
+        }
+    }
+
+    pub fn cfg(&self) -> &MemConfig {
+        &self.cfg
+    }
+
+    /// Reset time and DRAM state (keeps the configuration).
+    pub fn reset(&mut self) {
+        self.state = ReplayState::for_banks(self.cfg.banks as usize);
+    }
+
+    /// Checkpoint the replay state (e.g. at a wave boundary).
+    pub fn snapshot(&self) -> ReplayState {
+        self.state.clone()
+    }
+
+    /// Restore a state previously taken with [`MemSim::snapshot`] from a
+    /// simulator with the same configuration.
+    pub fn restore(&mut self, state: ReplayState) {
+        assert_eq!(
+            state.open_rows.len(),
+            self.cfg.banks as usize,
+            "snapshot from a different bank configuration"
+        );
+        self.state = state;
+    }
+
+    /// Current simulated time (cycle when everything issued so far drains).
+    pub fn now(&self) -> u64 {
+        self.state.now()
+    }
+
+    pub fn timing(&self) -> &Timing {
+        &self.state.timing
     }
 
     /// Split a transaction into AXI bursts (≤ max beats, no boundary
@@ -108,30 +159,31 @@ impl MemSim {
 
     /// One AXI burst through the model.
     fn submit_axi(&mut self, dir: Dir, addr_b: u64, bytes: u64) -> u64 {
+        let st = &mut self.state;
         let beats = bytes.div_ceil(self.cfg.bus_bytes);
-        self.timing.axi_bursts += 1;
+        st.timing.axi_bursts += 1;
 
         // --- command path: serialized issue, bounded outstanding window.
-        let mut issue = self.cmd_free;
-        if self.inflight.len() >= self.cfg.max_outstanding {
+        let mut issue = st.cmd_free;
+        if st.inflight.len() >= self.cfg.max_outstanding {
             // must wait for the oldest in-flight burst to retire
-            let oldest = self.inflight.remove(0);
+            let oldest = st.inflight.remove(0);
             issue = issue.max(oldest);
         }
-        self.cmd_free = issue + self.cfg.issue_cycles;
+        st.cmd_free = issue + self.cfg.issue_cycles;
 
         // --- DRAM latency for the first beat.
         let row = addr_b / self.cfg.row_bytes;
         let bank = (row % self.cfg.banks) as usize;
-        let hit = self.open_rows[bank] == Some(row);
+        let hit = st.open_rows[bank] == Some(row);
         let lat = if hit {
-            self.timing.row_hits += 1;
+            st.timing.row_hits += 1;
             self.cfg.row_hit_cycles
         } else {
-            self.timing.row_misses += 1;
+            st.timing.row_misses += 1;
             self.cfg.row_miss_cycles
         };
-        self.open_rows[bank] = Some(row);
+        st.open_rows[bank] = Some(row);
 
         // --- row switches inside the burst.
         let last_b = addr_b + bytes - 1;
@@ -142,28 +194,28 @@ impl MemSim {
             // penalty and update the open row.
             let final_row = last_b / self.cfg.row_bytes;
             let bank2 = (final_row % self.cfg.banks) as usize;
-            self.open_rows[bank2] = Some(final_row);
-            self.timing.row_misses += rows_crossed;
+            st.open_rows[bank2] = Some(final_row);
+            st.timing.row_switches += rows_crossed;
         }
         let row_switch_pen = rows_crossed * (self.cfg.row_miss_cycles / 4);
 
         // --- turnaround.
-        let turn = if self.last_dir.is_some() && self.last_dir != Some(dir) {
-            self.timing.turnarounds += 1;
+        let turn = if st.last_dir.is_some() && st.last_dir != Some(dir) {
+            st.timing.turnarounds += 1;
             self.cfg.turnaround_cycles
         } else {
             0
         };
-        self.last_dir = Some(dir);
+        st.last_dir = Some(dir);
 
         // --- data phase: first beat after issue+latency, but the bus is a
         // single resource; latency overlaps earlier bursts' data phases.
-        let data_start = (issue + self.cfg.issue_cycles + lat).max(self.bus_free + turn);
+        let data_start = (issue + self.cfg.issue_cycles + lat).max(st.bus_free + turn);
         let complete = data_start + beats + row_switch_pen;
-        self.bus_free = complete;
-        self.timing.data_cycles += beats;
-        self.timing.cycles = self.now();
-        self.inflight.push(complete);
+        st.bus_free = complete;
+        st.timing.data_cycles += beats;
+        st.timing.cycles = st.now();
+        st.inflight.push(complete);
         complete
     }
 
@@ -177,8 +229,9 @@ impl MemSim {
             raw_bytes: raw_elems * self.cfg.elem_bytes,
             useful_bytes: useful_elems * self.cfg.elem_bytes,
             cycles,
-            bursts: self.timing.axi_bursts,
-            row_misses: self.timing.row_misses,
+            bursts: self.state.timing.axi_bursts,
+            // all activates observed: per-burst misses + mid-burst switches
+            row_misses: self.state.timing.row_misses + self.state.timing.row_switches,
         }
     }
 }
@@ -305,6 +358,57 @@ mod tests {
             },
         ]);
         assert_eq!(s.timing().turnarounds, 1);
+    }
+
+    #[test]
+    fn mid_burst_row_crossings_are_switches_not_misses() {
+        // AXI bursts never cross the 4 KiB boundary, so mid-burst row
+        // crossings need rows smaller than the boundary
+        let mut s = MemSim::new(MemConfig {
+            row_bytes: 1024,
+            ..MemConfig::default()
+        });
+        // 2 KiB contiguous read: one burst streaming across a 1 KiB row
+        // boundary — exactly one first-beat classification (a miss), the
+        // crossing counted as an in-burst switch
+        s.run(&[Txn {
+            dir: Dir::Read,
+            addr: 0,
+            len: 256,
+        }]);
+        let t = s.timing();
+        assert_eq!(t.row_hits + t.row_misses, t.axi_bursts);
+        assert!(t.row_switches > 0, "{t:?}");
+    }
+
+    #[test]
+    fn snapshot_restore_replays_identically() {
+        let mut s = sim();
+        let wave1 = [
+            Txn {
+                dir: Dir::Read,
+                addr: 0,
+                len: 100,
+            },
+            Txn {
+                dir: Dir::Write,
+                addr: 5000,
+                len: 40,
+            },
+        ];
+        let wave2 = [Txn {
+            dir: Dir::Read,
+            addr: 123,
+            len: 77,
+        }];
+        s.run(&wave1);
+        let at_boundary = s.snapshot();
+        s.run(&wave2);
+        let first = (s.now(), s.timing().clone());
+        // restore to the wave boundary and replay wave2: bit-identical
+        s.restore(at_boundary);
+        s.run(&wave2);
+        assert_eq!((s.now(), s.timing().clone()), first);
     }
 
     #[test]

@@ -20,7 +20,7 @@
 pub mod engine;
 pub mod multiport;
 
-pub use engine::{MemSim, Timing};
+pub use engine::{MemSim, ReplayState, Timing};
 pub use multiport::{cfa_port_map, MultiPortSim, PortMap};
 
 /// Transfer direction.

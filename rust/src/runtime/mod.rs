@@ -5,11 +5,15 @@
 //! `manifest.json`; this module loads both, compiles each module once on
 //! the PJRT CPU client, and exposes typed tile execution. Python is never
 //! on this path — the binary is self-contained once `artifacts/` exists.
-
-use crate::util::json::{self, Json};
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
+//!
+//! The real client (the `xla` crate) is only compiled under the **`pjrt`
+//! feature**, which is off by default so the tier-1 build needs neither
+//! the crate nor `artifacts/`. Without the feature this module exposes an
+//! API-compatible stub whose [`Runtime::open`] fails with a clear message,
+//! so every driver (`coordinator::stencil`, `coordinator::sw`, `main.rs`,
+//! the examples) compiles unchanged on the default feature set. Enabling
+//! `pjrt` additionally requires adding the vendored `xla` dependency to
+//! `Cargo.toml` (see DESIGN.md §Runtime).
 
 /// Parsed manifest entry for one artifact.
 #[derive(Clone, Debug)]
@@ -23,144 +27,220 @@ pub struct ArtifactInfo {
     pub radius: i64,
 }
 
-impl ArtifactInfo {
-    fn from_json(name: &str, j: &Json) -> Result<ArtifactInfo> {
-        let get_str = |k: &str| {
-            j.get(k)
-                .and_then(|v| v.as_str())
-                .map(|s| s.to_string())
-                .ok_or_else(|| anyhow!("manifest entry {name}: missing '{k}'"))
-        };
-        let tile = j
-            .get("tile")
-            .and_then(|v| v.as_arr())
-            .ok_or_else(|| anyhow!("manifest entry {name}: missing 'tile'"))?
-            .iter()
-            .map(|x| x.as_f64().unwrap_or(0.0) as i64)
-            .collect();
-        Ok(ArtifactInfo {
-            name: name.to_string(),
-            kind: get_str("kind")?,
-            file: get_str("file")?,
-            tile,
-            radius: j.get("radius").and_then(|v| v.as_f64()).unwrap_or(0.0) as i64,
-        })
-    }
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::ArtifactInfo;
+    use crate::util::json::{self, Json};
+    use anyhow::{anyhow, bail, Context, Result};
+    use std::collections::BTreeMap;
+    use std::path::{Path, PathBuf};
+    use std::rc::Rc;
 
-/// A compiled tile program.
-pub struct TileExecutable {
-    pub info: ArtifactInfo,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl TileExecutable {
-    /// Execute with scalar i32 inputs followed by f32 tensor inputs.
-    /// Returns the flattened f32 outputs in tuple order.
-    pub fn execute(
-        &self,
-        scalars: &[i32],
-        tensors: &[(&[f32], &[i64])],
-    ) -> Result<Vec<Vec<f32>>> {
-        let mut args: Vec<xla::Literal> = Vec::with_capacity(scalars.len() + tensors.len());
-        for &s in scalars {
-            args.push(xla::Literal::scalar(s));
+    impl ArtifactInfo {
+        fn from_json(name: &str, j: &Json) -> Result<ArtifactInfo> {
+            let get_str = |k: &str| {
+                j.get(k)
+                    .and_then(|v| v.as_str())
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| anyhow!("manifest entry {name}: missing '{k}'"))
+            };
+            let tile = j
+                .get("tile")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("manifest entry {name}: missing 'tile'"))?
+                .iter()
+                .map(|x| x.as_f64().unwrap_or(0.0) as i64)
+                .collect();
+            Ok(ArtifactInfo {
+                name: name.to_string(),
+                kind: get_str("kind")?,
+                file: get_str("file")?,
+                tile,
+                radius: j.get("radius").and_then(|v| v.as_f64()).unwrap_or(0.0) as i64,
+            })
         }
-        for (data, shape) in tensors {
-            let expect: i64 = shape.iter().product();
-            if expect != data.len() as i64 {
-                bail!(
-                    "tensor data length {} does not match shape {:?}",
-                    data.len(),
-                    shape
-                );
+    }
+
+    /// A compiled tile program.
+    pub struct TileExecutable {
+        pub info: ArtifactInfo,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    impl TileExecutable {
+        /// Execute with scalar i32 inputs followed by f32 tensor inputs.
+        /// Returns the flattened f32 outputs in tuple order.
+        pub fn execute(
+            &self,
+            scalars: &[i32],
+            tensors: &[(&[f32], &[i64])],
+        ) -> Result<Vec<Vec<f32>>> {
+            let mut args: Vec<xla::Literal> = Vec::with_capacity(scalars.len() + tensors.len());
+            for &s in scalars {
+                args.push(xla::Literal::scalar(s));
             }
-            args.push(xla::Literal::vec1(data).reshape(shape)?);
-        }
-        let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        let mut out = Vec::with_capacity(parts.len());
-        for p in parts {
-            out.push(p.to_vec::<f32>()?);
-        }
-        Ok(out)
-    }
-}
-
-/// PJRT CPU runtime holding compiled artifacts.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    manifest: BTreeMap<String, ArtifactInfo>,
-    compiled: std::cell::RefCell<BTreeMap<String, std::rc::Rc<TileExecutable>>>,
-}
-
-impl Runtime {
-    /// Open an artifacts directory (reads `manifest.json`).
-    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
-        let dir = dir.as_ref().to_path_buf();
-        let mpath = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&mpath)
-            .with_context(|| format!("reading {} (run `make artifacts` first)", mpath.display()))?;
-        let parsed = json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
-        let mut manifest = BTreeMap::new();
-        if let Json::Obj(entries) = &parsed {
-            for (name, j) in entries {
-                manifest.insert(name.clone(), ArtifactInfo::from_json(name, j)?);
+            for (data, shape) in tensors {
+                let expect: i64 = shape.iter().product();
+                if expect != data.len() as i64 {
+                    bail!(
+                        "tensor data length {} does not match shape {:?}",
+                        data.len(),
+                        shape
+                    );
+                }
+                args.push(xla::Literal::vec1(data).reshape(shape)?);
             }
-        } else {
-            bail!("manifest.json: expected an object");
+            let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+            let parts = result.to_tuple()?;
+            let mut out = Vec::with_capacity(parts.len());
+            for p in parts {
+                out.push(p.to_vec::<f32>()?);
+            }
+            Ok(out)
         }
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime {
-            client,
-            dir,
-            manifest,
-            compiled: Default::default(),
-        })
     }
 
-    /// Platform string (for diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// PJRT CPU runtime holding compiled artifacts.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        manifest: BTreeMap<String, ArtifactInfo>,
+        compiled: std::cell::RefCell<BTreeMap<String, Rc<TileExecutable>>>,
     }
 
-    /// Artifact names available.
-    pub fn artifacts(&self) -> Vec<&str> {
-        self.manifest.keys().map(|s| s.as_str()).collect()
-    }
-
-    pub fn info(&self, name: &str) -> Option<&ArtifactInfo> {
-        self.manifest.get(name)
-    }
-
-    /// Load + compile an artifact (cached after the first call).
-    pub fn load(&self, name: &str) -> Result<std::rc::Rc<TileExecutable>> {
-        if let Some(e) = self.compiled.borrow().get(name) {
-            return Ok(e.clone());
+    impl Runtime {
+        /// Open an artifacts directory (reads `manifest.json`).
+        pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+            let dir = dir.as_ref().to_path_buf();
+            let mpath = dir.join("manifest.json");
+            let text = std::fs::read_to_string(&mpath).with_context(|| {
+                format!("reading {} (run `make artifacts` first)", mpath.display())
+            })?;
+            let parsed = json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+            let mut manifest = BTreeMap::new();
+            if let Json::Obj(entries) = &parsed {
+                for (name, j) in entries {
+                    manifest.insert(name.clone(), ArtifactInfo::from_json(name, j)?);
+                }
+            } else {
+                bail!("manifest.json: expected an object");
+            }
+            let client = xla::PjRtClient::cpu()?;
+            Ok(Runtime {
+                client,
+                dir,
+                manifest,
+                compiled: Default::default(),
+            })
         }
-        let info = self
-            .manifest
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact '{name}' (have: {:?})", self.artifacts()))?
-            .clone();
-        let path = self.dir.join(&info.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        let te = std::rc::Rc::new(TileExecutable { info, exe });
-        self.compiled
-            .borrow_mut()
-            .insert(name.to_string(), te.clone());
-        Ok(te)
+
+        /// Platform string (for diagnostics).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Artifact names available.
+        pub fn artifacts(&self) -> Vec<&str> {
+            self.manifest.keys().map(|s| s.as_str()).collect()
+        }
+
+        pub fn info(&self, name: &str) -> Option<&ArtifactInfo> {
+            self.manifest.get(name)
+        }
+
+        /// Load + compile an artifact (cached after the first call).
+        pub fn load(&self, name: &str) -> Result<Rc<TileExecutable>> {
+            if let Some(e) = self.compiled.borrow().get(name) {
+                return Ok(e.clone());
+            }
+            let info = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| {
+                    anyhow!("unknown artifact '{name}' (have: {:?})", self.artifacts())
+                })?
+                .clone();
+            let path = self.dir.join(&info.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            let te = Rc::new(TileExecutable { info, exe });
+            self.compiled
+                .borrow_mut()
+                .insert(name.to_string(), te.clone());
+            Ok(te)
+        }
     }
 }
 
-#[cfg(test)]
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::{Runtime, TileExecutable};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use super::ArtifactInfo;
+    use anyhow::{bail, Result};
+    use std::path::Path;
+    use std::rc::Rc;
+
+    const DISABLED: &str = "the PJRT tile-compute runtime is disabled: rebuild with \
+         `--features pjrt` (and the vendored `xla` crate wired into Cargo.toml)";
+
+    /// Stub of the compiled tile program (`pjrt` feature disabled).
+    pub struct TileExecutable {
+        pub info: ArtifactInfo,
+    }
+
+    impl TileExecutable {
+        /// Always fails: there is no compute backend in this build.
+        pub fn execute(
+            &self,
+            _scalars: &[i32],
+            _tensors: &[(&[f32], &[i64])],
+        ) -> Result<Vec<Vec<f32>>> {
+            bail!("{DISABLED}")
+        }
+    }
+
+    /// Stub runtime (`pjrt` feature disabled): `open` fails with a clear
+    /// message, so drivers compile unchanged and report the situation at
+    /// run time instead of poisoning the offline build with `xla`. The
+    /// private field keeps the type unconstructible outside this module,
+    /// so the accessors below are genuinely unreachable.
+    pub struct Runtime(());
+
+    impl Runtime {
+        pub fn open(_dir: impl AsRef<Path>) -> Result<Runtime> {
+            bail!("{DISABLED}")
+        }
+
+        pub fn platform(&self) -> String {
+            "pjrt-disabled".to_string()
+        }
+
+        pub fn artifacts(&self) -> Vec<&str> {
+            Vec::new()
+        }
+
+        pub fn info(&self, _name: &str) -> Option<&ArtifactInfo> {
+            None
+        }
+
+        pub fn load(&self, _name: &str) -> Result<Rc<TileExecutable>> {
+            bail!("{DISABLED}")
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Runtime, TileExecutable};
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
+    use std::path::PathBuf;
 
     fn artifacts_dir() -> Option<PathBuf> {
         let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -220,5 +300,17 @@ mod tests {
         let Some(dir) = artifacts_dir() else { return };
         let rt = Runtime::open(&dir).unwrap();
         assert!(rt.load("nope").is_err());
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn open_reports_disabled_feature() {
+        let err = Runtime::open("artifacts").expect_err("stub must not open");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("pjrt"), "{msg}");
     }
 }

@@ -1,13 +1,14 @@
 //! Support substrates: randomness, statistics, property testing, JSON,
-//! CLI parsing and text rendering.
+//! CLI parsing, text rendering and fork-join parallelism.
 //!
 //! The offline crate set ships none of the usual ecosystem helpers
-//! (rand / criterion / proptest / serde / clap), so this module provides the
-//! project-local equivalents. Everything here is deterministic and
-//! dependency-free.
+//! (rand / criterion / proptest / serde / clap / rayon), so this module
+//! provides the project-local equivalents. Everything here is
+//! deterministic and dependency-free.
 
 pub mod cli;
 pub mod json;
+pub mod par;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,120 @@
+//! Deterministic fork-join parallelism on `std::thread::scope`.
+//!
+//! The offline crate set ships no rayon, so this is the project's parallel
+//! substrate: a fixed worker pool over an atomic work index, with results
+//! returned **in input order** regardless of which worker ran which item.
+//! Because the mapped function is pure (it only reads shared state), the
+//! output of [`parallel_map`] is bit-identical to the sequential
+//! `items.iter().map(f)` — the batched coordinator's determinism contract
+//! rests on exactly this property.
+//!
+//! Work is claimed item-by-item (dynamic self-scheduling), so heavily
+//! skewed workloads — one 128³ tile plan next to many tiny boundary tiles —
+//! still balance across workers.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Sensible default worker count: the machine's available parallelism
+/// (1 when it cannot be determined). [`parallel_map`] itself clamps the
+/// worker count to the batch size, so oversubscription on small batches
+/// is handled there, not here.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Map `f` over `items` with `threads` workers, returning the results in
+/// input order. `threads <= 1` (or a single item) runs inline with no
+/// thread spawned. Panics in `f` propagate.
+pub fn parallel_map<I, T, F>(items: &[I], threads: usize, f: F) -> Vec<T>
+where
+    I: Sync,
+    T: Send,
+    F: Fn(&I) -> T + Sync,
+{
+    let threads = threads.clamp(1, items.len().max(1));
+    if threads <= 1 {
+        let mut out = Vec::with_capacity(items.len());
+        for item in items {
+            out.push(f(item));
+        }
+        return out;
+    }
+    let next = AtomicUsize::new(0);
+    let parts: Vec<Vec<(usize, T)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= items.len() {
+                            break;
+                        }
+                        local.push((i, f(&items[i])));
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("parallel_map worker panicked"))
+            .collect()
+    });
+    let mut out: Vec<Option<T>> = (0..items.len()).map(|_| None).collect();
+    for part in parts {
+        for (i, v) in part {
+            debug_assert!(out[i].is_none(), "item {i} mapped twice");
+            out[i] = Some(v);
+        }
+    }
+    out.into_iter()
+        .map(|v| v.expect("parallel_map missed an item"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<u64> = (0..257).collect();
+        for threads in [1, 2, 3, 8] {
+            let out = parallel_map(&items, threads, |&x| x * x);
+            let expect: Vec<u64> = items.iter().map(|&x| x * x).collect();
+            assert_eq!(out, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        let none: Vec<i64> = Vec::new();
+        assert!(parallel_map(&none, 4, |&x| x).is_empty());
+        assert_eq!(parallel_map(&[7i64], 4, |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn oversubscription_is_clamped() {
+        // more threads than items must not deadlock or drop results
+        let items: Vec<usize> = (0..3).collect();
+        assert_eq!(parallel_map(&items, 64, |&x| x), items);
+    }
+
+    #[test]
+    fn matches_sequential_on_shared_reads() {
+        // workers only read shared state; result must equal the serial map
+        let base: Vec<f32> = (0..100).map(|i| i as f32 * 0.5).collect();
+        let idxs: Vec<usize> = (0..100).rev().collect();
+        let par = parallel_map(&idxs, 4, |&i| base[i] + 1.0);
+        let ser: Vec<f32> = idxs.iter().map(|&i| base[i] + 1.0).collect();
+        assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn default_threads_is_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

@@ -4,7 +4,10 @@
 //! signal in the repo.
 //!
 //! Requires `make artifacts` (skipped silently otherwise, like the runtime
-//! unit tests).
+//! unit tests) and the `pjrt` feature — the offline default build has no
+//! compute backend, so the whole file is compiled out without it.
+
+#![cfg(feature = "pjrt")]
 
 use cfa::coordinator::reference::StencilKind;
 use cfa::coordinator::stencil::{run_stencil, StencilRun};
@@ -44,6 +47,7 @@ fn jacobi_heat_all_allocations_are_exact() {
             alloc,
             pe_ops_per_cycle: 64,
             seed: 11,
+            parallel: 1,
         };
         let report = run_stencil(&rt, &cfg, &f32_mem()).expect("run");
         assert!(
@@ -70,6 +74,7 @@ fn gaussian_blur_cfa_is_exact() {
         alloc: AllocKind::Cfa,
         pe_ops_per_cycle: 64,
         seed: 3,
+        parallel: 1,
     };
     let report = run_stencil(&rt, &cfg, &f32_mem()).expect("run");
     assert!(
@@ -91,6 +96,7 @@ fn jacobi9p_cfa_is_exact() {
         alloc: AllocKind::Cfa,
         pe_ops_per_cycle: 64,
         seed: 5,
+        parallel: 1,
     };
     let report = run_stencil(&rt, &cfg, &f32_mem()).expect("run");
     assert!(report.max_abs_err < 1e-4, "{:.3e}", report.max_abs_err);
@@ -108,6 +114,7 @@ fn smith_waterman_all_allocations_are_exact() {
             alloc,
             pe_ops_per_cycle: 64,
             seed: 9,
+            parallel: 1,
         };
         let report = run_sw(&rt, &cfg, &f32_mem()).expect("run");
         assert!(
@@ -136,6 +143,7 @@ fn cfa_beats_baselines_on_effective_bandwidth() {
             alloc,
             pe_ops_per_cycle: 1_000_000, // memory-bound rig (paper Fig 14)
             seed: 1,
+            parallel: 1,
         };
         let report = run_stencil(&rt, &cfg, &mem).expect("run");
         eff.insert(alloc.name(), report.effective_mb_s(&mem));
@@ -163,6 +171,7 @@ fn tile_size_mismatch_is_reported() {
         alloc: AllocKind::Cfa,
         pe_ops_per_cycle: 64,
         seed: 0,
+        parallel: 1,
     };
     assert!(run_stencil(&rt, &cfg, &f32_mem()).is_err());
 }

@@ -1,0 +1,154 @@
+//! Accounting identities of the AXI/DRAM timing engine, checked against
+//! independent re-computations of the burst segmentation:
+//!
+//! * every AXI burst's first beat is exactly one row hit or row miss:
+//!   `row_hits + row_misses == axi_bursts`;
+//! * `data_cycles` equals the total beats transferred;
+//! * `turnarounds` equals the number of read↔write direction changes in
+//!   the submitted stream;
+//! * `axi_bursts` equals the segmentation count (≤256-beat bursts, no
+//!   4 KiB boundary crossing).
+
+use cfa::memsim::{Dir, MemConfig, MemSim, Txn};
+use cfa::util::prop::{run as prop_run, Config, Gen};
+
+/// Re-derive the burst segmentation of one transaction exactly as
+/// `MemSim::submit` performs it; returns (bursts, beats).
+fn segmentation(cfg: &MemConfig, txn: &Txn) -> (u64, u64) {
+    let mut addr_b = txn.addr * cfg.elem_bytes;
+    let mut remaining_b = txn.len * cfg.elem_bytes;
+    let (mut bursts, mut beats) = (0u64, 0u64);
+    while remaining_b > 0 {
+        let to_boundary = cfg.boundary_bytes - (addr_b % cfg.boundary_bytes);
+        let max_bytes = cfg.max_burst_beats * cfg.bus_bytes;
+        let chunk = remaining_b.min(to_boundary).min(max_bytes);
+        bursts += 1;
+        beats += chunk.div_ceil(cfg.bus_bytes);
+        addr_b += chunk;
+        remaining_b -= chunk;
+    }
+    (bursts, beats)
+}
+
+fn random_txns(g: &Gen, n: usize) -> Vec<Txn> {
+    (0..n)
+        .map(|_| Txn {
+            dir: if g.bool() { Dir::Read } else { Dir::Write },
+            addr: g.i64(0, 1 << 20) as u64,
+            len: g.i64(1, 5000) as u64,
+        })
+        .collect()
+}
+
+#[test]
+fn prop_accounting_identities_hold() {
+    prop_run("memsim accounting identities", Config::small(80), |g| {
+        let cfg = MemConfig::default();
+        let txns = random_txns(g, g.usize(1, 24));
+        let mut sim = MemSim::new(cfg.clone());
+        sim.run(&txns);
+        let t = sim.timing().clone();
+
+        let (mut bursts, mut beats) = (0u64, 0u64);
+        for txn in &txns {
+            let (b, d) = segmentation(&cfg, txn);
+            bursts += b;
+            beats += d;
+        }
+        // every burst's first beat is classified exactly once
+        assert_eq!(t.row_hits + t.row_misses, t.axi_bursts, "{t:?}");
+        // the segmentation is the burst count
+        assert_eq!(t.axi_bursts, bursts, "{t:?}");
+        // the data bus moved exactly the transferred beats
+        assert_eq!(t.data_cycles, beats, "{t:?}");
+        // direction changes (bursts of one txn share its direction)
+        let switches = txns.windows(2).filter(|w| w[0].dir != w[1].dir).count() as u64;
+        assert_eq!(t.turnarounds, switches, "{t:?}");
+        // the bus is one beat per cycle: makespan bounds the data phase
+        assert!(t.cycles >= t.data_cycles, "{t:?}");
+        assert_eq!(t.cycles, sim.now());
+    });
+}
+
+#[test]
+fn prop_identities_hold_with_narrow_elements_and_offsets() {
+    // unaligned element sizes exercise the div_ceil path of the beat count
+    prop_run("identities with 4-byte elements", Config::small(40), |g| {
+        // small rows also exercise the mid-burst row-switch path (rows
+        // larger than the 4 KiB AXI boundary can never be crossed
+        // mid-burst, so the default config keeps row_switches at zero)
+        let cfg = MemConfig {
+            elem_bytes: 4,
+            row_bytes: 1024,
+            ..MemConfig::default()
+        };
+        let txns = random_txns(g, g.usize(1, 12));
+        let mut sim = MemSim::new(cfg.clone());
+        sim.run(&txns);
+        let t = sim.timing().clone();
+        let (mut bursts, mut beats) = (0u64, 0u64);
+        for txn in &txns {
+            let (b, d) = segmentation(&cfg, txn);
+            bursts += b;
+            beats += d;
+        }
+        assert_eq!(t.row_hits + t.row_misses, t.axi_bursts);
+        assert_eq!(t.axi_bursts, bursts);
+        assert_eq!(t.data_cycles, beats);
+    });
+}
+
+#[test]
+fn identities_survive_reset_and_reuse() {
+    let cfg = MemConfig::default();
+    let mut sim = MemSim::new(cfg.clone());
+    let txns = [
+        Txn {
+            dir: Dir::Read,
+            addr: 0,
+            len: 700,
+        },
+        Txn {
+            dir: Dir::Write,
+            addr: 100_000,
+            len: 3,
+        },
+        Txn {
+            dir: Dir::Read,
+            addr: 512,
+            len: 1,
+        },
+    ];
+    sim.run(&txns);
+    let first = sim.timing().clone();
+    assert_eq!(first.row_hits + first.row_misses, first.axi_bursts);
+    assert_eq!(first.turnarounds, 2);
+    sim.reset();
+    assert_eq!(sim.timing(), &cfa::memsim::Timing::default());
+    sim.run(&txns);
+    // a reset simulator replays the same stream to the same counters
+    assert_eq!(sim.timing(), &first);
+}
+
+#[test]
+fn measure_reports_all_observed_activates() {
+    // Bandwidth::row_misses keeps its historical meaning: first-beat
+    // misses plus mid-burst row switches
+    let cfg = MemConfig {
+        row_bytes: 1024, // rows below the AXI boundary -> mid-burst crossings
+        ..MemConfig::default()
+    };
+    let mut sim = MemSim::new(cfg);
+    let bw = sim.measure(
+        &[Txn {
+            dir: Dir::Read,
+            addr: 0,
+            len: 8192, // 64 KiB: many 1 KiB rows
+        }],
+        8192,
+    );
+    let t = sim.timing().clone();
+    assert!(t.row_switches > 0, "{t:?}");
+    assert_eq!(bw.row_misses, t.row_misses + t.row_switches);
+    assert_eq!(t.row_hits + t.row_misses, t.axi_bursts);
+}
