@@ -1,38 +1,172 @@
 //! Hot-path microbenchmarks for the performance pass (EXPERIMENTS.md §Perf):
-//! the L3 kernels that dominate figure sweeps and coordinated runs.
+//! the L3 kernels that dominate figure sweeps and coordinated runs, plus the
+//! burst-grained fast path (run cursors + plan memoization) measured against
+//! a faithful reimplementation of the pre-fast-path pointwise code.
 //!
-//! Run: `cargo bench --bench hotpath`
+//! Run: `cargo bench --bench hotpath [-- --smoke] [-- --out PATH]`
+//!
+//! Every run asserts the fast path **bit-identical** to the reference
+//! (plans, memory-simulator timing counters, marshalled buffers) before
+//! timing anything, and writes machine-readable results to
+//! `BENCH_hotpath.json` at the repo root (override with `--out`), so the
+//! perf trajectory is recorded run over run.
 
+use cfa::coordinator::batch::{BatchCoordinator, Schedule};
+use cfa::coordinator::{AllocKind, HostMemory};
 use cfa::harness::workloads;
-use cfa::layout::{runs_of_box, Allocation};
-use cfa::memsim::{Dir, MemConfig, MemSim, Txn};
+use cfa::layout::{runs_of_box, Allocation, PlanCache, TilePlan};
+use cfa::memsim::{Dir, MemConfig, MemSim, Timing, Txn};
 use cfa::poly::deps::DepPattern;
 use cfa::poly::flow::flow_in;
 use cfa::poly::rect::Rect;
 use cfa::poly::tiling::Tiling;
-use cfa::util::stats::{black_box, Bencher};
+use cfa::util::json::Json;
+use cfa::util::stats::{black_box, Bencher, Measurement};
+
+/// Plan every tile with one full derivation per tile — the sweeps' pre-PR
+/// planning path (no memoization).
+fn plan_fresh(alloc: &dyn Allocation, tiles: &[Vec<i64>]) -> Vec<TilePlan> {
+    tiles.iter().map(|tc| alloc.plan(tc)).collect()
+}
+
+/// Plan every tile through a [`PlanCache`]: interior tiles rebase one
+/// canonical plan.
+fn plan_memoized(alloc: &dyn Allocation, tiles: &[Vec<i64>]) -> Vec<TilePlan> {
+    let cache = PlanCache::new(alloc);
+    tiles.iter().map(|tc| cache.plan(tc)).collect()
+}
+
+/// The pre-PR marshalling loop, verbatim semantics: gather one `addr_of`
+/// per point through an allocating point iterator, write through a fresh
+/// `write_locs` Vec per point.
+fn marshal_pointwise(
+    alloc: &dyn Allocation,
+    plans: &[TilePlan],
+    host: &HostMemory,
+    out: &mut HostMemory,
+) {
+    for plan in plans {
+        let mut acc = 0f32;
+        let mut n = 0u64;
+        for pc in &plan.read_pieces {
+            for p in pc.iter_box.points() {
+                acc += host.read(alloc.addr_of(pc.array, &p));
+                n += 1;
+            }
+        }
+        let bias = if n == 0 { 0.0 } else { acc / n as f32 };
+        for pc in &plan.write_pieces {
+            for p in pc.iter_box.points() {
+                for (_, addr) in alloc.write_locs(&p) {
+                    out.write(addr, bias + 0.25);
+                }
+            }
+        }
+    }
+}
+
+/// The fast marshalling loop: run cursor for the gather (contiguous host
+/// slices, same fold order), streamed write locations, reusable point
+/// buffer — zero allocation per point.
+fn marshal_runs(
+    alloc: &dyn Allocation,
+    plans: &[TilePlan],
+    host: &HostMemory,
+    out: &mut HostMemory,
+) {
+    let mem = host.as_slice();
+    for plan in plans {
+        let mut acc = 0f32;
+        let mut n = 0u64;
+        for pc in &plan.read_pieces {
+            alloc.for_each_run(pc.array, &pc.iter_box, &mut |addr, len| {
+                for &v in &mem[addr as usize..(addr + len) as usize] {
+                    acc += v;
+                }
+                n += len;
+            });
+        }
+        let bias = if n == 0 { 0.0 } else { acc / n as f32 };
+        for pc in &plan.write_pieces {
+            pc.iter_box.for_each_point(&mut |p| {
+                alloc.for_each_write_loc(p, &mut |_, addr| out.write(addr, bias + 0.25));
+            });
+        }
+    }
+}
+
+/// Replay plans through a fresh simulator, lexicographic tile order (the
+/// Fig-15 memory-bound rig's submit order).
+fn replay(cfg: &MemConfig, plans: &[TilePlan]) -> (u64, Timing) {
+    let mut sim = MemSim::new(cfg.clone());
+    for plan in plans {
+        for r in &plan.read_runs {
+            sim.submit(&Txn {
+                dir: Dir::Read,
+                addr: r.addr,
+                len: r.len,
+            });
+        }
+        for r in &plan.write_runs {
+            sim.submit(&Txn {
+                dir: Dir::Write,
+                addr: r.addr,
+                len: r.len,
+            });
+        }
+    }
+    (sim.now(), sim.timing().clone())
+}
+
+fn measurement_json(m: &Measurement) -> Json {
+    let mut fields = vec![
+        ("name", Json::str(m.name.clone())),
+        ("median_s", Json::num(m.summary.median)),
+        ("p05_s", Json::num(m.summary.p05)),
+        ("p95_s", Json::num(m.summary.p95)),
+        ("samples", Json::num(m.summary.n as f64)),
+    ];
+    if let Some(e) = m.elems_per_sec() {
+        fields.push(("elems_per_s", Json::num(e)));
+    }
+    if let Some(r) = m.runs_per_sec() {
+        fields.push(("runs_per_s", Json::num(r)));
+    }
+    Json::obj(fields)
+}
 
 fn main() {
-    let b = Bencher::default();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json").to_string()
+        });
+    let b = if smoke { Bencher::quick() } else { Bencher::default() };
+    let mut results: Vec<Measurement> = Vec::new();
+
+    // ---- micro benches (unchanged targets, tracked run over run)
     let w = workloads::by_name("jacobi2d9p").unwrap();
     let deps = DepPattern::new(w.deps.clone()).unwrap();
     let tiling = Tiling::new(vec![384, 384, 384], vec![128, 128, 128]);
     let mid = vec![1, 1, 1];
 
-    let mut results = Vec::new();
-
     results.push(b.bench("flow_in(128^3 tile)", || {
         black_box(flow_in(&tiling, &deps, &mid));
     }));
 
-    let cfa = cfa::layout::cfa::Cfa::new(tiling.clone(), deps.clone()).unwrap();
+    let cfa128 = cfa::layout::cfa::Cfa::new(tiling.clone(), deps.clone()).unwrap();
     results.push(b.bench("cfa.plan(128^3 interior tile)", || {
-        black_box(cfa.plan(&mid));
+        black_box(cfa128.plan(&mid));
     }));
 
-    let orig = cfa::layout::original::OriginalLayout::new(tiling.clone(), deps.clone());
+    let orig128 = cfa::layout::original::OriginalLayout::new(tiling.clone(), deps.clone());
     results.push(b.bench("original.plan(128^3 interior tile)", || {
-        black_box(orig.plan(&mid));
+        black_box(orig128.plan(&mid));
     }));
 
     let bx = Rect::new(vec![1, 0, 0], vec![2, 126, 128]);
@@ -53,18 +187,160 @@ fn main() {
         black_box(sim.run(&txns));
     }));
 
-    let plan = cfa.plan(&mid);
-    let mut sim = MemSim::new(cfg.clone());
-    results.push(b.bench("tile_mem_cycles(cfa plan)", || {
-        black_box(cfa::accel::tile_mem_cycles(
-            &mut sim,
-            &plan.read_runs,
-            &plan.write_runs,
-        ));
-    }));
+    // ---- the Fig-15 sweep planning + marshalling path: pre-PR pointwise
+    // reference vs the burst-grained fast path, identity asserted first
+    let sweep_w = workloads::by_name("jacobi2d5p").unwrap();
+    let sweep_deps = DepPattern::new(sweep_w.deps.clone()).unwrap();
+    let tile = vec![32i64, 32, 32];
+    let tiles_per_dim = 6i64;
+    let sweep_tiling = Tiling::new(sweep_w.space_for(&tile, tiles_per_dim), tile.clone());
+    let tiles: Vec<Vec<i64>> = sweep_tiling.tiles().collect();
+    let allocs: Vec<Box<dyn Allocation>> = AllocKind::ALL
+        .iter()
+        .map(|k| k.build(&sweep_tiling, &sweep_deps).unwrap())
+        .collect();
+
+    // identity: memoized plans == fresh plans, and identical replay timing;
+    // also total up the planning work across all four allocations for the
+    // plan benches' throughput lines
+    let mut planned_elems = 0u64;
+    let mut planned_runs = 0u64;
+    for alloc in &allocs {
+        let fresh = plan_fresh(alloc.as_ref(), &tiles);
+        let memo = plan_memoized(alloc.as_ref(), &tiles);
+        assert_eq!(fresh, memo, "{}: memoized plans differ", alloc.name());
+        planned_elems += fresh
+            .iter()
+            .map(|p| p.read_raw() + p.write_raw())
+            .sum::<u64>();
+        planned_runs += fresh.iter().map(|p| p.transactions() as u64).sum::<u64>();
+        let (c_f, t_f) = replay(&cfg, &fresh);
+        let (c_m, t_m) = replay(&cfg, &memo);
+        assert_eq!(c_f, c_m, "{}: cycles differ", alloc.name());
+        assert_eq!(t_f, t_m, "{}: Timing counters differ", alloc.name());
+        // the production sweep path (BatchCoordinator over a flat schedule,
+        // cache inside) reproduces the fresh replay exactly
+        let sched = Schedule::flat(&sweep_tiling);
+        let rep = BatchCoordinator::new(alloc.as_ref(), &sched, cfg.clone()).run_timing();
+        assert_eq!(rep.cycles, c_f, "{}: coordinator cycles", alloc.name());
+        assert_eq!(rep.timing, t_f, "{}: coordinator Timing", alloc.name());
+    }
+
+    // identity: pointwise and run-cursor marshalling produce bit-identical
+    // buffers (CFA, the allocation with replicated writes)
+    let cfa_sweep = AllocKind::Cfa.build(&sweep_tiling, &sweep_deps).unwrap();
+    let cfa_plans = plan_fresh(cfa_sweep.as_ref(), &tiles);
+    let mut host = HostMemory::new(cfa_sweep.footprint());
+    for i in 0..host.len() as u64 {
+        host.write(i, (i % 251) as f32 * 0.5 + 1.0);
+    }
+    let (mut out_pw, mut out_rc) = (
+        HostMemory::new(cfa_sweep.footprint()),
+        HostMemory::new(cfa_sweep.footprint()),
+    );
+    marshal_pointwise(cfa_sweep.as_ref(), &cfa_plans, &host, &mut out_pw);
+    marshal_runs(cfa_sweep.as_ref(), &cfa_plans, &host, &mut out_rc);
+    assert_eq!(out_pw.len(), out_rc.len());
+    for (i, (x, y)) in out_pw.as_slice().iter().zip(out_rc.as_slice()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "marshal buffers differ at {i}");
+    }
+    println!(
+        "identity: plans, Timing counters and marshalled buffers bit-identical \
+         ({} tiles, 4 allocations)",
+        tiles.len()
+    );
+
+    // work counts for throughput lines; the marshal path's run count is the
+    // number of runs the cursor actually emits over the read pieces (not
+    // the timing path's merged transaction count)
+    let marshal_elems: u64 = cfa_plans
+        .iter()
+        .map(|p| p.read_useful + p.write_useful)
+        .sum();
+    let mut marshal_runs_emitted = 0u64;
+    for plan in &cfa_plans {
+        for pc in &plan.read_pieces {
+            cfa_sweep.for_each_run(pc.array, &pc.iter_box, &mut |_, _| {
+                marshal_runs_emitted += 1;
+            });
+        }
+    }
+
+    let m_plan_fresh = b
+        .bench("fig15 sweep plan x4 allocs (fresh)", || {
+            for alloc in &allocs {
+                black_box(plan_fresh(alloc.as_ref(), &tiles));
+            }
+        })
+        .with_work(planned_elems, planned_runs);
+    let m_plan_memo = b
+        .bench("fig15 sweep plan x4 allocs (memoized)", || {
+            for alloc in &allocs {
+                black_box(plan_memoized(alloc.as_ref(), &tiles));
+            }
+        })
+        .with_work(planned_elems, planned_runs);
+    let m_marshal_pw = b
+        .bench("fig15 sweep marshal cfa (pointwise)", || {
+            marshal_pointwise(cfa_sweep.as_ref(), &cfa_plans, &host, &mut out_pw);
+        })
+        .with_work(marshal_elems, marshal_runs_emitted);
+    let m_marshal_rc = b
+        .bench("fig15 sweep marshal cfa (run cursor)", || {
+            marshal_runs(cfa_sweep.as_ref(), &cfa_plans, &host, &mut out_rc);
+        })
+        .with_work(marshal_elems, marshal_runs_emitted);
+
+    let plan_speedup = m_plan_fresh.summary.median / m_plan_memo.summary.median;
+    let marshal_speedup = m_marshal_pw.summary.median / m_marshal_rc.summary.median;
+    let combined_speedup = (m_plan_fresh.summary.median + m_marshal_pw.summary.median)
+        / (m_plan_memo.summary.median + m_marshal_rc.summary.median);
+
+    results.push(m_plan_fresh);
+    results.push(m_plan_memo);
+    results.push(m_marshal_pw);
+    results.push(m_marshal_rc);
 
     println!("\nhotpath microbenchmarks:");
     for m in &results {
         println!("  {}", m.line());
+    }
+    println!(
+        "\nfig15 sweep path speedups: plan {plan_speedup:.2}x, marshal \
+         {marshal_speedup:.2}x, combined {combined_speedup:.2}x"
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("hotpath")),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "sweep",
+            Json::obj(vec![
+                ("benchmark", Json::str(sweep_w.name)),
+                (
+                    "tile",
+                    Json::arr(tile.iter().map(|&x| Json::num(x as f64))),
+                ),
+                ("tiles_per_dim", Json::num(tiles_per_dim as f64)),
+                ("tiles", Json::num(tiles.len() as f64)),
+            ]),
+        ),
+        (
+            "speedups",
+            Json::obj(vec![
+                ("fig15_plan", Json::num(plan_speedup)),
+                ("fig15_marshal", Json::num(marshal_speedup)),
+                ("fig15_combined", Json::num(combined_speedup)),
+            ]),
+        ),
+        ("identity_asserted", Json::Bool(true)),
+        (
+            "measurements",
+            Json::arr(results.iter().map(measurement_json)),
+        ),
+    ]);
+    match std::fs::write(&out_path, json.to_string_pretty()) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
     }
 }

@@ -27,7 +27,7 @@
 //! "how many tiles can legally be in flight at once" (`max_width`).
 
 use crate::coordinator::HostMemory;
-use crate::layout::{linearize, Allocation, TilePlan};
+use crate::layout::{linearize, Allocation, PlanCache, TilePlan};
 use crate::memsim::{Dir, MemConfig, MemSim, Timing, Txn};
 use crate::poly::deps::DepPattern;
 use crate::poly::flow::producer_tiles;
@@ -134,23 +134,50 @@ pub struct BatchReport {
 /// in input order. The workhorse behind both the batch coordinator and the
 /// serial drivers' `--parallel` mode (planning is pure, so the serial
 /// drivers can fan it out even though their PJRT compute stays on one
-/// thread). Holds all plans at once — for bounded memory over long tile
-/// streams use [`PlanStream`].
+/// thread). Plans through a private [`PlanCache`], so interior tiles of an
+/// exact tiling rebase one canonical plan instead of re-deriving it — the
+/// output is still `alloc.plan(tile)` bit for bit. Holds all plans at once;
+/// for bounded memory over long tile streams use [`PlanStream`].
 pub fn plan_tiles(alloc: &dyn Allocation, tiles: &[IVec], threads: usize) -> Vec<TilePlan> {
-    parallel_map(tiles, threads, |coords| alloc.plan(coords))
+    let cache = PlanCache::new(alloc);
+    plan_tiles_cached(&cache, tiles, threads)
+}
+
+/// [`plan_tiles`] against a caller-owned [`PlanCache`] (share one cache
+/// across waves/chunks so the canonical interior plan is derived once).
+pub fn plan_tiles_cached(cache: &PlanCache, tiles: &[IVec], threads: usize) -> Vec<TilePlan> {
+    parallel_map(tiles, threads, |coords| cache.plan(coords))
 }
 
 /// Upper bound on plans a batched executor keeps live at once; chunks of
 /// this size are planned ahead in schedule order and consumed in order.
 const PLAN_CHUNK: usize = 256;
 
+/// The plan source a [`PlanStream`] draws from: its own cache, or one
+/// shared by the caller (the batch coordinator reuses a single cache
+/// across all waves of a schedule).
+enum PlanSource<'a> {
+    Owned(PlanCache<'a>),
+    Shared(&'a PlanCache<'a>),
+}
+
+impl<'a> PlanSource<'a> {
+    fn cache(&self) -> &PlanCache<'a> {
+        match self {
+            PlanSource::Owned(c) => c,
+            PlanSource::Shared(c) => c,
+        }
+    }
+}
+
 /// Streaming wrapper around [`plan_tiles`]: yields each tile's plan in
 /// input order while keeping at most one chunk of plans in memory — one
 /// plan at a time when serial (`threads <= 1`, exactly the classic
 /// plan-per-tile loop), a bounded multiple of the worker count otherwise.
-/// Both serial coordinators drive their tile loops through this.
+/// Both serial coordinators drive their tile loops through this; interior
+/// tiles come out of the memoized fast path either way.
 pub struct PlanStream<'a> {
-    alloc: &'a dyn Allocation,
+    source: PlanSource<'a>,
     tiles: &'a [IVec],
     threads: usize,
     chunk: usize,
@@ -160,13 +187,26 @@ pub struct PlanStream<'a> {
 
 impl<'a> PlanStream<'a> {
     pub fn new(alloc: &'a dyn Allocation, tiles: &'a [IVec], threads: usize) -> PlanStream<'a> {
+        PlanStream::build(PlanSource::Owned(PlanCache::new(alloc)), tiles, threads)
+    }
+
+    /// Stream over `tiles` drawing plans from a shared cache.
+    pub fn with_cache(
+        cache: &'a PlanCache<'a>,
+        tiles: &'a [IVec],
+        threads: usize,
+    ) -> PlanStream<'a> {
+        PlanStream::build(PlanSource::Shared(cache), tiles, threads)
+    }
+
+    fn build(source: PlanSource<'a>, tiles: &'a [IVec], threads: usize) -> PlanStream<'a> {
         let chunk = if threads > 1 {
             (threads * 8).min(PLAN_CHUNK)
         } else {
             1
         };
         PlanStream {
-            alloc,
+            source,
             tiles,
             threads,
             chunk,
@@ -185,8 +225,8 @@ impl Iterator for PlanStream<'_> {
                 return None;
             }
             let end = (self.next + self.chunk).min(self.tiles.len());
-            self.buffered.extend(plan_tiles(
-                self.alloc,
+            self.buffered.extend(plan_tiles_cached(
+                self.source.cache(),
                 &self.tiles[self.next..end],
                 self.threads,
             ));
@@ -210,23 +250,28 @@ pub fn execute_tile(
     host: &HostMemory,
     seed: u64,
 ) -> Vec<(u64, f32)> {
+    // Gather through the run cursor: contiguous host slices instead of one
+    // addr_of per point. The cursor enumerates addresses in row-major point
+    // order, so this f32 fold adds the same values in the same order as the
+    // old pointwise loop — bit-identical bias.
     let mut acc = 0f32;
     let mut n = 0u64;
+    let mem = host.as_slice();
     for pc in &plan.read_pieces {
-        for p in pc.iter_box.points() {
-            acc += host.read(alloc.addr_of(pc.array, &p));
-            n += 1;
-        }
+        alloc.for_each_run(pc.array, &pc.iter_box, &mut |addr, len| {
+            for &v in &mem[addr as usize..(addr + len) as usize] {
+                acc += v;
+            }
+            n += len;
+        });
     }
     let bias = if n == 0 { 0.0 } else { acc / n as f32 };
     let mut writes = Vec::new();
     for pc in &plan.write_pieces {
-        for p in pc.iter_box.points() {
-            let v = 0.5 * bias + point_hash(seed, &p);
-            for (_, addr) in alloc.write_locs(&p) {
-                writes.push((addr, v));
-            }
-        }
+        pc.iter_box.for_each_point(&mut |p| {
+            let v = 0.5 * bias + point_hash(seed, p);
+            alloc.for_each_write_loc(p, &mut |_, addr| writes.push((addr, v)));
+        });
     }
     writes
 }
@@ -306,8 +351,11 @@ impl<'a> BatchCoordinator<'a> {
             waves: self.schedule.num_waves(),
             ..BatchReport::default()
         };
+        // one plan cache across every wave: the canonical interior plan is
+        // derived once and rebased per interior tile
+        let cache = PlanCache::new(self.alloc);
         for wave in self.schedule.waves() {
-            for plan in PlanStream::new(self.alloc, wave, self.threads) {
+            for plan in PlanStream::with_cache(&cache, wave, self.threads) {
                 self.replay_wave(&mut sim, std::slice::from_ref(&plan), &mut report);
             }
         }
@@ -336,6 +384,7 @@ impl<'a> BatchCoordinator<'a> {
             waves: self.schedule.num_waves(),
             ..BatchReport::default()
         };
+        let cache = PlanCache::new(self.alloc);
         for wave in self.schedule.waves() {
             // chunked for bounded memory. applying a chunk's writes before
             // the next chunk's gathers is safe: a gather address is the
@@ -348,7 +397,7 @@ impl<'a> BatchCoordinator<'a> {
                 let host_ref = &host;
                 let results: Vec<(TilePlan, Vec<(u64, f32)>)> =
                     parallel_map(chunk, self.threads, |coords| {
-                        let plan = self.alloc.plan(coords);
+                        let plan = cache.plan(coords);
                         let writes = execute_tile(self.alloc, &plan, host_ref, seed);
                         (plan, writes)
                     });
@@ -468,6 +517,29 @@ mod tests {
                 serial.timing.row_hits + serial.timing.row_misses,
                 serial.timing.axi_bursts
             );
+        }
+    }
+
+    #[test]
+    fn plan_cache_is_bit_identical_to_fresh_planning() {
+        // interior tiles come out of the rebase fast path; every tile's
+        // cached plan must equal alloc.plan(tile) exactly, for all four
+        // allocations
+        let (tiling, deps) = setup();
+        for kind in AllocKind::ALL {
+            let alloc = kind.build(&tiling, &deps).unwrap();
+            let cache = PlanCache::new(alloc.as_ref());
+            assert!(cache.is_interior(&[1, 1, 1]), "{}", kind.name());
+            assert!(!cache.is_interior(&[0, 1, 1]));
+            assert!(!cache.is_interior(&[1, 2, 1]));
+            for coords in tiling.tiles() {
+                assert_eq!(
+                    cache.plan(&coords),
+                    alloc.plan(&coords),
+                    "{} tile {coords:?}",
+                    kind.name()
+                );
+            }
         }
     }
 

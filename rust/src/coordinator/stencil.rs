@@ -163,11 +163,10 @@ pub fn run_stencil(rt: &Runtime, cfg: &StencilRun, mem_cfg: &MemConfig) -> Resul
         )?;
         let (facet_t, facet_u, facet_v) = (&out[0], &out[1], &out[2]);
 
-        // ---- write flow-out facets to global memory
+        // ---- write flow-out facets to global memory (no per-point Vec:
+        // the allocation streams the replicated locations directly)
         let store = |host: &mut HostMemory, p: &[i64], v: f32| {
-            for (_, addr) in alloc.write_locs(p) {
-                host.write(addr, v);
-            }
+            alloc.for_each_write_loc(p, &mut |_, addr| host.write(addr, v));
         };
         for x in 0..ti {
             for y in 0..tj {

@@ -127,11 +127,9 @@ pub fn run_sw(rt: &Runtime, cfg: &SwRun, mem_cfg: &MemConfig) -> Result<RunRepor
         )?;
         let (facet_i, facet_j, facet_k) = (&out[0], &out[1], &out[2]);
 
-        // ---- write facets
+        // ---- write facets (streamed locations, no per-point Vec)
         let store = |host: &mut HostMemory, p: &[i64], v: f32| {
-            for (_, addr) in alloc.write_locs(p) {
-                host.write(addr, v);
-            }
+            alloc.for_each_write_loc(p, &mut |_, addr| host.write(addr, v));
         };
         for x in 0..sj {
             for y in 0..sk {

@@ -55,7 +55,11 @@ pub fn measure_bandwidth(
 /// [`measure_bandwidth`] with `threads` workers burst-planning the tiles.
 /// Replay stays serial in lexicographic order ([`Schedule::flat`] through
 /// the batch coordinator), so the point is bit-identical for any worker
-/// count.
+/// count. Planning flows through the coordinator's
+/// [`crate::layout::PlanCache`]: interior tiles rebase one canonical plan
+/// instead of re-deriving it, which is what makes the dense sweeps
+/// (Fig 15 here, Fig 16/17 through the same `build_alloc` points) cheap at
+/// 128³-tile scale.
 pub fn measure_bandwidth_batched(
     w: &Workload,
     tile: &[i64],
@@ -287,6 +291,35 @@ pub fn fig15_csv(points: &[BandwidthPoint]) -> String {
         ]);
     }
     t.to_csv()
+}
+
+/// JSON export of an area sweep (machine-readable experiment record for
+/// Fig 16/17).
+pub fn area_json(points: &[AreaPoint]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let dev = Device::default();
+    Json::obj(vec![
+        ("figure", Json::str("fig16_17")),
+        (
+            "points",
+            Json::arr(points.iter().map(|p| {
+                Json::obj(vec![
+                    ("benchmark", Json::str(p.benchmark.clone())),
+                    (
+                        "tile",
+                        Json::arr(p.tile.iter().map(|&x| Json::num(x as f64))),
+                    ),
+                    ("alloc", Json::str(p.alloc.clone())),
+                    ("slices", Json::num(p.est.slices as f64)),
+                    ("dsp", Json::num(p.est.dsp as f64)),
+                    ("bram36", Json::num(p.est.bram36 as f64)),
+                    ("slice_pct", Json::num(p.est.slice_pct(&dev))),
+                    ("dsp_pct", Json::num(p.est.dsp_pct(&dev))),
+                    ("bram_pct", Json::num(p.est.bram_pct(&dev))),
+                ])
+            })),
+        ),
+    ])
 }
 
 /// CSV export of an area sweep.

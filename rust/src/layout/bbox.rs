@@ -7,10 +7,12 @@
 //! of the box is transferred and discarded (the grey area of Fig 15).
 
 use crate::layout::{
-    linearize, merge_runs, runs_of_box, write_set, AddrGenProfile, Allocation, Piece, TilePlan,
+    dot, merge_runs, row_major_rebase, row_major_runs, runs_of_box, write_set, AddrGenProfile,
+    Allocation, Piece, TilePlan,
 };
 use crate::poly::deps::DepPattern;
 use crate::poly::flow::flow_in;
+use crate::poly::rect::Rect;
 use crate::poly::tiling::Tiling;
 
 /// Row-major allocation with bounding-box transfers.
@@ -18,13 +20,15 @@ use crate::poly::tiling::Tiling;
 pub struct BoundingBox {
     tiling: Tiling,
     deps: DepPattern,
+    /// Cached row-major strides of the space (fast-path addressing).
+    st: Vec<u64>,
 }
 
 impl BoundingBox {
     pub fn new(tiling: Tiling, deps: DepPattern) -> BoundingBox {
-        BoundingBox { tiling, deps }
+        let st = crate::layout::strides(&tiling.space);
+        BoundingBox { tiling, deps, st }
     }
-
 }
 
 impl Allocation for BoundingBox {
@@ -45,12 +49,12 @@ impl Allocation for BoundingBox {
     }
 
     fn holds(&self, array: usize, p: &[i64]) -> bool {
-        array == 0 && self.tiling.space_rect().contains(p)
+        array == 0 && self.tiling.in_space(p)
     }
 
     fn addr_of(&self, array: usize, p: &[i64]) -> u64 {
         assert!(self.holds(array, p));
-        linearize(p, &self.tiling.space)
+        dot(p, &self.st)
     }
 
     fn plan(&self, coords: &[i64]) -> TilePlan {
@@ -62,7 +66,8 @@ impl Allocation for BoundingBox {
             ..TilePlan::default()
         };
         if let Some(bb) = fin.bbox() {
-            plan.read_runs = merge_runs(runs_of_box(&bb, &self.tiling.space, 0));
+            plan.read_runs = runs_of_box(&bb, &self.tiling.space, 0);
+            merge_runs(&mut plan.read_runs);
             // marshaling still moves only the useful points
             plan.read_pieces = fin
                 .rects()
@@ -74,7 +79,8 @@ impl Allocation for BoundingBox {
                 .collect();
         }
         if let Some(bb) = fout.bbox() {
-            plan.write_runs = merge_runs(runs_of_box(&bb, &self.tiling.space, 0));
+            plan.write_runs = runs_of_box(&bb, &self.tiling.space, 0);
+            merge_runs(&mut plan.write_runs);
             plan.write_pieces = fout
                 .rects()
                 .iter()
@@ -93,6 +99,19 @@ impl Allocation for BoundingBox {
 
     fn write_locs(&self, p: &[i64]) -> Vec<(usize, u64)> {
         vec![(0, self.addr_of(0, p))]
+    }
+
+    fn for_each_write_loc(&self, p: &[i64], f: &mut dyn FnMut(usize, u64)) {
+        f(0, self.addr_of(0, p));
+    }
+
+    fn for_each_run(&self, array: usize, bx: &Rect, f: &mut dyn FnMut(u64, u64)) {
+        debug_assert_eq!(array, 0);
+        row_major_runs(&self.st, bx, f);
+    }
+
+    fn rebase_plan(&self, plan: &TilePlan, from: &[i64], to: &[i64]) -> Option<TilePlan> {
+        row_major_rebase(&self.tiling, &self.deps, &self.st, plan, from, to)
     }
 
     fn addrgen(&self) -> AddrGenProfile {

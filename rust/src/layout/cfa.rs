@@ -33,7 +33,7 @@
 //! keeps partial facet reads contiguous.
 
 use crate::layout::{
-    linearize, merge_runs, runs_of_box, AddrGenProfile, Allocation, Piece, TilePlan,
+    affine_runs, merge_runs, runs_of_box, AddrGenProfile, Allocation, Piece, Run, TilePlan,
 };
 use crate::poly::deps::DepPattern;
 use crate::poly::flow::flow_in;
@@ -84,6 +84,13 @@ pub struct FacetArray {
     pub dims: Vec<i64>,
     /// Base element offset of this array in global memory.
     pub base: u64,
+    /// Cached row-major strides of `dims` (the address-generation fast path
+    /// never re-derives them).
+    pub strides: Vec<u64>,
+    /// Per **iteration axis**: the storage stride of the intra-tile dim that
+    /// axis maps to (`iter_stride[axis] == 1`, the thickness dim). Feeds the
+    /// run cursor's affine walker directly.
+    pub iter_stride: Vec<u64>,
 }
 
 impl FacetArray {
@@ -113,6 +120,9 @@ pub struct Cfa {
     tiling: Tiling,
     deps: DepPattern,
     facets: Vec<FacetArray>,
+    /// axis → index into `facets` (None for inactive axes). Replaces the
+    /// linear `facets.iter().position(..)` scan on the planning hot path.
+    facet_of_axis: Vec<Option<usize>>,
     opts: CfaOpts,
     total: u64,
 }
@@ -181,6 +191,15 @@ impl Cfa {
             let mut dims: Vec<i64> = outer.iter().map(|&o| counts[o]).collect();
             dims.extend(inner.iter().map(|&i| tiling.tile[i]));
             dims.push(w);
+            let strides = crate::layout::strides(&dims);
+            // map every iteration axis to the stride of its intra storage
+            // dim: inner axes in order, then the facet axis (stride 1, the
+            // fastest dim). outer dims carry tile coordinates, not axes.
+            let mut iter_stride = vec![0u64; d];
+            for (i, &ax) in inner.iter().enumerate() {
+                iter_stride[ax] = strides[outer.len() + i];
+            }
+            iter_stride[k] = 1;
             let fa = FacetArray {
                 axis: k,
                 contig,
@@ -189,14 +208,21 @@ impl Cfa {
                 inner_order: inner,
                 dims,
                 base,
+                strides,
+                iter_stride,
             };
             base += fa.size();
             facets.push(fa);
+        }
+        let mut facet_of_axis = vec![None; d];
+        for (fi, fa) in facets.iter().enumerate() {
+            facet_of_axis[fa.axis] = Some(fi);
         }
         Ok(Cfa {
             tiling,
             deps,
             facets,
+            facet_of_axis,
             opts,
             total: base,
         })
@@ -210,16 +236,24 @@ impl Cfa {
         &self.deps
     }
 
-    /// Index of the facet array for axis k.
+    /// Index of the facet array for axis k (precomputed table, O(1)).
     fn facet_index(&self, axis: usize) -> Option<usize> {
-        self.facets.iter().position(|f| f.axis == axis)
+        self.facet_of_axis[axis]
     }
 
-    /// Start of the w-tail of tile `tc` along `axis` (clamped tiles keep a
-    /// w-thick tail unless thinner than w).
+    /// Start of the w-tail along `axis` of the tile with coordinate `tck`
+    /// on that axis (clamped tiles keep a w-thick tail unless thinner than
+    /// w). Allocation-free: only the one axis matters.
+    fn tail_start_axis(&self, tck: i64, axis: usize) -> i64 {
+        let t = self.tiling.tile[axis];
+        let lo = tck * t;
+        let hi = (lo + t).min(self.tiling.space[axis]);
+        (hi - self.deps.width(axis)).max(lo)
+    }
+
+    /// Start of the w-tail of tile `tc` along `axis`.
     fn tail_start(&self, tc: &[i64], axis: usize) -> i64 {
-        let t = self.tiling.tile_rect(tc);
-        (t.hi[axis] - self.deps.width(axis)).max(t.lo[axis])
+        self.tail_start_axis(tc[axis], axis)
     }
 
     /// Map an iteration box contained in one tile's k-tail to the facet
@@ -272,10 +306,10 @@ impl Cfa {
             let hi_pt: IVec = r.hi.iter().map(|h| h - 1).collect();
             let hi_t = self.tiling.tile_of(&hi_pt);
             let trange = Rect::new(lo_t, hi_t.iter().map(|c| c + 1).collect());
-            for tc in trange.points() {
-                let sub = r.intersect(&self.tiling.tile_rect(&tc));
+            trange.for_each_point(&mut |tc| {
+                let sub = r.intersect(&self.tiling.tile_rect(tc));
                 if sub.is_empty() {
-                    continue;
+                    return;
                 }
                 let crossing: Vec<usize> = (0..self.tiling.dims())
                     .filter(|&a| tc[a] != consumer[a])
@@ -283,12 +317,12 @@ impl Cfa {
                 debug_assert!(!crossing.is_empty(), "flow-in piece inside consumer");
                 for &a in &crossing {
                     debug_assert!(
-                        sub.lo[a] >= self.tail_start(&tc, a),
+                        sub.lo[a] >= self.tail_start(tc, a),
                         "coverage violation: {sub:?} not in tail {a} of {tc:?}"
                     );
                 }
-                out.push((tc, sub, crossing));
-            }
+                out.push((tc.to_vec(), sub, crossing));
+            });
         }
         out
     }
@@ -347,24 +381,30 @@ impl Allocation for Cfa {
 
     fn holds(&self, array: usize, p: &[i64]) -> bool {
         let fa = &self.facets[array];
-        let tc = self.tiling.tile_of(p);
-        self.tiling.space_rect().contains(p) && p[fa.axis] >= self.tail_start(&tc, fa.axis)
+        if !self.tiling.in_space(p) {
+            return false;
+        }
+        let tck = p[fa.axis].div_euclid(self.tiling.tile[fa.axis]);
+        p[fa.axis] >= self.tail_start_axis(tck, fa.axis)
     }
 
     fn addr_of(&self, array: usize, p: &[i64]) -> u64 {
         assert!(self.holds(array, p), "facet {array} does not hold {p:?}");
         let fa = &self.facets[array];
-        let tc = self.tiling.tile_of(p);
-        let trect = self.tiling.tile_rect(&tc);
-        let mut coords = Vec::with_capacity(fa.dims.len());
-        for &o in &fa.outer_order {
-            coords.push(tc[o]);
+        let inner0 = fa.outer_order.len();
+        let mut addr = fa.base;
+        for (o, &ax) in fa.outer_order.iter().enumerate() {
+            let tc = p[ax].div_euclid(self.tiling.tile[ax]);
+            addr += tc as u64 * fa.strides[o];
         }
-        for &i in &fa.inner_order {
-            coords.push(p[i] - trect.lo[i]);
+        for (i, &ax) in fa.inner_order.iter().enumerate() {
+            let lo = p[ax].div_euclid(self.tiling.tile[ax]) * self.tiling.tile[ax];
+            addr += (p[ax] - lo) as u64 * fa.strides[inner0 + i];
         }
-        coords.push(p[fa.axis] - self.tail_start(&tc, fa.axis));
-        fa.base + linearize(&coords, &fa.dims)
+        let k = fa.axis;
+        let tck = p[k].div_euclid(self.tiling.tile[k]);
+        // thickness dim is the fastest storage dim (stride 1)
+        addr + (p[k] - self.tail_start_axis(tck, k)) as u64
     }
 
     fn plan(&self, coords: &[i64]) -> TilePlan {
@@ -432,16 +472,18 @@ impl Allocation for Cfa {
         let mut read_runs = Vec::new();
         for (fi, _, abox) in &groups {
             let fa = &self.facets[*fi];
-            let rs = runs_of_box(abox, &fa.dims, fa.base);
+            let mut rs = runs_of_box(abox, &fa.dims, fa.base);
             if self.opts.inter_tile {
-                read_runs.extend(rs);
+                read_runs.append(&mut rs);
             } else {
                 // no cross-tile merging: each group keeps its own bursts
-                plan.read_runs.extend(merge_runs(rs));
+                merge_runs(&mut rs);
+                plan.read_runs.append(&mut rs);
             }
         }
         if self.opts.inter_tile {
-            plan.read_runs = merge_runs(read_runs);
+            merge_runs(&mut read_runs);
+            plan.read_runs = read_runs;
         }
 
         // ---- writes: every facet of this tile, one data tile each (§IV.A:
@@ -451,8 +493,9 @@ impl Allocation for Cfa {
             if dt.is_empty() {
                 continue;
             }
-            let rs = merge_runs(runs_of_box(&dt, &fa.dims, fa.base));
-            plan.write_runs.extend(rs);
+            let mut rs = runs_of_box(&dt, &fa.dims, fa.base);
+            merge_runs(&mut rs);
+            plan.write_runs.append(&mut rs);
             let trect = self.tiling.tile_rect(coords);
             let mut facet_rect = trect.clone();
             facet_rect.lo[fa.axis] = self.tail_start(coords, fa.axis);
@@ -465,9 +508,9 @@ impl Allocation for Cfa {
     }
 
     fn read_loc(&self, p: &[i64]) -> (usize, u64) {
-        let tc = self.tiling.tile_of(p);
         for (fi, fa) in self.facets.iter().enumerate() {
-            if p[fa.axis] >= self.tail_start(&tc, fa.axis) {
+            let tck = p[fa.axis].div_euclid(self.tiling.tile[fa.axis]);
+            if p[fa.axis] >= self.tail_start_axis(tck, fa.axis) {
                 return (fi, self.addr_of(fi, p));
             }
         }
@@ -475,14 +518,94 @@ impl Allocation for Cfa {
     }
 
     fn write_locs(&self, p: &[i64]) -> Vec<(usize, u64)> {
-        let tc = self.tiling.tile_of(p);
         let mut out = Vec::new();
+        self.for_each_write_loc(p, &mut |array, addr| out.push((array, addr)));
+        out
+    }
+
+    fn for_each_write_loc(&self, p: &[i64], f: &mut dyn FnMut(usize, u64)) {
         for (fi, fa) in self.facets.iter().enumerate() {
-            if p[fa.axis] >= self.tail_start(&tc, fa.axis) {
-                out.push((fi, self.addr_of(fi, p)));
+            let tck = p[fa.axis].div_euclid(self.tiling.tile[fa.axis]);
+            if p[fa.axis] >= self.tail_start_axis(tck, fa.axis) {
+                f(fi, self.addr_of(fi, p));
             }
         }
-        out
+    }
+
+    fn for_each_run(&self, array: usize, bx: &Rect, f: &mut dyn FnMut(u64, u64)) {
+        if bx.is_empty() {
+            return;
+        }
+        let one_tile = (0..bx.dims()).all(|a| {
+            let t = self.tiling.tile[a];
+            bx.lo[a].div_euclid(t) == (bx.hi[a] - 1).div_euclid(t)
+        });
+        if !one_tile {
+            // valid per the trait contract but outside the affine fast path
+            // (plan pieces never span tiles): coalesce per-point addresses
+            // so the method stays total instead of emitting wrong runs
+            crate::layout::coalesce_point_runs(self, array, bx, f);
+            return;
+        }
+        let fa = &self.facets[array];
+        // inside one tile the facet address map is affine in p, with the
+        // cached per-axis strides; anchor at the box origin
+        let base = self.addr_of(array, &bx.lo);
+        affine_runs(bx, &fa.iter_stride, base, f);
+    }
+
+    fn rebase_plan(&self, plan: &TilePlan, from: &[i64], to: &[i64]) -> Option<TilePlan> {
+        // Per-facet address delta: the outer storage dims hold tile
+        // coordinates, so a tile translation moves every address of facet
+        // fi by a constant — but a *different* constant per facet (their
+        // outer orders differ). Runs carry no array tag, so attribute each
+        // run to the unique facet whose address range contains it; interior
+        // tiles never produce runs that straddle a facet boundary.
+        let deltas: Vec<i64> = self
+            .facets
+            .iter()
+            .map(|fa| {
+                fa.outer_order
+                    .iter()
+                    .enumerate()
+                    .map(|(o, &ax)| (to[ax] - from[ax]) * fa.strides[o] as i64)
+                    .sum()
+            })
+            .collect();
+        let mv_runs = |runs: &[Run]| -> Option<Vec<Run>> {
+            let mut out = Vec::with_capacity(runs.len());
+            for r in runs {
+                let fi = self
+                    .facets
+                    .iter()
+                    .position(|fa| r.addr >= fa.base && r.end() <= fa.base + fa.size())?;
+                out.push(Run {
+                    addr: (r.addr as i64 + deltas[fi]) as u64,
+                    len: r.len,
+                });
+            }
+            Some(out)
+        };
+        let shift: IVec = (0..self.tiling.dims())
+            .map(|k| (to[k] - from[k]) * self.tiling.tile[k])
+            .collect();
+        let mv_pieces = |pieces: &[Piece]| -> Vec<Piece> {
+            pieces
+                .iter()
+                .map(|pc| Piece {
+                    array: pc.array,
+                    iter_box: pc.iter_box.shift(&shift),
+                })
+                .collect()
+        };
+        Some(TilePlan {
+            read_runs: mv_runs(&plan.read_runs)?,
+            write_runs: mv_runs(&plan.write_runs)?,
+            read_pieces: mv_pieces(&plan.read_pieces),
+            write_pieces: mv_pieces(&plan.write_pieces),
+            read_useful: plan.read_useful,
+            write_useful: plan.write_useful,
+        })
     }
 
     fn addrgen(&self) -> AddrGenProfile {
@@ -491,7 +614,7 @@ impl Allocation for Cfa {
             ..AddrGenProfile::default()
         };
         for fa in &self.facets {
-            let st = crate::layout::strides(&fa.dims);
+            let st = &fa.strides;
             // off-chip base address: one multiply-add per outer dim
             for (k, _) in fa.outer_order.iter().enumerate() {
                 let s = st[k];
@@ -728,6 +851,45 @@ mod tests {
             t_full <= t_no_inter,
             "inter-tile merging should not increase bursts ({t_full} vs {t_no_inter})"
         );
+    }
+
+    #[test]
+    fn run_cursor_matches_pointwise_addr_of() {
+        let cfa = fig5();
+        for tc in cfa.tiling().tiles() {
+            let plan = cfa.plan(&tc);
+            for pc in plan.read_pieces.iter().chain(&plan.write_pieces) {
+                let mut from_runs: Vec<u64> = Vec::new();
+                cfa.for_each_run(pc.array, &pc.iter_box, &mut |a, l| {
+                    from_runs.extend(a..a + l)
+                });
+                let per_point: Vec<u64> = pc
+                    .iter_box
+                    .points()
+                    .map(|p| cfa.addr_of(pc.array, &p))
+                    .collect();
+                assert_eq!(from_runs, per_point, "tile {tc:?} piece {pc:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn rebase_matches_fresh_plan_on_interior_tiles() {
+        let tiling = Tiling::new(vec![20, 20, 20], vec![5, 5, 5]);
+        let deps = DepPattern::new(vec![
+            vec![-1, 0, 0],
+            vec![0, -2, 0],
+            vec![0, 0, -2],
+            vec![-1, -1, -1],
+        ])
+        .unwrap();
+        let cfa = Cfa::new(tiling, deps).unwrap();
+        let from = vec![1, 1, 1];
+        let canon = cfa.plan(&from);
+        for to in [vec![1, 1, 1], vec![1, 1, 2], vec![2, 2, 2], vec![2, 1, 1]] {
+            let rebased = cfa.rebase_plan(&canon, &from, &to).unwrap();
+            assert_eq!(rebased, cfa.plan(&to), "rebase {from:?} -> {to:?}");
+        }
     }
 
     #[test]

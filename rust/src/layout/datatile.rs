@@ -10,7 +10,8 @@
 //! barely-used data tiles.
 
 use crate::layout::{
-    linearize, merge_runs, write_set, AddrGenProfile, Allocation, Piece, Run, TilePlan,
+    merge_runs, translate_plan_uniform, write_set, AddrGenProfile, Allocation, Piece, Run,
+    TilePlan,
 };
 use crate::poly::deps::DepPattern;
 use crate::poly::flow::flow_in;
@@ -25,6 +26,12 @@ pub struct DataTiling {
     deps: DepPattern,
     /// Data-tile grid over the iteration space (sizes = `c`).
     grid: Tiling,
+    /// Cached row-major strides of the grid's tile counts (data-tile index).
+    gst: Vec<u64>,
+    /// Cached row-major strides of one data tile (intra-tile offset).
+    ist: Vec<u64>,
+    /// Full volume of one (interior) data tile.
+    vol: u64,
 }
 
 impl DataTiling {
@@ -37,7 +44,17 @@ impl DataTiling {
             .map(|(ci, t)| (*ci).clamp(1, *t))
             .collect();
         let grid = Tiling::new(tiling.space.clone(), c);
-        DataTiling { tiling, deps, grid }
+        let gst = crate::layout::strides(&grid.tile_counts());
+        let ist = crate::layout::strides(&grid.tile);
+        let vol = grid.tile.iter().map(|&c| c as u64).product();
+        DataTiling {
+            tiling,
+            deps,
+            grid,
+            gst,
+            ist,
+            vol,
+        }
     }
 
     /// The data-tile edge sizes in use.
@@ -47,12 +64,26 @@ impl DataTiling {
 
     /// Full volume of one (interior) data tile.
     fn dt_volume(&self) -> u64 {
-        self.grid.tile.iter().map(|&c| c as u64).product()
+        self.vol
     }
 
     /// Linear index of a data tile (row-major over the data-tile grid).
     fn dt_index(&self, dtc: &[i64]) -> u64 {
-        linearize(dtc, &self.grid.tile_counts())
+        dtc.iter().zip(&self.gst).map(|(c, s)| *c as u64 * s).sum()
+    }
+
+    /// Element address of `p`, allocation-free (two-level addressing:
+    /// data-tile index × volume + intra-tile row-major offset).
+    fn addr_at(&self, p: &[i64]) -> u64 {
+        let mut idx = 0u64;
+        let mut intra = 0u64;
+        for (k, &x) in p.iter().enumerate() {
+            let c = self.grid.tile[k];
+            let dtc = x.div_euclid(c);
+            idx += dtc as u64 * self.gst[k];
+            intra += (x - dtc * c) as u64 * self.ist[k];
+        }
+        idx * self.vol + intra
     }
 
     /// Bursts transferring every data tile touched by `region`, whole.
@@ -66,21 +97,20 @@ impl DataTiling {
             let hi_pt: IVec = r.hi.iter().map(|h| h - 1).collect();
             let hi_t = self.grid.tile_of(&hi_pt);
             let trange = Rect::new(lo_t, hi_t.iter().map(|c| c + 1).collect());
-            for tc in trange.points() {
-                idxs.push(self.dt_index(&tc));
-            }
+            trange.for_each_point(&mut |tc| idxs.push(self.dt_index(tc)));
         }
         idxs.sort_unstable();
         idxs.dedup();
         let vol = self.dt_volume();
-        merge_runs(
-            idxs.iter()
-                .map(|i| Run {
-                    addr: i * vol,
-                    len: vol,
-                })
-                .collect(),
-        )
+        let mut runs: Vec<Run> = idxs
+            .iter()
+            .map(|i| Run {
+                addr: i * vol,
+                len: vol,
+            })
+            .collect();
+        merge_runs(&mut runs);
+        runs
     }
 }
 
@@ -103,15 +133,12 @@ impl Allocation for DataTiling {
     }
 
     fn holds(&self, array: usize, p: &[i64]) -> bool {
-        array == 0 && self.tiling.space_rect().contains(p)
+        array == 0 && self.tiling.in_space(p)
     }
 
     fn addr_of(&self, array: usize, p: &[i64]) -> u64 {
         assert!(self.holds(array, p));
-        let dtc = self.grid.tile_of(p);
-        let dtr = self.grid.tile_rect(&dtc);
-        let intra: IVec = p.iter().zip(&dtr.lo).map(|(x, l)| x - l).collect();
-        self.dt_index(&dtc) * self.dt_volume() + linearize(&intra, &self.grid.tile)
+        self.addr_at(p)
     }
 
     fn plan(&self, coords: &[i64]) -> TilePlan {
@@ -147,6 +174,81 @@ impl Allocation for DataTiling {
 
     fn write_locs(&self, p: &[i64]) -> Vec<(usize, u64)> {
         vec![(0, self.addr_of(0, p))]
+    }
+
+    fn for_each_write_loc(&self, p: &[i64], f: &mut dyn FnMut(usize, u64)) {
+        f(0, self.addr_of(0, p));
+    }
+
+    fn for_each_run(&self, array: usize, bx: &Rect, f: &mut dyn FnMut(u64, u64)) {
+        debug_assert_eq!(array, 0);
+        if bx.is_empty() {
+            return;
+        }
+        // The address map is affine only *within* a data tile, so walk the
+        // box's rows (last axis fastest — point order) and split each row
+        // at the data-tile boundaries along the last axis: inside a segment
+        // the intra stride is 1, so the segment is one run.
+        let d = bx.dims();
+        if d == 0 {
+            f(self.addr_at(&[]), 1);
+            return;
+        }
+        let c_last = self.grid.tile[d - 1];
+        let (row_lo, row_hi) = (bx.lo[d - 1], bx.hi[d - 1]);
+        // address hop when the row crosses into the next data tile along
+        // the last axis: grid index +1 there, intra offset back to zero
+        let gstep = self.gst[d - 1] * self.vol;
+        let mut emit_row = |row_start_addr: u64, f: &mut dyn FnMut(u64, u64)| {
+            let mut x = row_lo;
+            let mut addr = row_start_addr;
+            while x < row_hi {
+                let dtc = x.div_euclid(c_last);
+                let seg_end = row_hi.min((dtc + 1) * c_last);
+                f(addr, (seg_end - x) as u64);
+                addr = addr + gstep - (x - dtc * c_last) as u64;
+                x = seg_end;
+            }
+        };
+        if d == 1 {
+            emit_row(self.addr_at(&[row_lo]), f);
+        } else {
+            let outer = Rect::new(bx.lo[..d - 1].to_vec(), bx.hi[..d - 1].to_vec());
+            let mut p = vec![0i64; d];
+            p[d - 1] = row_lo;
+            outer.for_each_point(&mut |op| {
+                p[..d - 1].copy_from_slice(op);
+                emit_row(self.addr_at(&p), &mut *f);
+            });
+        }
+    }
+
+    fn rebase_plan(&self, plan: &TilePlan, from: &[i64], to: &[i64]) -> Option<TilePlan> {
+        // Translation-exact only when the data-tile grid divides the
+        // iteration tile: then a tile shift moves whole data tiles and the
+        // index arithmetic shifts uniformly. Otherwise the grid alignment
+        // differs between interior tiles and the cache must not be used.
+        let d = self.tiling.dims();
+        if (0..d).any(|k| self.tiling.tile[k] % self.grid.tile[k] != 0) {
+            return None;
+        }
+        // widths beyond the tile size break interior translation-exactness
+        // (flow escapes the immediate neighbor ring; see
+        // `layout::row_major_rebase`)
+        if (0..d).any(|k| self.deps.width(k) > self.tiling.tile[k]) {
+            return None;
+        }
+        let delta_idx: i64 = (0..d)
+            .map(|k| {
+                let dt_per_tile = self.tiling.tile[k] / self.grid.tile[k];
+                (to[k] - from[k]) * dt_per_tile * self.gst[k] as i64
+            })
+            .sum();
+        let delta = delta_idx * self.vol as i64;
+        let shift: Vec<i64> = (0..d)
+            .map(|k| (to[k] - from[k]) * self.tiling.tile[k])
+            .collect();
+        Some(translate_plan_uniform(plan, delta, &shift))
     }
 
     fn addrgen(&self) -> AddrGenProfile {
@@ -285,6 +387,32 @@ mod tests {
         assert!(plan.read_raw() >= plan.read_useful);
         // flow-in is a thin halo; whole-tile transfer is heavily redundant
         assert!(plan.read_raw() > 2 * plan.read_useful);
+    }
+
+    #[test]
+    fn run_cursor_splits_rows_at_grid_boundaries() {
+        let dt = setup(vec![4, 4]);
+        let bx = Rect::new(vec![1, 2], vec![3, 10]);
+        let mut runs: Vec<(u64, u64)> = Vec::new();
+        dt.for_each_run(0, &bx, &mut |a, l| runs.push((a, l)));
+        let concat: Vec<u64> = runs.iter().flat_map(|&(a, l)| a..a + l).collect();
+        let per_point: Vec<u64> = bx.points().map(|p| dt.addr_of(0, &p)).collect();
+        assert_eq!(concat, per_point);
+        // no run crosses a data-tile row segment (c_last = 4)
+        assert!(runs.iter().all(|&(_, l)| l <= 4), "{runs:?}");
+    }
+
+    #[test]
+    fn rebase_requires_divisible_grid() {
+        let tiling = Tiling::new(vec![16, 16], vec![8, 8]);
+        let deps = DepPattern::new(vec![vec![-1, 0], vec![0, -1]]).unwrap();
+        let divisible = DataTiling::new(tiling.clone(), deps.clone(), vec![4, 4]);
+        let plan = divisible.plan(&[1, 1]);
+        assert!(divisible.rebase_plan(&plan, &[1, 1], &[1, 1]).is_some());
+        // 8 % 3 != 0: grid alignment differs between interior tiles
+        let skewed = DataTiling::new(tiling, deps, vec![3, 3]);
+        let plan = skewed.plan(&[1, 1]);
+        assert!(skewed.rebase_plan(&plan, &[1, 1], &[1, 1]).is_none());
     }
 
     #[test]

@@ -43,7 +43,7 @@ impl Run {
 /// A rectangular chunk of iteration points an array stores / a plan moves,
 /// used by the coordinator to marshal values between host memory and the
 /// on-chip buffers (the timing path uses the [`Run`]s instead).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Piece {
     /// Index of the allocation-internal array holding the points.
     pub array: usize,
@@ -51,8 +51,9 @@ pub struct Piece {
     pub iter_box: Rect,
 }
 
-/// Burst transfer plan of one tile (§V.C).
-#[derive(Clone, Debug, Default)]
+/// Burst transfer plan of one tile (§V.C). `PartialEq` compares every run,
+/// piece and counter — the memoization identity tests rely on it.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct TilePlan {
     /// Flow-in bursts, issue order.
     pub read_runs: Vec<Run>,
@@ -143,6 +144,227 @@ pub trait Allocation: Send + Sync {
 
     /// Address-generator complexity (for the area model).
     fn addrgen(&self) -> AddrGenProfile;
+
+    /// **Run cursor** — the burst-grained replacement for per-point
+    /// [`Allocation::addr_of`] on the marshalling path. Visits `(addr, len)`
+    /// address runs of `bx` in **row-major point order**: concatenating the
+    /// visited intervals reproduces `[addr_of(array, p) for p in
+    /// bx.points()]` element for element, so callers copy slices (or scan
+    /// them) instead of linearizing every point, while any fold over the
+    /// values stays bit-identical to the pointwise loop.
+    ///
+    /// Total for any box `array` holds. Plan pieces take the allocation's
+    /// native fast path (for CFA: contained in one tile and held entirely
+    /// by `array`, which `plan` guarantees — other boxes fall back to
+    /// per-point coalescing). The default implementation
+    /// (`coalesce_point_runs`) is the reference semantics; every in-tree
+    /// allocation overrides it with an allocation-free native walker.
+    fn for_each_run(&self, array: usize, bx: &Rect, f: &mut dyn FnMut(u64, u64)) {
+        coalesce_point_runs(self, array, bx, f);
+    }
+
+    /// Visit every location the producer tile writes `p` to, in the same
+    /// order [`Allocation::write_locs`] lists them, without materializing a
+    /// `Vec` per point (the marshalling loops call this per flow-out point).
+    fn for_each_write_loc(&self, p: &[i64], f: &mut dyn FnMut(usize, u64)) {
+        for (array, addr) in self.write_locs(p) {
+            f(array, addr);
+        }
+    }
+
+    /// Rebase a plan computed for interior tile `from` onto interior tile
+    /// `to`, in O(#runs + #pieces) — the engine behind [`PlanCache`].
+    ///
+    /// Contract: when both tiles are interior tiles of an **exact** tiling
+    /// (every coordinate in `1..count-1`, tile sizes dividing the space),
+    /// the result must be **bit-identical** to `self.plan(to)`. Allocations
+    /// whose address function is not translation-equivariant under tile
+    /// shifts return `None` (the default) and callers re-plan from scratch;
+    /// `rebase_plan(plan, c, c)` doubles as the support probe.
+    fn rebase_plan(&self, plan: &TilePlan, from: &[i64], to: &[i64]) -> Option<TilePlan> {
+        let _ = (plan, from, to);
+        None
+    }
+}
+
+/// Reference run enumeration behind [`Allocation::for_each_run`]'s default:
+/// walk the box in row-major point order and coalesce consecutive
+/// addresses. Total for any box the allocation holds — no affine
+/// precondition — so it is also CFA's fallback for boxes spanning tiles.
+pub(crate) fn coalesce_point_runs<A: Allocation + ?Sized>(
+    alloc: &A,
+    array: usize,
+    bx: &Rect,
+    f: &mut dyn FnMut(u64, u64),
+) {
+    let mut cur: Option<(u64, u64)> = None;
+    bx.for_each_point(&mut |p| {
+        let a = alloc.addr_of(array, p);
+        match &mut cur {
+            Some((start, len)) if a == *start + *len => *len += 1,
+            _ => {
+                if let Some((s, l)) = cur.take() {
+                    f(s, l);
+                }
+                cur = Some((a, 1));
+            }
+        }
+    });
+    if let Some((s, l)) = cur {
+        f(s, l);
+    }
+}
+
+/// Dot product of a point with cached row-major strides — the single
+/// definition of the linear address map the fast paths share.
+#[inline]
+pub(crate) fn dot(p: &[i64], st: &[u64]) -> u64 {
+    p.iter().zip(st).map(|(x, s)| *x as u64 * s).sum()
+}
+
+/// Translate a plan by a uniform address delta plus an iteration-space
+/// shift — the [`Allocation::rebase_plan`] step shared by the single-array
+/// row-major allocations (original, bbox, data tiling), whose address maps
+/// are globally affine so every run moves by the same amount.
+pub fn translate_plan_uniform(plan: &TilePlan, delta: i64, shift: &[i64]) -> TilePlan {
+    let mv_runs = |runs: &[Run]| -> Vec<Run> {
+        runs.iter()
+            .map(|r| Run {
+                addr: (r.addr as i64 + delta) as u64,
+                len: r.len,
+            })
+            .collect()
+    };
+    let mv_pieces = |pieces: &[Piece]| -> Vec<Piece> {
+        pieces
+            .iter()
+            .map(|pc| Piece {
+                array: pc.array,
+                iter_box: pc.iter_box.shift(shift),
+            })
+            .collect()
+    };
+    TilePlan {
+        read_runs: mv_runs(&plan.read_runs),
+        write_runs: mv_runs(&plan.write_runs),
+        read_pieces: mv_pieces(&plan.read_pieces),
+        write_pieces: mv_pieces(&plan.write_pieces),
+        read_useful: plan.read_useful,
+        write_useful: plan.write_useful,
+    }
+}
+
+/// Run cursor of a globally row-major single-array layout (shared by the
+/// original and bounding-box baselines): the whole space is one affine map,
+/// so the walker anchors at the box origin's dot product with the strides.
+pub(crate) fn row_major_runs(st: &[u64], bx: &Rect, f: &mut dyn FnMut(u64, u64)) {
+    if bx.is_empty() {
+        return;
+    }
+    affine_runs(bx, st, dot(&bx.lo, st), f);
+}
+
+/// [`Allocation::rebase_plan`] of a globally row-major single-array layout:
+/// one uniform address delta per tile translation. Opts out (`None`) when a
+/// dependence width exceeds the tile size — flow then escapes the immediate
+/// neighbor ring, so even interior tiles' flow regions can be clipped by
+/// the space boundary and translation-exactness breaks.
+pub(crate) fn row_major_rebase(
+    tiling: &crate::poly::tiling::Tiling,
+    deps: &crate::poly::deps::DepPattern,
+    st: &[u64],
+    plan: &TilePlan,
+    from: &[i64],
+    to: &[i64],
+) -> Option<TilePlan> {
+    let d = tiling.dims();
+    if (0..d).any(|k| deps.width(k) > tiling.tile[k]) {
+        return None;
+    }
+    let delta: i64 = (0..d)
+        .map(|k| (to[k] - from[k]) * tiling.tile[k] * st[k] as i64)
+        .sum();
+    let shift: Vec<i64> = (0..d).map(|k| (to[k] - from[k]) * tiling.tile[k]).collect();
+    Some(translate_plan_uniform(plan, delta, &shift))
+}
+
+/// Memoized burst planning over one allocation (§IV read through a systems
+/// lens): the interior tiles of an exact uniform tiling are translates of
+/// one another, so their plans are translates too — one canonical interior
+/// plan, derived once, rebases to any interior tile in O(#runs) instead of
+/// re-running the full region algebra + `runs_of_box` + `merge_runs`
+/// pipeline per tile. Boundary tiles (and tilings with no interior, partial
+/// boundary tiles, or an allocation that opts out of
+/// [`Allocation::rebase_plan`]) fall back to fresh planning, so
+/// `cache.plan(c)` is **bit-identical** to `alloc.plan(c)` for every tile —
+/// the identity the fast-path property tests pin down.
+///
+/// The canonical plan is derived lazily behind a [`std::sync::OnceLock`],
+/// so a cache shared by reference across `util::par` workers stays `Sync`
+/// and plans each tile exactly as the serial path would.
+pub struct PlanCache<'a> {
+    alloc: &'a dyn Allocation,
+    counts: IVec,
+    /// Interior class exists: exact tiling, ≥ 3 tiles per axis (coordinates
+    /// `1..count-1` then see full-size neighbors on every side, so flow
+    /// regions are never clipped by the space boundary — the precondition
+    /// of translation-exactness).
+    enabled: bool,
+    canon: std::sync::OnceLock<Option<(IVec, TilePlan)>>,
+}
+
+impl<'a> PlanCache<'a> {
+    pub fn new(alloc: &'a dyn Allocation) -> PlanCache<'a> {
+        let tiling = alloc.tiling();
+        let counts = tiling.tile_counts();
+        let enabled = tiling.is_exact() && counts.iter().all(|&c| c >= 3);
+        PlanCache {
+            alloc,
+            counts,
+            enabled,
+            canon: std::sync::OnceLock::new(),
+        }
+    }
+
+    /// True iff `coords` belongs to the memoizable interior class.
+    pub fn is_interior(&self, coords: &[i64]) -> bool {
+        self.enabled
+            && coords
+                .iter()
+                .zip(&self.counts)
+                .all(|(c, n)| *c >= 1 && *c < n - 1)
+    }
+
+    fn canon(&self) -> Option<&(IVec, TilePlan)> {
+        self.canon
+            .get_or_init(|| {
+                let c0: IVec = vec![1; self.counts.len()];
+                let plan = self.alloc.plan(&c0);
+                // probe: the allocation must support exact rebasing (data
+                // tiling opts out when the grid does not divide the tile)
+                self.alloc.rebase_plan(&plan, &c0, &c0)?;
+                Some((c0, plan))
+            })
+            .as_ref()
+    }
+
+    /// Plan `coords`: rebased from the canonical interior plan when
+    /// possible, freshly derived otherwise. Always equals `alloc.plan`.
+    pub fn plan(&self, coords: &[i64]) -> TilePlan {
+        if self.is_interior(coords) {
+            if let Some((c0, plan)) = self.canon() {
+                if let Some(rebased) = self.alloc.rebase_plan(plan, c0, coords) {
+                    return rebased;
+                }
+            }
+        }
+        self.alloc.plan(coords)
+    }
+
+    /// The allocation this cache plans against.
+    pub fn alloc(&self) -> &'a dyn Allocation {
+        self.alloc
+    }
 }
 
 /// The **write set** of a tile: the union of its facets (§IV.A: "all write
@@ -184,6 +406,66 @@ pub fn linearize(coords: &[i64], dims: &[i64]) -> u64 {
         .sum()
 }
 
+/// Enumerate the contiguous address runs of a box under the affine map
+/// `addr(p) = base + Σ_k s[k]·(p[k] − bx.lo[k])`, visiting them in
+/// **row-major point order**: concatenating the visited intervals
+/// reproduces `[addr(p) for p in bx.points()]` element for element. This is
+/// the engine behind every [`Allocation::for_each_run`] implementation —
+/// zero heap allocation beyond one small index buffer, addresses maintained
+/// incrementally instead of re-linearized per point.
+///
+/// The longest *chained* trailing suffix of axes (unit stride innermost,
+/// each next stride equal to the point count of the suffix inside it;
+/// singleton axes chain for free) collapses into the run length; the
+/// remaining outer axes are walked with carries.
+pub fn affine_runs(bx: &Rect, s: &[u64], base: u64, f: &mut dyn FnMut(u64, u64)) {
+    debug_assert_eq!(bx.dims(), s.len());
+    if bx.is_empty() {
+        return;
+    }
+    let d = bx.dims();
+    // Longest chained suffix: iterating it row-major advances the address
+    // by exactly 1 per point.
+    let mut run_len = 1u64;
+    let mut m = d;
+    while m > 0 {
+        let ext = bx.extent(m - 1) as u64;
+        if ext == 1 {
+            m -= 1; // degenerate axis: never advances, chains for free
+            continue;
+        }
+        if s[m - 1] != run_len {
+            break;
+        }
+        run_len *= ext;
+        m -= 1;
+    }
+    if m == 0 {
+        f(base, run_len);
+        return;
+    }
+    // Walk the outer axes [0, m) row-major, maintaining the run address.
+    let mut idx = vec![0i64; m];
+    let mut addr = base;
+    loop {
+        f(addr, run_len);
+        let mut k = m;
+        loop {
+            if k == 0 {
+                return;
+            }
+            k -= 1;
+            idx[k] += 1;
+            addr += s[k];
+            if idx[k] < bx.extent(k) {
+                break;
+            }
+            addr -= s[k] * bx.extent(k) as u64;
+            idx[k] = 0;
+        }
+    }
+}
+
 /// Maximal contiguous address runs of a box within a row-major array.
 ///
 /// `bx` must satisfy `0 <= lo <= hi <= dims` per dimension. Runs are emitted
@@ -201,69 +483,46 @@ pub fn runs_of_box(bx: &Rect, dims: &[i64], base: u64) -> Vec<Run> {
             "box {bx:?} out of array bounds {dims:?}"
         );
     }
-    let d = dims.len();
-    if d == 0 {
+    if dims.is_empty() {
         return vec![Run { addr: base, len: 1 }];
     }
-    // Longest suffix of dims fully covered by the box.
-    let mut m = d; // first index of the full suffix
-    while m > 0 && bx.lo[m - 1] == 0 && bx.hi[m - 1] == dims[m - 1] {
-        m -= 1;
-    }
-    if m == 0 {
-        // whole array
-        return vec![Run {
-            addr: base,
-            len: dims.iter().map(|&x| x as u64).product(),
-        }];
-    }
-    // Runs vary over dims [0, m-1); the run dim is m-1; dims >= m are full.
+    // Row-major strides make point order == address order, so the affine
+    // walker emits exactly the maximal ascending runs.
     let st = strides(dims);
-    let run_len = bx.extent(m - 1) as u64 * st[m - 1];
-    let outer = Rect::new(bx.lo[..m - 1].to_vec(), bx.hi[..m - 1].to_vec());
-    let mut out = Vec::with_capacity(outer.volume() as usize);
-    let mut emit = |coords: &[i64]| {
-        let mut addr = base + bx.lo[m - 1] as u64 * st[m - 1];
-        for (k, c) in coords.iter().enumerate() {
-            addr += *c as u64 * st[k];
-        }
-        out.push(Run {
-            addr,
-            len: run_len,
-        });
-    };
-    if m == 1 {
-        emit(&[]);
-    } else {
-        for coords in outer.points() {
-            emit(&coords);
-        }
-    }
+    let base0 = base + dot(&bx.lo, &st);
+    let mut out = Vec::new();
+    affine_runs(bx, &st, base0, &mut |addr, len| {
+        out.push(Run { addr, len });
+    });
     out
 }
 
-/// Sort runs by address and merge overlapping / exactly-adjacent ones —
-/// inter-tile contiguity in action (§IV.H): a facet read extending into the
-/// neighboring data tile becomes a single burst here.
-pub fn merge_runs(mut runs: Vec<Run>) -> Vec<Run> {
-    if runs.is_empty() {
-        return runs;
+/// Sort runs by address and merge overlapping / exactly-adjacent ones,
+/// in place — inter-tile contiguity in action (§IV.H): a facet read
+/// extending into the neighboring data tile becomes a single burst here.
+/// Already-sorted input (the common case: [`runs_of_box`] emits ascending)
+/// skips the sort entirely, and the compaction reuses the input buffer.
+pub fn merge_runs(runs: &mut Vec<Run>) {
+    if runs.len() > 1 && runs.windows(2).any(|w| w[0].addr > w[1].addr) {
+        runs.sort_by_key(|r| r.addr);
     }
-    runs.sort_by_key(|r| r.addr);
-    let mut out: Vec<Run> = Vec::with_capacity(runs.len());
-    for r in runs {
+    let mut w = 0usize;
+    let mut i = 0usize;
+    while i < runs.len() {
+        let r = runs[i];
+        i += 1;
         if r.len == 0 {
             continue;
         }
-        match out.last_mut() {
-            Some(last) if r.addr <= last.end() => {
-                let new_end = last.end().max(r.end());
-                last.len = new_end - last.addr;
-            }
-            _ => out.push(r),
+        if w > 0 && r.addr <= runs[w - 1].end() {
+            let new_end = runs[w - 1].end().max(r.end());
+            runs[w - 1].len = new_end - runs[w - 1].addr;
+        } else {
+            runs[w] = r;
+            w += 1;
         }
     }
-    out
+    runs.truncate(w);
 }
 
 /// Runs of a whole region (used by the original-layout baseline: exact
@@ -273,7 +532,8 @@ pub fn runs_of_region(region: &Region, dims: &[i64], base: u64) -> Vec<Run> {
     for r in region.rects() {
         runs.extend(runs_of_box(r, dims, base));
     }
-    merge_runs(runs)
+    merge_runs(&mut runs);
+    runs
 }
 
 /// Convenience: all iteration points behind a plan's pieces (tests only).
@@ -357,16 +617,39 @@ mod tests {
 
     #[test]
     fn merge_adjacent_and_overlapping() {
-        let merged = merge_runs(vec![
+        let mut merged = vec![
             Run { addr: 10, len: 5 },
             Run { addr: 0, len: 4 },
             Run { addr: 15, len: 5 },
             Run { addr: 4, len: 2 },
-        ]);
+        ];
+        merge_runs(&mut merged);
         assert_eq!(
             merged,
             vec![Run { addr: 0, len: 6 }, Run { addr: 10, len: 10 }]
         );
+    }
+
+    #[test]
+    fn merge_skips_sort_on_sorted_input_and_drops_empties() {
+        let mut runs = vec![
+            Run { addr: 0, len: 0 },
+            Run { addr: 2, len: 3 },
+            Run { addr: 5, len: 0 },
+            Run { addr: 5, len: 1 },
+            Run { addr: 9, len: 2 },
+        ];
+        merge_runs(&mut runs);
+        assert_eq!(
+            runs,
+            vec![Run { addr: 2, len: 4 }, Run { addr: 9, len: 2 }]
+        );
+        let mut empty: Vec<Run> = Vec::new();
+        merge_runs(&mut empty);
+        assert!(empty.is_empty());
+        let mut zero = vec![Run { addr: 7, len: 0 }];
+        merge_runs(&mut zero);
+        assert!(zero.is_empty());
     }
 
     #[test]
@@ -401,6 +684,37 @@ mod tests {
     }
 
     #[test]
+    fn prop_affine_runs_enumerate_points_in_order() {
+        // the fast-path contract: concatenating the walker's runs yields
+        // exactly [addr(p) for p in bx.points()], for arbitrary strides
+        run("affine_runs ≡ per-point affine map", Config::small(80), |g| {
+            let d = g.usize(1, 3);
+            let lo: Vec<i64> = (0..d).map(|_| g.i64(0, 3)).collect();
+            let ext: Vec<i64> = (0..d).map(|_| g.i64(0, 4)).collect();
+            let hi: Vec<i64> = lo.iter().zip(&ext).map(|(l, e)| l + e).collect();
+            let bx = Rect::new(lo, hi);
+            let s: Vec<u64> = (0..d).map(|_| g.i64(1, 30) as u64).collect();
+            let base = g.i64(0, 100) as u64;
+            let mut from_runs: Vec<u64> = Vec::new();
+            affine_runs(&bx, &s, base, &mut |addr, len| {
+                from_runs.extend(addr..addr + len);
+            });
+            let per_point: Vec<u64> = bx
+                .points()
+                .map(|p| {
+                    base + p
+                        .iter()
+                        .zip(&bx.lo)
+                        .zip(&s)
+                        .map(|((x, l), st)| (x - l) as u64 * st)
+                        .sum::<u64>()
+                })
+                .collect();
+            assert_eq!(from_runs, per_point, "box {bx:?} strides {s:?}");
+        });
+    }
+
+    #[test]
     fn prop_merge_preserves_address_set() {
         run("merge_runs preserves covered addresses", Config::small(80), |g| {
             let n = g.usize(0, 6);
@@ -410,7 +724,8 @@ mod tests {
                     len: g.i64(0, 8) as u64,
                 })
                 .collect();
-            let merged = merge_runs(runs.clone());
+            let mut merged = runs.clone();
+            merge_runs(&mut merged);
             let covered = |rs: &[Run], a: u64| rs.iter().any(|r| a >= r.addr && a < r.end());
             for a in 0..50u64 {
                 assert_eq!(covered(&runs, a), covered(&merged, a), "addr {a}");

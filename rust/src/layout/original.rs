@@ -8,10 +8,12 @@
 //! shortest bursts of all baselines but a perfect raw = effective ratio.
 
 use crate::layout::{
-    linearize, runs_of_region, write_set, AddrGenProfile, Allocation, Piece, TilePlan,
+    dot, row_major_rebase, row_major_runs, runs_of_region, write_set, AddrGenProfile,
+    Allocation, Piece, TilePlan,
 };
 use crate::poly::deps::DepPattern;
 use crate::poly::flow::flow_in;
+use crate::poly::rect::Rect;
 use crate::poly::tiling::Tiling;
 
 /// Row-major allocation of the full iteration space.
@@ -19,13 +21,15 @@ use crate::poly::tiling::Tiling;
 pub struct OriginalLayout {
     tiling: Tiling,
     deps: DepPattern,
+    /// Cached row-major strides of the space (fast-path addressing).
+    st: Vec<u64>,
 }
 
 impl OriginalLayout {
     pub fn new(tiling: Tiling, deps: DepPattern) -> OriginalLayout {
-        OriginalLayout { tiling, deps }
+        let st = crate::layout::strides(&tiling.space);
+        OriginalLayout { tiling, deps, st }
     }
-
 }
 
 impl Allocation for OriginalLayout {
@@ -46,12 +50,12 @@ impl Allocation for OriginalLayout {
     }
 
     fn holds(&self, array: usize, p: &[i64]) -> bool {
-        array == 0 && self.tiling.space_rect().contains(p)
+        array == 0 && self.tiling.in_space(p)
     }
 
     fn addr_of(&self, array: usize, p: &[i64]) -> u64 {
         assert!(self.holds(array, p));
-        linearize(p, &self.tiling.space)
+        dot(p, &self.st)
     }
 
     fn plan(&self, coords: &[i64]) -> TilePlan {
@@ -91,16 +95,29 @@ impl Allocation for OriginalLayout {
         vec![(0, self.addr_of(0, p))]
     }
 
+    fn for_each_write_loc(&self, p: &[i64], f: &mut dyn FnMut(usize, u64)) {
+        f(0, self.addr_of(0, p));
+    }
+
+    fn for_each_run(&self, array: usize, bx: &Rect, f: &mut dyn FnMut(u64, u64)) {
+        debug_assert_eq!(array, 0);
+        row_major_runs(&self.st, bx, f);
+    }
+
+    fn rebase_plan(&self, plan: &TilePlan, from: &[i64], to: &[i64]) -> Option<TilePlan> {
+        row_major_rebase(&self.tiling, &self.deps, &self.st, plan, from, to)
+    }
+
     fn addrgen(&self) -> AddrGenProfile {
         let d = self.tiling.dims();
-        let st = crate::layout::strides(&self.tiling.space);
+        let st = &self.st;
         let mut prof = AddrGenProfile {
             arrays: 1,
             ..AddrGenProfile::default()
         };
         // the scattered access pattern needs a full affine address
         // computation per burst start (one mul-add per dimension)
-        for &s in &st {
+        for &s in st {
             if s > 1 {
                 if s.is_power_of_two() {
                     prof.shift_ops += 1;

@@ -48,7 +48,7 @@ fn print_help() {
          \x20 list                 print the Table I benchmark registry\n\
          \x20 plan                 show layout + burst plan (--benchmark, --tile, --alloc)\n\
          \x20 run                  end-to-end verified run (--benchmark, --alloc, --parallel N, ...)\n\
-         \x20 bench                figure sweeps (--figure fig15|fig16|fig17, --quick, --parallel N)\n\
+         \x20 bench                figure sweeps (--figure fig15|fig16|fig17, --quick, --parallel N, --json PATH)\n\
          \x20 codegen              emit HLS C (--benchmark, --tile)\n"
     );
 }
@@ -206,7 +206,8 @@ fn cmd_bench() -> anyhow::Result<()> {
         .opt("figure", "fig15 | fig16 | fig17", Some("fig15"))
         .flag("quick", "restrict tile sweep")
         .opt("parallel", "worker threads for the sweep", Some("1"))
-        .opt("out", "CSV output path", None);
+        .opt("out", "CSV output path", None)
+        .opt("json", "machine-readable JSON output path", None);
     let a = cmd.parse(&env_args(1)).map_err(anyhow::Error::msg)?;
     let quick = a.flag("quick");
     let threads = a.get_usize("parallel", 1).map_err(anyhow::Error::msg)?;
@@ -222,14 +223,22 @@ fn cmd_bench() -> anyhow::Result<()> {
                 std::fs::write(path, figures::fig15_csv(&pts))?;
                 println!("wrote {path}");
             }
+            if let Some(path) = a.get("json") {
+                std::fs::write(path, figures::fig15_json(&pts, &mem).to_string_pretty())?;
+                println!("wrote {path}");
+            }
         }
         "fig16" | "fig17" => {
             let pts = figures::area_sweep_parallel(&wl, mem.elem_bytes, 3, threads);
             if let Some(path) = a.get("out") {
                 std::fs::write(path, figures::area_csv(&pts))?;
                 println!("wrote {path}");
-            } else {
+            } else if a.get("json").is_none() {
                 println!("{}", figures::area_csv(&pts));
+            }
+            if let Some(path) = a.get("json") {
+                std::fs::write(path, figures::area_json(&pts).to_string_pretty())?;
+                println!("wrote {path}");
             }
         }
         f => anyhow::bail!("unknown figure '{f}'"),

@@ -115,13 +115,10 @@ pub fn producer_tiles(
         let hi_pt: IVec = r.hi.iter().map(|h| h - 1).collect();
         let hi_t = tiling.tile_of(&hi_pt);
         let range = Rect::new(lo_t, hi_t.iter().map(|c| c + 1).collect());
-        for c in range.points() {
-            if !seen.contains(&c) {
-                seen.push(c);
-            }
-        }
+        range.for_each_point(&mut |c| seen.push(c.to_vec()));
     }
     seen.sort();
+    seen.dedup();
     seen.into_iter()
         .map(|c| {
             let lvl = crate::poly::vec::neighbor_level(&c, coords);

@@ -147,6 +147,33 @@ impl Rect {
             },
         }
     }
+
+    /// Visit every lattice point in row-major order through one reusable
+    /// coordinate buffer — the hot-path replacement for [`Rect::points`]:
+    /// no per-point heap allocation, same order, same set.
+    pub fn for_each_point(&self, f: &mut dyn FnMut(&[i64])) {
+        if self.is_empty() {
+            return;
+        }
+        let d = self.dims();
+        let mut p = self.lo.clone();
+        loop {
+            f(&p);
+            // advance row-major (last dim fastest) with carry
+            let mut k = d;
+            loop {
+                if k == 0 {
+                    return;
+                }
+                k -= 1;
+                p[k] += 1;
+                if p[k] < self.hi[k] {
+                    break;
+                }
+                p[k] = self.lo[k];
+            }
+        }
+    }
 }
 
 /// Iterator over a rect's lattice points in row-major (last dim fastest) order.
@@ -333,6 +360,21 @@ mod tests {
             vec![vec![1, 1], vec![1, 2], vec![2, 1], vec![2, 2]]
         );
         assert_eq!(r2([0, 0], [0, 5]).points().count(), 0);
+    }
+
+    #[test]
+    fn for_each_point_matches_points() {
+        run("for_each_point ≡ points()", Config::small(60), |g| {
+            let d = g.usize(0, 3);
+            let lo: IVec = (0..d).map(|_| g.i64(-3, 3)).collect();
+            let ext: IVec = (0..d).map(|_| g.i64(0, 4)).collect();
+            let hi: IVec = lo.iter().zip(&ext).map(|(l, e)| l + e).collect();
+            let r = Rect::new(lo, hi);
+            let mut seen: Vec<IVec> = Vec::new();
+            r.for_each_point(&mut |p| seen.push(p.to_vec()));
+            let boxed: Vec<IVec> = r.points().collect();
+            assert_eq!(seen, boxed);
+        });
     }
 
     #[test]

@@ -38,6 +38,16 @@ impl Tiling {
         Rect::from_sizes(&self.space)
     }
 
+    /// True iff `p` is an iteration point of the space. Equivalent to
+    /// `space_rect().contains(p)` but allocation-free (the address-generation
+    /// fast path calls this per point). Panics on a wrong-arity point, like
+    /// `Rect::contains` does — a truncated point must never pass silently.
+    #[inline]
+    pub fn in_space(&self, p: &[i64]) -> bool {
+        assert_eq!(p.len(), self.dims(), "in_space: dimension mismatch");
+        p.iter().zip(&self.space).all(|(x, n)| 0 <= *x && x < n)
+    }
+
     /// Number of tiles along each axis (ceil — boundary tiles may be
     /// partial when sizes do not divide).
     pub fn tile_counts(&self) -> IVec {
@@ -127,6 +137,14 @@ mod tests {
         let t = Tiling::new(vec![8, 8], vec![100, 4]);
         assert_eq!(t.tile, vec![8, 4]);
         assert_eq!(t.tile_counts(), vec![1, 2]);
+    }
+
+    #[test]
+    fn in_space_matches_space_rect() {
+        let t = Tiling::new(vec![6, 4], vec![3, 2]);
+        for p in [[0, 0], [5, 3], [6, 0], [0, 4], [-1, 1], [3, 2]] {
+            assert_eq!(t.in_space(&p), t.space_rect().contains(&p), "{p:?}");
+        }
     }
 
     #[test]

@@ -72,6 +72,17 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (pos.iter().map(|x| x.ln()).sum::<f64>() / pos.len() as f64).exp()
 }
 
+/// Work performed by one benchmark iteration, for throughput reporting:
+/// wall time alone hides whether a speedup came from doing less work or
+/// doing it faster, so bench lines carry elements/s and runs/s too.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Work {
+    /// Elements touched (moved, planned or marshalled) per iteration.
+    pub elems: u64,
+    /// Burst runs emitted/processed per iteration.
+    pub runs: u64,
+}
+
 /// Measurement of one benchmark target.
 #[derive(Clone, Debug)]
 pub struct Measurement {
@@ -79,20 +90,66 @@ pub struct Measurement {
     /// per-iteration wall time, seconds
     pub times: Vec<f64>,
     pub summary: Summary,
+    /// Per-iteration work, when the target reports it (throughput lines).
+    pub work: Option<Work>,
 }
 
 impl Measurement {
-    /// Nicely formatted one-line report (median ± robust spread).
+    /// Attach per-iteration work counts for throughput reporting.
+    pub fn with_work(mut self, elems: u64, runs: u64) -> Measurement {
+        self.work = Some(Work { elems, runs });
+        self
+    }
+
+    /// Elements per second at the median time (None without work counts).
+    pub fn elems_per_sec(&self) -> Option<f64> {
+        match self.work {
+            Some(w) if self.summary.median > 0.0 => Some(w.elems as f64 / self.summary.median),
+            _ => None,
+        }
+    }
+
+    /// Runs per second at the median time (None without work counts).
+    pub fn runs_per_sec(&self) -> Option<f64> {
+        match self.work {
+            Some(w) if self.summary.median > 0.0 => Some(w.runs as f64 / self.summary.median),
+            _ => None,
+        }
+    }
+
+    /// Nicely formatted one-line report (median ± robust spread, plus
+    /// throughput when work counts are attached).
     pub fn line(&self) -> String {
         let s = &self.summary;
-        format!(
+        let mut out = format!(
             "{:<44} {:>12} median  [{} .. {}]  n={}",
             self.name,
             fmt_duration(s.median),
             fmt_duration(s.p05),
             fmt_duration(s.p95),
             s.n
-        )
+        );
+        if let (Some(e), Some(r)) = (self.elems_per_sec(), self.runs_per_sec()) {
+            out.push_str(&format!(
+                "  {} elem/s  {} run/s",
+                fmt_rate(e),
+                fmt_rate(r)
+            ));
+        }
+        out
+    }
+}
+
+/// Format a per-second rate with an adaptive SI prefix.
+pub fn fmt_rate(per_sec: f64) -> String {
+    if per_sec >= 1e9 {
+        format!("{:.2}G", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2}M", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2}k", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.1}")
     }
 }
 
@@ -170,6 +227,7 @@ impl Bencher {
             name: name.to_string(),
             times,
             summary,
+            work: None,
         }
     }
 }
@@ -243,5 +301,30 @@ mod tests {
         assert!(fmt_duration(2e-3).ends_with(" ms"));
         assert!(fmt_duration(2e-6).ends_with(" µs"));
         assert!(fmt_duration(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn throughput_reported_with_work_counts() {
+        let m = Measurement {
+            name: "x".into(),
+            times: vec![0.5],
+            summary: Summary::of(&[0.5]).unwrap(),
+            work: None,
+        };
+        assert_eq!(m.elems_per_sec(), None);
+        assert!(!m.line().contains("elem/s"));
+        let m = m.with_work(1_000_000, 200);
+        assert!((m.elems_per_sec().unwrap() - 2e6).abs() < 1e-6);
+        assert!((m.runs_per_sec().unwrap() - 400.0).abs() < 1e-9);
+        let line = m.line();
+        assert!(line.contains("elem/s") && line.contains("run/s"), "{line}");
+    }
+
+    #[test]
+    fn fmt_rate_prefixes() {
+        assert_eq!(fmt_rate(2.5e9), "2.50G");
+        assert_eq!(fmt_rate(3.0e6), "3.00M");
+        assert_eq!(fmt_rate(4.5e3), "4.50k");
+        assert_eq!(fmt_rate(12.0), "12.0");
     }
 }

@@ -1,0 +1,212 @@
+//! Fast-path identity properties — the oracles of the burst-grained hot
+//! path. Two contracts, pinned across all four allocations, the Table-I
+//! dependence patterns and random tilings:
+//!
+//! 1. **Run cursor ≡ pointwise addressing.** Concatenating the intervals
+//!    `for_each_run` visits reproduces `[addr_of(array, p) for p in
+//!    box.points()]` element for element, for every piece of every plan —
+//!    so marshalling through slices is bit-identical to the per-point loop
+//!    (same values, same fold order).
+//! 2. **Memoized ≡ fresh planning.** `PlanCache::plan` equals
+//!    `Allocation::plan` exactly — runs, pieces and counters — whether the
+//!    tile is interior (rebased from the canonical plan) or boundary
+//!    (fresh), on exact and non-exact tilings alike.
+
+use cfa::coordinator::AllocKind;
+use cfa::harness::workloads::{heat3d, table1};
+use cfa::layout::PlanCache;
+use cfa::poly::deps::DepPattern;
+use cfa::poly::tiling::Tiling;
+use cfa::util::prop::{run as prop_run, Config, Gen};
+
+/// Random tiling accepted by every allocation: tile edges above the facet
+/// widths; exact with >= 3 tiles per axis when `exact` (the memoizable
+/// shape), otherwise a ragged boundary.
+fn random_tiling(g: &Gen, deps: &DepPattern, exact: bool) -> Tiling {
+    let tile: Vec<i64> = deps
+        .widths()
+        .iter()
+        .map(|w| w.max(&1) + g.i64(1, 3))
+        .collect();
+    let space: Vec<i64> = tile
+        .iter()
+        .map(|t| t * g.i64(3, 4) + if exact { 0 } else { 1 })
+        .collect();
+    Tiling::new(space, tile)
+}
+
+#[test]
+fn prop_run_cursor_equals_pointwise_addr_of() {
+    prop_run(
+        "for_each_run ≡ per-point addr_of",
+        Config::small(8),
+        |g| {
+            let wl = table1(true);
+            let w = g.choose(&wl);
+            let deps = DepPattern::new(w.deps.clone()).unwrap();
+            let tiling = random_tiling(g, &deps, g.bool());
+            for kind in AllocKind::ALL {
+                let alloc = kind.build(&tiling, &deps).unwrap();
+                for tc in tiling.tiles() {
+                    let plan = alloc.plan(&tc);
+                    for pc in plan.read_pieces.iter().chain(&plan.write_pieces) {
+                        let mut concat: Vec<u64> = Vec::new();
+                        alloc.for_each_run(pc.array, &pc.iter_box, &mut |a, l| {
+                            concat.extend(a..a + l)
+                        });
+                        let pointwise: Vec<u64> = pc
+                            .iter_box
+                            .points()
+                            .map(|p| alloc.addr_of(pc.array, &p))
+                            .collect();
+                        assert_eq!(
+                            concat,
+                            pointwise,
+                            "{}/{}: tile {tc:?} piece {pc:?}",
+                            w.name,
+                            kind.name()
+                        );
+                    }
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_memoized_plans_equal_fresh_plans() {
+    prop_run(
+        "PlanCache ≡ fresh planning",
+        Config::small(8),
+        |g| {
+            let wl = table1(true);
+            let w = g.choose(&wl);
+            let deps = DepPattern::new(w.deps.clone()).unwrap();
+            let tiling = random_tiling(g, &deps, g.bool());
+            for kind in AllocKind::ALL {
+                let alloc = kind.build(&tiling, &deps).unwrap();
+                let cache = PlanCache::new(alloc.as_ref());
+                for tc in tiling.tiles() {
+                    assert_eq!(
+                        cache.plan(&tc),
+                        alloc.plan(&tc),
+                        "{}/{}: tile {tc:?}",
+                        w.name,
+                        kind.name()
+                    );
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_streamed_write_locs_equal_vec_write_locs() {
+    prop_run(
+        "for_each_write_loc ≡ write_locs",
+        Config::small(12),
+        |g| {
+            let wl = table1(true);
+            let w = g.choose(&wl);
+            let deps = DepPattern::new(w.deps.clone()).unwrap();
+            let tiling = random_tiling(g, &deps, g.bool());
+            for kind in AllocKind::ALL {
+                let alloc = kind.build(&tiling, &deps).unwrap();
+                for _ in 0..20 {
+                    let p: Vec<i64> = tiling
+                        .space
+                        .iter()
+                        .map(|&n| g.i64(0, n - 1))
+                        .collect();
+                    let mut streamed: Vec<(usize, u64)> = Vec::new();
+                    alloc.for_each_write_loc(&p, &mut |a, addr| streamed.push((a, addr)));
+                    assert_eq!(
+                        streamed,
+                        alloc.write_locs(&p),
+                        "{}/{}: {p:?}",
+                        w.name,
+                        kind.name()
+                    );
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn memoization_on_table1_sweep_tilings() {
+    // the Fig-15 sweep shape: 16^3 tiles, 4 tiles per dim — real rebase
+    // distances (not just the identity) on every Table-I pattern
+    for w in table1(true) {
+        let deps = DepPattern::new(w.deps.clone()).unwrap();
+        let tile = vec![16i64, 16, 16];
+        let tiling = Tiling::new(w.space_for(&tile, 4), tile);
+        for kind in AllocKind::ALL {
+            let alloc = kind.build(&tiling, &deps).unwrap();
+            let cache = PlanCache::new(alloc.as_ref());
+            let mut interior = 0u64;
+            for tc in tiling.tiles() {
+                if cache.is_interior(&tc) {
+                    interior += 1;
+                }
+                assert_eq!(
+                    cache.plan(&tc),
+                    alloc.plan(&tc),
+                    "{}/{}: tile {tc:?}",
+                    w.name,
+                    kind.name()
+                );
+            }
+            assert_eq!(interior, 8, "{}: 2^3 interior tiles", w.name);
+        }
+    }
+}
+
+#[test]
+fn memoization_stays_exact_when_width_exceeds_tile() {
+    // w > t: flow reaches past the immediate neighbor ring, so interior
+    // tiles' flow regions are clipped by the space boundary differently —
+    // the allocations must opt out of rebasing (CFA already rejects w > t
+    // at construction) and the cache must still equal fresh planning
+    let tiling = Tiling::new(vec![8, 8], vec![2, 2]);
+    let deps = DepPattern::new(vec![vec![-3, 0], vec![0, -3]]).unwrap();
+    for kind in [
+        AllocKind::Original,
+        AllocKind::BoundingBox,
+        AllocKind::DataTiling,
+    ] {
+        let alloc = kind.build(&tiling, &deps).unwrap();
+        let cache = PlanCache::new(alloc.as_ref());
+        for tc in tiling.tiles() {
+            assert_eq!(
+                cache.plan(&tc),
+                alloc.plan(&tc),
+                "{}: tile {tc:?}",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn run_cursor_covers_4d_facets() {
+    // §IV.J territory: 4-D spaces have the least contiguous pieces, so the
+    // cursor's point-order contract is exercised hardest here
+    let w = heat3d();
+    let deps = DepPattern::new(w.deps.clone()).unwrap();
+    let tiling = Tiling::new(vec![8, 10, 10, 10], vec![4, 5, 5, 5]);
+    let alloc = AllocKind::Cfa.build(&tiling, &deps).unwrap();
+    for tc in tiling.tiles() {
+        let plan = alloc.plan(&tc);
+        for pc in plan.read_pieces.iter().chain(&plan.write_pieces) {
+            let mut concat: Vec<u64> = Vec::new();
+            alloc.for_each_run(pc.array, &pc.iter_box, &mut |a, l| concat.extend(a..a + l));
+            let pointwise: Vec<u64> = pc
+                .iter_box
+                .points()
+                .map(|p| alloc.addr_of(pc.array, &p))
+                .collect();
+            assert_eq!(concat, pointwise, "tile {tc:?}");
+        }
+    }
+}
