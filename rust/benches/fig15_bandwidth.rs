@@ -29,9 +29,12 @@ fn main() {
         figures::fig15_json(&pts, &mem).to_string_pretty(),
     )
     .ok();
-    // headline summary: best effective bandwidth per allocation
+    // headline summary: best effective bandwidth per allocation, for
+    // every layout in the registry (a newly registered layout shows up
+    // here with no edits)
     println!("summary (effective bandwidth as % of the 800 MB/s roofline):");
-    for alloc in ["cfa", "original", "bbox", "datatile"] {
+    let reg = cfa::layout::registry::global();
+    for alloc in reg.names() {
         let effs: Vec<f64> = pts
             .iter()
             .filter(|p| p.alloc == alloc)

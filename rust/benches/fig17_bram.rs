@@ -16,9 +16,10 @@ fn main() {
     std::fs::create_dir_all("bench_results").ok();
     std::fs::write("bench_results/fig17.csv", figures::area_csv(&pts)).ok();
     let dev = Device::default();
+    let reg = cfa::layout::registry::global();
     for w in &wl {
         let mut rows = Vec::new();
-        for alloc in ["cfa", "original", "bbox", "datatile"] {
+        for alloc in reg.names() {
             let vals: Vec<f64> = pts
                 .iter()
                 .filter(|p| p.benchmark == w.name && p.alloc == alloc)

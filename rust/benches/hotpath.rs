@@ -11,9 +11,10 @@
 //! `BENCH_hotpath.json` at the repo root (override with `--out`), so the
 //! perf trajectory is recorded run over run.
 
-use cfa::coordinator::batch::{BatchCoordinator, Schedule};
-use cfa::coordinator::{AllocKind, HostMemory};
+use cfa::coordinator::HostMemory;
+use cfa::experiment::{ExperimentSpec, Mode, ScheduleKind, Session};
 use cfa::harness::workloads;
+use cfa::layout::registry::{self, names};
 use cfa::layout::{runs_of_box, Allocation, PlanCache, TilePlan};
 use cfa::memsim::{Dir, MemConfig, MemSim, Timing, Txn};
 use cfa::poly::deps::DepPattern;
@@ -188,16 +189,33 @@ fn main() {
     }));
 
     // ---- the Fig-15 sweep planning + marshalling path: pre-PR pointwise
-    // reference vs the burst-grained fast path, identity asserted first
+    // reference vs the burst-grained fast path, identity asserted first.
+    // allocations are owned by experiment sessions (the production front
+    // door), proving the session API adds no overhead on the hot path.
     let sweep_w = workloads::by_name("jacobi2d5p").unwrap();
-    let sweep_deps = DepPattern::new(sweep_w.deps.clone()).unwrap();
     let tile = vec![32i64, 32, 32];
     let tiles_per_dim = 6i64;
     let sweep_tiling = Tiling::new(sweep_w.space_for(&tile, tiles_per_dim), tile.clone());
     let tiles: Vec<Vec<i64>> = sweep_tiling.tiles().collect();
-    let allocs: Vec<Box<dyn Allocation>> = AllocKind::ALL
+    let reg = registry::global();
+    let sessions: Vec<Session> = reg
+        .names()
         .iter()
-        .map(|k| k.build(&sweep_tiling, &sweep_deps).unwrap())
+        .map(|&name| {
+            ExperimentSpec::builder()
+                .custom(
+                    sweep_w.name,
+                    sweep_tiling.space.clone(),
+                    tile.clone(),
+                    sweep_w.deps.clone(),
+                )
+                .layout(name)
+                .schedule(ScheduleKind::Flat)
+                .mem(cfg.clone())
+                .registry(reg.clone())
+                .compile()
+                .expect("compile session")
+        })
         .collect();
 
     // identity: memoized plans == fresh plans, and identical replay timing;
@@ -205,9 +223,10 @@ fn main() {
     // plan benches' throughput lines
     let mut planned_elems = 0u64;
     let mut planned_runs = 0u64;
-    for alloc in &allocs {
-        let fresh = plan_fresh(alloc.as_ref(), &tiles);
-        let memo = plan_memoized(alloc.as_ref(), &tiles);
+    for session in &sessions {
+        let alloc = session.allocation();
+        let fresh = plan_fresh(alloc, &tiles);
+        let memo = plan_memoized(alloc, &tiles);
         assert_eq!(fresh, memo, "{}: memoized plans differ", alloc.name());
         planned_elems += fresh
             .iter()
@@ -218,18 +237,26 @@ fn main() {
         let (c_m, t_m) = replay(&cfg, &memo);
         assert_eq!(c_f, c_m, "{}: cycles differ", alloc.name());
         assert_eq!(t_f, t_m, "{}: Timing counters differ", alloc.name());
-        // the production sweep path (BatchCoordinator over a flat schedule,
-        // cache inside) reproduces the fresh replay exactly
-        let sched = Schedule::flat(&sweep_tiling);
-        let rep = BatchCoordinator::new(alloc.as_ref(), &sched, cfg.clone()).run_timing();
-        assert_eq!(rep.cycles, c_f, "{}: coordinator cycles", alloc.name());
-        assert_eq!(rep.timing, t_f, "{}: coordinator Timing", alloc.name());
+        // the production sweep path (Session in Mode::Sweep: flat replay
+        // through the batch coordinator) reproduces the fresh replay exactly
+        let rep = session.run(Mode::Sweep).expect("session sweep");
+        assert_eq!(rep.makespan_cycles, c_f, "{}: session cycles", alloc.name());
+        assert_eq!(
+            rep.timing.as_ref(),
+            Some(&t_f),
+            "{}: session Timing",
+            alloc.name()
+        );
     }
 
     // identity: pointwise and run-cursor marshalling produce bit-identical
     // buffers (CFA, the allocation with replicated writes)
-    let cfa_sweep = AllocKind::Cfa.build(&sweep_tiling, &sweep_deps).unwrap();
-    let cfa_plans = plan_fresh(cfa_sweep.as_ref(), &tiles);
+    let cfa_sweep = sessions
+        .iter()
+        .find(|s| s.layout() == names::CFA)
+        .expect("cfa session")
+        .allocation();
+    let cfa_plans = plan_fresh(cfa_sweep, &tiles);
     let mut host = HostMemory::new(cfa_sweep.footprint());
     for i in 0..host.len() as u64 {
         host.write(i, (i % 251) as f32 * 0.5 + 1.0);
@@ -238,8 +265,8 @@ fn main() {
         HostMemory::new(cfa_sweep.footprint()),
         HostMemory::new(cfa_sweep.footprint()),
     );
-    marshal_pointwise(cfa_sweep.as_ref(), &cfa_plans, &host, &mut out_pw);
-    marshal_runs(cfa_sweep.as_ref(), &cfa_plans, &host, &mut out_rc);
+    marshal_pointwise(cfa_sweep, &cfa_plans, &host, &mut out_pw);
+    marshal_runs(cfa_sweep, &cfa_plans, &host, &mut out_rc);
     assert_eq!(out_pw.len(), out_rc.len());
     for (i, (x, y)) in out_pw.as_slice().iter().zip(out_rc.as_slice()).enumerate() {
         assert_eq!(x.to_bits(), y.to_bits(), "marshal buffers differ at {i}");
@@ -268,26 +295,26 @@ fn main() {
 
     let m_plan_fresh = b
         .bench("fig15 sweep plan x4 allocs (fresh)", || {
-            for alloc in &allocs {
-                black_box(plan_fresh(alloc.as_ref(), &tiles));
+            for session in &sessions {
+                black_box(plan_fresh(session.allocation(), &tiles));
             }
         })
         .with_work(planned_elems, planned_runs);
     let m_plan_memo = b
         .bench("fig15 sweep plan x4 allocs (memoized)", || {
-            for alloc in &allocs {
-                black_box(plan_memoized(alloc.as_ref(), &tiles));
+            for session in &sessions {
+                black_box(plan_memoized(session.allocation(), &tiles));
             }
         })
         .with_work(planned_elems, planned_runs);
     let m_marshal_pw = b
         .bench("fig15 sweep marshal cfa (pointwise)", || {
-            marshal_pointwise(cfa_sweep.as_ref(), &cfa_plans, &host, &mut out_pw);
+            marshal_pointwise(cfa_sweep, &cfa_plans, &host, &mut out_pw);
         })
         .with_work(marshal_elems, marshal_runs_emitted);
     let m_marshal_rc = b
         .bench("fig15 sweep marshal cfa (run cursor)", || {
-            marshal_runs(cfa_sweep.as_ref(), &cfa_plans, &host, &mut out_rc);
+            marshal_runs(cfa_sweep, &cfa_plans, &host, &mut out_rc);
         })
         .with_work(marshal_elems, marshal_runs_emitted);
 

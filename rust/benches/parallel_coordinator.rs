@@ -11,12 +11,11 @@
 //!
 //! Run: `cargo bench --bench parallel_coordinator [-- --threads N] [-- --quick]`
 
-use cfa::coordinator::batch::{BatchCoordinator, Schedule};
+use cfa::experiment::{ExperimentSpec, Mode, ScheduleKind, Session};
 use cfa::harness::figures::{fig15_sweep, fig15_sweep_parallel};
-use cfa::harness::workloads::{self, table1};
+use cfa::harness::workloads::{self, table1, Workload};
+use cfa::layout::registry::names;
 use cfa::memsim::MemConfig;
-use cfa::poly::deps::DepPattern;
-use cfa::poly::tiling::Tiling;
 use std::time::Instant;
 
 fn main() {
@@ -57,36 +56,57 @@ fn main() {
         t_serial / t_parallel.max(1e-9)
     );
 
-    // ---- 2. wave-level parallelism inside one big coordinated run
+    // ---- 2. wave-level parallelism inside one big coordinated run,
+    // driven through the experiment session API (one session per worker
+    // count; the schedule and plan cache are owned by each session)
     let w = workloads::by_name("jacobi2d9p").unwrap();
-    let deps = DepPattern::new(w.deps.clone()).unwrap();
     let (edge, tiles_per_dim) = if quick { (16, 4) } else { (32, 6) };
     let tile = vec![edge, edge, edge];
-    let tiling = Tiling::new(w.space_for(&tile, tiles_per_dim), tile);
-    let sched = Schedule::wavefront(&tiling, &deps);
-    let alloc = cfa::coordinator::AllocKind::Cfa.build(&tiling, &deps).unwrap();
+    let wave_session = |w: &Workload, threads: usize| -> Session {
+        ExperimentSpec::builder()
+            .custom(
+                w.name,
+                w.space_for(&tile, tiles_per_dim),
+                tile.clone(),
+                w.deps.clone(),
+            )
+            .layout(names::CFA)
+            .schedule(ScheduleKind::Wavefront)
+            .threads(threads)
+            .mem(mem.clone())
+            .compile()
+            .expect("compile session")
+    };
+    let session_serial = wave_session(&w, 1);
+    let session_parallel = wave_session(&w, threads);
     eprintln!(
         "wavefront: {} tiles in {} waves (max width {})",
-        sched.num_tiles(),
-        sched.num_waves(),
-        sched.max_width()
+        session_serial.schedule().num_tiles(),
+        session_serial.schedule().num_waves(),
+        session_serial.schedule().max_width()
     );
     let t2 = Instant::now();
-    let rep_serial = BatchCoordinator::new(alloc.as_ref(), &sched, mem.clone()).run_timing();
+    let rep_serial = session_serial.run(Mode::Timing).expect("serial run");
     let t_wave_serial = t2.elapsed().as_secs_f64();
     let t3 = Instant::now();
-    let rep_parallel = BatchCoordinator::new(alloc.as_ref(), &sched, mem.clone())
-        .threads(threads)
-        .run_timing();
+    let rep_parallel = session_parallel.run(Mode::Timing).expect("parallel run");
     let t_wave_parallel = t3.elapsed().as_secs_f64();
-    assert_eq!(rep_serial, rep_parallel, "wavefront timing diverged");
+    assert_eq!(
+        rep_serial.makespan_cycles, rep_parallel.makespan_cycles,
+        "wavefront timing diverged"
+    );
+    assert_eq!(rep_serial.timing, rep_parallel.timing, "Timing diverged");
+    assert_eq!(rep_serial.transactions, rep_parallel.transactions);
+    assert_eq!(rep_serial.raw_bytes, rep_parallel.raw_bytes);
+    assert_eq!(rep_serial.useful_bytes, rep_parallel.useful_bytes);
     println!(
         "wavefront run      serial {t_wave_serial:7.2}s   {threads} threads {t_wave_parallel:7.2}s   speedup {:.2}x",
         t_wave_serial / t_wave_parallel.max(1e-9)
     );
+    let timing = rep_serial.timing.as_ref().expect("timing counters");
     println!(
         "timing bit-identical across thread counts: {} cycles, {} bursts, {} turnarounds",
-        rep_serial.cycles, rep_serial.timing.axi_bursts, rep_serial.timing.turnarounds
+        rep_serial.makespan_cycles, timing.axi_bursts, timing.turnarounds
     );
 
     let speedup = t_serial / t_parallel.max(1e-9);

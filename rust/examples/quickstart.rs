@@ -5,6 +5,7 @@
 //! Run with: `cargo run --release --example quickstart`
 
 use cfa::coordinator::AllocKind;
+use cfa::experiment::{ExperimentSpec, Mode};
 use cfa::harness::figures::measure_bandwidth;
 use cfa::harness::workloads;
 use cfa::layout::cfa::Cfa;
@@ -53,5 +54,17 @@ fn main() -> anyhow::Result<()> {
             p.alloc, p.raw_mb_s, p.effective_mb_s, p.transactions
         );
     }
+
+    // 5. The same measurement through the experiment session API (the
+    //    crate's front door): spec -> session -> unified report. Layouts
+    //    are named through the open registry, so a custom layout
+    //    registered by name would be reachable here too.
+    let report = ExperimentSpec::builder()
+        .named(w.name, tile.clone(), 3)
+        .layout("cfa")
+        .mem(mem.clone())
+        .compile()?
+        .run(Mode::Sweep)?;
+    println!("\nsession report:\n  {}", report.summary());
     Ok(())
 }

@@ -27,7 +27,7 @@
 //! "how many tiles can legally be in flight at once" (`max_width`).
 
 use crate::coordinator::HostMemory;
-use crate::layout::{linearize, Allocation, PlanCache, TilePlan};
+use crate::layout::{linearize, Allocation, PlanCache, PlanCacheState, TilePlan};
 use crate::memsim::{Dir, MemConfig, MemSim, Timing, Txn};
 use crate::poly::deps::DepPattern;
 use crate::poly::flow::producer_tiles;
@@ -292,6 +292,7 @@ pub struct BatchCoordinator<'a> {
     schedule: &'a Schedule,
     mem_cfg: MemConfig,
     threads: usize,
+    cache: Option<&'a PlanCacheState>,
 }
 
 impl<'a> BatchCoordinator<'a> {
@@ -305,6 +306,7 @@ impl<'a> BatchCoordinator<'a> {
             schedule,
             mem_cfg,
             threads: 1,
+            cache: None,
         }
     }
 
@@ -312,6 +314,25 @@ impl<'a> BatchCoordinator<'a> {
     pub fn threads(mut self, n: usize) -> BatchCoordinator<'a> {
         self.threads = n.max(1);
         self
+    }
+
+    /// Plan through caller-owned cache state (must have been created for
+    /// this coordinator's allocation). A [`Session`](crate::experiment)
+    /// passes its own state here so the canonical interior plan is derived
+    /// once per session rather than once per run; planning output is
+    /// unchanged either way (`cache.plan ≡ alloc.plan`).
+    pub fn cache_state(mut self, state: &'a PlanCacheState) -> BatchCoordinator<'a> {
+        self.cache = Some(state);
+        self
+    }
+
+    /// The plan cache this run will draw from: a view over the shared
+    /// state when one was provided, a private cache otherwise.
+    fn plan_cache(&self) -> PlanCache<'a> {
+        match self.cache {
+            Some(state) => PlanCache::with_state(self.alloc, state),
+            None => PlanCache::new(self.alloc),
+        }
     }
 
     /// Serially replay one wave's plans (lexicographic tile order: reads
@@ -353,7 +374,7 @@ impl<'a> BatchCoordinator<'a> {
         };
         // one plan cache across every wave: the canonical interior plan is
         // derived once and rebased per interior tile
-        let cache = PlanCache::new(self.alloc);
+        let cache = self.plan_cache();
         for wave in self.schedule.waves() {
             for plan in PlanStream::with_cache(&cache, wave, self.threads) {
                 self.replay_wave(&mut sim, std::slice::from_ref(&plan), &mut report);
@@ -384,7 +405,7 @@ impl<'a> BatchCoordinator<'a> {
             waves: self.schedule.num_waves(),
             ..BatchReport::default()
         };
-        let cache = PlanCache::new(self.alloc);
+        let cache = self.plan_cache();
         for wave in self.schedule.waves() {
             // chunked for bounded memory. applying a chunk's writes before
             // the next chunk's gathers is safe: a gather address is the

@@ -16,11 +16,18 @@ pub mod reference;
 pub mod stencil;
 pub mod sw;
 
-use crate::layout::{Allocation, BoundingBox, Cfa, OriginalLayout};
+use crate::layout::registry::{self, names};
+use crate::layout::Allocation;
 use crate::poly::deps::DepPattern;
 use crate::poly::tiling::Tiling;
 
-/// Which off-chip allocation to run with (§VI.A.1 baselines + CFA).
+/// The four built-in allocations (§VI.A.1 baselines + CFA) as a closed
+/// enum. **Deprecated shim, kept for one PR**: the open
+/// [`LayoutRegistry`](crate::layout::LayoutRegistry) is the source of
+/// truth for names, aliases and constructors — this enum merely mirrors
+/// its built-in entries so legacy call sites keep compiling. New code
+/// should name layouts through the registry / the
+/// [`experiment`](crate::experiment) API.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AllocKind {
     Cfa,
@@ -37,36 +44,29 @@ impl AllocKind {
         AllocKind::DataTiling,
     ];
 
+    /// Parse a canonical name or alias, via the global registry (the
+    /// registry owns every spelling; no string literals live here).
     pub fn parse(s: &str) -> Option<AllocKind> {
-        match s {
-            "cfa" => Some(AllocKind::Cfa),
-            "original" => Some(AllocKind::Original),
-            "bbox" | "bounding-box" => Some(AllocKind::BoundingBox),
-            "datatile" | "data-tiling" => Some(AllocKind::DataTiling),
-            _ => None,
-        }
+        let reg = registry::global();
+        let canon = reg.canonical(s)?;
+        AllocKind::ALL.iter().copied().find(|k| k.name() == canon)
     }
 
+    /// Canonical registry name of this built-in.
     pub fn name(&self) -> &'static str {
         match self {
-            AllocKind::Cfa => "cfa",
-            AllocKind::Original => "original",
-            AllocKind::BoundingBox => "bbox",
-            AllocKind::DataTiling => "datatile",
+            AllocKind::Cfa => names::CFA,
+            AllocKind::Original => names::ORIGINAL,
+            AllocKind::BoundingBox => names::BBOX,
+            AllocKind::DataTiling => names::DATATILE,
         }
     }
 
-    /// Instantiate the allocation for a tiling + pattern. Data tiling uses
-    /// the paper's best-size sweep.
+    /// Instantiate the allocation for a tiling + pattern through the
+    /// registry's constructor (data tiling uses the paper's best-size
+    /// sweep).
     pub fn build(&self, tiling: &Tiling, deps: &DepPattern) -> anyhow::Result<Box<dyn Allocation>> {
-        Ok(match self {
-            AllocKind::Cfa => Box::new(Cfa::new(tiling.clone(), deps.clone())?),
-            AllocKind::Original => Box::new(OriginalLayout::new(tiling.clone(), deps.clone())),
-            AllocKind::BoundingBox => Box::new(BoundingBox::new(tiling.clone(), deps.clone())),
-            AllocKind::DataTiling => Box::new(crate::layout::datatile::best_data_tiling(
-                tiling, deps,
-            )),
-        })
+        registry::global().build(self.name(), tiling, deps)
     }
 }
 
@@ -165,6 +165,9 @@ mod tests {
             assert_eq!(AllocKind::parse(k.name()), Some(k));
         }
         assert_eq!(AllocKind::parse("nope"), None);
+        // aliases route through the registry
+        assert_eq!(AllocKind::parse("bounding-box"), Some(AllocKind::BoundingBox));
+        assert_eq!(AllocKind::parse("data-tiling"), Some(AllocKind::DataTiling));
     }
 
     #[test]

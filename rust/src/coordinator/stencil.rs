@@ -1,24 +1,33 @@
-//! End-to-end stencil driver: heat diffusion & friends through the full
-//! stack (CFA/baseline layout → burst plans → AXI/DRAM timing → PJRT tile
-//! compute → verification).
+//! End-to-end stencil driver — **deprecated shim, kept for one PR**.
 //!
-//! Coordinate convention matches `python/compile/model.py`: the iteration
-//! space is the skew-normalized (t, u, v) box with u = i + r·t; the initial
-//! grid is the program input (CFA only re-allocates read-write arrays,
-//! §IV.E) and is served from its own buffer at t = -1.
+//! The driver itself lives in the experiment subsystem
+//! ([`crate::experiment`]): a [`StencilRun`] is translated into a
+//! [`WorkloadSpec::Stencil`](crate::experiment::WorkloadSpec) session and
+//! executed in `Mode::Data`, which runs the identical read–execute–write
+//! loop (layout → burst plans → AXI/DRAM timing → PJRT tile compute →
+//! verification). New code should build the session directly:
+//!
+//! ```no_run
+//! use cfa::coordinator::reference::StencilKind;
+//! use cfa::experiment::{ExperimentSpec, Mode};
+//!
+//! let session = ExperimentSpec::builder()
+//!     .stencil("jacobi2d5p_t8x32x32", StencilKind::Jacobi5p, vec![8, 32, 32], 96, 96, 32)
+//!     .layout("cfa")
+//!     .compile()?;
+//! let report = session.run(Mode::Data { seed: 42 })?;
+//! # Ok::<(), anyhow::Error>(())
+//! ```
 
-use crate::accel::{Pipeline, TileCost};
-use crate::coordinator::reference::{stencil_reference, StencilKind};
-use crate::coordinator::{AllocKind, HostMemory, RunReport};
-use crate::memsim::{MemConfig, MemSim};
-use crate::poly::deps::DepPattern;
-use crate::poly::tiling::Tiling;
+use crate::coordinator::reference::StencilKind;
+use crate::coordinator::{AllocKind, RunReport};
+use crate::experiment::{ExperimentSpec, Mode};
+use crate::memsim::MemConfig;
 use crate::runtime::Runtime;
-use crate::util::rng::Rng;
-use anyhow::{bail, Context, Result};
-use std::time::Instant;
+use anyhow::Result;
 
-/// Configuration of one end-to-end stencil run.
+/// Configuration of one end-to-end stencil run (legacy shape; the session
+/// builder covers the same fields).
 #[derive(Clone, Debug)]
 pub struct StencilRun {
     /// Artifact name in `artifacts/manifest.json`.
@@ -57,184 +66,25 @@ impl StencilRun {
 }
 
 /// Execute the run; returns the report (verification included).
+/// Deprecated shim over [`crate::experiment::Session::run_with_runtime`].
 pub fn run_stencil(rt: &Runtime, cfg: &StencilRun, mem_cfg: &MemConfig) -> Result<RunReport> {
-    let wall0 = Instant::now();
+    // the artifact's tile shape defines the tiling, exactly as before
     let exe = rt.load(&cfg.artifact)?;
-    let (tt, ti, tj) = match exe.info.tile[..] {
-        [a, b, c] => (a, b, c),
-        _ => bail!("artifact {} has no 3-d tile", cfg.artifact),
-    };
-    let r = exe.info.radius;
-    if r != cfg.kind.radius() {
-        bail!(
-            "artifact radius {r} does not match benchmark {:?}",
-            cfg.kind
-        );
-    }
-    let h = 2 * r;
-    let (n, m, steps) = (cfg.n, cfg.m, cfg.steps);
-    let (uu, vv) = (n + r * steps, m + r * steps);
-    if steps % tt != 0 || uu % ti != 0 || vv % tj != 0 {
-        bail!(
-            "tile ({tt},{ti},{tj}) must divide the skewed space ({steps},{uu},{vv}); \
-             pick n,m,steps accordingly"
-        );
-    }
-
-    let deps = DepPattern::new(cfg.kind.skewed_deps()).context("building deps")?;
-    let tiling = Tiling::new(vec![steps, uu, vv], vec![tt, ti, tj]);
-    let alloc = cfg.alloc.build(&tiling, &deps)?;
-    let mut host = HostMemory::new(alloc.footprint());
-
-    // program input: the initial grid (not a read-write array, kept as-is)
-    let mut rng = Rng::new(cfg.seed);
-    let init: Vec<f32> = (0..(n * m) as usize)
-        .map(|_| rng.gen_f64() as f32)
-        .collect();
-
-    let sample = |host: &HostMemory, t: i64, u: i64, v: i64| -> f32 {
-        if t < 0 {
-            // initial plane t = -1 in skewed coords: i = u - r*t = u + r
-            let (i, j) = (u + r, v + r);
-            if (0..n).contains(&i) && (0..m).contains(&j) {
-                init[(i * m + j) as usize]
-            } else {
-                0.0
-            }
-        } else if (0..steps).contains(&t) && (0..uu).contains(&u) && (0..vv).contains(&v) {
-            let (_, addr) = alloc.read_loc(&[t, u, v]);
-            host.read(addr)
-        } else {
-            0.0
-        }
-    };
-
-    let mut sim = MemSim::new(mem_cfg.clone());
-    let mut pipe = Pipeline::new();
-    let mut raw_elems = 0u64;
-    let mut useful_elems = 0u64;
-    let mut transactions = 0u64;
-    let flops_per_point = 2 * ((2 * r + 1) * (2 * r + 1)) as u64;
-
-    let halo_t = (tt - 1).max(1);
-    // burst planning streams ahead of the tile loop: one plan at a time
-    // when serial (the old behavior), a bounded window planned in parallel
-    // with --parallel N. consumption stays in lexicographic order either
-    // way, so simulator state and Timing counters are unchanged
-    let tiles: Vec<Vec<i64>> = tiling.tiles().collect();
-    let plans = crate::coordinator::batch::PlanStream::new(alloc.as_ref(), &tiles, cfg.parallel);
-    for (coords, plan) in tiles.iter().zip(plans) {
-        let (bt, bu, bv) = (coords[0], coords[1], coords[2]);
-        let (t0, u0, v0) = (bt * tt, bu * ti, bv * tj);
-
-        // ---- assemble flow-in (the read stage's result)
-        let mut prev = vec![0f32; ((ti + h) * (tj + h)) as usize];
-        for x in 0..ti + h {
-            for y in 0..tj + h {
-                prev[(x * (tj + h) + y) as usize] =
-                    sample(&host, t0 - 1, u0 - h + x, v0 - h + y);
-            }
-        }
-        let mut halo_u = vec![0f32; (halo_t * h * (tj + h)) as usize];
-        let mut halo_v = vec![0f32; (halo_t * ti * h) as usize];
-        for s in 1..tt {
-            for x in 0..h {
-                for y in 0..tj + h {
-                    halo_u[(((s - 1) * h + x) * (tj + h) + y) as usize] =
-                        sample(&host, t0 + s - 1, u0 - h + x, v0 - h + y);
-                }
-            }
-            for x in 0..ti {
-                for y in 0..h {
-                    halo_v[(((s - 1) * ti + x) * h + y) as usize] =
-                        sample(&host, t0 + s - 1, u0 + x, v0 - h + y);
-                }
-            }
-        }
-
-        // ---- execute on PJRT
-        let out = exe.execute(
-            &[t0 as i32, u0 as i32, v0 as i32, n as i32, m as i32],
-            &[
-                (&prev, &[ti + h, tj + h]),
-                (&halo_u, &[halo_t, h, tj + h]),
-                (&halo_v, &[halo_t, ti, h]),
-            ],
-        )?;
-        let (facet_t, facet_u, facet_v) = (&out[0], &out[1], &out[2]);
-
-        // ---- write flow-out facets to global memory (no per-point Vec:
-        // the allocation streams the replicated locations directly)
-        let store = |host: &mut HostMemory, p: &[i64], v: f32| {
-            alloc.for_each_write_loc(p, &mut |_, addr| host.write(addr, v));
-        };
-        for x in 0..ti {
-            for y in 0..tj {
-                store(
-                    &mut host,
-                    &[t0 + tt - 1, u0 + x, v0 + y],
-                    facet_t[(x * tj + y) as usize],
-                );
-            }
-        }
-        for s in 0..tt {
-            for x in 0..h {
-                for y in 0..tj {
-                    store(
-                        &mut host,
-                        &[t0 + s, u0 + ti - h + x, v0 + y],
-                        facet_u[((s * h + x) * tj + y) as usize],
-                    );
-                }
-            }
-            for x in 0..ti {
-                for y in 0..h {
-                    store(
-                        &mut host,
-                        &[t0 + s, u0 + x, v0 + tj - h + y],
-                        facet_v[((s * ti + x) * h + y) as usize],
-                    );
-                }
-            }
-        }
-
-        // ---- timing through the memory simulator + task pipeline
-        let (rd, wr) = crate::accel::tile_mem_cycles(&mut sim, &plan.read_runs, &plan.write_runs);
-        let vol = tiling.tile_rect(coords).volume();
-        pipe.push(TileCost {
-            read: rd,
-            exec: vol * flops_per_point / cfg.pe_ops_per_cycle.max(1),
-            write: wr,
-        });
-        raw_elems += plan.read_raw() + plan.write_raw();
-        useful_elems += plan.read_useful + plan.write_useful;
-        transactions += plan.transactions() as u64;
-    }
-    let stats = pipe.finish();
-
-    // ---- verification against the native reference
-    let reference = stencil_reference(&init, n as usize, m as usize, cfg.kind, steps as usize);
-    let mut max_err = 0f64;
-    for i in 0..n {
-        for j in 0..m {
-            let (u, v) = (i + r * (steps - 1), j + r * (steps - 1));
-            let (_, addr) = alloc.read_loc(&[steps - 1, u, v]);
-            let got = host.read(addr);
-            let want = reference[(i * m + j) as usize];
-            max_err = max_err.max((got - want).abs() as f64);
-        }
-    }
-
-    Ok(RunReport {
-        benchmark: format!("{:?}/{}x{}x{}", cfg.kind, steps, n, m).to_lowercase(),
-        alloc: cfg.alloc.name().to_string(),
-        tiles: tiling.num_tiles(),
-        makespan_cycles: stats.makespan,
-        mem_busy_cycles: stats.mem_busy,
-        raw_bytes: raw_elems * mem_cfg.elem_bytes,
-        useful_bytes: useful_elems * mem_cfg.elem_bytes,
-        transactions,
-        max_abs_err: max_err,
-        wall_secs: wall0.elapsed().as_secs_f64(),
-    })
+    let session = ExperimentSpec::builder()
+        .stencil(
+            cfg.artifact.clone(),
+            cfg.kind,
+            exe.info.tile.clone(),
+            cfg.n,
+            cfg.m,
+            cfg.steps,
+        )
+        .layout(cfg.alloc.name())
+        .threads(cfg.parallel)
+        .pe_ops_per_cycle(cfg.pe_ops_per_cycle)
+        .mem(mem_cfg.clone())
+        .compile()?;
+    Ok(session
+        .run_with_runtime(rt, Mode::Data { seed: cfg.seed })?
+        .into_run_report())
 }

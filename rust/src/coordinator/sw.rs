@@ -1,20 +1,16 @@
-//! End-to-end Smith-Waterman-3seq driver (Table I's wavefront benchmark):
-//! 3-D dynamic-programming lattice, naturally backwards dependencies, no
-//! skewing needed.
+//! End-to-end Smith-Waterman-3seq driver — **deprecated shim, kept for
+//! one PR**. The driver body lives in [`crate::experiment`]; a [`SwRun`]
+//! is translated into a [`WorkloadSpec::Sw3`](crate::experiment::WorkloadSpec)
+//! session and executed in `Mode::Data` (3-D dynamic-programming lattice,
+//! naturally backwards dependencies, no skewing needed).
 
-use crate::accel::{Pipeline, TileCost};
-use crate::coordinator::reference::{sw3_deps, sw3_reference};
-use crate::coordinator::{AllocKind, HostMemory, RunReport};
+use crate::coordinator::{AllocKind, RunReport};
+use crate::experiment::{ExperimentSpec, Mode};
 use crate::memsim::MemConfig;
-use crate::memsim::MemSim;
-use crate::poly::deps::DepPattern;
-use crate::poly::tiling::Tiling;
 use crate::runtime::Runtime;
-use crate::util::rng::Rng;
-use anyhow::{bail, Result};
-use std::time::Instant;
+use anyhow::Result;
 
-/// Configuration for one 3-seq alignment run.
+/// Configuration for one 3-seq alignment run (legacy shape).
 #[derive(Clone, Debug)]
 pub struct SwRun {
     pub artifact: String,
@@ -45,163 +41,24 @@ impl SwRun {
 }
 
 /// Execute the alignment through the full stack; verify every facet value
-/// against the native DP reference.
+/// against the native DP reference. Deprecated shim over
+/// [`crate::experiment::Session::run_with_runtime`].
 pub fn run_sw(rt: &Runtime, cfg: &SwRun, mem_cfg: &MemConfig) -> Result<RunReport> {
-    let wall0 = Instant::now();
     let exe = rt.load(&cfg.artifact)?;
-    let (si, sj, sk) = match exe.info.tile[..] {
-        [a, b, c] => (a, b, c),
-        _ => bail!("artifact {} has no 3-d tile", cfg.artifact),
-    };
-    let (ni, nj, nk) = (cfg.ni, cfg.nj, cfg.nk);
-    if ni % si != 0 || nj % sj != 0 || nk % sk != 0 {
-        bail!("tile ({si},{sj},{sk}) must divide ({ni},{nj},{nk})");
-    }
-    let deps = DepPattern::new(sw3_deps())?;
-    let tiling = Tiling::new(vec![ni, nj, nk], vec![si, sj, sk]);
-    let alloc = cfg.alloc.build(&tiling, &deps)?;
-    let mut host = HostMemory::new(alloc.footprint());
-
-    // program inputs: three symbol sequences over a 4-letter alphabet
-    let mut rng = Rng::new(cfg.seed);
-    let mut seq = |len: i64| -> Vec<f32> {
-        (0..len).map(|_| rng.gen_range(4) as f32).collect()
-    };
-    let a = seq(ni);
-    let b = seq(nj);
-    let c = seq(nk);
-
-    let sample = |host: &HostMemory, i: i64, j: i64, k: i64| -> f32 {
-        if i < 0 || j < 0 || k < 0 {
-            0.0 // zero boundary of the DP
-        } else {
-            let (_, addr) = alloc.read_loc(&[i, j, k]);
-            host.read(addr)
-        }
-    };
-
-    let mut sim = MemSim::new(mem_cfg.clone());
-    let mut pipe = Pipeline::new();
-    let (mut raw_elems, mut useful_elems, mut transactions) = (0u64, 0u64, 0u64);
-
-    // burst planning streams ahead of the tile loop: one plan at a time
-    // when serial (the old behavior), a bounded window planned in parallel
-    // with --parallel N. consumption order is unchanged either way, so
-    // timing is bit-identical
-    let tiles: Vec<Vec<i64>> = tiling.tiles().collect();
-    let plans = crate::coordinator::batch::PlanStream::new(alloc.as_ref(), &tiles, cfg.parallel);
-    for (coords, plan) in tiles.iter().zip(plans) {
-        let (i0, j0, k0) = (coords[0] * si, coords[1] * sj, coords[2] * sk);
-        // ---- flow-in: three halo planes (zero outside the lattice)
-        let mut halo_i = vec![0f32; ((sj + 1) * (sk + 1)) as usize];
-        for x in 0..sj + 1 {
-            for y in 0..sk + 1 {
-                halo_i[(x * (sk + 1) + y) as usize] =
-                    sample(&host, i0 - 1, j0 - 1 + x, k0 - 1 + y);
-            }
-        }
-        let mut halo_j = vec![0f32; (si * (sk + 1)) as usize];
-        for x in 0..si {
-            for y in 0..sk + 1 {
-                halo_j[(x * (sk + 1) + y) as usize] = sample(&host, i0 + x, j0 - 1, k0 - 1 + y);
-            }
-        }
-        let mut halo_k = vec![0f32; (si * sj) as usize];
-        for x in 0..si {
-            for y in 0..sj {
-                halo_k[(x * sj + y) as usize] = sample(&host, i0 + x, j0 + y, k0 - 1);
-            }
-        }
-
-        // ---- execute
-        let out = exe.execute(
-            &[],
-            &[
-                (&a[i0 as usize..(i0 + si) as usize], &[si]),
-                (&b[j0 as usize..(j0 + sj) as usize], &[sj]),
-                (&c[k0 as usize..(k0 + sk) as usize], &[sk]),
-                (&halo_i, &[sj + 1, sk + 1]),
-                (&halo_j, &[si, sk + 1]),
-                (&halo_k, &[si, sj]),
-            ],
-        )?;
-        let (facet_i, facet_j, facet_k) = (&out[0], &out[1], &out[2]);
-
-        // ---- write facets (streamed locations, no per-point Vec)
-        let store = |host: &mut HostMemory, p: &[i64], v: f32| {
-            alloc.for_each_write_loc(p, &mut |_, addr| host.write(addr, v));
-        };
-        for x in 0..sj {
-            for y in 0..sk {
-                store(
-                    &mut host,
-                    &[i0 + si - 1, j0 + x, k0 + y],
-                    facet_i[(x * sk + y) as usize],
-                );
-            }
-        }
-        for x in 0..si {
-            for y in 0..sk {
-                store(
-                    &mut host,
-                    &[i0 + x, j0 + sj - 1, k0 + y],
-                    facet_j[(x * sk + y) as usize],
-                );
-            }
-        }
-        for x in 0..si {
-            for y in 0..sj {
-                store(
-                    &mut host,
-                    &[i0 + x, j0 + y, k0 + sk - 1],
-                    facet_k[(x * sj + y) as usize],
-                );
-            }
-        }
-
-        // ---- timing
-        let (rd, wr) = crate::accel::tile_mem_cycles(&mut sim, &plan.read_runs, &plan.write_runs);
-        let vol = tiling.tile_rect(coords).volume();
-        pipe.push(TileCost {
-            read: rd,
-            exec: vol * 14 / cfg.pe_ops_per_cycle.max(1), // 7 max-adds per cell
-            write: wr,
-        });
-        raw_elems += plan.read_raw() + plan.write_raw();
-        useful_elems += plan.read_useful + plan.write_useful;
-        transactions += plan.transactions() as u64;
-    }
-    let stats = pipe.finish();
-
-    // ---- verify all facet values against the reference DP
-    let reference = sw3_reference(&a, &b, &c);
-    let mut max_err = 0f64;
-    for i in 0..ni {
-        for j in 0..nj {
-            for k in 0..nk {
-                let on_facet =
-                    (i % si == si - 1) || (j % sj == sj - 1) || (k % sk == sk - 1);
-                if !on_facet {
-                    continue;
-                }
-                let (_, addr) = alloc.read_loc(&[i, j, k]);
-                let got = host.read(addr);
-                let want = reference[((i * nj + j) * nk + k) as usize];
-                max_err = max_err.max((got - want).abs() as f64);
-            }
-        }
-    }
-
-    Ok(RunReport {
-        benchmark: format!("sw3/{ni}x{nj}x{nk}"),
-        alloc: cfg.alloc.name().to_string(),
-        tiles: tiling.num_tiles(),
-        makespan_cycles: stats.makespan,
-        mem_busy_cycles: stats.mem_busy,
-        raw_bytes: raw_elems * mem_cfg.elem_bytes,
-        useful_bytes: useful_elems * mem_cfg.elem_bytes,
-        transactions,
-        max_abs_err: max_err,
-        wall_secs: wall0.elapsed().as_secs_f64(),
-    })
+    let session = ExperimentSpec::builder()
+        .sw3(
+            cfg.artifact.clone(),
+            exe.info.tile.clone(),
+            cfg.ni,
+            cfg.nj,
+            cfg.nk,
+        )
+        .layout(cfg.alloc.name())
+        .threads(cfg.parallel)
+        .pe_ops_per_cycle(cfg.pe_ops_per_cycle)
+        .mem(mem_cfg.clone())
+        .compile()?;
+    Ok(session
+        .run_with_runtime(rt, Mode::Data { seed: cfg.seed })?
+        .into_run_report())
 }

@@ -1,0 +1,420 @@
+//! End-to-end data-path drivers for [`Session`](super::Session): the
+//! paper's read–execute–write accelerator (Fig 2/13) with the FPGA
+//! replaced by the simulated memory interface (timing) plus AOT-compiled
+//! PJRT tile programs (numerics), verified against native references.
+//!
+//! Ported from the legacy `coordinator::stencil` / `coordinator::sw` free
+//! functions; those are now shims over these drivers, so the verification
+//! semantics (sampling convention, store order, reference comparison) are
+//! unchanged — the e2e numeric tests pin them down.
+
+use crate::accel::{Pipeline, TileCost};
+use crate::coordinator::batch::PlanStream;
+use crate::coordinator::reference::{stencil_reference, sw3_reference};
+use crate::coordinator::HostMemory;
+use crate::experiment::{Report, Session, WorkloadSpec};
+use crate::memsim::MemSim;
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+use std::time::Instant;
+
+/// Execute a [`WorkloadSpec::Stencil`] session end to end.
+pub(super) fn run_stencil(session: &Session, rt: &Runtime, seed: u64) -> Result<Report> {
+    let WorkloadSpec::Stencil {
+        artifact,
+        kind,
+        tile,
+        n,
+        m,
+        steps,
+    } = session.workload()
+    else {
+        bail!("run_stencil needs a WorkloadSpec::Stencil session");
+    };
+    let (kind, n, m, steps) = (*kind, *n, *m, *steps);
+    let wall0 = Instant::now();
+    let exe = rt.load(artifact)?;
+    if &exe.info.tile != tile {
+        bail!(
+            "artifact {artifact} tile {:?} does not match the spec tile {tile:?}",
+            exe.info.tile
+        );
+    }
+    let [tt, ti, tj] = tile[..] else {
+        bail!("artifact {artifact} has no 3-d tile");
+    };
+    let r = exe.info.radius;
+    if r != kind.radius() {
+        bail!("artifact radius {r} does not match benchmark {kind:?}");
+    }
+    let h = 2 * r;
+    let (uu, vv) = (n + r * steps, m + r * steps);
+
+    let alloc = session.allocation();
+    let tiling = session.tiling();
+    let mem_cfg = &session.spec().mem;
+    let mut host = HostMemory::new(alloc.footprint());
+
+    // program input: the initial grid (not a read-write array, kept as-is)
+    let mut rng = Rng::new(seed);
+    let init: Vec<f32> = (0..(n * m) as usize)
+        .map(|_| rng.gen_f64() as f32)
+        .collect();
+
+    let sample = |host: &HostMemory, t: i64, u: i64, v: i64| -> f32 {
+        if t < 0 {
+            // initial plane t = -1 in skewed coords: i = u - r*t = u + r
+            let (i, j) = (u + r, v + r);
+            if (0..n).contains(&i) && (0..m).contains(&j) {
+                init[(i * m + j) as usize]
+            } else {
+                0.0
+            }
+        } else if (0..steps).contains(&t) && (0..uu).contains(&u) && (0..vv).contains(&v) {
+            let (_, addr) = alloc.read_loc(&[t, u, v]);
+            host.read(addr)
+        } else {
+            0.0
+        }
+    };
+
+    let mut sim = MemSim::new(mem_cfg.clone());
+    let mut pipe = Pipeline::new();
+    let mut raw_elems = 0u64;
+    let mut useful_elems = 0u64;
+    let mut transactions = 0u64;
+    let pe_ops = session.spec().exec.pe_ops_per_cycle;
+    let flops_per_point = 2 * ((2 * r + 1) * (2 * r + 1)) as u64;
+
+    let halo_t = (tt - 1).max(1);
+    // burst planning streams ahead of the tile loop through the session's
+    // plan cache: one plan at a time when serial, a bounded window planned
+    // in parallel with more threads. consumption stays in lexicographic
+    // order either way, so simulator state and Timing counters are
+    // unchanged
+    let tiles: Vec<Vec<i64>> = tiling.tiles().collect();
+    let cache = session.cache();
+    let plans = PlanStream::with_cache(&cache, &tiles, session.spec().exec.threads);
+    for (coords, plan) in tiles.iter().zip(plans) {
+        let (bt, bu, bv) = (coords[0], coords[1], coords[2]);
+        let (t0, u0, v0) = (bt * tt, bu * ti, bv * tj);
+
+        // ---- assemble flow-in (the read stage's result)
+        let mut prev = vec![0f32; ((ti + h) * (tj + h)) as usize];
+        for x in 0..ti + h {
+            for y in 0..tj + h {
+                prev[(x * (tj + h) + y) as usize] =
+                    sample(&host, t0 - 1, u0 - h + x, v0 - h + y);
+            }
+        }
+        let mut halo_u = vec![0f32; (halo_t * h * (tj + h)) as usize];
+        let mut halo_v = vec![0f32; (halo_t * ti * h) as usize];
+        for s in 1..tt {
+            for x in 0..h {
+                for y in 0..tj + h {
+                    halo_u[(((s - 1) * h + x) * (tj + h) + y) as usize] =
+                        sample(&host, t0 + s - 1, u0 - h + x, v0 - h + y);
+                }
+            }
+            for x in 0..ti {
+                for y in 0..h {
+                    halo_v[(((s - 1) * ti + x) * h + y) as usize] =
+                        sample(&host, t0 + s - 1, u0 + x, v0 - h + y);
+                }
+            }
+        }
+
+        // ---- execute on PJRT
+        let out = exe.execute(
+            &[t0 as i32, u0 as i32, v0 as i32, n as i32, m as i32],
+            &[
+                (&prev, &[ti + h, tj + h]),
+                (&halo_u, &[halo_t, h, tj + h]),
+                (&halo_v, &[halo_t, ti, h]),
+            ],
+        )?;
+        let (facet_t, facet_u, facet_v) = (&out[0], &out[1], &out[2]);
+
+        // ---- write flow-out facets to global memory (no per-point Vec:
+        // the allocation streams the replicated locations directly)
+        let store = |host: &mut HostMemory, p: &[i64], v: f32| {
+            alloc.for_each_write_loc(p, &mut |_, addr| host.write(addr, v));
+        };
+        for x in 0..ti {
+            for y in 0..tj {
+                store(
+                    &mut host,
+                    &[t0 + tt - 1, u0 + x, v0 + y],
+                    facet_t[(x * tj + y) as usize],
+                );
+            }
+        }
+        for s in 0..tt {
+            for x in 0..h {
+                for y in 0..tj {
+                    store(
+                        &mut host,
+                        &[t0 + s, u0 + ti - h + x, v0 + y],
+                        facet_u[((s * h + x) * tj + y) as usize],
+                    );
+                }
+            }
+            for x in 0..ti {
+                for y in 0..h {
+                    store(
+                        &mut host,
+                        &[t0 + s, u0 + x, v0 + tj - h + y],
+                        facet_v[((s * ti + x) * h + y) as usize],
+                    );
+                }
+            }
+        }
+
+        // ---- timing through the memory simulator + task pipeline
+        let (rd, wr) = crate::accel::tile_mem_cycles(&mut sim, &plan.read_runs, &plan.write_runs);
+        let vol = tiling.tile_rect(coords).volume();
+        pipe.push(TileCost {
+            read: rd,
+            exec: vol * flops_per_point / pe_ops.max(1),
+            write: wr,
+        });
+        raw_elems += plan.read_raw() + plan.write_raw();
+        useful_elems += plan.read_useful + plan.write_useful;
+        transactions += plan.transactions() as u64;
+    }
+    let stats = pipe.finish();
+
+    // ---- verification against the native reference
+    let reference = stencil_reference(&init, n as usize, m as usize, kind, steps as usize);
+    let mut max_err = 0f64;
+    for i in 0..n {
+        for j in 0..m {
+            let (u, v) = (i + r * (steps - 1), j + r * (steps - 1));
+            let (_, addr) = alloc.read_loc(&[steps - 1, u, v]);
+            let got = host.read(addr);
+            let want = reference[(i * m + j) as usize];
+            max_err = max_err.max((got - want).abs() as f64);
+        }
+    }
+
+    Ok(finish_report(
+        session,
+        stats,
+        raw_elems,
+        useful_elems,
+        transactions,
+        sim,
+        max_err,
+        wall0,
+    ))
+}
+
+/// Execute a [`WorkloadSpec::Sw3`] session end to end, verifying every
+/// facet value against the native DP reference.
+pub(super) fn run_sw3(session: &Session, rt: &Runtime, seed: u64) -> Result<Report> {
+    let WorkloadSpec::Sw3 {
+        artifact,
+        tile,
+        ni,
+        nj,
+        nk,
+    } = session.workload()
+    else {
+        bail!("run_sw3 needs a WorkloadSpec::Sw3 session");
+    };
+    let (ni, nj, nk) = (*ni, *nj, *nk);
+    let wall0 = Instant::now();
+    let exe = rt.load(artifact)?;
+    if &exe.info.tile != tile {
+        bail!(
+            "artifact {artifact} tile {:?} does not match the spec tile {tile:?}",
+            exe.info.tile
+        );
+    }
+    let [si, sj, sk] = tile[..] else {
+        bail!("artifact {artifact} has no 3-d tile");
+    };
+
+    let alloc = session.allocation();
+    let tiling = session.tiling();
+    let mem_cfg = &session.spec().mem;
+    let mut host = HostMemory::new(alloc.footprint());
+
+    // program inputs: three symbol sequences over a 4-letter alphabet
+    let mut rng = Rng::new(seed);
+    let mut seq = |len: i64| -> Vec<f32> {
+        (0..len).map(|_| rng.gen_range(4) as f32).collect()
+    };
+    let a = seq(ni);
+    let b = seq(nj);
+    let c = seq(nk);
+
+    let sample = |host: &HostMemory, i: i64, j: i64, k: i64| -> f32 {
+        if i < 0 || j < 0 || k < 0 {
+            0.0 // zero boundary of the DP
+        } else {
+            let (_, addr) = alloc.read_loc(&[i, j, k]);
+            host.read(addr)
+        }
+    };
+
+    let mut sim = MemSim::new(mem_cfg.clone());
+    let mut pipe = Pipeline::new();
+    let (mut raw_elems, mut useful_elems, mut transactions) = (0u64, 0u64, 0u64);
+    let pe_ops = session.spec().exec.pe_ops_per_cycle;
+
+    // burst planning streams ahead of the tile loop (see run_stencil)
+    let tiles: Vec<Vec<i64>> = tiling.tiles().collect();
+    let cache = session.cache();
+    let plans = PlanStream::with_cache(&cache, &tiles, session.spec().exec.threads);
+    for (coords, plan) in tiles.iter().zip(plans) {
+        let (i0, j0, k0) = (coords[0] * si, coords[1] * sj, coords[2] * sk);
+        // ---- flow-in: three halo planes (zero outside the lattice)
+        let mut halo_i = vec![0f32; ((sj + 1) * (sk + 1)) as usize];
+        for x in 0..sj + 1 {
+            for y in 0..sk + 1 {
+                halo_i[(x * (sk + 1) + y) as usize] =
+                    sample(&host, i0 - 1, j0 - 1 + x, k0 - 1 + y);
+            }
+        }
+        let mut halo_j = vec![0f32; (si * (sk + 1)) as usize];
+        for x in 0..si {
+            for y in 0..sk + 1 {
+                halo_j[(x * (sk + 1) + y) as usize] = sample(&host, i0 + x, j0 - 1, k0 - 1 + y);
+            }
+        }
+        let mut halo_k = vec![0f32; (si * sj) as usize];
+        for x in 0..si {
+            for y in 0..sj {
+                halo_k[(x * sj + y) as usize] = sample(&host, i0 + x, j0 + y, k0 - 1);
+            }
+        }
+
+        // ---- execute
+        let out = exe.execute(
+            &[],
+            &[
+                (&a[i0 as usize..(i0 + si) as usize], &[si]),
+                (&b[j0 as usize..(j0 + sj) as usize], &[sj]),
+                (&c[k0 as usize..(k0 + sk) as usize], &[sk]),
+                (&halo_i, &[sj + 1, sk + 1]),
+                (&halo_j, &[si, sk + 1]),
+                (&halo_k, &[si, sj]),
+            ],
+        )?;
+        let (facet_i, facet_j, facet_k) = (&out[0], &out[1], &out[2]);
+
+        // ---- write facets (streamed locations, no per-point Vec)
+        let store = |host: &mut HostMemory, p: &[i64], v: f32| {
+            alloc.for_each_write_loc(p, &mut |_, addr| host.write(addr, v));
+        };
+        for x in 0..sj {
+            for y in 0..sk {
+                store(
+                    &mut host,
+                    &[i0 + si - 1, j0 + x, k0 + y],
+                    facet_i[(x * sk + y) as usize],
+                );
+            }
+        }
+        for x in 0..si {
+            for y in 0..sk {
+                store(
+                    &mut host,
+                    &[i0 + x, j0 + sj - 1, k0 + y],
+                    facet_j[(x * sk + y) as usize],
+                );
+            }
+        }
+        for x in 0..si {
+            for y in 0..sj {
+                store(
+                    &mut host,
+                    &[i0 + x, j0 + y, k0 + sk - 1],
+                    facet_k[(x * sj + y) as usize],
+                );
+            }
+        }
+
+        // ---- timing
+        let (rd, wr) = crate::accel::tile_mem_cycles(&mut sim, &plan.read_runs, &plan.write_runs);
+        let vol = tiling.tile_rect(coords).volume();
+        pipe.push(TileCost {
+            read: rd,
+            exec: vol * 14 / pe_ops.max(1), // 7 max-adds per cell
+            write: wr,
+        });
+        raw_elems += plan.read_raw() + plan.write_raw();
+        useful_elems += plan.read_useful + plan.write_useful;
+        transactions += plan.transactions() as u64;
+    }
+    let stats = pipe.finish();
+
+    // ---- verify all facet values against the reference DP
+    let reference = sw3_reference(&a, &b, &c);
+    let mut max_err = 0f64;
+    for i in 0..ni {
+        for j in 0..nj {
+            for k in 0..nk {
+                let on_facet =
+                    (i % si == si - 1) || (j % sj == sj - 1) || (k % sk == sk - 1);
+                if !on_facet {
+                    continue;
+                }
+                let (_, addr) = alloc.read_loc(&[i, j, k]);
+                let got = host.read(addr);
+                let want = reference[((i * nj + j) * nk + k) as usize];
+                max_err = max_err.max((got - want).abs() as f64);
+            }
+        }
+    }
+
+    Ok(finish_report(
+        session,
+        stats,
+        raw_elems,
+        useful_elems,
+        transactions,
+        sim,
+        max_err,
+        wall0,
+    ))
+}
+
+/// Fold the pipeline stats and simulator counters into a unified
+/// [`Report`] (mode `data`, verification error attached).
+#[allow(clippy::too_many_arguments)]
+fn finish_report(
+    session: &Session,
+    stats: crate::accel::PipelineStats,
+    raw_elems: u64,
+    useful_elems: u64,
+    transactions: u64,
+    sim: MemSim,
+    max_err: f64,
+    wall0: Instant,
+) -> Report {
+    let mem_cfg = &session.spec().mem;
+    let raw_bytes = raw_elems * mem_cfg.elem_bytes;
+    let useful_bytes = useful_elems * mem_cfg.elem_bytes;
+    let secs = mem_cfg.secs(stats.makespan.max(1));
+    Report {
+        benchmark: session.benchmark().to_string(),
+        layout: session.layout().to_string(),
+        mode: "data".to_string(),
+        tiles: session.tiling().num_tiles(),
+        waves: session.schedule().num_waves(),
+        makespan_cycles: stats.makespan,
+        mem_busy_cycles: stats.mem_busy,
+        raw_bytes,
+        useful_bytes,
+        transactions,
+        raw_mb_s: raw_bytes as f64 / 1e6 / secs,
+        effective_mb_s: useful_bytes as f64 / 1e6 / secs,
+        peak_mb_s: mem_cfg.peak_mb_s(),
+        timing: Some(sim.timing().clone()),
+        max_abs_err: Some(max_err),
+        wall_secs: wall0.elapsed().as_secs_f64(),
+    }
+}

@@ -1,0 +1,902 @@
+//! The `experiment` subsystem: one typed front door for the whole stack.
+//!
+//! The paper's pipeline — choose a layout, plan burst runs per tile,
+//! marshal, replay timing — is one conceptual flow, and this module
+//! exposes it as one API instead of four disjoint entry points:
+//!
+//! 1. **Spec.** An [`ExperimentSpec`] names a workload
+//!    ([`WorkloadSpec`]), a layout by registry name ([`LayoutSpec`] —
+//!    resolved through the open [`LayoutRegistry`], so custom layouts are
+//!    reachable by name), an execution shape ([`ExecSpec`]) and a memory
+//!    interface ([`MemConfig`]). Build one with [`ExperimentSpec::builder`].
+//! 2. **Session.** [`ExperimentSpec::compile`] resolves the spec once into
+//!    a [`Session`] that owns the allocation, the tile [`Schedule`] and the
+//!    plan-memoization state ([`PlanCacheState`]); compiling is where all
+//!    name resolution and divisibility validation happens.
+//! 3. **Run.** [`Session::run`] executes polymorphically over [`Mode`]:
+//!    `Timing` (replay the session schedule through the memory simulator),
+//!    `Data { seed }` (full data path: the synthetic kernel for offline
+//!    workloads, the verified PJRT end-to-end drivers for
+//!    [`WorkloadSpec::Stencil`] / [`WorkloadSpec::Sw3`]), or `Sweep` (the
+//!    paper's memory-bound rig: flat lexicographic replay, Fig-15
+//!    semantics). Every mode returns the same unified [`Report`] — a
+//!    superset of the legacy `RunReport`/`BatchReport` with JSON
+//!    serialization.
+//!
+//! The legacy free functions (`run_stencil`, `run_sw`, the
+//! `measure_bandwidth` family) are thin shims over this module and are
+//! kept for one PR; new code should build sessions.
+//!
+//! ```no_run
+//! use cfa::experiment::{ExperimentSpec, Mode, ScheduleKind};
+//!
+//! let session = ExperimentSpec::builder()
+//!     .named("jacobi2d5p", vec![16, 16, 16], 3)
+//!     .layout("cfa")
+//!     .schedule(ScheduleKind::Wavefront)
+//!     .threads(4)
+//!     .compile()?;
+//! let report = session.run(Mode::Timing)?;
+//! println!("{}", report.summary());
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+mod e2e;
+
+use crate::coordinator::batch::{BatchCoordinator, Schedule};
+use crate::coordinator::reference::{sw3_deps, StencilKind};
+use crate::coordinator::{HostMemory, RunReport};
+use crate::harness::workloads;
+use crate::layout::registry::{self, LayoutRegistry};
+use crate::layout::{Allocation, PlanCache, PlanCacheState};
+use crate::memsim::{MemConfig, Timing};
+use crate::poly::deps::DepPattern;
+use crate::poly::tiling::Tiling;
+use crate::poly::vec::IVec;
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::time::Instant;
+
+/// What program the experiment runs.
+#[derive(Clone, Debug)]
+pub enum WorkloadSpec {
+    /// A named registry workload (Table I via `harness::workloads::by_name`,
+    /// plus `heat3d`) at one tile size, `tiles_per_dim` tiles per axis.
+    Named {
+        name: String,
+        tile: IVec,
+        tiles_per_dim: i64,
+    },
+    /// An explicit iteration space, tiling and dependence pattern.
+    Custom {
+        label: String,
+        space: IVec,
+        tile: IVec,
+        deps: Vec<IVec>,
+    },
+    /// End-to-end stencil through the PJRT runtime (`Mode::Data`): the
+    /// skew-normalized (steps, n + r·steps, m + r·steps) box, verified
+    /// against the native reference. `tile` must match the artifact.
+    Stencil {
+        artifact: String,
+        kind: StencilKind,
+        tile: IVec,
+        n: i64,
+        m: i64,
+        steps: i64,
+    },
+    /// End-to-end Smith-Waterman-3seq through the PJRT runtime.
+    Sw3 {
+        artifact: String,
+        tile: IVec,
+        ni: i64,
+        nj: i64,
+        nk: i64,
+    },
+}
+
+impl WorkloadSpec {
+    /// Report label (matches the legacy drivers' `benchmark` strings).
+    pub fn label(&self) -> String {
+        match self {
+            WorkloadSpec::Named { name, .. } => name.clone(),
+            WorkloadSpec::Custom { label, .. } => label.clone(),
+            WorkloadSpec::Stencil { kind, n, m, steps, .. } => {
+                format!("{kind:?}/{steps}x{n}x{m}").to_lowercase()
+            }
+            WorkloadSpec::Sw3 { ni, nj, nk, .. } => format!("sw3/{ni}x{nj}x{nk}"),
+        }
+    }
+
+    /// True for the workloads whose data path runs on the PJRT runtime.
+    pub fn is_e2e(&self) -> bool {
+        matches!(self, WorkloadSpec::Stencil { .. } | WorkloadSpec::Sw3 { .. })
+    }
+}
+
+/// Tile schedule shape for the session.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleKind {
+    /// One lexicographic wave (timing/planning only — the Fig-15 rig).
+    Flat,
+    /// Exact dependence-depth wavefront (required for `Mode::Data`).
+    Wavefront,
+}
+
+/// How the session executes: schedule shape, worker threads for the pure
+/// plan/marshal phase, modeled compute parallelism, artifacts location.
+#[derive(Clone, Debug)]
+pub struct ExecSpec {
+    pub schedule: ScheduleKind,
+    /// Worker threads for burst planning / marshalling (1 = serial;
+    /// timing and numerics are bit-identical for any count).
+    pub threads: usize,
+    /// Modeled compute parallelism (ops/cycle) for the exec stage.
+    pub pe_ops_per_cycle: u64,
+    /// Artifacts directory for the PJRT end-to-end workloads.
+    pub artifacts_dir: String,
+}
+
+impl Default for ExecSpec {
+    fn default() -> ExecSpec {
+        ExecSpec {
+            schedule: ScheduleKind::Wavefront,
+            threads: 1,
+            pe_ops_per_cycle: 64,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+/// Which layout to run with, by registry name (canonical or alias).
+#[derive(Clone, Debug)]
+pub struct LayoutSpec {
+    pub name: String,
+}
+
+impl LayoutSpec {
+    pub fn new(name: impl Into<String>) -> LayoutSpec {
+        LayoutSpec { name: name.into() }
+    }
+}
+
+/// A fully-specified experiment: workload × layout × execution × memory.
+#[derive(Clone, Debug)]
+pub struct ExperimentSpec {
+    pub workload: WorkloadSpec,
+    pub layout: LayoutSpec,
+    pub exec: ExecSpec,
+    pub mem: MemConfig,
+}
+
+impl ExperimentSpec {
+    pub fn builder() -> ExperimentBuilder {
+        ExperimentBuilder::new()
+    }
+
+    /// Compile against the process-global layout registry.
+    pub fn compile(self) -> Result<Session> {
+        Session::compile_with(self, &registry::global())
+    }
+
+    /// Compile against an explicit registry (custom layouts without
+    /// touching global state).
+    pub fn compile_with(self, registry: &LayoutRegistry) -> Result<Session> {
+        Session::compile_with(self, registry)
+    }
+}
+
+/// Builder for [`ExperimentSpec`] (and, via [`compile`](Self::compile),
+/// directly for [`Session`]).
+#[derive(Clone, Debug, Default)]
+pub struct ExperimentBuilder {
+    workload: Option<WorkloadSpec>,
+    layout: Option<String>,
+    exec: ExecSpec,
+    mem: Option<MemConfig>,
+    registry: Option<LayoutRegistry>,
+}
+
+impl ExperimentBuilder {
+    pub fn new() -> ExperimentBuilder {
+        ExperimentBuilder::default()
+    }
+
+    /// Any workload, verbatim.
+    pub fn workload(mut self, w: WorkloadSpec) -> Self {
+        self.workload = Some(w);
+        self
+    }
+
+    /// Named registry workload (`cfa list` names, plus `heat3d`).
+    pub fn named(self, name: impl Into<String>, tile: IVec, tiles_per_dim: i64) -> Self {
+        self.workload(WorkloadSpec::Named {
+            name: name.into(),
+            tile,
+            tiles_per_dim,
+        })
+    }
+
+    /// Explicit space/tile/dependence-pattern workload.
+    pub fn custom(
+        self,
+        label: impl Into<String>,
+        space: IVec,
+        tile: IVec,
+        deps: Vec<IVec>,
+    ) -> Self {
+        self.workload(WorkloadSpec::Custom {
+            label: label.into(),
+            space,
+            tile,
+            deps,
+        })
+    }
+
+    /// End-to-end stencil workload (PJRT data path).
+    pub fn stencil(
+        self,
+        artifact: impl Into<String>,
+        kind: StencilKind,
+        tile: IVec,
+        n: i64,
+        m: i64,
+        steps: i64,
+    ) -> Self {
+        self.workload(WorkloadSpec::Stencil {
+            artifact: artifact.into(),
+            kind,
+            tile,
+            n,
+            m,
+            steps,
+        })
+    }
+
+    /// End-to-end Smith-Waterman-3seq workload (PJRT data path).
+    pub fn sw3(
+        self,
+        artifact: impl Into<String>,
+        tile: IVec,
+        ni: i64,
+        nj: i64,
+        nk: i64,
+    ) -> Self {
+        self.workload(WorkloadSpec::Sw3 {
+            artifact: artifact.into(),
+            tile,
+            ni,
+            nj,
+            nk,
+        })
+    }
+
+    /// Layout by registry name (canonical or alias). Default: `cfa`.
+    pub fn layout(mut self, name: impl Into<String>) -> Self {
+        self.layout = Some(name.into());
+        self
+    }
+
+    pub fn schedule(mut self, kind: ScheduleKind) -> Self {
+        self.exec.schedule = kind;
+        self
+    }
+
+    pub fn threads(mut self, n: usize) -> Self {
+        self.exec.threads = n.max(1);
+        self
+    }
+
+    pub fn pe_ops_per_cycle(mut self, ops: u64) -> Self {
+        self.exec.pe_ops_per_cycle = ops;
+        self
+    }
+
+    pub fn artifacts_dir(mut self, dir: impl Into<String>) -> Self {
+        self.exec.artifacts_dir = dir.into();
+        self
+    }
+
+    pub fn mem(mut self, cfg: MemConfig) -> Self {
+        self.mem = Some(cfg);
+        self
+    }
+
+    /// Resolve layout names against this registry instead of the global
+    /// one (lets tests and embedders use custom layouts without mutating
+    /// process state).
+    pub fn registry(mut self, registry: LayoutRegistry) -> Self {
+        self.registry = Some(registry);
+        self
+    }
+
+    /// The spec, unvalidated (validation happens at compile).
+    pub fn spec(self) -> Result<ExperimentSpec> {
+        Ok(ExperimentSpec {
+            workload: self
+                .workload
+                .ok_or_else(|| anyhow!("experiment spec has no workload"))?,
+            layout: LayoutSpec::new(self.layout.unwrap_or_else(|| registry::names::CFA.into())),
+            exec: self.exec,
+            mem: self.mem.unwrap_or_default(),
+        })
+    }
+
+    /// Compile straight to a [`Session`].
+    pub fn compile(self) -> Result<Session> {
+        let registry = match self.registry.clone() {
+            Some(r) => r,
+            None => registry::global(),
+        };
+        let spec = self.spec()?;
+        Session::compile_with(spec, &registry)
+    }
+}
+
+/// How to run a compiled session.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Replay the session's schedule through the memory simulator
+    /// (plan-only: no data is marshalled).
+    Timing,
+    /// Full data path. Offline workloads run the deterministic synthetic
+    /// kernel (requires a wavefront schedule); `Stencil`/`Sw3` run the
+    /// verified PJRT end-to-end drivers.
+    Data { seed: u64 },
+    /// The paper's memory-bound rig: every tile's bursts replayed
+    /// back-to-back in lexicographic order (Fig-15 semantics), regardless
+    /// of the session schedule.
+    Sweep,
+}
+
+/// Unified outcome of any [`Session::run`] — superset of the legacy
+/// `RunReport` (serial e2e drivers) and `BatchReport` (batched
+/// coordinator), with JSON serialization for machine-readable records.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Workload label (e.g. `jacobi2d5p`, `jacobi5p/32x96x96`).
+    pub benchmark: String,
+    /// Canonical layout name (registry spelling).
+    pub layout: String,
+    /// Mode label: `timing` | `data` | `sweep`.
+    pub mode: String,
+    pub tiles: u64,
+    pub waves: usize,
+    /// Pipeline/replay makespan in bus cycles.
+    pub makespan_cycles: u64,
+    /// Cycles the memory port was busy moving data.
+    pub mem_busy_cycles: u64,
+    /// Raw / useful bytes moved.
+    pub raw_bytes: u64,
+    pub useful_bytes: u64,
+    /// Total burst transactions issued.
+    pub transactions: u64,
+    /// Raw bandwidth over the makespan, MB/s.
+    pub raw_mb_s: f64,
+    /// Effective bandwidth over the makespan, MB/s (Fig-15 color).
+    pub effective_mb_s: f64,
+    /// Bus roofline of the memory config the run used, MB/s.
+    pub peak_mb_s: f64,
+    /// Full simulator counters, when the run replays through the memory
+    /// simulator (`crate::memsim::MemSim`).
+    pub timing: Option<Timing>,
+    /// Verification error (end-to-end data runs only).
+    pub max_abs_err: Option<f64>,
+    /// Host wall time of the run, seconds.
+    pub wall_secs: f64,
+}
+
+impl Report {
+    /// Effective bandwidth as a percentage of the bus roofline.
+    pub fn bus_pct(&self) -> f64 {
+        if self.peak_mb_s == 0.0 {
+            0.0
+        } else {
+            100.0 * self.effective_mb_s / self.peak_mb_s
+        }
+    }
+
+    /// One-line human summary (same shape as the legacy `RunReport`).
+    pub fn summary(&self) -> String {
+        let err = match self.max_abs_err {
+            Some(e) => format!(" err={e:.2e}"),
+            None => String::new(),
+        };
+        format!(
+            "{:<22} {:<9} {:<6} tiles={:<5} txns={:<6} raw={:>7.1} MB/s eff={:>7.1} MB/s ({:>5.1}% of bus){err}",
+            self.benchmark,
+            self.layout,
+            self.mode,
+            self.tiles,
+            self.transactions,
+            self.raw_mb_s,
+            self.effective_mb_s,
+            self.bus_pct(),
+        )
+    }
+
+    /// Machine-readable record.
+    pub fn to_json(&self) -> Json {
+        let timing = match &self.timing {
+            Some(t) => Json::obj(vec![
+                ("cycles", Json::num(t.cycles as f64)),
+                ("data_cycles", Json::num(t.data_cycles as f64)),
+                ("axi_bursts", Json::num(t.axi_bursts as f64)),
+                ("row_hits", Json::num(t.row_hits as f64)),
+                ("row_misses", Json::num(t.row_misses as f64)),
+                ("row_switches", Json::num(t.row_switches as f64)),
+                ("turnarounds", Json::num(t.turnarounds as f64)),
+            ]),
+            None => Json::Null,
+        };
+        Json::obj(vec![
+            ("benchmark", Json::str(self.benchmark.clone())),
+            ("layout", Json::str(self.layout.clone())),
+            ("mode", Json::str(self.mode.clone())),
+            ("tiles", Json::num(self.tiles as f64)),
+            ("waves", Json::num(self.waves as f64)),
+            ("makespan_cycles", Json::num(self.makespan_cycles as f64)),
+            ("mem_busy_cycles", Json::num(self.mem_busy_cycles as f64)),
+            ("raw_bytes", Json::num(self.raw_bytes as f64)),
+            ("useful_bytes", Json::num(self.useful_bytes as f64)),
+            ("transactions", Json::num(self.transactions as f64)),
+            ("raw_mb_s", Json::num(self.raw_mb_s)),
+            ("effective_mb_s", Json::num(self.effective_mb_s)),
+            ("peak_mb_s", Json::num(self.peak_mb_s)),
+            (
+                "max_abs_err",
+                match self.max_abs_err {
+                    Some(e) => Json::num(e),
+                    None => Json::Null,
+                },
+            ),
+            ("wall_secs", Json::num(self.wall_secs)),
+            ("timing", timing),
+        ])
+    }
+
+    /// Parse a record produced by [`Report::to_json`].
+    pub fn from_json(j: &Json) -> Result<Report> {
+        let text = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("report json: missing string '{k}'"))
+        };
+        let num = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("report json: missing number '{k}'"))
+        };
+        let timing = match j.get("timing") {
+            None | Some(Json::Null) => None,
+            Some(t) => {
+                let f = |k: &str| -> Result<u64> {
+                    t.get(k)
+                        .and_then(Json::as_f64)
+                        .map(|x| x as u64)
+                        .ok_or_else(|| anyhow!("report json: missing timing '{k}'"))
+                };
+                Some(Timing {
+                    cycles: f("cycles")?,
+                    data_cycles: f("data_cycles")?,
+                    axi_bursts: f("axi_bursts")?,
+                    row_hits: f("row_hits")?,
+                    row_misses: f("row_misses")?,
+                    row_switches: f("row_switches")?,
+                    turnarounds: f("turnarounds")?,
+                })
+            }
+        };
+        Ok(Report {
+            benchmark: text("benchmark")?,
+            layout: text("layout")?,
+            mode: text("mode")?,
+            tiles: num("tiles")? as u64,
+            waves: num("waves")? as usize,
+            makespan_cycles: num("makespan_cycles")? as u64,
+            mem_busy_cycles: num("mem_busy_cycles")? as u64,
+            raw_bytes: num("raw_bytes")? as u64,
+            useful_bytes: num("useful_bytes")? as u64,
+            transactions: num("transactions")? as u64,
+            raw_mb_s: num("raw_mb_s")?,
+            effective_mb_s: num("effective_mb_s")?,
+            peak_mb_s: num("peak_mb_s")?,
+            timing,
+            max_abs_err: j.get("max_abs_err").and_then(Json::as_f64),
+            wall_secs: num("wall_secs")?,
+        })
+    }
+
+    /// Downcast to the legacy serial-driver report type (shim support).
+    pub fn into_run_report(self) -> RunReport {
+        RunReport {
+            benchmark: self.benchmark,
+            alloc: self.layout,
+            tiles: self.tiles,
+            makespan_cycles: self.makespan_cycles,
+            mem_busy_cycles: self.mem_busy_cycles,
+            raw_bytes: self.raw_bytes,
+            useful_bytes: self.useful_bytes,
+            transactions: self.transactions,
+            max_abs_err: self.max_abs_err.unwrap_or(0.0),
+            wall_secs: self.wall_secs,
+        }
+    }
+}
+
+/// A compiled experiment: the allocation, schedule and plan cache built
+/// once from an [`ExperimentSpec`], runnable any number of times.
+pub struct Session {
+    spec: ExperimentSpec,
+    benchmark: String,
+    layout: String,
+    tiling: Tiling,
+    deps: DepPattern,
+    alloc: Box<dyn Allocation>,
+    schedule: Schedule,
+    cache: PlanCacheState,
+}
+
+impl Session {
+    /// Resolve and validate `spec` against `registry`.
+    pub fn compile_with(spec: ExperimentSpec, registry: &LayoutRegistry) -> Result<Session> {
+        let (benchmark, tiling, deps) = resolve_workload(&spec.workload)?;
+        let entry = registry.resolve_or_err(&spec.layout.name)?;
+        let alloc = entry.build(&tiling, &deps)?;
+        let layout = entry.name().to_string();
+        let schedule = match spec.exec.schedule {
+            ScheduleKind::Flat => Schedule::flat(&tiling),
+            ScheduleKind::Wavefront => Schedule::wavefront(&tiling, &deps),
+        };
+        let cache = PlanCacheState::new(alloc.as_ref());
+        Ok(Session {
+            spec,
+            benchmark,
+            layout,
+            tiling,
+            deps,
+            alloc,
+            schedule,
+            cache,
+        })
+    }
+
+    pub fn spec(&self) -> &ExperimentSpec {
+        &self.spec
+    }
+
+    pub fn workload(&self) -> &WorkloadSpec {
+        &self.spec.workload
+    }
+
+    /// Report label of the workload.
+    pub fn benchmark(&self) -> &str {
+        &self.benchmark
+    }
+
+    /// Canonical layout name.
+    pub fn layout(&self) -> &str {
+        &self.layout
+    }
+
+    pub fn tiling(&self) -> &Tiling {
+        &self.tiling
+    }
+
+    pub fn deps(&self) -> &DepPattern {
+        &self.deps
+    }
+
+    /// The allocation this session owns.
+    pub fn allocation(&self) -> &dyn Allocation {
+        self.alloc.as_ref()
+    }
+
+    pub fn schedule(&self) -> &Schedule {
+        &self.schedule
+    }
+
+    /// A plan-cache view over the session-owned memoization state (the
+    /// canonical interior plan is derived once per session).
+    pub fn cache(&self) -> PlanCache<'_> {
+        PlanCache::with_state(self.alloc.as_ref(), &self.cache)
+    }
+
+    /// Execute the session. End-to-end workloads in `Mode::Data` open the
+    /// PJRT runtime from `exec.artifacts_dir`; use
+    /// [`Session::run_with_runtime`] to reuse an already-open runtime.
+    pub fn run(&self, mode: Mode) -> Result<Report> {
+        match (&self.spec.workload, mode) {
+            (w, Mode::Data { seed }) if w.is_e2e() => {
+                let rt = Runtime::open(&self.spec.exec.artifacts_dir)?;
+                self.run_with_runtime(&rt, Mode::Data { seed })
+            }
+            (_, mode) => self.run_offline(mode),
+        }
+    }
+
+    /// [`Session::run`] against a caller-owned runtime (used by the CLI
+    /// and the legacy driver shims, which open the runtime once).
+    pub fn run_with_runtime(&self, rt: &Runtime, mode: Mode) -> Result<Report> {
+        match (&self.spec.workload, mode) {
+            (WorkloadSpec::Stencil { .. }, Mode::Data { seed }) => e2e::run_stencil(self, rt, seed),
+            (WorkloadSpec::Sw3 { .. }, Mode::Data { seed }) => e2e::run_sw3(self, rt, seed),
+            (_, mode) => self.run_offline(mode),
+        }
+    }
+
+    /// `Mode::Data` for offline workloads, returning the final host buffer
+    /// alongside the report (the bit-identity tests compare buffers).
+    /// End-to-end workloads are rejected: their data path is the verified
+    /// PJRT driver ([`Session::run`] / [`Session::run_with_runtime`]), not
+    /// the synthetic kernel, and silently substituting the latter would
+    /// yield a report indistinguishable from a verified run.
+    pub fn run_data_buffered(&self, seed: u64) -> Result<(Report, HostMemory)> {
+        if self.spec.workload.is_e2e() {
+            bail!(
+                "run_data_buffered drives the offline synthetic kernel; run this \
+                 end-to-end workload through Session::run(Mode::Data) instead"
+            );
+        }
+        if !self.schedule.is_dependence_safe() {
+            bail!(
+                "Mode::Data needs a dependence-respecting schedule: compile the session \
+                 with ScheduleKind::Wavefront (ScheduleKind::Flat is timing-only)"
+            );
+        }
+        let wall0 = Instant::now();
+        let (rep, host) = self.coordinator(&self.schedule).run_data(seed);
+        let report = self.report_from_batch("data", &rep, wall0.elapsed().as_secs_f64());
+        Ok((report, host))
+    }
+
+    fn run_offline(&self, mode: Mode) -> Result<Report> {
+        let wall0 = Instant::now();
+        match mode {
+            Mode::Timing => {
+                let rep = self.coordinator(&self.schedule).run_timing();
+                Ok(self.report_from_batch("timing", &rep, wall0.elapsed().as_secs_f64()))
+            }
+            Mode::Sweep => {
+                // the memory-bound rig always replays flat, back-to-back
+                if self.spec.exec.schedule == ScheduleKind::Flat {
+                    let rep = self.coordinator(&self.schedule).run_timing();
+                    Ok(self.report_from_batch("sweep", &rep, wall0.elapsed().as_secs_f64()))
+                } else {
+                    let flat = Schedule::flat(&self.tiling);
+                    let rep = self.coordinator(&flat).run_timing();
+                    Ok(self.report_from_batch("sweep", &rep, wall0.elapsed().as_secs_f64()))
+                }
+            }
+            Mode::Data { seed } => {
+                let (report, _host) = self.run_data_buffered(seed)?;
+                Ok(report)
+            }
+        }
+    }
+
+    fn coordinator<'a>(&'a self, schedule: &'a Schedule) -> BatchCoordinator<'a> {
+        BatchCoordinator::new(self.alloc.as_ref(), schedule, self.spec.mem.clone())
+            .threads(self.spec.exec.threads)
+            .cache_state(&self.cache)
+    }
+
+    fn report_from_batch(
+        &self,
+        mode: &str,
+        rep: &crate::coordinator::batch::BatchReport,
+        wall_secs: f64,
+    ) -> Report {
+        let mem = &self.spec.mem;
+        let secs = mem.secs(rep.cycles.max(1));
+        let raw_bytes = rep.raw_elems * mem.elem_bytes;
+        let useful_bytes = rep.useful_elems * mem.elem_bytes;
+        Report {
+            benchmark: self.benchmark.clone(),
+            layout: self.layout.clone(),
+            mode: mode.to_string(),
+            tiles: rep.tiles,
+            waves: rep.waves,
+            makespan_cycles: rep.cycles,
+            mem_busy_cycles: rep.timing.data_cycles,
+            raw_bytes,
+            useful_bytes,
+            transactions: rep.transactions,
+            raw_mb_s: raw_bytes as f64 / 1e6 / secs,
+            effective_mb_s: useful_bytes as f64 / 1e6 / secs,
+            peak_mb_s: mem.peak_mb_s(),
+            timing: Some(rep.timing.clone()),
+            max_abs_err: None,
+            wall_secs,
+        }
+    }
+}
+
+/// Resolve a workload spec into (report label, tiling, deps), validating
+/// dimensions and divisibility — the checks the legacy drivers did at run
+/// time now happen once at compile.
+fn resolve_workload(w: &WorkloadSpec) -> Result<(String, Tiling, DepPattern)> {
+    let label = w.label();
+    match w {
+        WorkloadSpec::Named {
+            name,
+            tile,
+            tiles_per_dim,
+        } => {
+            let wl = workloads::by_name(name)
+                .or_else(|| (name == "heat3d").then(workloads::heat3d))
+                .ok_or_else(|| anyhow!("unknown workload '{name}' (see `cfa list`)"))?;
+            if tile.len() != wl.dims {
+                bail!(
+                    "workload '{name}' is {}-d but the tile has {} dims",
+                    wl.dims,
+                    tile.len()
+                );
+            }
+            let deps = DepPattern::new(wl.deps.clone()).context("building deps")?;
+            let tiling = Tiling::new(wl.space_for(tile, *tiles_per_dim), tile.clone());
+            Ok((label, tiling, deps))
+        }
+        WorkloadSpec::Custom {
+            space, tile, deps, ..
+        } => {
+            if space.len() != tile.len() {
+                bail!(
+                    "space has {} dims but the tile has {}",
+                    space.len(),
+                    tile.len()
+                );
+            }
+            let deps = DepPattern::new(deps.clone()).context("building deps")?;
+            let tiling = Tiling::new(space.clone(), tile.clone());
+            Ok((label, tiling, deps))
+        }
+        WorkloadSpec::Stencil {
+            kind,
+            tile,
+            n,
+            m,
+            steps,
+            ..
+        } => {
+            let [tt, ti, tj] = tile[..] else {
+                bail!("stencil tile must be 3-d (tt, ti, tj), got {tile:?}");
+            };
+            let r = kind.radius();
+            let (uu, vv) = (n + r * steps, m + r * steps);
+            if steps % tt != 0 || uu % ti != 0 || vv % tj != 0 {
+                bail!(
+                    "tile ({tt},{ti},{tj}) must divide the skewed space ({steps},{uu},{vv}); \
+                     pick n,m,steps accordingly"
+                );
+            }
+            let deps = DepPattern::new(kind.skewed_deps()).context("building deps")?;
+            let tiling = Tiling::new(vec![*steps, uu, vv], tile.clone());
+            Ok((label, tiling, deps))
+        }
+        WorkloadSpec::Sw3 {
+            tile, ni, nj, nk, ..
+        } => {
+            let [si, sj, sk] = tile[..] else {
+                bail!("sw3 tile must be 3-d (si, sj, sk), got {tile:?}");
+            };
+            if ni % si != 0 || nj % sj != 0 || nk % sk != 0 {
+                bail!("tile ({si},{sj},{sk}) must divide ({ni},{nj},{nk})");
+            }
+            let deps = DepPattern::new(sw3_deps()).context("building deps")?;
+            let tiling = Tiling::new(vec![*ni, *nj, *nk], tile.clone());
+            Ok((label, tiling, deps))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn quick_session(layout: &str) -> Session {
+        ExperimentSpec::builder()
+            .named("jacobi2d5p", vec![8, 8, 8], 3)
+            .layout(layout)
+            .schedule(ScheduleKind::Wavefront)
+            .compile()
+            .expect("compile")
+    }
+
+    #[test]
+    fn builder_defaults_and_compile() {
+        let s = quick_session("cfa");
+        assert_eq!(s.benchmark(), "jacobi2d5p");
+        assert_eq!(s.layout(), registry::names::CFA);
+        assert_eq!(s.tiling().num_tiles(), 27);
+        assert_eq!(s.schedule().num_tiles(), 27);
+    }
+
+    #[test]
+    fn alias_resolves_to_canonical_layout() {
+        let s = quick_session("bounding-box");
+        assert_eq!(s.layout(), registry::names::BBOX);
+    }
+
+    #[test]
+    fn missing_workload_and_unknown_names_error() {
+        assert!(ExperimentSpec::builder().compile().is_err());
+        let err = ExperimentSpec::builder()
+            .named("jacobi2d5p", vec![8, 8, 8], 3)
+            .layout("nope")
+            .compile()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("nope") && err.contains("cfa"), "{err}");
+        assert!(ExperimentSpec::builder()
+            .named("not-a-workload", vec![8, 8, 8], 3)
+            .compile()
+            .is_err());
+    }
+
+    #[test]
+    fn stencil_divisibility_checked_at_compile() {
+        let bad = ExperimentSpec::builder()
+            .stencil("jacobi2d5p_t4x16x16", StencilKind::Jacobi5p, vec![4, 16, 16], 23, 24, 8)
+            .compile();
+        assert!(bad.is_err());
+        let good = ExperimentSpec::builder()
+            .stencil("jacobi2d5p_t4x16x16", StencilKind::Jacobi5p, vec![4, 16, 16], 24, 24, 8)
+            .compile()
+            .unwrap();
+        assert_eq!(good.benchmark(), "jacobi5p/8x24x24");
+        // timing mode works offline even for e2e workloads (plans only)
+        let rep = good.run(Mode::Timing).unwrap();
+        assert_eq!(rep.tiles, good.tiling().num_tiles());
+        assert!(rep.transactions > 0);
+    }
+
+    #[test]
+    fn data_mode_rejects_flat_schedules() {
+        let s = ExperimentSpec::builder()
+            .named("jacobi2d5p", vec![8, 8, 8], 3)
+            .schedule(ScheduleKind::Flat)
+            .compile()
+            .unwrap();
+        let err = s.run(Mode::Data { seed: 1 }).unwrap_err().to_string();
+        assert!(err.contains("Wavefront"), "{err}");
+    }
+
+    #[test]
+    fn report_json_round_trips() {
+        let s = quick_session("cfa");
+        let rep = s.run(Mode::Sweep).unwrap();
+        assert_eq!(rep.mode, "sweep");
+        let text = rep.to_json().to_string_pretty();
+        let back = Report::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.benchmark, rep.benchmark);
+        assert_eq!(back.layout, rep.layout);
+        assert_eq!(back.tiles, rep.tiles);
+        assert_eq!(back.transactions, rep.transactions);
+        assert_eq!(back.raw_bytes, rep.raw_bytes);
+        assert_eq!(back.raw_mb_s.to_bits(), rep.raw_mb_s.to_bits());
+        assert_eq!(back.timing, rep.timing);
+        assert_eq!(back.max_abs_err, rep.max_abs_err);
+    }
+
+    #[test]
+    fn sweep_mode_matches_flat_timing() {
+        // Mode::Sweep ignores the session schedule: a wavefront session's
+        // sweep equals a flat session's timing run, counter for counter
+        let wavy = quick_session("cfa").run(Mode::Sweep).unwrap();
+        let flat = ExperimentSpec::builder()
+            .named("jacobi2d5p", vec![8, 8, 8], 3)
+            .schedule(ScheduleKind::Flat)
+            .compile()
+            .unwrap()
+            .run(Mode::Timing)
+            .unwrap();
+        assert_eq!(wavy.makespan_cycles, flat.makespan_cycles);
+        assert_eq!(wavy.timing, flat.timing);
+        assert_eq!(wavy.transactions, flat.transactions);
+        assert_eq!(wavy.raw_bytes, flat.raw_bytes);
+    }
+}

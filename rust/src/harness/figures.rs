@@ -3,10 +3,11 @@
 //! (Fig 14: read and write engines only, one AXI HP port, f64 elements).
 
 use crate::area::{AreaEstimate, AreaModel, Device};
-use crate::coordinator::batch::{BatchCoordinator, Schedule};
 use crate::coordinator::AllocKind;
+use crate::experiment::{ExperimentSpec, Mode, ScheduleKind};
 use crate::harness::workloads::Workload;
-use crate::layout::Allocation;
+use crate::layout::registry;
+use crate::layout::{Allocation, LayoutRegistry};
 use crate::memsim::MemConfig;
 use crate::poly::deps::DepPattern;
 use crate::poly::tiling::Tiling;
@@ -26,22 +27,78 @@ pub struct BandwidthPoint {
     pub useful_bytes: u64,
 }
 
-/// Build (tiling, deps, allocation) for a sweep point.
+/// Build (tiling, deps, allocation) for a sweep point, resolving the
+/// layout name through `layout_registry`.
+pub fn build_alloc_named(
+    w: &Workload,
+    tile: &[i64],
+    layout: &str,
+    tiles_per_dim: i64,
+    layout_registry: &LayoutRegistry,
+) -> anyhow::Result<(Tiling, DepPattern, Box<dyn Allocation>)> {
+    let deps = DepPattern::new(w.deps.clone())?;
+    let space = w.space_for(tile, tiles_per_dim);
+    let tiling = Tiling::new(space, tile.to_vec());
+    let a = layout_registry.build(layout, &tiling, &deps)?;
+    Ok((tiling, deps, a))
+}
+
+/// [`build_alloc_named`] against the global registry, keyed by the legacy
+/// enum. Deprecated shim, kept for one PR.
 pub fn build_alloc(
     w: &Workload,
     tile: &[i64],
     alloc: AllocKind,
     tiles_per_dim: i64,
 ) -> anyhow::Result<(Tiling, DepPattern, Box<dyn Allocation>)> {
-    let deps = DepPattern::new(w.deps.clone())?;
-    let space = w.space_for(tile, tiles_per_dim);
-    let tiling = Tiling::new(space, tile.to_vec());
-    let a = alloc.build(&tiling, &deps)?;
-    Ok((tiling, deps, a))
+    build_alloc_named(w, tile, alloc.name(), tiles_per_dim, &registry::global())
 }
 
 /// Simulate the paper's memory-bound rig for one sweep point: all tiles'
-/// planned bursts played back-to-back through the AXI/DRAM model.
+/// planned bursts played back-to-back through the AXI/DRAM model, via an
+/// experiment [`Session`](crate::experiment::Session) in `Mode::Sweep`.
+/// `threads` workers burst-plan the tiles; replay stays serial in
+/// lexicographic order, so the point is bit-identical for any worker
+/// count (planning flows through the session's plan cache: interior tiles
+/// rebase one canonical plan, which is what keeps the dense sweeps cheap
+/// at 128³-tile scale).
+pub fn measure_bandwidth_named(
+    w: &Workload,
+    tile: &[i64],
+    layout: &str,
+    mem_cfg: &MemConfig,
+    tiles_per_dim: i64,
+    threads: usize,
+    layout_registry: &LayoutRegistry,
+) -> anyhow::Result<BandwidthPoint> {
+    let session = ExperimentSpec::builder()
+        .custom(
+            w.name,
+            w.space_for(tile, tiles_per_dim),
+            tile.to_vec(),
+            w.deps.clone(),
+        )
+        .layout(layout)
+        .schedule(ScheduleKind::Flat)
+        .threads(threads)
+        .mem(mem_cfg.clone())
+        .registry(layout_registry.clone())
+        .compile()?;
+    let rep = session.run(Mode::Sweep)?;
+    Ok(BandwidthPoint {
+        benchmark: w.name.to_string(),
+        tile: tile.to_vec(),
+        alloc: rep.layout,
+        raw_mb_s: rep.raw_mb_s,
+        effective_mb_s: rep.effective_mb_s,
+        transactions: rep.transactions,
+        raw_bytes: rep.raw_bytes,
+        useful_bytes: rep.useful_bytes,
+    })
+}
+
+/// [`measure_bandwidth_named`] keyed by the legacy enum against the
+/// global registry. Deprecated shim, kept for one PR.
 pub fn measure_bandwidth(
     w: &Workload,
     tile: &[i64],
@@ -49,17 +106,11 @@ pub fn measure_bandwidth(
     mem_cfg: &MemConfig,
     tiles_per_dim: i64,
 ) -> anyhow::Result<BandwidthPoint> {
-    measure_bandwidth_batched(w, tile, alloc, mem_cfg, tiles_per_dim, 1)
+    measure_bandwidth_named(w, tile, alloc.name(), mem_cfg, tiles_per_dim, 1, &registry::global())
 }
 
-/// [`measure_bandwidth`] with `threads` workers burst-planning the tiles.
-/// Replay stays serial in lexicographic order ([`Schedule::flat`] through
-/// the batch coordinator), so the point is bit-identical for any worker
-/// count. Planning flows through the coordinator's
-/// [`crate::layout::PlanCache`]: interior tiles rebase one canonical plan
-/// instead of re-deriving it, which is what makes the dense sweeps
-/// (Fig 15 here, Fig 16/17 through the same `build_alloc` points) cheap at
-/// 128³-tile scale.
+/// [`measure_bandwidth`] with `threads` planning workers. Deprecated
+/// shim, kept for one PR.
 pub fn measure_bandwidth_batched(
     w: &Workload,
     tile: &[i64],
@@ -68,26 +119,18 @@ pub fn measure_bandwidth_batched(
     tiles_per_dim: i64,
     threads: usize,
 ) -> anyhow::Result<BandwidthPoint> {
-    let (tiling, _deps, a) = build_alloc(w, tile, alloc, tiles_per_dim)?;
-    let schedule = Schedule::flat(&tiling);
-    let rep = BatchCoordinator::new(a.as_ref(), &schedule, mem_cfg.clone())
-        .threads(threads)
-        .run_timing();
-    let cycles = rep.cycles.max(1);
-    let secs = mem_cfg.secs(cycles);
-    Ok(BandwidthPoint {
-        benchmark: w.name.to_string(),
-        tile: tile.to_vec(),
-        alloc: alloc.name().to_string(),
-        raw_mb_s: rep.raw_elems as f64 * mem_cfg.elem_bytes as f64 / 1e6 / secs,
-        effective_mb_s: rep.useful_elems as f64 * mem_cfg.elem_bytes as f64 / 1e6 / secs,
-        transactions: rep.transactions,
-        raw_bytes: rep.raw_elems * mem_cfg.elem_bytes,
-        useful_bytes: rep.useful_elems * mem_cfg.elem_bytes,
-    })
+    measure_bandwidth_named(
+        w,
+        tile,
+        alloc.name(),
+        mem_cfg,
+        tiles_per_dim,
+        threads,
+        &registry::global(),
+    )
 }
 
-/// Full Fig-15 sweep over the registry.
+/// Full Fig-15 sweep over every layout in the global registry.
 pub fn fig15_sweep(
     workloads: &[Workload],
     mem_cfg: &MemConfig,
@@ -106,17 +149,30 @@ pub fn fig15_sweep_parallel(
     tiles_per_dim: i64,
     threads: usize,
 ) -> Vec<BandwidthPoint> {
-    let mut jobs: Vec<(&Workload, &Vec<i64>, AllocKind)> = Vec::new();
+    fig15_sweep_registry(&registry::global(), workloads, mem_cfg, tiles_per_dim, threads)
+}
+
+/// The Fig-15 sweep against an explicit layout registry: benchmarks ×
+/// tile sizes × every registered layout, in registration order. Adding a
+/// layout to the registry adds its bars to every figure — no edits here.
+pub fn fig15_sweep_registry(
+    layout_registry: &LayoutRegistry,
+    workloads: &[Workload],
+    mem_cfg: &MemConfig,
+    tiles_per_dim: i64,
+    threads: usize,
+) -> Vec<BandwidthPoint> {
+    let mut jobs: Vec<(&Workload, &Vec<i64>, &str)> = Vec::new();
     for w in workloads {
         for tile in &w.tile_sizes {
-            for alloc in AllocKind::ALL {
-                jobs.push((w, tile, alloc));
+            for name in layout_registry.names() {
+                jobs.push((w, tile, name));
             }
         }
     }
-    parallel_map(&jobs, threads, |&(w, tile, alloc)| {
-        measure_bandwidth(w, tile, alloc, mem_cfg, tiles_per_dim)
-            .map_err(|e| eprintln!("skip {}/{:?}/{}: {e}", w.name, tile, alloc.name()))
+    parallel_map(&jobs, threads, |&(w, tile, name)| {
+        measure_bandwidth_named(w, tile, name, mem_cfg, tiles_per_dim, 1, layout_registry)
+            .map_err(|e| eprintln!("skip {}/{:?}/{name}: {e}", w.name, tile))
             .ok()
     })
     .into_iter()
@@ -183,21 +239,40 @@ pub fn area_sweep_parallel(
     tiles_per_dim: i64,
     threads: usize,
 ) -> Vec<AreaPoint> {
+    area_sweep_registry(
+        &registry::global(),
+        workloads,
+        elem_bytes,
+        tiles_per_dim,
+        threads,
+    )
+}
+
+/// The area sweep against an explicit layout registry (benchmarks × tile
+/// sizes × every registered layout, registration order).
+pub fn area_sweep_registry(
+    layout_registry: &LayoutRegistry,
+    workloads: &[Workload],
+    elem_bytes: u64,
+    tiles_per_dim: i64,
+    threads: usize,
+) -> Vec<AreaPoint> {
     let model = AreaModel::default();
-    let mut jobs: Vec<(&Workload, &Vec<i64>, AllocKind)> = Vec::new();
+    let mut jobs: Vec<(&Workload, &Vec<i64>, &str)> = Vec::new();
     for w in workloads {
         for tile in &w.tile_sizes {
-            for alloc in AllocKind::ALL {
-                jobs.push((w, tile, alloc));
+            for name in layout_registry.names() {
+                jobs.push((w, tile, name));
             }
         }
     }
-    parallel_map(&jobs, threads, |&(w, tile, alloc)| {
-        let (_t, _d, a) = build_alloc(w, tile, alloc, tiles_per_dim).ok()?;
+    parallel_map(&jobs, threads, |&(w, tile, name)| {
+        let (_t, _d, a) =
+            build_alloc_named(w, tile, name, tiles_per_dim, layout_registry).ok()?;
         Some(AreaPoint {
             benchmark: w.name.to_string(),
             tile: tile.clone(),
-            alloc: alloc.name().to_string(),
+            alloc: name.to_string(),
             est: model.estimate(a.as_ref(), elem_bytes),
         })
     })
@@ -222,7 +297,9 @@ pub fn fig16_aggregate(points: &[AreaPoint], metric: impl Fn(&AreaEstimate, &Dev
             let vals = |is_cfa: bool| -> (f64, f64) {
                 let xs: Vec<f64> = points
                     .iter()
-                    .filter(|p| p.benchmark == b && ((p.alloc == "cfa") == is_cfa))
+                    .filter(|p| {
+                        p.benchmark == b && ((p.alloc == registry::names::CFA) == is_cfa)
+                    })
                     .map(|p| metric(&p.est, &dev))
                     .collect();
                 (
@@ -353,6 +430,7 @@ pub fn area_csv(points: &[AreaPoint]) -> String {
 mod tests {
     use super::*;
     use crate::harness::workloads::table1;
+    use crate::layout::registry::names;
     use crate::memsim::{Dir, MemSim, Txn};
 
     #[test]
@@ -426,9 +504,9 @@ mod tests {
             let p = measure_bandwidth(w, &[16, 16, 16], alloc, &cfg, 3).unwrap();
             by_alloc.insert(p.alloc.clone(), p);
         }
-        let cfa = &by_alloc["cfa"];
-        let orig = &by_alloc["original"];
-        let bbox = &by_alloc["bbox"];
+        let cfa = &by_alloc[names::CFA];
+        let orig = &by_alloc[names::ORIGINAL];
+        let bbox = &by_alloc[names::BBOX];
         assert!(
             cfa.effective_mb_s > 0.8 * cfg.peak_mb_s(),
             "CFA effective {:.1} not near roofline",
@@ -451,7 +529,8 @@ mod tests {
             .map(|&a| measure_bandwidth(w, &[16, 16, 16], a, &cfg, 2).unwrap())
             .collect();
         let s = render_fig15(&pts, "jacobi2d5p", &cfg);
-        for a in ["cfa", "original", "bbox", "datatile"] {
+        let reg = crate::layout::LayoutRegistry::with_builtins();
+        for a in reg.names() {
             assert!(s.contains(a), "{s}");
         }
     }

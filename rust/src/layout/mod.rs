@@ -18,6 +18,7 @@ pub mod bbox;
 pub mod cfa;
 pub mod datatile;
 pub mod original;
+pub mod registry;
 
 use crate::poly::rect::{Rect, Region};
 use crate::poly::vec::IVec;
@@ -26,6 +27,7 @@ pub use bbox::BoundingBox;
 pub use cfa::{Cfa, CfaOpts};
 pub use datatile::DataTiling;
 pub use original::OriginalLayout;
+pub use registry::{LayoutCtor, LayoutEntry, LayoutRegistry};
 
 /// One contiguous burst transaction, in elements.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -302,26 +304,38 @@ pub(crate) fn row_major_rebase(
 /// The canonical plan is derived lazily behind a [`std::sync::OnceLock`],
 /// so a cache shared by reference across `util::par` workers stays `Sync`
 /// and plans each tile exactly as the serial path would.
-pub struct PlanCache<'a> {
-    alloc: &'a dyn Allocation,
+///
+/// The memoization state itself lives in a [`PlanCacheState`], which does
+/// **not** borrow the allocation: owners of a `Box<dyn Allocation>` (the
+/// experiment [`Session`](crate::experiment::Session)) keep one state next
+/// to the allocation and hand out short-lived `PlanCache` views, so the
+/// canonical interior plan is derived once per session, not once per run.
+pub struct PlanCacheState {
     counts: IVec,
     /// Interior class exists: exact tiling, ≥ 3 tiles per axis (coordinates
     /// `1..count-1` then see full-size neighbors on every side, so flow
     /// regions are never clipped by the space boundary — the precondition
     /// of translation-exactness).
     enabled: bool,
+    /// Fingerprint of the allocation this state was created for (footprint
+    /// + array count): a cached plan rebased against a *different*
+    /// allocation would be silently wrong, so `plan` debug-asserts the
+    /// pairing.
+    fingerprint: (u64, usize),
     canon: std::sync::OnceLock<Option<(IVec, TilePlan)>>,
 }
 
-impl<'a> PlanCache<'a> {
-    pub fn new(alloc: &'a dyn Allocation) -> PlanCache<'a> {
+impl PlanCacheState {
+    /// Derive the interior-class predicate for `alloc`'s tiling. Only the
+    /// tiling is inspected; no reference to `alloc` is retained.
+    pub fn new(alloc: &dyn Allocation) -> PlanCacheState {
         let tiling = alloc.tiling();
         let counts = tiling.tile_counts();
         let enabled = tiling.is_exact() && counts.iter().all(|&c| c >= 3);
-        PlanCache {
-            alloc,
+        PlanCacheState {
             counts,
             enabled,
+            fingerprint: (alloc.footprint(), alloc.num_arrays()),
             canon: std::sync::OnceLock::new(),
         }
     }
@@ -335,30 +349,87 @@ impl<'a> PlanCache<'a> {
                 .all(|(c, n)| *c >= 1 && *c < n - 1)
     }
 
-    fn canon(&self) -> Option<&(IVec, TilePlan)> {
+    fn canon(&self, alloc: &dyn Allocation) -> Option<&(IVec, TilePlan)> {
         self.canon
             .get_or_init(|| {
                 let c0: IVec = vec![1; self.counts.len()];
-                let plan = self.alloc.plan(&c0);
+                let plan = alloc.plan(&c0);
                 // probe: the allocation must support exact rebasing (data
                 // tiling opts out when the grid does not divide the tile)
-                self.alloc.rebase_plan(&plan, &c0, &c0)?;
+                alloc.rebase_plan(&plan, &c0, &c0)?;
                 Some((c0, plan))
             })
             .as_ref()
     }
 
-    /// Plan `coords`: rebased from the canonical interior plan when
-    /// possible, freshly derived otherwise. Always equals `alloc.plan`.
-    pub fn plan(&self, coords: &[i64]) -> TilePlan {
+    /// Plan `coords` against `alloc`: rebased from the canonical interior
+    /// plan when possible, freshly derived otherwise. Always equals
+    /// `alloc.plan`. The caller must pass the same allocation the state was
+    /// created for (the [`PlanCache`] wrapper enforces this pairing).
+    pub fn plan(&self, alloc: &dyn Allocation, coords: &[i64]) -> TilePlan {
+        debug_assert_eq!(
+            self.fingerprint,
+            (alloc.footprint(), alloc.num_arrays()),
+            "PlanCacheState used with a different allocation than it was created for"
+        );
         if self.is_interior(coords) {
-            if let Some((c0, plan)) = self.canon() {
-                if let Some(rebased) = self.alloc.rebase_plan(plan, c0, coords) {
+            if let Some((c0, plan)) = self.canon(alloc) {
+                if let Some(rebased) = alloc.rebase_plan(plan, c0, coords) {
                     return rebased;
                 }
             }
         }
-        self.alloc.plan(coords)
+        alloc.plan(coords)
+    }
+}
+
+/// How a [`PlanCache`] holds its state: privately, or shared with an owner
+/// that outlives individual runs (a `Session`).
+enum CacheStateRef<'a> {
+    Owned(PlanCacheState),
+    Shared(&'a PlanCacheState),
+}
+
+/// A [`PlanCacheState`] paired with the allocation it plans against — the
+/// planning front end every coordinator path uses.
+pub struct PlanCache<'a> {
+    alloc: &'a dyn Allocation,
+    state: CacheStateRef<'a>,
+}
+
+impl<'a> PlanCache<'a> {
+    pub fn new(alloc: &'a dyn Allocation) -> PlanCache<'a> {
+        PlanCache {
+            alloc,
+            state: CacheStateRef::Owned(PlanCacheState::new(alloc)),
+        }
+    }
+
+    /// A cache view over caller-owned state (must have been created for
+    /// this same allocation), so the canonical plan survives this view.
+    pub fn with_state(alloc: &'a dyn Allocation, state: &'a PlanCacheState) -> PlanCache<'a> {
+        PlanCache {
+            alloc,
+            state: CacheStateRef::Shared(state),
+        }
+    }
+
+    fn state(&self) -> &PlanCacheState {
+        match &self.state {
+            CacheStateRef::Owned(s) => s,
+            CacheStateRef::Shared(s) => s,
+        }
+    }
+
+    /// True iff `coords` belongs to the memoizable interior class.
+    pub fn is_interior(&self, coords: &[i64]) -> bool {
+        self.state().is_interior(coords)
+    }
+
+    /// Plan `coords`: rebased from the canonical interior plan when
+    /// possible, freshly derived otherwise. Always equals `alloc.plan`.
+    pub fn plan(&self, coords: &[i64]) -> TilePlan {
+        self.state().plan(self.alloc, coords)
     }
 
     /// The allocation this cache plans against.

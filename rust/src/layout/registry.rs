@@ -1,0 +1,302 @@
+//! Open layout registry: the single source of allocation names.
+//!
+//! Every place that used to hard-code the four-element allocation name
+//! list — `AllocKind::parse`/`name`, the figure sweeps, the CLI, the
+//! benches — now enumerates or resolves through a [`LayoutRegistry`]
+//! instead. Canonical names and their aliases are defined exactly once
+//! (in [`names`] and [`LayoutRegistry::with_builtins`]); adding a fifth
+//! layout is one [`register`](LayoutRegistry::register) call (or
+//! [`register_global`] for the process-wide registry the sweeps and the
+//! CLI enumerate), with no edits to `coordinator/` or `harness/`.
+
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::layout::Allocation;
+use crate::poly::deps::DepPattern;
+use crate::poly::tiling::Tiling;
+
+/// Canonical built-in layout names — defined once, used by the registry,
+/// `AllocKind`, the figures and the tests.
+pub mod names {
+    /// Canonical Facet Allocation (the paper's contribution).
+    pub const CFA: &str = "cfa";
+    /// Unchanged row-major layout, best-effort bursts (Bayliss et al.).
+    pub const ORIGINAL: &str = "original";
+    /// Rectangular over-approximation (Pouchet et al.).
+    pub const BBOX: &str = "bbox";
+    /// Whole-data-tile transfers (Ozturk et al.).
+    pub const DATATILE: &str = "datatile";
+}
+
+/// Constructor of one layout: build an [`Allocation`] for a tiling and
+/// dependence pattern. `Arc` so registries are cheap to clone/snapshot.
+pub type LayoutCtor =
+    Arc<dyn Fn(&Tiling, &DepPattern) -> anyhow::Result<Box<dyn Allocation>> + Send + Sync>;
+
+/// One registered layout: canonical name, aliases, constructor.
+#[derive(Clone)]
+pub struct LayoutEntry {
+    name: String,
+    aliases: Vec<String>,
+    ctor: LayoutCtor,
+}
+
+impl LayoutEntry {
+    /// Canonical name (what reports and sweep points carry).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Accepted alternative spellings.
+    pub fn aliases(&self) -> &[String] {
+        &self.aliases
+    }
+
+    /// True iff `s` is the canonical name or one of the aliases.
+    pub fn matches(&self, s: &str) -> bool {
+        self.name == s || self.aliases.iter().any(|a| a == s)
+    }
+
+    /// Instantiate the layout.
+    pub fn build(
+        &self,
+        tiling: &Tiling,
+        deps: &DepPattern,
+    ) -> anyhow::Result<Box<dyn Allocation>> {
+        (self.ctor)(tiling, deps)
+    }
+}
+
+impl std::fmt::Debug for LayoutEntry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LayoutEntry")
+            .field("name", &self.name)
+            .field("aliases", &self.aliases)
+            .finish()
+    }
+}
+
+/// An ordered, open set of layouts. Values are cheap to clone (entries
+/// share their constructors), so the global registry hands out snapshots
+/// and sweeps iterate without holding any lock.
+#[derive(Clone, Debug, Default)]
+pub struct LayoutRegistry {
+    entries: Vec<LayoutEntry>,
+}
+
+impl LayoutRegistry {
+    /// A registry with no layouts.
+    pub fn empty() -> LayoutRegistry {
+        LayoutRegistry::default()
+    }
+
+    /// The four built-in allocations of the paper's evaluation (§VI.A.1),
+    /// in the order every figure lists them.
+    pub fn with_builtins() -> LayoutRegistry {
+        let mut r = LayoutRegistry::empty();
+        r.register(names::CFA, &[], Arc::new(build_cfa))
+            .expect("builtin");
+        r.register(names::ORIGINAL, &[], Arc::new(build_original))
+            .expect("builtin");
+        r.register(names::BBOX, &["bounding-box"], Arc::new(build_bbox))
+            .expect("builtin");
+        r.register(names::DATATILE, &["data-tiling"], Arc::new(build_datatile))
+            .expect("builtin");
+        r
+    }
+
+    /// Register a layout. Errors if the canonical name or any alias
+    /// collides with an already-registered spelling.
+    pub fn register(
+        &mut self,
+        name: &str,
+        aliases: &[&str],
+        ctor: LayoutCtor,
+    ) -> anyhow::Result<()> {
+        for s in std::iter::once(name).chain(aliases.iter().copied()) {
+            if s.is_empty() {
+                anyhow::bail!("layout name must not be empty");
+            }
+            if let Some(e) = self.entries.iter().find(|e| e.matches(s)) {
+                anyhow::bail!("layout name '{s}' already registered (by '{}')", e.name());
+            }
+        }
+        self.entries.push(LayoutEntry {
+            name: name.to_string(),
+            aliases: aliases.iter().map(|s| s.to_string()).collect(),
+            ctor,
+        });
+        Ok(())
+    }
+
+    /// Look an entry up by canonical name or alias.
+    pub fn resolve(&self, name: &str) -> Option<&LayoutEntry> {
+        self.entries.iter().find(|e| e.matches(name))
+    }
+
+    /// [`resolve`](Self::resolve), with an error naming the known layouts
+    /// — the single source of the unknown-layout message.
+    pub fn resolve_or_err(&self, name: &str) -> anyhow::Result<&LayoutEntry> {
+        self.resolve(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown layout '{name}' (registered: {})",
+                self.names().join(", ")
+            )
+        })
+    }
+
+    /// Canonical name for any accepted spelling.
+    pub fn canonical(&self, name: &str) -> Option<&str> {
+        self.resolve(name).map(|e| e.name())
+    }
+
+    /// Canonical names in registration order (what sweeps iterate).
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name()).collect()
+    }
+
+    /// All entries, registration order.
+    pub fn iter(&self) -> impl Iterator<Item = &LayoutEntry> {
+        self.entries.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Build the layout `name` refers to; the error lists what is known.
+    pub fn build(
+        &self,
+        name: &str,
+        tiling: &Tiling,
+        deps: &DepPattern,
+    ) -> anyhow::Result<Box<dyn Allocation>> {
+        self.resolve_or_err(name)?.build(tiling, deps)
+    }
+}
+
+fn build_cfa(tiling: &Tiling, deps: &DepPattern) -> anyhow::Result<Box<dyn Allocation>> {
+    Ok(Box::new(crate::layout::Cfa::new(
+        tiling.clone(),
+        deps.clone(),
+    )?))
+}
+
+fn build_original(tiling: &Tiling, deps: &DepPattern) -> anyhow::Result<Box<dyn Allocation>> {
+    Ok(Box::new(crate::layout::OriginalLayout::new(
+        tiling.clone(),
+        deps.clone(),
+    )))
+}
+
+fn build_bbox(tiling: &Tiling, deps: &DepPattern) -> anyhow::Result<Box<dyn Allocation>> {
+    Ok(Box::new(crate::layout::BoundingBox::new(
+        tiling.clone(),
+        deps.clone(),
+    )))
+}
+
+fn build_datatile(tiling: &Tiling, deps: &DepPattern) -> anyhow::Result<Box<dyn Allocation>> {
+    Ok(Box::new(crate::layout::datatile::best_data_tiling(
+        tiling, deps,
+    )))
+}
+
+static GLOBAL: OnceLock<RwLock<LayoutRegistry>> = OnceLock::new();
+
+fn global_lock() -> &'static RwLock<LayoutRegistry> {
+    GLOBAL.get_or_init(|| RwLock::new(LayoutRegistry::with_builtins()))
+}
+
+/// Snapshot of the process-global registry (built-ins pre-registered).
+/// The snapshot is an independent value: later global registrations do not
+/// retroactively appear in it, so sweeps see a consistent layout set.
+pub fn global() -> LayoutRegistry {
+    global_lock().read().expect("layout registry poisoned").clone()
+}
+
+/// Register a layout in the process-global registry, making it visible to
+/// every registry-enumerating consumer (figure sweeps, `cfa layouts`,
+/// spec-by-name sessions that use the default registry).
+pub fn register_global(name: &str, aliases: &[&str], ctor: LayoutCtor) -> anyhow::Result<()> {
+    global_lock()
+        .write()
+        .expect("layout registry poisoned")
+        .register(name, aliases, ctor)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Tiling, DepPattern) {
+        let tiling = Tiling::new(vec![8, 8], vec![4, 4]);
+        let deps = DepPattern::new(vec![vec![-1, 0], vec![0, -1]]).unwrap();
+        (tiling, deps)
+    }
+
+    #[test]
+    fn builtins_build_and_report_their_canonical_name() {
+        let (tiling, deps) = setup();
+        let r = LayoutRegistry::with_builtins();
+        assert_eq!(
+            r.names(),
+            vec![names::CFA, names::ORIGINAL, names::BBOX, names::DATATILE]
+        );
+        for e in r.iter() {
+            let a = e.build(&tiling, &deps).unwrap();
+            assert_eq!(a.name(), e.name());
+            assert!(a.footprint() > 0);
+        }
+    }
+
+    #[test]
+    fn alias_parsing_resolves_to_canonical_names() {
+        // the satellite's dedicated alias test: both spellings of bbox and
+        // datatile resolve, and resolve to the same entry as the canonical
+        let r = LayoutRegistry::with_builtins();
+        assert_eq!(r.canonical("bounding-box"), Some(names::BBOX));
+        assert_eq!(r.canonical("data-tiling"), Some(names::DATATILE));
+        assert_eq!(r.canonical(names::BBOX), Some(names::BBOX));
+        assert_eq!(r.canonical(names::DATATILE), Some(names::DATATILE));
+        assert_eq!(r.canonical(names::CFA), Some(names::CFA));
+        assert_eq!(r.canonical(names::ORIGINAL), Some(names::ORIGINAL));
+        assert_eq!(r.canonical("nope"), None);
+        let (tiling, deps) = setup();
+        let via_alias = r.build("bounding-box", &tiling, &deps).unwrap();
+        assert_eq!(via_alias.name(), names::BBOX);
+    }
+
+    #[test]
+    fn duplicate_names_and_aliases_are_rejected() {
+        let mut r = LayoutRegistry::with_builtins();
+        assert!(r
+            .register(names::CFA, &[], Arc::new(build_cfa))
+            .is_err());
+        assert!(r
+            .register("fresh", &["bounding-box"], Arc::new(build_bbox))
+            .is_err());
+        assert!(r.register("", &[], Arc::new(build_cfa)).is_err());
+        assert!(r.register("fresh", &["f2"], Arc::new(build_bbox)).is_ok());
+        assert_eq!(r.canonical("f2"), Some("fresh"));
+    }
+
+    #[test]
+    fn unknown_layout_error_lists_known_names() {
+        let (tiling, deps) = setup();
+        let r = LayoutRegistry::with_builtins();
+        let err = r.build("nope", &tiling, &deps).unwrap_err().to_string();
+        assert!(err.contains("nope") && err.contains(names::CFA), "{err}");
+    }
+
+    #[test]
+    fn global_snapshot_has_builtins() {
+        let r = global();
+        assert!(r.len() >= 4);
+        assert_eq!(r.canonical("bounding-box"), Some(names::BBOX));
+    }
+}

@@ -7,13 +7,17 @@
 //! The crate implements the paper's full system as a three-layer stack:
 //!
 //! * **L3 (this crate)** — the polyhedral layout engine (CFA + the three
-//!   baseline allocations of §VI), a cycle-approximate AXI/DRAM memory
-//!   simulator standing in for the Zynq testbed, the read-execute-write
-//!   accelerator pipeline, an FPGA area model, an HLS code generator
-//!   (Fig 12/13), and the coordinators that drive tile execution — serial
-//!   drivers plus the batched wavefront coordinator
+//!   baseline allocations of §VI, behind the open
+//!   [`layout::registry::LayoutRegistry`]), a cycle-approximate AXI/DRAM
+//!   memory simulator standing in for the Zynq testbed, the
+//!   read-execute-write accelerator pipeline, an FPGA area model, an HLS
+//!   code generator (Fig 12/13), and the coordinators that drive tile
+//!   execution — serial drivers plus the batched wavefront coordinator
 //!   ([`coordinator::batch`]) that plans and marshals tiles in parallel
-//!   while keeping timing bit-identical to serial replay.
+//!   while keeping timing bit-identical to serial replay. The
+//!   [`experiment`] module is the front door: a typed spec compiles once
+//!   into a session (allocation + schedule + plan cache) and runs in any
+//!   mode, returning one unified report.
 //! * **L2/L1 (build-time Python)** — JAX tile programs calling Pallas
 //!   stencil kernels, AOT-lowered to HLO text in `artifacts/`.
 //! * **runtime** — a PJRT CPU client (the `xla` crate) that loads those
@@ -26,6 +30,7 @@
 pub mod accel;
 pub mod area;
 pub mod coordinator;
+pub mod experiment;
 pub mod harness;
 pub mod hlsgen;
 pub mod layout;

@@ -2,17 +2,22 @@
 //!
 //! Subcommands:
 //!   list       Table I benchmark registry
-//!   plan       show the CFA layout + burst plan for a benchmark/tile
+//!   layouts    the open layout registry (canonical names + aliases)
+//!   plan       show an allocation's layout + burst plan for a benchmark/tile
 //!   run        end-to-end run (layout + memsim + PJRT compute + verify)
 //!   bench      regenerate a figure sweep (fig15 | fig16 | fig17)
 //!   codegen    emit the HLS C the compiler pass produces (Fig 12/13)
+//!
+//! Every experiment-shaped subcommand goes through the `experiment`
+//! session API: spec → session → report. Layouts are named through the
+//! registry, so a newly registered layout is immediately reachable from
+//! `--alloc` and enumerated by `--alloc all` / the bench sweeps.
 
 use cfa::coordinator::reference::StencilKind;
-use cfa::coordinator::stencil::{run_stencil, StencilRun};
-use cfa::coordinator::sw::{run_sw, SwRun};
-use cfa::coordinator::AllocKind;
+use cfa::experiment::{ExperimentSpec, Mode, Session};
 use cfa::harness::{figures, workloads};
 use cfa::layout::cfa::Cfa;
+use cfa::layout::registry;
 use cfa::memsim::MemConfig;
 use cfa::poly::deps::DepPattern;
 use cfa::poly::tiling::Tiling;
@@ -25,6 +30,7 @@ fn main() {
     let sub = args.first().map(|s| s.as_str()).unwrap_or("help");
     let result = match sub {
         "list" => cmd_list(),
+        "layouts" => cmd_layouts(),
         "plan" => cmd_plan(),
         "run" => cmd_run(),
         "bench" => cmd_bench(),
@@ -46,10 +52,13 @@ fn print_help() {
          usage: cfa <subcommand> [options]\n\n\
          subcommands:\n\
          \x20 list                 print the Table I benchmark registry\n\
+         \x20 layouts              print the layout registry (canonical names + aliases)\n\
          \x20 plan                 show layout + burst plan (--benchmark, --tile, --alloc)\n\
          \x20 run                  end-to-end verified run (--benchmark, --alloc, --parallel N, ...)\n\
          \x20 bench                figure sweeps (--figure fig15|fig16|fig17, --quick, --parallel N, --json PATH)\n\
-         \x20 codegen              emit HLS C (--benchmark, --tile)\n"
+         \x20 codegen              emit HLS C (--benchmark, --tile)\n\n\
+         layouts are named through the open registry (`cfa layouts`); every\n\
+         --alloc option accepts a canonical name, an alias, or 'all'.\n"
     );
 }
 
@@ -76,10 +85,22 @@ fn cmd_list() -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_layouts() -> anyhow::Result<()> {
+    let reg = registry::global();
+    let mut t = Table::new(&["layout", "aliases"]).aligns(&[Align::Left, Align::Left]);
+    for e in reg.iter() {
+        t.row(&[e.name().to_string(), e.aliases().join(", ")]);
+    }
+    println!("{}", t.render());
+    println!("({} layouts registered)", reg.len());
+    Ok(())
+}
+
 fn cmd_plan() -> anyhow::Result<()> {
     let cmd = Command::new("cfa plan", "show layout + burst plan")
         .opt("benchmark", "Table I benchmark name", Some("jacobi2d5p"))
         .opt("tile", "tile sizes, e.g. 16x16x16", Some("16x16x16"))
+        .opt("alloc", "layout name (see `cfa layouts`)", Some("cfa"))
         .opt("tiles-per-dim", "tiles per dimension", Some("3"));
     let a = cmd.parse(&env_args(1)).map_err(anyhow::Error::msg)?;
     let bench = a.get_or("benchmark", "jacobi2d5p").to_string();
@@ -92,21 +113,48 @@ fn cmd_plan() -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown benchmark '{bench}' (see `cfa list`)"))?;
     let deps = DepPattern::new(w.deps.clone())?;
     let tiling = Tiling::new(w.space_for(&tile, tpd), tile.clone());
-    let cfa = Cfa::new(tiling.clone(), deps.clone())?;
+    let reg = registry::global();
+    let layout = a.get_or("alloc", "cfa");
+    use cfa::layout::Allocation as _;
+    // build the allocation exactly once; the CFA path goes through the
+    // concrete type first so the facet arrays printed below are the ones
+    // the plan two steps later actually uses
+    let mut facet_lines: Vec<String> = Vec::new();
+    let alloc: Box<dyn cfa::layout::Allocation> =
+        if reg.canonical(layout) == Some(registry::names::CFA) {
+            let built = Cfa::new(tiling.clone(), deps.clone())?;
+            let axis_names: Vec<&str> = (0..tiling.dims())
+                .map(|d| cfa::hlsgen::AXIS_NAMES[d])
+                .collect();
+            for fa in built.facet_arrays() {
+                facet_lines.push(format!(
+                    "  {}  ({} elems)",
+                    fa.describe(&axis_names),
+                    fa.size()
+                ));
+            }
+            Box::new(built)
+        } else {
+            reg.build(layout, &tiling, &deps)?
+        };
     println!("benchmark: {} ({})", w.name, w.equivalent);
     println!("deps: {deps}   widths: {:?}", deps.widths());
     println!("space: {:?}  tile: {:?}\n", tiling.space, tiling.tile);
-    use cfa::layout::Allocation as _;
-    println!("facet arrays ({} elements total):", cfa.footprint());
-    let names: Vec<&str> = (0..tiling.dims())
-        .map(|d| cfa::hlsgen::AXIS_NAMES[d])
-        .collect();
-    for fa in cfa.facet_arrays() {
-        println!("  {}  ({} elems)", fa.describe(&names), fa.size());
+    println!(
+        "layout: {} ({} arrays, {} elements off-chip)",
+        alloc.name(),
+        alloc.num_arrays(),
+        alloc.footprint()
+    );
+    if !facet_lines.is_empty() {
+        println!("facet arrays:");
+        for line in &facet_lines {
+            println!("{line}");
+        }
     }
     let counts = tiling.tile_counts();
     let mid: Vec<i64> = counts.iter().map(|&c| (c - 1).min(1)).collect();
-    let plan = cfa.plan(&mid);
+    let plan = alloc.plan(&mid);
     println!("\ninterior tile {mid:?} plan:");
     println!(
         "  reads : {} bursts, {} elems raw / {} useful",
@@ -129,10 +177,63 @@ fn cmd_plan() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Build the end-to-end session for one benchmark name + layout. Tile
+/// shapes come from the loaded artifact (as the legacy drivers did), so
+/// regenerated artifacts are picked up without touching this table;
+/// `--n`/`--steps` override the grid, validated at compile.
+fn run_session(
+    rt: &Runtime,
+    bench: &str,
+    layout: &str,
+    n_override: Option<i64>,
+    steps_override: Option<i64>,
+    parallel: usize,
+    mem: &MemConfig,
+) -> anyhow::Result<(Session, u64)> {
+    let builder = ExperimentSpec::builder()
+        .layout(layout)
+        .threads(parallel)
+        .pe_ops_per_cycle(64)
+        .mem(mem.clone());
+    Ok(match bench {
+        "sw3" | "smith-waterman-3seq" => {
+            let artifact = "sw3_t16x16x16";
+            let tile = rt.load(artifact)?.info.tile.clone();
+            let n = n_override.unwrap_or(48);
+            let session = builder.sw3(artifact, tile, n, n, n).compile()?;
+            (session, 7)
+        }
+        name => {
+            let (artifact, kind) = match name {
+                "jacobi2d5p" => ("jacobi2d5p_t8x32x32", StencilKind::Jacobi5p),
+                "jacobi2d9p" => ("jacobi2d9p_t4x16x16", StencilKind::Jacobi9p),
+                "gaussian" => ("gaussian_t4x16x16", StencilKind::Gaussian),
+                _ => anyhow::bail!("unknown benchmark '{name}' (see `cfa list`)"),
+            };
+            let tile = rt.load(artifact)?.info.tile.clone();
+            // grid defaults sized for each artifact family
+            let (mut n, mut steps) = if name == "jacobi2d5p" {
+                (96, 32)
+            } else {
+                let r = kind.radius();
+                (32 - r * 8, 8)
+            };
+            if let Some(x) = n_override {
+                n = x;
+            }
+            if let Some(x) = steps_override {
+                steps = x;
+            }
+            let session = builder.stencil(artifact, kind, tile, n, n, steps).compile()?;
+            (session, 42)
+        }
+    })
+}
+
 fn cmd_run() -> anyhow::Result<()> {
     let cmd = Command::new("cfa run", "end-to-end verified run")
         .opt("benchmark", "jacobi2d5p | jacobi2d9p | gaussian | sw3", Some("jacobi2d5p"))
-        .opt("alloc", "cfa | original | bbox | datatile | all", Some("all"))
+        .opt("alloc", "layout name (see `cfa layouts`) or 'all'", Some("all"))
         .opt("artifacts", "artifacts directory", Some("artifacts"))
         .opt("n", "grid rows (stencils) / seq len (sw3)", None)
         .opt("steps", "time steps (stencils)", None)
@@ -145,56 +246,40 @@ fn cmd_run() -> anyhow::Result<()> {
         elem_bytes: 4,
         ..MemConfig::default()
     };
-    let allocs: Vec<AllocKind> = match a.get_or("alloc", "all") {
-        "all" => AllocKind::ALL.to_vec(),
-        s => vec![AllocKind::parse(s)
-            .ok_or_else(|| anyhow::anyhow!("unknown alloc '{s}'"))?],
+    let reg = registry::global();
+    let layouts: Vec<String> = match a.get_or("alloc", "all") {
+        "all" => reg.names().iter().map(|s| s.to_string()).collect(),
+        s => vec![reg
+            .canonical(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown layout '{s}' (see `cfa layouts`)"))?
+            .to_string()],
+    };
+    let n_override = match a.get("n") {
+        Some(v) => Some(v.parse().map_err(|_| anyhow::anyhow!("bad --n"))?),
+        None => None,
+    };
+    let steps_override = match a.get("steps") {
+        Some(v) => Some(v.parse().map_err(|_| anyhow::anyhow!("bad --steps"))?),
+        None => None,
     };
     let bench = a.get_or("benchmark", "jacobi2d5p").to_string();
-    for alloc in allocs {
-        let report = match bench.as_str() {
-            "sw3" | "smith-waterman-3seq" => {
-                let mut cfg = SwRun::default_run(alloc);
-                cfg.parallel = parallel;
-                if let Some(n) = a.get("n") {
-                    let n: i64 = n.parse().map_err(|_| anyhow::anyhow!("bad --n"))?;
-                    cfg.ni = n;
-                    cfg.nj = n;
-                    cfg.nk = n;
-                }
-                run_sw(&rt, &cfg, &mem)?
-            }
-            name => {
-                let (artifact, kind) = match name {
-                    "jacobi2d5p" => ("jacobi2d5p_t8x32x32", StencilKind::Jacobi5p),
-                    "jacobi2d9p" => ("jacobi2d9p_t4x16x16", StencilKind::Jacobi9p),
-                    "gaussian" => ("gaussian_t4x16x16", StencilKind::Gaussian),
-                    _ => anyhow::bail!("unknown benchmark '{name}'"),
-                };
-                let mut cfg = StencilRun::heat_default(alloc);
-                cfg.artifact = artifact.to_string();
-                cfg.kind = kind;
-                cfg.parallel = parallel;
-                if name != "jacobi2d5p" {
-                    // 16-cube artifacts: pick matching defaults
-                    let r = kind.radius();
-                    cfg.steps = 8;
-                    cfg.n = 32 - r * cfg.steps;
-                    cfg.m = cfg.n;
-                }
-                if let Some(n) = a.get("n") {
-                    cfg.n = n.parse().map_err(|_| anyhow::anyhow!("bad --n"))?;
-                    cfg.m = cfg.n;
-                }
-                if let Some(s) = a.get("steps") {
-                    cfg.steps = s.parse().map_err(|_| anyhow::anyhow!("bad --steps"))?;
-                }
-                run_stencil(&rt, &cfg, &mem)?
-            }
-        };
-        println!("{}", report.summary(&mem));
-        if report.max_abs_err > 1e-4 {
-            anyhow::bail!("verification FAILED: err {:.3e}", report.max_abs_err);
+    for layout in layouts {
+        let (session, seed) = run_session(
+            &rt,
+            &bench,
+            layout.as_str(),
+            n_override,
+            steps_override,
+            parallel,
+            &mem,
+        )?;
+        let report = session.run_with_runtime(&rt, Mode::Data { seed })?;
+        println!("{}", report.summary());
+        if report.max_abs_err.unwrap_or(0.0) > 1e-4 {
+            anyhow::bail!(
+                "verification FAILED: err {:.3e}",
+                report.max_abs_err.unwrap_or(0.0)
+            );
         }
     }
     println!("verification: OK");

@@ -125,7 +125,16 @@ impl Command {
         out
     }
 
-    /// Parse a raw argument list. Unknown `--options` are errors.
+    /// An error message that names the offending flag and carries the
+    /// usage text — every parse failure goes through here, so inline
+    /// (`--key=value`) and split (`--key value`) forms fail identically.
+    fn err(&self, msg: impl std::fmt::Display) -> String {
+        format!("{msg}\n\n{}", self.usage())
+    }
+
+    /// Parse a raw argument list. Unknown `--options`, malformed
+    /// `--key=value` pairs and missing values are errors that name the
+    /// offending flag and include the usage text.
     pub fn parse(&self, raw: &[String]) -> Result<Args, String> {
         let mut args = Args::default();
         for o in &self.opts {
@@ -141,24 +150,46 @@ impl Command {
                     Some((k, v)) => (k.to_string(), Some(v.to_string())),
                     None => (body.to_string(), None),
                 };
+                if key.is_empty() {
+                    return Err(self.err(format_args!(
+                        "malformed option '{a}': empty option name"
+                    )));
+                }
                 let spec = self
                     .opts
                     .iter()
                     .find(|o| o.name == key)
-                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                    .ok_or_else(|| self.err(format_args!("unknown option --{key}")))?;
                 if spec.is_flag {
                     if inline_val.is_some() {
-                        return Err(format!("--{key} is a flag and takes no value"));
+                        return Err(self.err(format_args!(
+                            "--{key} is a flag and takes no value (got '{a}')"
+                        )));
                     }
                     args.flags.push(key);
                 } else {
                     let val = match inline_val {
                         Some(v) => v,
                         None => {
-                            i += 1;
-                            raw.get(i)
-                                .cloned()
-                                .ok_or_else(|| format!("--{key} requires a value"))?
+                            let next = raw.get(i + 1);
+                            match next {
+                                None => {
+                                    return Err(self.err(format_args!(
+                                        "--{key} requires a value"
+                                    )))
+                                }
+                                Some(v) if v.starts_with("--") => {
+                                    return Err(self.err(format_args!(
+                                        "--{key} requires a value, but the next \
+                                         argument is an option ('{v}'); use \
+                                         --{key}=VALUE if the value starts with '--'"
+                                    )))
+                                }
+                                Some(v) => {
+                                    i += 1;
+                                    v.clone()
+                                }
+                            }
                         }
                     };
                     args.options.insert(key, val);
@@ -217,12 +248,64 @@ mod tests {
 
     #[test]
     fn unknown_option_is_error() {
-        assert!(cmd().parse(&v(&["--nope"])).is_err());
+        let err = cmd().parse(&v(&["--nope"])).unwrap_err();
+        assert!(err.contains("--nope"), "{err}");
+        assert!(err.contains("options:"), "no usage in: {err}");
     }
 
     #[test]
     fn missing_value_is_error() {
-        assert!(cmd().parse(&v(&["--out"])).is_err());
+        let err = cmd().parse(&v(&["--out"])).unwrap_err();
+        assert!(err.contains("--out"), "{err}");
+        assert!(err.contains("options:"), "no usage in: {err}");
+    }
+
+    #[test]
+    fn flag_with_inline_value_names_flag_and_shows_usage() {
+        let err = cmd().parse(&v(&["--verbose=yes"])).unwrap_err();
+        assert!(err.contains("--verbose"), "{err}");
+        assert!(err.contains("options:"), "no usage in: {err}");
+    }
+
+    #[test]
+    fn empty_option_name_is_malformed() {
+        for bad in ["--", "--=x"] {
+            let err = cmd().parse(&v(&[bad])).unwrap_err();
+            assert!(err.contains("malformed"), "{bad}: {err}");
+            assert!(err.contains("options:"), "{bad}: no usage in: {err}");
+        }
+    }
+
+    #[test]
+    fn option_swallowing_an_option_is_error() {
+        // `--out --verbose` used to silently take "--verbose" as the value
+        let err = cmd().parse(&v(&["--out", "--verbose"])).unwrap_err();
+        assert!(err.contains("--out"), "{err}");
+        assert!(err.contains("--verbose"), "{err}");
+        assert!(err.contains("options:"), "no usage in: {err}");
+        // the inline form still accepts such values explicitly
+        let a = cmd().parse(&v(&["--out=--verbose"])).unwrap();
+        assert_eq!(a.get("out"), Some("--verbose"));
+    }
+
+    #[test]
+    fn parse_round_trips_inline_and_split_forms() {
+        // the same (key, value) pairs must round-trip identically through
+        // both spellings, including '='-bearing and '-'-leading values
+        let cases: &[(&str, &str)] = &[
+            ("out", "x.json"),
+            ("out", "a=b.json"),
+            ("size", "-3"),
+        ];
+        for (key, val) in cases {
+            let inline = cmd().parse(&[format!("--{key}={val}")]).unwrap();
+            let split = cmd()
+                .parse(&[format!("--{key}"), val.to_string()])
+                .unwrap();
+            assert_eq!(inline.get(key), Some(*val), "inline --{key}={val}");
+            assert_eq!(split.get(key), Some(*val), "split --{key} {val}");
+            assert_eq!(inline.options, split.options, "--{key}={val}");
+        }
     }
 
     #[test]

@@ -148,9 +148,9 @@ fn cfa_beats_baselines_on_effective_bandwidth() {
         let report = run_stencil(&rt, &cfg, &mem).expect("run");
         eff.insert(alloc.name(), report.effective_mb_s(&mem));
     }
-    let cfa = eff["cfa"];
+    let cfa = eff[cfa::layout::registry::names::CFA];
     for (name, &e) in &eff {
-        if *name != "cfa" {
+        if *name != cfa::layout::registry::names::CFA {
             assert!(
                 cfa >= e * 0.99,
                 "cfa {cfa:.1} MB/s should beat {name} {e:.1} MB/s ({eff:?})"

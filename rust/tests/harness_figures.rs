@@ -20,7 +20,7 @@ fn fig15_shape_cfa_wins_effective_bandwidth_everywhere() {
                 assert!(p.effective_mb_s <= p.raw_mb_s * 1.001);
                 eff.insert(p.alloc.clone(), p);
             }
-            let cfa = &eff["cfa"];
+            let cfa = &eff[cfa::layout::registry::names::CFA];
             for (name, p) in &eff {
                 // Strict dominance once every tile dimension reaches 32;
                 // below that (notably gaussian's 4-deep time tiles, where
