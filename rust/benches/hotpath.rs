@@ -9,7 +9,10 @@
 //! (plans, memory-simulator timing counters, marshalled buffers) before
 //! timing anything, and writes machine-readable results to
 //! `BENCH_hotpath.json` at the repo root (override with `--out`), so the
-//! perf trajectory is recorded run over run.
+//! perf trajectory is recorded run over run. `--smoke` runs exist to
+//! check the rig, not to measure: without an explicit `--out` they write
+//! to `BENCH_hotpath.smoke.json` instead, so a CI smoke pass can never
+//! clobber real recorded results with throwaway numbers.
 
 use cfa::coordinator::HostMemory;
 use cfa::experiment::{ExperimentSpec, Mode, ScheduleKind, Session};
@@ -145,7 +148,12 @@ fn main() {
         .and_then(|i| args.get(i + 1))
         .cloned()
         .unwrap_or_else(|| {
-            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json").to_string()
+            // smoke numbers must never overwrite real recorded results
+            if smoke {
+                concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.smoke.json").to_string()
+            } else {
+                concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json").to_string()
+            }
         });
     let b = if smoke { Bencher::quick() } else { Bencher::default() };
     let mut results: Vec<Measurement> = Vec::new();

@@ -10,8 +10,9 @@
 //!
 //! Run with: `cargo run --release --example heat_diffusion [-- --steps 32]`
 
-use cfa::coordinator::stencil::{run_stencil, StencilRun};
-use cfa::coordinator::AllocKind;
+use cfa::coordinator::reference::StencilKind;
+use cfa::experiment::{ExperimentSpec, Mode};
+use cfa::layout::registry;
 use cfa::memsim::MemConfig;
 use cfa::runtime::Runtime;
 use cfa::util::cli::{env_args, Command};
@@ -63,25 +64,25 @@ fn main() -> anyhow::Result<()> {
         Align::Right,
         Align::Right,
     ]);
-    for alloc in AllocKind::ALL {
-        let mut cfg = StencilRun::heat_default(alloc);
-        cfg.n = n;
-        cfg.m = n;
-        cfg.steps = steps;
-        let rep = run_stencil(&rt, &cfg, &mem)?;
-        anyhow::ensure!(
-            rep.max_abs_err < 1e-4,
-            "{}: verification failed ({:.3e})",
-            alloc.name(),
-            rep.max_abs_err
-        );
+    let artifact = "jacobi2d5p_t8x32x32";
+    let tile = rt.load(artifact)?.info.tile.clone();
+    for name in registry::global().names() {
+        let session = ExperimentSpec::builder()
+            .stencil(artifact, StencilKind::Jacobi5p, tile.clone(), n, n, steps)
+            .layout(name)
+            .pe_ops_per_cycle(64)
+            .mem(mem.clone())
+            .compile()?;
+        let rep = session.run_with_runtime(&rt, Mode::Data { seed: 42 })?;
+        let err = rep.max_abs_err.unwrap_or(f64::INFINITY);
+        anyhow::ensure!(err < 1e-4, "{name}: verification failed ({err:.3e})");
         table.row(&[
-            rep.alloc.clone(),
+            rep.layout.clone(),
             rep.transactions.to_string(),
-            format!("{:.1}", rep.raw_mb_s(&mem)),
-            format!("{:.1}", rep.effective_mb_s(&mem)),
-            format!("{:.1}", 100.0 * rep.effective_mb_s(&mem) / mem.peak_mb_s()),
-            format!("{:.2e}", rep.max_abs_err),
+            format!("{:.1}", rep.raw_mb_s),
+            format!("{:.1}", rep.effective_mb_s),
+            format!("{:.1}", rep.bus_pct()),
+            format!("{err:.2e}"),
             format!("{:.2}", rep.wall_secs),
         ]);
     }

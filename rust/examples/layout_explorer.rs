@@ -10,11 +10,10 @@
 //! Custom patterns must be backwards (all components <= 0); forward
 //! patterns are skew-normalized automatically when possible.
 
-use cfa::coordinator::AllocKind;
-use cfa::harness::figures::measure_bandwidth;
+use cfa::harness::figures::measure_bandwidth_named;
 use cfa::harness::workloads::{self, Workload};
 use cfa::layout::cfa::Cfa;
-use cfa::layout::Allocation;
+use cfa::layout::{registry, Allocation};
 use cfa::memsim::MemConfig;
 use cfa::poly::deps::{normalize, DepPattern};
 use cfa::poly::tiling::Tiling;
@@ -80,10 +79,11 @@ fn main() -> anyhow::Result<()> {
 
     // every allocation side by side
     let mem = MemConfig::default();
+    let reg = registry::global();
     println!("\n{:<10} {:>12} {:>8} {:>10} {:>10}", "alloc", "footprint", "txns", "raw MB/s", "eff MB/s");
-    for alloc in AllocKind::ALL {
-        let built = alloc.build(&tiling, &deps)?;
-        let p = measure_bandwidth(&w, &tile, alloc, &mem, tpd)?;
+    for name in reg.names() {
+        let built = reg.build(name, &tiling, &deps)?;
+        let p = measure_bandwidth_named(&w, &tile, name, &mem, tpd, 1, &reg)?;
         println!(
             "{:<10} {:>12} {:>8} {:>10.1} {:>10.1}",
             p.alloc,

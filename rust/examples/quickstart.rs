@@ -4,12 +4,11 @@
 //!
 //! Run with: `cargo run --release --example quickstart`
 
-use cfa::coordinator::AllocKind;
 use cfa::experiment::{ExperimentSpec, Mode};
-use cfa::harness::figures::measure_bandwidth;
+use cfa::harness::figures::measure_bandwidth_named;
 use cfa::harness::workloads;
 use cfa::layout::cfa::Cfa;
-use cfa::layout::Allocation;
+use cfa::layout::{registry, Allocation};
 use cfa::memsim::MemConfig;
 use cfa::poly::deps::DepPattern;
 use cfa::poly::tiling::Tiling;
@@ -47,8 +46,9 @@ fn main() -> anyhow::Result<()> {
         "\nbandwidth on the simulated ZC706 HP port (roofline {} MB/s):",
         mem.peak_mb_s()
     );
-    for alloc in AllocKind::ALL {
-        let p = measure_bandwidth(&w, &tile, alloc, &mem, 3)?;
+    let reg = registry::global();
+    for name in reg.names() {
+        let p = measure_bandwidth_named(&w, &tile, name, &mem, 3, 1, &reg)?;
         println!(
             "  {:<9} raw {:>6.1} MB/s   effective {:>6.1} MB/s   {} transactions",
             p.alloc, p.raw_mb_s, p.effective_mb_s, p.transactions

@@ -5,8 +5,8 @@
 //!
 //! Run with: `cargo run --release --example sw_alignment [-- --n 48]`
 
-use cfa::coordinator::sw::{run_sw, SwRun};
-use cfa::coordinator::AllocKind;
+use cfa::experiment::{ExperimentSpec, Mode};
+use cfa::layout::registry;
 use cfa::memsim::MemConfig;
 use cfa::runtime::Runtime;
 use cfa::util::cli::{env_args, Command};
@@ -24,19 +24,19 @@ fn main() -> anyhow::Result<()> {
         ..MemConfig::default()
     };
     println!("aligning three random 4-letter sequences of length {n}\n");
-    for alloc in AllocKind::ALL {
-        let mut cfg = SwRun::default_run(alloc);
-        cfg.ni = n;
-        cfg.nj = n;
-        cfg.nk = n;
-        let rep = run_sw(&rt, &cfg, &mem)?;
-        anyhow::ensure!(
-            rep.max_abs_err < 1e-4,
-            "{}: verification failed ({:.3e})",
-            alloc.name(),
-            rep.max_abs_err
-        );
-        println!("{}", rep.summary(&mem));
+    let artifact = "sw3_t16x16x16";
+    let tile = rt.load(artifact)?.info.tile.clone();
+    for name in registry::global().names() {
+        let session = ExperimentSpec::builder()
+            .sw3(artifact, tile.clone(), n, n, n)
+            .layout(name)
+            .pe_ops_per_cycle(64)
+            .mem(mem.clone())
+            .compile()?;
+        let rep = session.run_with_runtime(&rt, Mode::Data { seed: 7 })?;
+        let err = rep.max_abs_err.unwrap_or(f64::INFINITY);
+        anyhow::ensure!(err < 1e-4, "{name}: verification failed ({err:.3e})");
+        println!("{}", rep.summary());
     }
     println!("\nall facet values match the native DP reference — OK");
     Ok(())

@@ -49,7 +49,7 @@ pub struct Schedule {
 impl Schedule {
     /// The degenerate schedule: one wave holding every tile in
     /// lexicographic order. Replaying it reproduces the classic serial
-    /// sweep exactly (it is what `harness::figures::measure_bandwidth`
+    /// sweep exactly (it is what `harness::figures::measure_bandwidth_named`
     /// uses); it carries no dependence information, so only use it for
     /// timing/planning work, never for data-path execution.
     pub fn flat(tiling: &Tiling) -> Schedule {

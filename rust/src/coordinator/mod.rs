@@ -9,12 +9,12 @@
 //!
 //! [`batch`] adds the scale path: a wavefront scheduler over the tile
 //! dependence graph and a parallel executor whose timing and buffers stay
-//! bit-identical to serial execution.
+//! bit-identical to serial execution. The end-to-end drivers themselves
+//! live in [`crate::experiment`] (`Session::run(Mode::Data)`); the old
+//! `stencil`/`sw` free-function shims are gone.
 
 pub mod batch;
 pub mod reference;
-pub mod stencil;
-pub mod sw;
 
 use crate::layout::registry::{self, names};
 use crate::layout::Allocation;
@@ -22,11 +22,11 @@ use crate::poly::deps::DepPattern;
 use crate::poly::tiling::Tiling;
 
 /// The four built-in allocations (§VI.A.1 baselines + CFA) as a closed
-/// enum. **Deprecated shim, kept for one PR**: the open
+/// enum. **Deprecated**: the open
 /// [`LayoutRegistry`](crate::layout::LayoutRegistry) is the source of
 /// truth for names, aliases and constructors — this enum merely mirrors
-/// its built-in entries so legacy call sites keep compiling. New code
-/// should name layouts through the registry / the
+/// its built-in entries as a convenience for tests that iterate the
+/// built-ins. New code should name layouts through the registry / the
 /// [`experiment`](crate::experiment) API.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AllocKind {
@@ -104,53 +104,6 @@ impl HostMemory {
     /// The whole store (verification: bit-compare two runs' buffers).
     pub fn as_slice(&self) -> &[f32] {
         &self.data
-    }
-}
-
-/// Outcome of one coordinated run.
-#[derive(Clone, Debug)]
-pub struct RunReport {
-    pub benchmark: String,
-    pub alloc: String,
-    pub tiles: u64,
-    /// Pipeline makespan in bus cycles.
-    pub makespan_cycles: u64,
-    /// Cycles the memory port was busy.
-    pub mem_busy_cycles: u64,
-    /// Raw / useful bytes moved.
-    pub raw_bytes: u64,
-    pub useful_bytes: u64,
-    /// Total burst transactions issued.
-    pub transactions: u64,
-    /// Verification: max |simulated - reference|.
-    pub max_abs_err: f64,
-    /// Host wall time of the run, seconds.
-    pub wall_secs: f64,
-}
-
-impl RunReport {
-    /// Raw bandwidth over the pipeline makespan, MB/s.
-    pub fn raw_mb_s(&self, cfg: &crate::memsim::MemConfig) -> f64 {
-        self.raw_bytes as f64 / 1e6 / cfg.secs(self.makespan_cycles)
-    }
-
-    /// Effective bandwidth over the pipeline makespan, MB/s (Fig 15 color).
-    pub fn effective_mb_s(&self, cfg: &crate::memsim::MemConfig) -> f64 {
-        self.useful_bytes as f64 / 1e6 / cfg.secs(self.makespan_cycles)
-    }
-
-    pub fn summary(&self, cfg: &crate::memsim::MemConfig) -> String {
-        format!(
-            "{:<22} {:<9} tiles={:<5} txns={:<6} raw={:>7.1} MB/s eff={:>7.1} MB/s ({:>5.1}% of bus) err={:.2e}",
-            self.benchmark,
-            self.alloc,
-            self.tiles,
-            self.transactions,
-            self.raw_mb_s(cfg),
-            self.effective_mb_s(cfg),
-            100.0 * self.effective_mb_s(cfg) / cfg.peak_mb_s(),
-            self.max_abs_err,
-        )
     }
 }
 

@@ -1,0 +1,200 @@
+//! Point evaluation and Pareto bookkeeping.
+//!
+//! Every candidate runs through the production front door — an
+//! [`ExperimentSpec`] compiled to a [`Session`](crate::experiment::Session)
+//! and executed in `Mode::Timing` over a flat schedule (the paper's
+//! memory-bound rig), so each point's tiles share the session's memoized
+//! `PlanCacheState` and its timing replay is bit-identical to a serial
+//! figure-sweep measurement. Area comes from the analytic model
+//! ([`AreaModel`]) over the very allocation the session ran.
+
+use crate::area::{AreaEstimate, AreaModel};
+use crate::dse::space::{Point, Space};
+use crate::experiment::{ExperimentSpec, Mode, Report, ScheduleKind};
+use crate::layout::LayoutRegistry;
+use crate::poly::vec::IVec;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+
+/// One evaluated point: the timing report plus its area estimate.
+#[derive(Clone, Debug)]
+pub struct Evaluation {
+    pub point: Point,
+    pub report: Report,
+    pub area: AreaEstimate,
+}
+
+impl Evaluation {
+    /// The point's journal identity.
+    pub fn fingerprint(&self) -> String {
+        self.point.fingerprint()
+    }
+
+    /// Bandwidth objective (maximize): effective MB/s over the makespan.
+    pub fn effective_mb_s(&self) -> f64 {
+        self.report.effective_mb_s
+    }
+
+    /// Area objective (minimize): BRAM-36 blocks of the on-chip buffers.
+    pub fn bram36(&self) -> u64 {
+        self.area.bram36
+    }
+
+    /// One journal line's JSON record.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("fingerprint", Json::str(self.fingerprint())),
+            ("point", self.point.to_json()),
+            ("report", self.report.to_json()),
+            (
+                "area",
+                Json::obj(vec![
+                    ("slices", Json::num(self.area.slices as f64)),
+                    ("dsp", Json::num(self.area.dsp as f64)),
+                    ("bram36", Json::num(self.area.bram36 as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Parse a record produced by [`Evaluation::to_json`]; the stored
+    /// fingerprint must match the point (journal corruption check).
+    pub fn from_json(j: &Json) -> Result<Evaluation> {
+        let point = Point::from_json(
+            j.get("point")
+                .ok_or_else(|| anyhow!("evaluation json: missing 'point'"))?,
+        )?;
+        if let Some(fp) = j.get("fingerprint").and_then(Json::as_str) {
+            if fp != point.fingerprint() {
+                anyhow::bail!(
+                    "evaluation json: fingerprint '{fp}' does not match point '{}'",
+                    point.fingerprint()
+                );
+            }
+        }
+        let report = Report::from_json(
+            j.get("report")
+                .ok_or_else(|| anyhow!("evaluation json: missing 'report'"))?,
+        )?;
+        let area = j
+            .get("area")
+            .ok_or_else(|| anyhow!("evaluation json: missing 'area'"))?;
+        let field = |k: &str| -> Result<u64> {
+            area.get(k)
+                .and_then(Json::as_f64)
+                .map(|x| x as u64)
+                .ok_or_else(|| anyhow!("evaluation json: missing area '{k}'"))
+        };
+        Ok(Evaluation {
+            point,
+            report,
+            area: AreaEstimate {
+                slices: field("slices")?,
+                dsp: field("dsp")?,
+                bram36: field("bram36")?,
+            },
+        })
+    }
+
+    /// One-line summary: the report line plus the area objectives.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}  area: {} slices, {} dsp, {} bram36",
+            self.report.summary(),
+            self.area.slices,
+            self.area.dsp,
+            self.area.bram36
+        )
+    }
+}
+
+/// Evaluates points of one space against one layout registry.
+pub struct Evaluator<'a> {
+    space: &'a Space,
+    registry: LayoutRegistry,
+}
+
+impl<'a> Evaluator<'a> {
+    pub fn new(space: &'a Space, registry: LayoutRegistry) -> Evaluator<'a> {
+        Evaluator { space, registry }
+    }
+
+    /// Compile and run one point; see the module docs for the semantics.
+    pub fn evaluate(&self, p: &Point) -> Result<Evaluation> {
+        let w = self
+            .space
+            .workload(&p.workload)
+            .ok_or_else(|| anyhow!("point references unknown workload '{}'", p.workload))?;
+        let mv = self
+            .space
+            .mem(&p.mem)
+            .ok_or_else(|| anyhow!("point references unknown mem variant '{}'", p.mem))?;
+        let space_box: IVec = p.tile.iter().map(|t| t * self.space.tiles_per_dim).collect();
+        let session = ExperimentSpec::builder()
+            .custom(p.workload.clone(), space_box, p.tile.clone(), w.deps.clone())
+            .layout(p.layout.clone())
+            .schedule(ScheduleKind::Flat)
+            .threads(1)
+            .pe_ops_per_cycle(p.pe)
+            .mem(mv.cfg.clone())
+            .registry(self.registry.clone())
+            .compile()
+            .with_context(|| format!("compiling {}", p.fingerprint()))?;
+        let report = session.run(Mode::Timing)?;
+        let area = AreaModel::default().estimate(session.allocation(), mv.cfg.elem_bytes);
+        Ok(Evaluation {
+            point: p.clone(),
+            report,
+            area,
+        })
+    }
+}
+
+/// `a` dominates `b`: at least as good on both objectives (bandwidth up,
+/// BRAM down), strictly better on at least one.
+pub fn dominates(a: (f64, u64), b: (f64, u64)) -> bool {
+    a.0 >= b.0 && a.1 <= b.1 && (a.0 > b.0 || a.1 < b.1)
+}
+
+/// Indices of the non-dominated items under `key` = (effective MB/s to
+/// maximize, BRAM-36 blocks to minimize), preserving input order.
+pub fn pareto_indices<T>(items: &[T], key: impl Fn(&T) -> (f64, u64)) -> Vec<usize> {
+    let objs: Vec<(f64, u64)> = items.iter().map(&key).collect();
+    (0..items.len())
+        .filter(|&i| {
+            !objs
+                .iter()
+                .enumerate()
+                .any(|(j, &b)| j != i && dominates(b, objs[i]))
+        })
+        .collect()
+}
+
+/// The non-dominated subset of `evals`, in evaluation order.
+pub fn pareto_front(evals: &[Evaluation]) -> Vec<Evaluation> {
+    pareto_indices(evals, |e| (e.effective_mb_s(), e.bram36()))
+        .into_iter()
+        .map(|i| evals[i].clone())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_is_strict_somewhere() {
+        assert!(dominates((10.0, 5), (9.0, 5)));
+        assert!(dominates((10.0, 4), (10.0, 5)));
+        assert!(!dominates((10.0, 5), (10.0, 5)), "equal points never dominate");
+        assert!(!dominates((10.0, 6), (9.0, 5)), "trade-offs do not dominate");
+    }
+
+    #[test]
+    fn pareto_keeps_trade_offs_and_drops_dominated() {
+        let pts = [(10.0, 10u64), (12.0, 20), (8.0, 5), (9.0, 10), (12.0, 20)];
+        let front = pareto_indices(&pts, |&p| p);
+        // (9.0, 10) is dominated by (10.0, 10); the duplicate optimum stays
+        assert_eq!(front, vec![0, 1, 2, 4]);
+    }
+}

@@ -1,0 +1,279 @@
+//! The exploration driver: strategy → batched evaluation → journal →
+//! Pareto front.
+//!
+//! [`Explorer::explore`] enumerates the space once, seeds the attempted
+//! set from a resume journal (skipping every already-journaled
+//! fingerprint), then loops: ask the [`Strategy`] for a batch, fan the
+//! batch out over [`parallel_map`] workers (each point owns its session
+//! and simulator, so per-point timing is bit-identical to a serial run),
+//! journal each result in batch order, feed the scores back to the
+//! strategy. Batches are composed from results only — never from worker
+//! timing — so the journal sequence and the front are identical for any
+//! `--parallel` setting.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::PathBuf;
+
+use crate::dse::evaluate::{pareto_front, Evaluation, Evaluator};
+use crate::dse::journal::{self, Journal};
+use crate::dse::space::Space;
+use crate::dse::strategy::{Ctx, Strategy};
+use crate::layout::registry;
+use crate::layout::LayoutRegistry;
+use crate::util::par::parallel_map;
+use anyhow::Result;
+
+/// Configured exploration run; build with [`Explorer::new`] + setters,
+/// execute with [`Explorer::explore`].
+pub struct Explorer {
+    space: Space,
+    strategy: Box<dyn Strategy>,
+    registry: LayoutRegistry,
+    parallel: usize,
+    budget: Option<usize>,
+    out: Option<PathBuf>,
+    resume: Option<PathBuf>,
+}
+
+/// What an exploration produced.
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    /// Strategy name (for the summary line).
+    pub strategy: String,
+    /// Size of the enumerated space.
+    pub points_total: usize,
+    /// Evaluations resumed from the journal (no work performed).
+    pub resumed: usize,
+    /// Fresh evaluations performed by this run.
+    pub evaluated: usize,
+    /// Points attempted this run that failed to compile/run (skipped).
+    pub failed: usize,
+    /// Every evaluation, journal order: resumed first, then fresh.
+    pub all: Vec<Evaluation>,
+    /// The non-dominated subset of `all` (bandwidth up, BRAM down).
+    pub front: Vec<Evaluation>,
+}
+
+impl Outcome {
+    /// Human summary: one status line plus the front, one line per point.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "dse[{}]: {} points in space; evaluated {} new points \
+             ({} resumed from journal, {} failed); pareto front: {} points\n",
+            self.strategy,
+            self.points_total,
+            self.evaluated,
+            self.resumed,
+            self.failed,
+            self.front.len()
+        );
+        for e in &self.front {
+            s.push_str("  ");
+            s.push_str(&e.summary());
+            s.push('\n');
+        }
+        s
+    }
+}
+
+impl Explorer {
+    pub fn new(space: Space, strategy: Box<dyn Strategy>) -> Explorer {
+        Explorer {
+            space,
+            strategy,
+            registry: registry::global(),
+            parallel: 1,
+            budget: None,
+            out: None,
+            resume: None,
+        }
+    }
+
+    /// Resolve layouts against this registry instead of the global one.
+    pub fn registry(mut self, registry: LayoutRegistry) -> Explorer {
+        self.registry = registry;
+        self
+    }
+
+    /// Worker threads fanning out across points (1 = serial). The journal
+    /// sequence and front are identical for any value.
+    pub fn parallel(mut self, n: usize) -> Explorer {
+        self.parallel = n.max(1);
+        self
+    }
+
+    /// Maximum fresh evaluations this run (resumed points are free).
+    pub fn budget(mut self, n: usize) -> Explorer {
+        self.budget = Some(n);
+        self
+    }
+
+    /// Journal every evaluation to this JSONL path.
+    pub fn journal(mut self, path: impl Into<PathBuf>) -> Explorer {
+        self.out = Some(path.into());
+        self
+    }
+
+    /// Skip every point already journaled in this JSONL file.
+    pub fn resume(mut self, path: impl Into<PathBuf>) -> Explorer {
+        self.resume = Some(path.into());
+        self
+    }
+
+    /// Run the exploration; see the module docs.
+    pub fn explore(mut self) -> Result<Outcome> {
+        let enumerated = self.space.enumerate(&self.registry)?;
+        let fp_to_idx: BTreeMap<String, usize> = enumerated
+            .points()
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p.fingerprint(), i))
+            .collect();
+
+        let mut attempted: BTreeSet<usize> = BTreeSet::new();
+        let mut scores: BTreeMap<usize, f64> = BTreeMap::new();
+        let mut all: Vec<Evaluation> = Vec::new();
+        let mut resumed = 0usize;
+        if let Some(path) = &self.resume {
+            for eval in journal::read(path)? {
+                let Some(&i) = fp_to_idx.get(&eval.fingerprint()) else {
+                    // a journal may span a larger space than this run's;
+                    // foreign points are ignored, not errors
+                    continue;
+                };
+                if attempted.insert(i) {
+                    scores.insert(i, eval.effective_mb_s());
+                    all.push(eval);
+                    resumed += 1;
+                }
+            }
+        }
+
+        // Keep the out-journal complete: when resuming in place, append;
+        // otherwise write the resumed records first, then the fresh ones.
+        let mut writer = match &self.out {
+            None => None,
+            Some(path) => {
+                let in_place = self.resume.as_deref() == Some(path.as_path());
+                let mut w = if in_place {
+                    Journal::append_to(path)?
+                } else {
+                    Journal::create(path)?
+                };
+                if !in_place {
+                    for e in &all {
+                        w.push(e)?;
+                    }
+                }
+                Some(w)
+            }
+        };
+
+        let evaluator = Evaluator::new(&self.space, self.registry.clone());
+        let mut evaluated = 0usize;
+        let mut failed = 0usize;
+        loop {
+            let remaining = match self.budget {
+                Some(b) => b.saturating_sub(evaluated),
+                None => usize::MAX,
+            };
+            if remaining == 0 {
+                break;
+            }
+            let mut batch = {
+                let ctx = Ctx {
+                    space: &enumerated,
+                    attempted: &attempted,
+                    scores: &scores,
+                };
+                self.strategy.propose(&ctx, remaining)
+            };
+            batch.truncate(remaining);
+            batch.retain(|i| !attempted.contains(i));
+            if batch.is_empty() {
+                break;
+            }
+            let results = parallel_map(&batch, self.parallel, |&i| {
+                evaluator.evaluate(&enumerated.points()[i])
+            });
+            for (&i, result) in batch.iter().zip(results) {
+                attempted.insert(i);
+                match result {
+                    Ok(eval) => {
+                        if let Some(w) = writer.as_mut() {
+                            w.push(&eval)?;
+                        }
+                        scores.insert(i, eval.effective_mb_s());
+                        all.push(eval);
+                        evaluated += 1;
+                    }
+                    Err(e) => {
+                        eprintln!("dse: skip {}: {e:#}", enumerated.points()[i].fingerprint());
+                        failed += 1;
+                    }
+                }
+            }
+        }
+
+        let front = pareto_front(&all);
+        Ok(Outcome {
+            strategy: self.strategy.name().to_string(),
+            points_total: enumerated.len(),
+            resumed,
+            evaluated,
+            failed,
+            all,
+            front,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::strategy::{Exhaustive, RandomSearch};
+    use crate::harness::workloads::table1;
+    use crate::memsim::MemConfig;
+
+    fn tiny() -> Space {
+        Space::fig15(&table1(true)[..1], &MemConfig::default(), 2)
+    }
+
+    #[test]
+    fn exhaustive_covers_the_space_once() {
+        let out = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+            .explore()
+            .unwrap();
+        assert_eq!(out.points_total, 8);
+        assert_eq!(out.evaluated, 8);
+        assert_eq!(out.resumed, 0);
+        assert_eq!(out.failed, 0);
+        assert!(!out.front.is_empty());
+        assert!(out.summary().contains("evaluated 8 new points"));
+    }
+
+    #[test]
+    fn budget_caps_fresh_evaluations() {
+        let out = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+            .budget(3)
+            .explore()
+            .unwrap();
+        assert_eq!(out.evaluated, 3);
+        assert_eq!(out.all.len(), 3);
+    }
+
+    #[test]
+    fn random_search_finds_the_same_point_set() {
+        let a = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+            .explore()
+            .unwrap();
+        let b = Explorer::new(tiny(), Box::new(RandomSearch::new(5)))
+            .explore()
+            .unwrap();
+        let mut fa: Vec<String> = a.all.iter().map(Evaluation::fingerprint).collect();
+        let mut fb: Vec<String> = b.all.iter().map(Evaluation::fingerprint).collect();
+        fa.sort();
+        fb.sort();
+        assert_eq!(fa, fb);
+    }
+}

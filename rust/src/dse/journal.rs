@@ -1,0 +1,133 @@
+//! JSONL results journal: one [`Evaluation`] per line.
+//!
+//! The journal is the explorer's durability story: every evaluation is
+//! appended (and flushed) the moment it completes, so a killed run leaves
+//! a valid prefix behind. `--resume PATH` reads that prefix back and the
+//! explorer skips every journaled fingerprint — a resume with a full
+//! journal performs zero evaluations and reproduces the front from the
+//! parsed records alone (the JSON encoding round-trips `f64` exactly).
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use crate::dse::evaluate::Evaluation;
+use crate::util::json;
+use anyhow::{anyhow, Context, Result};
+
+/// Read every evaluation of a JSONL journal (blank lines ignored).
+pub fn read(path: &Path) -> Result<Vec<Evaluation>> {
+    let f = File::open(path).with_context(|| format!("opening journal {}", path.display()))?;
+    let mut out = Vec::new();
+    for (ln, line) in BufReader::new(f).lines().enumerate() {
+        let line = line.with_context(|| format!("reading journal {}", path.display()))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = json::parse(&line)
+            .map_err(|e| anyhow!("{}:{}: {e}", path.display(), ln + 1))?;
+        let eval = Evaluation::from_json(&j)
+            .with_context(|| format!("{}:{}", path.display(), ln + 1))?;
+        out.push(eval);
+    }
+    Ok(out)
+}
+
+/// Flushing JSONL writer.
+pub struct Journal {
+    path: PathBuf,
+    out: BufWriter<File>,
+}
+
+impl Journal {
+    /// Create (truncating any existing file).
+    pub fn create(path: &Path) -> Result<Journal> {
+        let f = File::create(path)
+            .with_context(|| format!("creating journal {}", path.display()))?;
+        Ok(Journal {
+            path: path.to_path_buf(),
+            out: BufWriter::new(f),
+        })
+    }
+
+    /// Open for appending (the resume-in-place case).
+    pub fn append_to(path: &Path) -> Result<Journal> {
+        let f = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening journal {}", path.display()))?;
+        Ok(Journal {
+            path: path.to_path_buf(),
+            out: BufWriter::new(f),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one record and flush it to disk.
+    pub fn push(&mut self, eval: &Evaluation) -> Result<()> {
+        writeln!(self.out, "{}", eval.to_json().to_string_compact())
+            .and_then(|()| self.out.flush())
+            .with_context(|| format!("writing journal {}", self.path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::{Evaluator, Space};
+    use crate::harness::workloads::table1;
+    use crate::layout::LayoutRegistry;
+    use crate::memsim::MemConfig;
+
+    fn sample_evals(n: usize) -> Vec<Evaluation> {
+        let space = Space::fig15(&table1(true)[..1], &MemConfig::default(), 2);
+        let reg = LayoutRegistry::with_builtins();
+        let points = space.enumerate(&reg).unwrap();
+        let ev = Evaluator::new(&space, reg);
+        points
+            .points()
+            .iter()
+            .take(n)
+            .map(|p| ev.evaluate(p).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn journal_round_trips_bit_exactly() {
+        let evals = sample_evals(3);
+        let path = std::env::temp_dir().join("cfa_dse_journal_roundtrip.jsonl");
+        let mut j = Journal::create(&path).unwrap();
+        for e in &evals {
+            j.push(e).unwrap();
+        }
+        drop(j);
+        let back = read(&path).unwrap();
+        assert_eq!(back.len(), evals.len());
+        for (a, b) in back.iter().zip(&evals) {
+            assert_eq!(a.fingerprint(), b.fingerprint());
+            assert_eq!(a.effective_mb_s().to_bits(), b.effective_mb_s().to_bits());
+            assert_eq!(a.report.timing, b.report.timing);
+            assert_eq!(a.area, b.area);
+        }
+        // appending extends without clobbering
+        let more = sample_evals(4);
+        let mut j = Journal::append_to(&path).unwrap();
+        j.push(&more[3]).unwrap();
+        drop(j);
+        assert_eq!(read(&path).unwrap().len(), 4);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_lines_are_rejected_with_position() {
+        let path = std::env::temp_dir().join("cfa_dse_journal_corrupt.jsonl");
+        std::fs::write(&path, "{\"point\": 3}\n").unwrap();
+        let err = format!("{:#}", read(&path).unwrap_err());
+        assert!(err.contains(":1"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,52 @@
+//! `dse` — design-space exploration: autotune tiling × layout × memory
+//! configuration for bandwidth and area.
+//!
+//! The paper hand-sweeps the tile-shape/layout space and reports that
+//! burst-friendly layouts only pay off for the right configurations
+//! (Figs. 15–17, Table I). This subsystem makes that search a first-class,
+//! resumable optimizer on top of the experiment API:
+//!
+//! * [`Space`] — a declarative exploration space (per-workload tile
+//!   candidates, registry layouts by name, memory-interface variants
+//!   including burst widths, PE throughputs) with deterministic
+//!   enumeration and structured hill-climb coordinates;
+//! * [`Strategy`] — deterministic proposal streams: [`Exhaustive`],
+//!   seeded [`RandomSearch`], and [`HillClimb`] (±1 step per tile axis /
+//!   adjacent layout, random restarts);
+//! * [`Evaluator`] — every point compiles an
+//!   [`ExperimentSpec`](crate::experiment::ExperimentSpec) and runs
+//!   `Session::run(Mode::Timing)` over a flat schedule (the memory-bound
+//!   rig), scoring effective bandwidth from the simulator and BRAM/slice
+//!   cost from the [`area`](crate::area) model;
+//! * [`Explorer`] — batched, [`parallel_map`](crate::util::par)-fanned
+//!   evaluation with fingerprint dedup, a flushed JSONL journal
+//!   ([`journal`]) and resume (`--resume` skips journaled points), and a
+//!   Pareto front ([`pareto_front`]) over (bandwidth ↑, BRAM ↓).
+//!
+//! The figure sweeps are thin wrappers over `Exhaustive` spaces
+//! ([`Space::fig15`] / [`Space::area`]; see `harness::figures`), and the
+//! CLI exposes the tuner as `cfa tune`.
+//!
+//! ```no_run
+//! use cfa::dse::{Explorer, HillClimb, Space};
+//!
+//! let space = Space::builtin("fig15-quick").unwrap();
+//! let outcome = Explorer::new(space, Box::new(HillClimb::new(42)))
+//!     .parallel(4)
+//!     .budget(64)
+//!     .journal("tune.jsonl")
+//!     .explore()?;
+//! println!("{}", outcome.summary());
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+pub mod evaluate;
+pub mod explore;
+pub mod journal;
+pub mod space;
+pub mod strategy;
+
+pub use evaluate::{dominates, pareto_front, pareto_indices, Evaluation, Evaluator};
+pub use explore::{Explorer, Outcome};
+pub use space::{Enumerated, MemVariant, Point, Space, SpaceWorkload, TileSet};
+pub use strategy::{Ctx, Exhaustive, HillClimb, RandomSearch, Strategy};

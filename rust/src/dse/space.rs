@@ -1,0 +1,672 @@
+//! Declarative exploration spaces: what the tuner is allowed to try.
+//!
+//! A [`Space`] is the cross product of workloads (each with its own tile
+//! candidates), layouts (registry names; empty = every registered layout),
+//! memory-interface variants (named [`MemConfig`] overrides — burst width,
+//! element width, outstanding window, …) and modeled PE throughputs.
+//! [`Space::enumerate`] materializes the product in a deterministic
+//! nesting order (workload → tile → layout → mem → PE, the same order the
+//! figure sweeps use), together with the structured coordinates hill-climb
+//! neighborhoods are defined over.
+//!
+//! Spaces are either built programmatically ([`Space::fig15`],
+//! [`Space::area`], [`Space::builtin`]) or parsed from a JSON description
+//! (the `--space PATH` grammar; see `DESIGN.md` §"Design-space
+//! exploration").
+
+use std::collections::BTreeMap;
+
+use crate::harness::workloads::{self, Workload};
+use crate::layout::LayoutRegistry;
+use crate::memsim::MemConfig;
+use crate::poly::vec::IVec;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+/// One workload of a space: a name (the report label), its dependence
+/// pattern, and the tile shapes the tuner may pick for it.
+#[derive(Clone, Debug)]
+pub struct SpaceWorkload {
+    pub name: String,
+    pub deps: Vec<IVec>,
+    pub tiles: TileSet,
+}
+
+/// Tile-shape candidates for one workload.
+#[derive(Clone, Debug)]
+pub enum TileSet {
+    /// An explicit ordered list (e.g. a Table-I sweep column).
+    List(Vec<IVec>),
+    /// Per-axis candidate values; the set is their cartesian product
+    /// (last axis fastest). Hill-climb steps move one axis one position.
+    Axes(Vec<Vec<i64>>),
+}
+
+impl TileSet {
+    /// All tiles with their structured coordinates, deterministic order.
+    pub fn enumerate(&self) -> Vec<(Vec<usize>, IVec)> {
+        match self {
+            TileSet::List(ts) => ts
+                .iter()
+                .enumerate()
+                .map(|(i, t)| (vec![i], t.clone()))
+                .collect(),
+            TileSet::Axes(axes) => {
+                let mut out = Vec::new();
+                if axes.is_empty() || axes.iter().any(|a| a.is_empty()) {
+                    return out;
+                }
+                let mut idx = vec![0usize; axes.len()];
+                'outer: loop {
+                    let tile: IVec = idx.iter().zip(axes).map(|(&i, a)| a[i]).collect();
+                    out.push((idx.clone(), tile));
+                    for d in (0..axes.len()).rev() {
+                        idx[d] += 1;
+                        if idx[d] < axes[d].len() {
+                            continue 'outer;
+                        }
+                        idx[d] = 0;
+                    }
+                    break;
+                }
+                out
+            }
+        }
+    }
+}
+
+/// A named memory-interface variant.
+#[derive(Clone, Debug)]
+pub struct MemVariant {
+    pub name: String,
+    pub cfg: MemConfig,
+}
+
+impl MemVariant {
+    pub fn new(name: impl Into<String>, cfg: MemConfig) -> MemVariant {
+        MemVariant {
+            name: name.into(),
+            cfg,
+        }
+    }
+
+    /// The paper's ZC706 HP-port defaults under the name `default`.
+    pub fn paper_default() -> MemVariant {
+        MemVariant::new("default", MemConfig::default())
+    }
+}
+
+/// A declarative exploration space.
+#[derive(Clone, Debug)]
+pub struct Space {
+    pub workloads: Vec<SpaceWorkload>,
+    /// Tiles per axis of the iteration space (`space = tile * this`).
+    pub tiles_per_dim: i64,
+    /// Layout names (canonical or alias); empty = every registered layout.
+    pub layouts: Vec<String>,
+    pub mems: Vec<MemVariant>,
+    /// Modeled PE throughputs (ops/cycle) for the exec stage.
+    pub pe: Vec<u64>,
+}
+
+/// One fully-resolved candidate configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Point {
+    pub workload: String,
+    pub tile: IVec,
+    /// Canonical layout name (resolved at enumeration).
+    pub layout: String,
+    /// Memory-variant name (resolved against [`Space::mems`]).
+    pub mem: String,
+    pub pe: u64,
+}
+
+fn fmt_tile(tile: &[i64]) -> String {
+    tile.iter()
+        .map(|x| x.to_string())
+        .collect::<Vec<_>>()
+        .join("x")
+}
+
+impl Point {
+    /// Stable identity of the point — the journal's dedup key.
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "{}|t{}|{}|{}|pe{}",
+            self.workload,
+            fmt_tile(&self.tile),
+            self.layout,
+            self.mem,
+            self.pe
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workload", Json::str(self.workload.clone())),
+            (
+                "tile",
+                Json::arr(self.tile.iter().map(|&x| Json::num(x as f64))),
+            ),
+            ("layout", Json::str(self.layout.clone())),
+            ("mem", Json::str(self.mem.clone())),
+            ("pe", Json::num(self.pe as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Point> {
+        let text = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("point json: missing string '{k}'"))
+        };
+        let tile = j
+            .get("tile")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("point json: missing array 'tile'"))?
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .map(|x| x as i64)
+                    .ok_or_else(|| anyhow!("point json: non-numeric tile entry"))
+            })
+            .collect::<Result<IVec>>()?;
+        let pe = j
+            .get("pe")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("point json: missing number 'pe'"))? as u64;
+        Ok(Point {
+            workload: text("workload")?,
+            tile,
+            layout: text("layout")?,
+            mem: text("mem")?,
+            pe,
+        })
+    }
+}
+
+/// A materialized space: points in deterministic nesting order, plus the
+/// coordinate structure strategies navigate.
+#[derive(Clone, Debug)]
+pub struct Enumerated {
+    points: Vec<Point>,
+    /// Flattened coordinates per point: `[workload, tile..., layout, mem, pe]`.
+    coords: Vec<Vec<usize>>,
+    by_coords: BTreeMap<Vec<usize>, usize>,
+}
+
+impl Enumerated {
+    pub fn points(&self) -> &[Point] {
+        &self.points
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Hill-climb neighborhood of point `i`: every point whose structured
+    /// coordinates differ by exactly one step in exactly one non-workload
+    /// dimension — ±1 along a tile axis (or tile-list position), the
+    /// adjacent layout, memory variant or PE setting.
+    pub fn neighbors(&self, i: usize) -> Vec<usize> {
+        let c = &self.coords[i];
+        let mut out = Vec::new();
+        for d in 1..c.len() {
+            for delta in [-1i64, 1] {
+                let v = c[d] as i64 + delta;
+                if v < 0 {
+                    continue;
+                }
+                let mut n = c.clone();
+                n[d] = v as usize;
+                if let Some(&j) = self.by_coords.get(&n) {
+                    out.push(j);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Space {
+    /// Look a workload up by name.
+    pub fn workload(&self, name: &str) -> Option<&SpaceWorkload> {
+        self.workloads.iter().find(|w| w.name == name)
+    }
+
+    /// Look a memory variant up by name.
+    pub fn mem(&self, name: &str) -> Option<&MemVariant> {
+        self.mems.iter().find(|m| m.name == name)
+    }
+
+    /// Materialize every point. Layout names resolve (and canonicalize)
+    /// against `registry`; an empty layout list means every registered
+    /// layout, in registration order. Duplicate configurations (same
+    /// fingerprint, e.g. a tile listed twice) keep their first occurrence
+    /// only, so a fingerprint names exactly one point.
+    pub fn enumerate(&self, registry: &LayoutRegistry) -> Result<Enumerated> {
+        if self.mems.is_empty() {
+            bail!("space has no memory variants");
+        }
+        if self.pe.is_empty() {
+            bail!("space has no PE settings");
+        }
+        let layouts: Vec<String> = if self.layouts.is_empty() {
+            registry.names().iter().map(|s| s.to_string()).collect()
+        } else {
+            self.layouts
+                .iter()
+                .map(|l| {
+                    registry
+                        .resolve_or_err(l)
+                        .map(|e| e.name().to_string())
+                })
+                .collect::<Result<_>>()?
+        };
+        let mut points = Vec::new();
+        let mut coords = Vec::new();
+        let mut by_coords = BTreeMap::new();
+        let mut seen = std::collections::BTreeSet::new();
+        for (wi, w) in self.workloads.iter().enumerate() {
+            for (tc, tile) in w.tiles.enumerate() {
+                for (li, layout) in layouts.iter().enumerate() {
+                    for (mi, mv) in self.mems.iter().enumerate() {
+                        for (pi, &pe) in self.pe.iter().enumerate() {
+                            let point = Point {
+                                workload: w.name.clone(),
+                                tile: tile.clone(),
+                                layout: layout.clone(),
+                                mem: mv.name.clone(),
+                                pe,
+                            };
+                            if !seen.insert(point.fingerprint()) {
+                                continue;
+                            }
+                            let mut c = Vec::with_capacity(tc.len() + 4);
+                            c.push(wi);
+                            c.extend_from_slice(&tc);
+                            c.push(li);
+                            c.push(mi);
+                            c.push(pi);
+                            by_coords.insert(c.clone(), points.len());
+                            coords.push(c);
+                            points.push(point);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(Enumerated {
+            points,
+            coords,
+            by_coords,
+        })
+    }
+
+    /// The Fig-15 bandwidth-sweep space: the given workloads with their
+    /// own tile sweeps, every registered layout, one memory config.
+    pub fn fig15(wl: &[Workload], mem_cfg: &MemConfig, tiles_per_dim: i64) -> Space {
+        Space {
+            workloads: wl
+                .iter()
+                .map(|w| SpaceWorkload {
+                    name: w.name.to_string(),
+                    deps: w.deps.clone(),
+                    tiles: TileSet::List(w.tile_sizes.clone()),
+                })
+                .collect(),
+            tiles_per_dim,
+            layouts: Vec::new(),
+            mems: vec![MemVariant::new("default", mem_cfg.clone())],
+            pe: vec![64],
+        }
+    }
+
+    /// The Fig-16/17 area-sweep space: same shape as [`Space::fig15`] with
+    /// the element width pinned to `elem_bytes`.
+    pub fn area(wl: &[Workload], elem_bytes: u64, tiles_per_dim: i64) -> Space {
+        let cfg = MemConfig {
+            elem_bytes,
+            ..MemConfig::default()
+        };
+        let mut s = Space::fig15(wl, &cfg, tiles_per_dim);
+        s.mems = vec![MemVariant::new(format!("b{elem_bytes}"), cfg)];
+        s
+    }
+
+    /// Named built-in spaces for `cfa tune --space`.
+    pub fn builtin(name: &str) -> Option<Space> {
+        match name {
+            "fig15" => Some(Space::fig15(&workloads::table1(false), &MemConfig::default(), 3)),
+            "fig15-quick" => {
+                Some(Space::fig15(&workloads::table1(true), &MemConfig::default(), 3))
+            }
+            "fig17" | "area" => Some(Space::area(&workloads::table1(false), 8, 3)),
+            "fig17-quick" | "area-quick" => Some(Space::area(&workloads::table1(true), 8, 3)),
+            // 1 workload x 2 tiles x 4 layouts = 8 points: the CI smoke space
+            "tiny" => {
+                let wl = workloads::table1(true);
+                Some(Space::fig15(&wl[..1], &MemConfig::default(), 2))
+            }
+            _ => None,
+        }
+    }
+
+    /// Parse the `--space PATH` JSON grammar (see `DESIGN.md`).
+    pub fn parse(text: &str) -> Result<Space> {
+        let j = crate::util::json::parse(text).map_err(|e| anyhow!("space json: {e}"))?;
+        Space::from_json(&j)
+    }
+
+    /// Build a space from its JSON description.
+    pub fn from_json(j: &Json) -> Result<Space> {
+        let quick = j.get("quick").and_then(Json::as_bool).unwrap_or(false);
+        let names = j
+            .get("workloads")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("space json: missing 'workloads' array"))?;
+        if names.is_empty() {
+            bail!("space json: 'workloads' is empty");
+        }
+        let tiles = parse_tile_list(j.get("tiles"), "tiles")?;
+        let tile_axes = parse_tile_list(j.get("tile_axes"), "tile_axes")?;
+        if tiles.is_some() && tile_axes.is_some() {
+            bail!("space json: 'tiles' and 'tile_axes' are mutually exclusive");
+        }
+        let mut sws = Vec::new();
+        for n in names {
+            let name = n
+                .as_str()
+                .ok_or_else(|| anyhow!("space json: workload names must be strings"))?;
+            let w = resolve_workload(name, quick)
+                .ok_or_else(|| anyhow!("space json: unknown workload '{name}' (see `cfa list`)"))?;
+            let tiles = match (&tiles, &tile_axes) {
+                (Some(ts), _) => {
+                    for t in ts {
+                        if t.len() != w.dims {
+                            bail!(
+                                "space json: tile {t:?} has {} dims but '{name}' is {}-d",
+                                t.len(),
+                                w.dims
+                            );
+                        }
+                    }
+                    TileSet::List(ts.clone())
+                }
+                (None, Some(axes)) => {
+                    if axes.len() != w.dims {
+                        bail!(
+                            "space json: 'tile_axes' has {} axes but '{name}' is {}-d",
+                            axes.len(),
+                            w.dims
+                        );
+                    }
+                    TileSet::Axes(axes.clone())
+                }
+                (None, None) => TileSet::List(w.tile_sizes.clone()),
+            };
+            sws.push(SpaceWorkload {
+                name: w.name.to_string(),
+                deps: w.deps.clone(),
+                tiles,
+            });
+        }
+        let layouts = match j.get("layouts").and_then(Json::as_arr) {
+            None => Vec::new(),
+            Some(ls) => ls
+                .iter()
+                .map(|l| {
+                    l.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| anyhow!("space json: layout names must be strings"))
+                })
+                .collect::<Result<_>>()?,
+        };
+        let tiles_per_dim = j
+            .get("tiles_per_dim")
+            .and_then(Json::as_f64)
+            .map(|x| x as i64)
+            .unwrap_or(3);
+        if tiles_per_dim < 1 {
+            bail!("space json: tiles_per_dim must be >= 1");
+        }
+        let pe = match j.get("pe").and_then(Json::as_arr) {
+            None => vec![64],
+            Some(ps) => ps
+                .iter()
+                .map(|p| {
+                    p.as_f64()
+                        .map(|x| x as u64)
+                        .ok_or_else(|| anyhow!("space json: 'pe' entries must be numbers"))
+                })
+                .collect::<Result<_>>()?,
+        };
+        let mems = match j.get("mem").and_then(Json::as_arr) {
+            None => vec![MemVariant::paper_default()],
+            Some(ms) => ms
+                .iter()
+                .enumerate()
+                .map(|(i, m)| mem_variant_from_json(m, i))
+                .collect::<Result<_>>()?,
+        };
+        Ok(Space {
+            workloads: sws,
+            tiles_per_dim,
+            layouts,
+            mems,
+            pe,
+        })
+    }
+}
+
+fn resolve_workload(name: &str, quick: bool) -> Option<Workload> {
+    if name == "heat3d" {
+        return Some(workloads::heat3d());
+    }
+    workloads::table1(quick).into_iter().find(|w| w.name == name)
+}
+
+fn parse_tile_list(j: Option<&Json>, key: &str) -> Result<Option<Vec<IVec>>> {
+    let Some(arr) = j else { return Ok(None) };
+    let rows = arr
+        .as_arr()
+        .ok_or_else(|| anyhow!("space json: '{key}' must be an array of arrays"))?;
+    let mut out = Vec::new();
+    for row in rows {
+        let vals = row
+            .as_arr()
+            .ok_or_else(|| anyhow!("space json: '{key}' must be an array of arrays"))?
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .map(|x| x as i64)
+                    .ok_or_else(|| anyhow!("space json: '{key}' entries must be numbers"))
+            })
+            .collect::<Result<IVec>>()?;
+        out.push(vals);
+    }
+    if out.is_empty() {
+        bail!("space json: '{key}' is empty");
+    }
+    Ok(Some(out))
+}
+
+/// One `mem` entry: `{"name": ..., "<MemConfig field>": value, ...}`,
+/// starting from the paper's defaults. Covers the burst/width knobs the
+/// paper varies plus the rest of [`MemConfig`].
+fn mem_variant_from_json(j: &Json, idx: usize) -> Result<MemVariant> {
+    let Json::Obj(m) = j else {
+        bail!("space json: 'mem' entries must be objects");
+    };
+    let mut cfg = MemConfig::default();
+    let mut name = format!("mem{idx}");
+    for (k, v) in m {
+        let num = || -> Result<f64> {
+            v.as_f64()
+                .ok_or_else(|| anyhow!("space json: mem field '{k}' must be a number"))
+        };
+        match k.as_str() {
+            "name" => {
+                name = v
+                    .as_str()
+                    .ok_or_else(|| anyhow!("space json: mem 'name' must be a string"))?
+                    .to_string();
+            }
+            "elem_bytes" => cfg.elem_bytes = num()? as u64,
+            "bus_bytes" => cfg.bus_bytes = num()? as u64,
+            "clock_mhz" => cfg.clock_mhz = num()?,
+            "max_burst_beats" => cfg.max_burst_beats = num()? as u64,
+            "boundary_bytes" => cfg.boundary_bytes = num()? as u64,
+            "issue_cycles" => cfg.issue_cycles = num()? as u64,
+            "row_hit_cycles" => cfg.row_hit_cycles = num()? as u64,
+            "row_miss_cycles" => cfg.row_miss_cycles = num()? as u64,
+            "row_bytes" => cfg.row_bytes = num()? as u64,
+            "banks" => cfg.banks = num()? as u64,
+            "max_outstanding" => cfg.max_outstanding = num()? as usize,
+            "turnaround_cycles" => cfg.turnaround_cycles = num()? as u64,
+            _ => bail!("space json: unknown mem field '{k}'"),
+        }
+    }
+    Ok(MemVariant { name, cfg })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::registry::names;
+
+    fn quick2() -> Space {
+        Space::fig15(&workloads::table1(true)[..2], &MemConfig::default(), 2)
+    }
+
+    #[test]
+    fn enumeration_matches_the_sweep_nesting_order() {
+        let reg = LayoutRegistry::with_builtins();
+        let space = quick2();
+        let e = space.enumerate(&reg).unwrap();
+        let wl = workloads::table1(true);
+        let mut expect = Vec::new();
+        for w in &wl[..2] {
+            for tile in &w.tile_sizes {
+                for name in reg.names() {
+                    expect.push((w.name.to_string(), tile.clone(), name.to_string()));
+                }
+            }
+        }
+        assert_eq!(e.len(), expect.len());
+        for (p, (w, t, l)) in e.points().iter().zip(&expect) {
+            assert_eq!(&p.workload, w);
+            assert_eq!(&p.tile, t);
+            assert_eq!(&p.layout, l);
+            assert_eq!(p.mem, "default");
+            assert_eq!(p.pe, 64);
+        }
+    }
+
+    #[test]
+    fn fingerprints_are_unique() {
+        let reg = LayoutRegistry::with_builtins();
+        let e = quick2().enumerate(&reg).unwrap();
+        let mut fps: Vec<String> = e.points().iter().map(Point::fingerprint).collect();
+        fps.sort();
+        fps.dedup();
+        assert_eq!(fps.len(), e.len());
+    }
+
+    #[test]
+    fn neighbors_step_one_dimension_at_a_time() {
+        let reg = LayoutRegistry::with_builtins();
+        let space = quick2();
+        let e = space.enumerate(&reg).unwrap();
+        // first point: workload 0, tile 0, layout 0 -> neighbors are tile 1
+        // and layout 1 (mem/pe have a single value)
+        let ns = e.neighbors(0);
+        assert_eq!(ns.len(), 2);
+        for &n in &ns {
+            let p = &e.points()[n];
+            assert_eq!(p.workload, e.points()[0].workload);
+            let tile_step = (p.tile != e.points()[0].tile) as usize;
+            let layout_step = (p.layout != e.points()[0].layout) as usize;
+            assert_eq!(tile_step + layout_step, 1, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn axes_tiles_enumerate_cartesian_product_last_axis_fastest() {
+        let ts = TileSet::Axes(vec![vec![4, 8], vec![16, 32]]);
+        let tiles: Vec<IVec> = ts.enumerate().into_iter().map(|(_, t)| t).collect();
+        assert_eq!(
+            tiles,
+            vec![vec![4, 16], vec![4, 32], vec![8, 16], vec![8, 32]]
+        );
+    }
+
+    #[test]
+    fn builtin_spaces_resolve() {
+        let reg = LayoutRegistry::with_builtins();
+        let tiny = Space::builtin("tiny").unwrap();
+        assert_eq!(tiny.enumerate(&reg).unwrap().len(), 8);
+        assert!(Space::builtin("fig15").is_some());
+        assert!(Space::builtin("fig17-quick").is_some());
+        assert!(Space::builtin("nope").is_none());
+    }
+
+    #[test]
+    fn json_space_round_trips_through_enumerate() {
+        let text = r#"{
+            "workloads": ["jacobi2d5p"],
+            "tiles": [[16, 16, 16], [32, 32, 32]],
+            "layouts": ["cfa", "bounding-box"],
+            "tiles_per_dim": 2,
+            "pe": [64, 128],
+            "mem": [{"name": "default"}, {"name": "burst64", "max_burst_beats": 64}]
+        }"#;
+        let space = Space::parse(text).unwrap();
+        assert_eq!(space.tiles_per_dim, 2);
+        assert_eq!(space.mems[1].cfg.max_burst_beats, 64);
+        let reg = LayoutRegistry::with_builtins();
+        let e = space.enumerate(&reg).unwrap();
+        // 2 tiles x 2 layouts x 2 mems x 2 pe
+        assert_eq!(e.len(), 16);
+        // aliases canonicalize at enumeration
+        assert!(e.points().iter().any(|p| p.layout == names::BBOX));
+        // a point's fingerprint distinguishes the mem variant and PE count
+        assert!(e.points().iter().any(|p| p.fingerprint().contains("burst64")));
+        assert!(e.points().iter().any(|p| p.fingerprint().ends_with("pe128")));
+    }
+
+    #[test]
+    fn json_errors_are_specific() {
+        assert!(Space::parse("{}").is_err());
+        assert!(Space::parse(r#"{"workloads": ["nope"]}"#).is_err());
+        let err = Space::parse(
+            r#"{"workloads": ["jacobi2d5p"], "mem": [{"name": "x", "bogus": 1}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("bogus"), "{err}");
+        assert!(Space::parse(
+            r#"{"workloads": ["jacobi2d5p"], "tiles": [[16, 16]]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn point_json_round_trips() {
+        let p = Point {
+            workload: "jacobi2d5p".into(),
+            tile: vec![16, 24, 16],
+            layout: "cfa".into(),
+            mem: "default".into(),
+            pe: 64,
+        };
+        let back = Point::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.fingerprint(), p.fingerprint());
+    }
+}

@@ -1,0 +1,260 @@
+//! Exploration strategies: which points to evaluate next.
+//!
+//! A [`Strategy`] is a deterministic proposal stream over an enumerated
+//! space. The explorer calls [`Strategy::propose`] with the evaluations so
+//! far; the strategy returns a batch of unattempted point indices, and the
+//! explorer fans the whole batch out over its workers. Because a batch's
+//! composition depends only on *prior results* (never on wall-clock or
+//! worker interleaving), the sequence of evaluated points — and with it
+//! the journal and the Pareto front — is identical for any `--parallel`
+//! setting.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::dse::space::Enumerated;
+use crate::util::rng::Rng;
+
+/// What a strategy sees when proposing: the space, which points were
+/// already attempted (evaluated or failed), and the scalar climb score
+/// (effective bandwidth, MB/s) of every successful evaluation.
+pub struct Ctx<'a> {
+    pub space: &'a Enumerated,
+    pub attempted: &'a BTreeSet<usize>,
+    pub scores: &'a BTreeMap<usize, f64>,
+}
+
+/// A deterministic proposal stream; see the module docs.
+pub trait Strategy {
+    fn name(&self) -> &'static str;
+
+    /// Propose up to `max` unattempted point indices to evaluate next.
+    /// An empty batch ends the exploration.
+    fn propose(&mut self, ctx: &Ctx<'_>, max: usize) -> Vec<usize>;
+}
+
+/// Every point, in enumeration order (the figure sweeps' strategy).
+#[derive(Clone, Debug, Default)]
+pub struct Exhaustive {
+    cursor: usize,
+}
+
+impl Exhaustive {
+    pub fn new() -> Exhaustive {
+        Exhaustive::default()
+    }
+}
+
+impl Strategy for Exhaustive {
+    fn name(&self) -> &'static str {
+        "exhaustive"
+    }
+
+    fn propose(&mut self, ctx: &Ctx<'_>, max: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        while self.cursor < ctx.space.len() && out.len() < max {
+            if !ctx.attempted.contains(&self.cursor) {
+                out.push(self.cursor);
+            }
+            self.cursor += 1;
+        }
+        out
+    }
+}
+
+/// Every point, in a seeded random order (uniform without replacement).
+#[derive(Clone, Debug)]
+pub struct RandomSearch {
+    rng: Rng,
+    order: Option<Vec<usize>>,
+    cursor: usize,
+}
+
+impl RandomSearch {
+    pub fn new(seed: u64) -> RandomSearch {
+        RandomSearch {
+            rng: Rng::new(seed),
+            order: None,
+            cursor: 0,
+        }
+    }
+}
+
+impl Strategy for RandomSearch {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn propose(&mut self, ctx: &Ctx<'_>, max: usize) -> Vec<usize> {
+        if self.order.is_none() {
+            let mut order: Vec<usize> = (0..ctx.space.len()).collect();
+            self.rng.shuffle(&mut order);
+            self.order = Some(order);
+        }
+        let order = self.order.as_ref().expect("order initialized above");
+        let mut out = Vec::new();
+        while self.cursor < order.len() && out.len() < max {
+            let i = order[self.cursor];
+            if !ctx.attempted.contains(&i) {
+                out.push(i);
+            }
+            self.cursor += 1;
+        }
+        out
+    }
+}
+
+/// Greedy local search on effective bandwidth with random restarts.
+///
+/// Seeds at a random unattempted point, then repeatedly proposes the
+/// unattempted neighborhood of the current point ([`Enumerated::neighbors`]:
+/// ±1 step per tile axis, adjacent layout/mem/PE). Once the whole
+/// neighborhood is evaluated it moves to the best strictly-improving
+/// neighbor; at a local optimum it restarts at a fresh random point, until
+/// the space (or the budget) is exhausted.
+#[derive(Clone, Debug)]
+pub struct HillClimb {
+    rng: Rng,
+    current: Option<usize>,
+}
+
+impl HillClimb {
+    pub fn new(seed: u64) -> HillClimb {
+        HillClimb {
+            rng: Rng::new(seed),
+            current: None,
+        }
+    }
+}
+
+impl Strategy for HillClimb {
+    fn name(&self) -> &'static str {
+        "hill"
+    }
+
+    fn propose(&mut self, ctx: &Ctx<'_>, max: usize) -> Vec<usize> {
+        loop {
+            let Some(cur) = self.current else {
+                // random restart among the unattempted points
+                let free: Vec<usize> = (0..ctx.space.len())
+                    .filter(|i| !ctx.attempted.contains(i))
+                    .collect();
+                if free.is_empty() {
+                    return Vec::new();
+                }
+                let pick = free[self.rng.gen_usize(free.len())];
+                self.current = Some(pick);
+                return vec![pick];
+            };
+            let Some(&cur_score) = ctx.scores.get(&cur) else {
+                // the seed (or move target) failed to evaluate: restart
+                self.current = None;
+                continue;
+            };
+            let neighbors = ctx.space.neighbors(cur);
+            let mut fresh: Vec<usize> = neighbors
+                .iter()
+                .copied()
+                .filter(|i| !ctx.attempted.contains(i))
+                .collect();
+            if !fresh.is_empty() {
+                fresh.truncate(max);
+                return fresh;
+            }
+            // neighborhood fully explored: climb or restart
+            let mut best: Option<(usize, f64)> = None;
+            for i in neighbors {
+                if let Some(&s) = ctx.scores.get(&i) {
+                    if best.map(|(_, bs)| s > bs).unwrap_or(true) {
+                        best = Some((i, s));
+                    }
+                }
+            }
+            match best {
+                Some((i, s)) if s > cur_score => self.current = Some(i),
+                _ => self.current = None,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::workloads::table1;
+    use crate::layout::LayoutRegistry;
+    use crate::memsim::MemConfig;
+
+    fn tiny_space() -> Enumerated {
+        let reg = LayoutRegistry::with_builtins();
+        crate::dse::Space::fig15(&table1(true)[..1], &MemConfig::default(), 2)
+            .enumerate(&reg)
+            .unwrap()
+    }
+
+    fn drain(
+        strategy: &mut dyn Strategy,
+        space: &Enumerated,
+        score: impl Fn(usize) -> f64,
+    ) -> Vec<usize> {
+        let mut attempted = BTreeSet::new();
+        let mut scores = BTreeMap::new();
+        let mut order = Vec::new();
+        loop {
+            let batch = {
+                let ctx = Ctx {
+                    space,
+                    attempted: &attempted,
+                    scores: &scores,
+                };
+                strategy.propose(&ctx, usize::MAX)
+            };
+            if batch.is_empty() {
+                break;
+            }
+            for i in batch {
+                assert!(attempted.insert(i), "point {i} proposed twice");
+                scores.insert(i, score(i));
+                order.push(i);
+            }
+        }
+        order
+    }
+
+    #[test]
+    fn exhaustive_visits_everything_in_enumeration_order() {
+        let space = tiny_space();
+        let order = drain(&mut Exhaustive::new(), &space, |_| 0.0);
+        assert_eq!(order, (0..space.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn random_search_is_a_seeded_permutation() {
+        let space = tiny_space();
+        let a = drain(&mut RandomSearch::new(7), &space, |_| 0.0);
+        let b = drain(&mut RandomSearch::new(7), &space, |_| 0.0);
+        let c = drain(&mut RandomSearch::new(8), &space, |_| 0.0);
+        assert_eq!(a, b, "same seed, same order");
+        assert_ne!(a, c, "different seed, different order");
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..space.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn hill_climb_terminates_and_covers_with_unbounded_budget() {
+        let space = tiny_space();
+        // score favoring high indices: the climb walks up, restarts fill in
+        let order = drain(&mut HillClimb::new(3), &space, |i| i as f64);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..space.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn hill_climb_is_deterministic_for_a_seed() {
+        let space = tiny_space();
+        let a = drain(&mut HillClimb::new(11), &space, |i| (i % 5) as f64);
+        let b = drain(&mut HillClimb::new(11), &space, |i| (i % 5) as f64);
+        assert_eq!(a, b);
+    }
+}

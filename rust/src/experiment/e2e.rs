@@ -3,8 +3,8 @@
 //! replaced by the simulated memory interface (timing) plus AOT-compiled
 //! PJRT tile programs (numerics), verified against native references.
 //!
-//! Ported from the legacy `coordinator::stencil` / `coordinator::sw` free
-//! functions; those are now shims over these drivers, so the verification
+//! Ported verbatim from the legacy `coordinator::stencil` /
+//! `coordinator::sw` free functions (since removed), so the verification
 //! semantics (sampling convention, store order, reference comparison) are
 //! unchanged — the e2e numeric tests pin them down.
 

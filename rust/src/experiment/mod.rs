@@ -24,8 +24,9 @@
 //!    serialization.
 //!
 //! The legacy free functions (`run_stencil`, `run_sw`, the
-//! `measure_bandwidth` family) are thin shims over this module and are
-//! kept for one PR; new code should build sessions.
+//! `measure_bandwidth`/`build_alloc` family) have been removed; every
+//! driver, sweep, bench and test builds sessions. The [`crate::dse`]
+//! explorer builds on sessions too, one per candidate point.
 //!
 //! ```no_run
 //! use cfa::experiment::{ExperimentSpec, Mode, ScheduleKind};
@@ -45,7 +46,7 @@ mod e2e;
 
 use crate::coordinator::batch::{BatchCoordinator, Schedule};
 use crate::coordinator::reference::{sw3_deps, StencilKind};
-use crate::coordinator::{HostMemory, RunReport};
+use crate::coordinator::HostMemory;
 use crate::harness::workloads;
 use crate::layout::registry::{self, LayoutRegistry};
 use crate::layout::{Allocation, PlanCache, PlanCacheState};
@@ -507,22 +508,6 @@ impl Report {
             max_abs_err: j.get("max_abs_err").and_then(Json::as_f64),
             wall_secs: num("wall_secs")?,
         })
-    }
-
-    /// Downcast to the legacy serial-driver report type (shim support).
-    pub fn into_run_report(self) -> RunReport {
-        RunReport {
-            benchmark: self.benchmark,
-            alloc: self.layout,
-            tiles: self.tiles,
-            makespan_cycles: self.makespan_cycles,
-            mem_busy_cycles: self.mem_busy_cycles,
-            raw_bytes: self.raw_bytes,
-            useful_bytes: self.useful_bytes,
-            transactions: self.transactions,
-            max_abs_err: self.max_abs_err.unwrap_or(0.0),
-            wall_secs: self.wall_secs,
-        }
     }
 }
 

@@ -2,8 +2,8 @@
 //! (slices/DSP) and Fig 17 (BRAM), with the paper's memory-bound rig
 //! (Fig 14: read and write engines only, one AXI HP port, f64 elements).
 
-use crate::area::{AreaEstimate, AreaModel, Device};
-use crate::coordinator::AllocKind;
+use crate::area::{AreaEstimate, Device};
+use crate::dse::{Evaluation, Exhaustive, Explorer, Space};
 use crate::experiment::{ExperimentSpec, Mode, ScheduleKind};
 use crate::harness::workloads::Workload;
 use crate::layout::registry;
@@ -11,7 +11,6 @@ use crate::layout::{Allocation, LayoutRegistry};
 use crate::memsim::MemConfig;
 use crate::poly::deps::DepPattern;
 use crate::poly::tiling::Tiling;
-use crate::util::par::parallel_map;
 use crate::util::table::{stacked_bars, StackedBar};
 
 /// One Fig-15 data point.
@@ -41,17 +40,6 @@ pub fn build_alloc_named(
     let tiling = Tiling::new(space, tile.to_vec());
     let a = layout_registry.build(layout, &tiling, &deps)?;
     Ok((tiling, deps, a))
-}
-
-/// [`build_alloc_named`] against the global registry, keyed by the legacy
-/// enum. Deprecated shim, kept for one PR.
-pub fn build_alloc(
-    w: &Workload,
-    tile: &[i64],
-    alloc: AllocKind,
-    tiles_per_dim: i64,
-) -> anyhow::Result<(Tiling, DepPattern, Box<dyn Allocation>)> {
-    build_alloc_named(w, tile, alloc.name(), tiles_per_dim, &registry::global())
 }
 
 /// Simulate the paper's memory-bound rig for one sweep point: all tiles'
@@ -97,37 +85,18 @@ pub fn measure_bandwidth_named(
     })
 }
 
-/// [`measure_bandwidth_named`] keyed by the legacy enum against the
-/// global registry. Deprecated shim, kept for one PR.
-pub fn measure_bandwidth(
-    w: &Workload,
-    tile: &[i64],
-    alloc: AllocKind,
-    mem_cfg: &MemConfig,
-    tiles_per_dim: i64,
-) -> anyhow::Result<BandwidthPoint> {
-    measure_bandwidth_named(w, tile, alloc.name(), mem_cfg, tiles_per_dim, 1, &registry::global())
-}
-
-/// [`measure_bandwidth`] with `threads` planning workers. Deprecated
-/// shim, kept for one PR.
-pub fn measure_bandwidth_batched(
-    w: &Workload,
-    tile: &[i64],
-    alloc: AllocKind,
-    mem_cfg: &MemConfig,
-    tiles_per_dim: i64,
-    threads: usize,
-) -> anyhow::Result<BandwidthPoint> {
-    measure_bandwidth_named(
-        w,
-        tile,
-        alloc.name(),
-        mem_cfg,
-        tiles_per_dim,
-        threads,
-        &registry::global(),
-    )
+/// Project one dse [`Evaluation`] onto a Fig-15 data point.
+pub fn bandwidth_point_of(e: &Evaluation) -> BandwidthPoint {
+    BandwidthPoint {
+        benchmark: e.point.workload.clone(),
+        tile: e.point.tile.clone(),
+        alloc: e.report.layout.clone(),
+        raw_mb_s: e.report.raw_mb_s,
+        effective_mb_s: e.report.effective_mb_s,
+        transactions: e.report.transactions,
+        raw_bytes: e.report.raw_bytes,
+        useful_bytes: e.report.useful_bytes,
+    }
 }
 
 /// Full Fig-15 sweep over every layout in the global registry.
@@ -155,6 +124,11 @@ pub fn fig15_sweep_parallel(
 /// The Fig-15 sweep against an explicit layout registry: benchmarks ×
 /// tile sizes × every registered layout, in registration order. Adding a
 /// layout to the registry adds its bars to every figure — no edits here.
+///
+/// Since the `dse` subsystem landed, this is a thin wrapper: the sweep is
+/// an [`Exhaustive`] exploration of [`Space::fig15`], point for point and
+/// bit for bit the serial measurement loop (a point that errors is
+/// skipped, as before).
 pub fn fig15_sweep_registry(
     layout_registry: &LayoutRegistry,
     workloads: &[Workload],
@@ -162,22 +136,13 @@ pub fn fig15_sweep_registry(
     tiles_per_dim: i64,
     threads: usize,
 ) -> Vec<BandwidthPoint> {
-    let mut jobs: Vec<(&Workload, &Vec<i64>, &str)> = Vec::new();
-    for w in workloads {
-        for tile in &w.tile_sizes {
-            for name in layout_registry.names() {
-                jobs.push((w, tile, name));
-            }
-        }
-    }
-    parallel_map(&jobs, threads, |&(w, tile, name)| {
-        measure_bandwidth_named(w, tile, name, mem_cfg, tiles_per_dim, 1, layout_registry)
-            .map_err(|e| eprintln!("skip {}/{:?}/{name}: {e}", w.name, tile))
-            .ok()
-    })
-    .into_iter()
-    .flatten()
-    .collect()
+    let space = Space::fig15(workloads, mem_cfg, tiles_per_dim);
+    let outcome = Explorer::new(space, Box::new(Exhaustive::new()))
+        .registry(layout_registry.clone())
+        .parallel(threads)
+        .explore()
+        .expect("fig15 sweep exploration");
+    outcome.all.iter().map(bandwidth_point_of).collect()
 }
 
 /// Render one benchmark's Fig-15 panel as stacked ASCII bars.
@@ -248,8 +213,21 @@ pub fn area_sweep_parallel(
     )
 }
 
+/// Project one dse [`Evaluation`] onto a Fig-16/17 data point.
+pub fn area_point_of(e: &Evaluation) -> AreaPoint {
+    AreaPoint {
+        benchmark: e.point.workload.clone(),
+        tile: e.point.tile.clone(),
+        alloc: e.point.layout.clone(),
+        est: e.area,
+    }
+}
+
 /// The area sweep against an explicit layout registry (benchmarks × tile
-/// sizes × every registered layout, registration order).
+/// sizes × every registered layout, registration order). A thin wrapper
+/// over an [`Exhaustive`] exploration of [`Space::area`] — the dse
+/// evaluator scores every point on bandwidth *and* area, and this view
+/// keeps the area columns.
 pub fn area_sweep_registry(
     layout_registry: &LayoutRegistry,
     workloads: &[Workload],
@@ -257,28 +235,13 @@ pub fn area_sweep_registry(
     tiles_per_dim: i64,
     threads: usize,
 ) -> Vec<AreaPoint> {
-    let model = AreaModel::default();
-    let mut jobs: Vec<(&Workload, &Vec<i64>, &str)> = Vec::new();
-    for w in workloads {
-        for tile in &w.tile_sizes {
-            for name in layout_registry.names() {
-                jobs.push((w, tile, name));
-            }
-        }
-    }
-    parallel_map(&jobs, threads, |&(w, tile, name)| {
-        let (_t, _d, a) =
-            build_alloc_named(w, tile, name, tiles_per_dim, layout_registry).ok()?;
-        Some(AreaPoint {
-            benchmark: w.name.to_string(),
-            tile: tile.clone(),
-            alloc: name.to_string(),
-            est: model.estimate(a.as_ref(), elem_bytes),
-        })
-    })
-    .into_iter()
-    .flatten()
-    .collect()
+    let space = Space::area(workloads, elem_bytes, tiles_per_dim);
+    let outcome = Explorer::new(space, Box::new(Exhaustive::new()))
+        .registry(layout_registry.clone())
+        .parallel(threads)
+        .explore()
+        .expect("area sweep exploration");
+    outcome.all.iter().map(area_point_of).collect()
 }
 
 /// Aggregate CFA vs all-other-baselines min/max, Fig-16 style.
@@ -440,8 +403,9 @@ mod tests {
         let w = &table1(true)[0];
         let tile = vec![16, 16, 16];
         let cfg = MemConfig::default();
-        for alloc in AllocKind::ALL {
-            let (tiling, _d, a) = build_alloc(w, &tile, alloc, 3).unwrap();
+        let reg = registry::global();
+        for name in reg.names() {
+            let (tiling, _d, a) = build_alloc_named(w, &tile, name, 3, &reg).unwrap();
             let mut sim = MemSim::new(cfg.clone());
             let (mut raw, mut useful, mut txns) = (0u64, 0u64, 0u64);
             for coords in tiling.tiles() {
@@ -464,16 +428,16 @@ mod tests {
                 useful += plan.read_useful + plan.write_useful;
                 txns += plan.transactions() as u64;
             }
-            let p = measure_bandwidth(w, &tile, alloc, &cfg, 3).unwrap();
-            assert_eq!(p.transactions, txns, "{}", alloc.name());
+            let p = measure_bandwidth_named(w, &tile, name, &cfg, 3, 1, &reg).unwrap();
+            assert_eq!(p.transactions, txns, "{name}");
             assert_eq!(p.raw_bytes, raw * cfg.elem_bytes);
             assert_eq!(p.useful_bytes, useful * cfg.elem_bytes);
             let secs = cfg.secs(sim.now().max(1));
             let raw_mb = raw as f64 * cfg.elem_bytes as f64 / 1e6 / secs;
-            assert_eq!(p.raw_mb_s.to_bits(), raw_mb.to_bits(), "{}", alloc.name());
+            assert_eq!(p.raw_mb_s.to_bits(), raw_mb.to_bits(), "{name}");
             // the within-point threaded path is bit-identical too
-            let batched = measure_bandwidth_batched(w, &tile, alloc, &cfg, 3, 4).unwrap();
-            assert_eq!(p, batched, "{}", alloc.name());
+            let batched = measure_bandwidth_named(w, &tile, name, &cfg, 3, 4, &reg).unwrap();
+            assert_eq!(p, batched, "{name}");
         }
     }
 
@@ -499,9 +463,10 @@ mod tests {
         // redundancy but lower raw; bbox has raw >> effective.
         let w = &table1(true)[0]; // jacobi2d5p
         let cfg = MemConfig::default();
+        let reg = registry::global();
         let mut by_alloc = std::collections::BTreeMap::new();
-        for alloc in AllocKind::ALL {
-            let p = measure_bandwidth(w, &[16, 16, 16], alloc, &cfg, 3).unwrap();
+        for name in reg.names() {
+            let p = measure_bandwidth_named(w, &[16, 16, 16], name, &cfg, 3, 1, &reg).unwrap();
             by_alloc.insert(p.alloc.clone(), p);
         }
         let cfa = &by_alloc[names::CFA];
@@ -524,12 +489,13 @@ mod tests {
     fn fig15_render_contains_all_allocs() {
         let w = &table1(true)[0];
         let cfg = MemConfig::default();
-        let pts: Vec<BandwidthPoint> = AllocKind::ALL
+        let reg = crate::layout::LayoutRegistry::with_builtins();
+        let pts: Vec<BandwidthPoint> = reg
+            .names()
             .iter()
-            .map(|&a| measure_bandwidth(w, &[16, 16, 16], a, &cfg, 2).unwrap())
+            .map(|&a| measure_bandwidth_named(w, &[16, 16, 16], a, &cfg, 2, 1, &reg).unwrap())
             .collect();
         let s = render_fig15(&pts, "jacobi2d5p", &cfg);
-        let reg = crate::layout::LayoutRegistry::with_builtins();
         for a in reg.names() {
             assert!(s.contains(a), "{s}");
         }
@@ -539,7 +505,9 @@ mod tests {
     fn fig15_json_round_trips() {
         let w = &table1(true)[0];
         let cfg = MemConfig::default();
-        let pts = vec![measure_bandwidth(w, &[16, 16, 16], AllocKind::Cfa, &cfg, 2).unwrap()];
+        let reg = registry::global();
+        let pts =
+            vec![measure_bandwidth_named(w, &[16, 16, 16], names::CFA, &cfg, 2, 1, &reg).unwrap()];
         let j = fig15_json(&pts, &cfg);
         let text = j.to_string_pretty();
         let back = crate::util::json::parse(&text).unwrap();

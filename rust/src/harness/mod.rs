@@ -6,7 +6,6 @@ pub mod workloads;
 
 pub use figures::{
     area_sweep, area_sweep_parallel, area_sweep_registry, fig15_sweep, fig15_sweep_parallel,
-    fig15_sweep_registry, measure_bandwidth, measure_bandwidth_batched, measure_bandwidth_named,
-    render_fig15,
+    fig15_sweep_registry, measure_bandwidth_named, render_fig15,
 };
 pub use workloads::{by_name, table1, Workload};

@@ -17,7 +17,9 @@
 //!   while keeping timing bit-identical to serial replay. The
 //!   [`experiment`] module is the front door: a typed spec compiles once
 //!   into a session (allocation + schedule + plan cache) and runs in any
-//!   mode, returning one unified report.
+//!   mode, returning one unified report. [`dse`] builds on it: a parallel,
+//!   resumable design-space explorer that autotunes tiling × layout ×
+//!   memory configuration for bandwidth and area (`cfa tune`).
 //! * **L2/L1 (build-time Python)** — JAX tile programs calling Pallas
 //!   stencil kernels, AOT-lowered to HLO text in `artifacts/`.
 //! * **runtime** — a PJRT CPU client (the `xla` crate) that loads those
@@ -30,6 +32,7 @@
 pub mod accel;
 pub mod area;
 pub mod coordinator;
+pub mod dse;
 pub mod experiment;
 pub mod harness;
 pub mod hlsgen;

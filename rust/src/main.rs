@@ -6,6 +6,7 @@
 //!   plan       show an allocation's layout + burst plan for a benchmark/tile
 //!   run        end-to-end run (layout + memsim + PJRT compute + verify)
 //!   bench      regenerate a figure sweep (fig15 | fig16 | fig17)
+//!   tune       design-space exploration (tiling x layout x memory), resumable
 //!   codegen    emit the HLS C the compiler pass produces (Fig 12/13)
 //!
 //! Every experiment-shaped subcommand goes through the `experiment`
@@ -14,6 +15,7 @@
 //! `--alloc` and enumerated by `--alloc all` / the bench sweeps.
 
 use cfa::coordinator::reference::StencilKind;
+use cfa::dse::{Exhaustive, Explorer, HillClimb, RandomSearch, Space, Strategy};
 use cfa::experiment::{ExperimentSpec, Mode, Session};
 use cfa::harness::{figures, workloads};
 use cfa::layout::cfa::Cfa;
@@ -34,6 +36,7 @@ fn main() {
         "plan" => cmd_plan(),
         "run" => cmd_run(),
         "bench" => cmd_bench(),
+        "tune" => cmd_tune(),
         "codegen" => cmd_codegen(),
         _ => {
             print_help();
@@ -56,6 +59,7 @@ fn print_help() {
          \x20 plan                 show layout + burst plan (--benchmark, --tile, --alloc)\n\
          \x20 run                  end-to-end verified run (--benchmark, --alloc, --parallel N, ...)\n\
          \x20 bench                figure sweeps (--figure fig15|fig16|fig17, --quick, --parallel N, --json PATH)\n\
+         \x20 tune                 design-space exploration (--space, --strategy, --budget, --parallel, --out, --resume)\n\
          \x20 codegen              emit HLS C (--benchmark, --tile)\n\n\
          layouts are named through the open registry (`cfa layouts`); every\n\
          --alloc option accepts a canonical name, an alias, or 'all'.\n"
@@ -328,6 +332,55 @@ fn cmd_bench() -> anyhow::Result<()> {
         }
         f => anyhow::bail!("unknown figure '{f}'"),
     }
+    Ok(())
+}
+
+fn cmd_tune() -> anyhow::Result<()> {
+    let cmd = Command::new("cfa tune", "design-space exploration")
+        .opt(
+            "space",
+            "builtin (tiny | fig15 | fig15-quick | fig17 | fig17-quick) or a JSON file",
+            Some("fig15-quick"),
+        )
+        .opt("strategy", "exhaustive | random | hill", Some("exhaustive"))
+        .opt("budget", "max new evaluations this run (0 = no cap)", Some("0"))
+        .opt("parallel", "worker threads across points", Some("1"))
+        .opt("seed", "seed for the random/hill strategies", Some("0"))
+        .opt("out", "JSONL results journal path", Some("tune.jsonl"))
+        .opt("resume", "journal to resume from (skips evaluated points)", None);
+    let a = cmd.parse(&env_args(1)).map_err(anyhow::Error::msg)?;
+    let space_arg = a.get_or("space", "fig15-quick");
+    let space = match Space::builtin(space_arg) {
+        Some(s) => s,
+        None => {
+            let text = std::fs::read_to_string(space_arg).map_err(|e| {
+                anyhow::anyhow!(
+                    "--space '{space_arg}' is neither a builtin space nor a readable file: {e}"
+                )
+            })?;
+            Space::parse(&text)?
+        }
+    };
+    let seed = a.get_usize("seed", 0).map_err(anyhow::Error::msg)? as u64;
+    let strategy: Box<dyn Strategy> = match a.get_or("strategy", "exhaustive") {
+        "exhaustive" => Box::new(Exhaustive::new()),
+        "random" => Box::new(RandomSearch::new(seed)),
+        "hill" | "hillclimb" => Box::new(HillClimb::new(seed)),
+        s => anyhow::bail!("unknown strategy '{s}' (exhaustive | random | hill)"),
+    };
+    let budget = a.get_usize("budget", 0).map_err(anyhow::Error::msg)?;
+    let parallel = a.get_usize("parallel", 1).map_err(anyhow::Error::msg)?;
+    let out = a.get_or("out", "tune.jsonl").to_string();
+    let mut explorer = Explorer::new(space, strategy).parallel(parallel).journal(&out);
+    if budget > 0 {
+        explorer = explorer.budget(budget);
+    }
+    if let Some(resume) = a.get("resume") {
+        explorer = explorer.resume(resume);
+    }
+    let outcome = explorer.explore()?;
+    print!("{}", outcome.summary());
+    println!("journal: {out}");
     Ok(())
 }
 

@@ -14,7 +14,7 @@
 //!   per port* is the natural balanced repartition the paper anticipates —
 //!   reads and writes of different facets then proceed concurrently.
 
-use crate::memsim::{MemConfig, MemSim, Txn};
+use crate::memsim::{MemConfig, MemSim, Timing, Txn};
 
 /// Transaction-to-port routing policy.
 #[derive(Clone, Debug)]
@@ -110,6 +110,13 @@ impl MultiPortSim {
     /// Per-channel busy report (balance diagnostics).
     pub fn channel_times(&self) -> Vec<u64> {
         self.channels.iter().map(|c| c.now()).collect()
+    }
+
+    /// Per-channel timing counters. The engine's accounting identities
+    /// (`row_hits + row_misses == axi_bursts`, …) hold on every port
+    /// independently — pinned by `tests/memsim_identities.rs`.
+    pub fn timings(&self) -> Vec<&Timing> {
+        self.channels.iter().map(|c| c.timing()).collect()
     }
 
     /// Load imbalance: max channel time / mean channel time (1.0 = ideal).

@@ -10,8 +10,8 @@
 //! feature**, which is off by default so the tier-1 build needs neither
 //! the crate nor `artifacts/`. Without the feature this module exposes an
 //! API-compatible stub whose [`Runtime::open`] fails with a clear message,
-//! so every driver (`coordinator::stencil`, `coordinator::sw`, `main.rs`,
-//! the examples) compiles unchanged on the default feature set. Enabling
+//! so every driver (`experiment::e2e`, `main.rs`, the examples) compiles
+//! unchanged on the default feature set. Enabling
 //! `pjrt` additionally requires adding the vendored `xla` dependency to
 //! `Cargo.toml` (see DESIGN.md §Runtime).
 

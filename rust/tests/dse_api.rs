@@ -1,0 +1,268 @@
+//! Acceptance tests for the `dse` design-space explorer:
+//!
+//! * `Exhaustive` over the Fig-15 space reproduces the figure sweep bit
+//!   for bit (the sweep itself is now a thin wrapper over this path);
+//! * parallel exploration yields the same journal and Pareto front as
+//!   serial, byte for byte;
+//! * a killed run resumes from its JSONL journal without re-evaluating
+//!   journaled points and finishes with an identical front — and resuming
+//!   with a full journal performs zero evaluations;
+//! * property tests (the `util::prop` substrate): the reported front is
+//!   actually non-dominated (and complete), and `Exhaustive` over tiny
+//!   random spaces finds exactly the brute-force best point.
+
+use std::path::{Path, PathBuf};
+
+use cfa::dse::{
+    dominates, journal, pareto_indices, Evaluation, Exhaustive, Explorer, HillClimb, MemVariant,
+    Outcome, Space, SpaceWorkload, Strategy, TileSet,
+};
+use cfa::harness::figures::{self, bandwidth_point_of, measure_bandwidth_named, BandwidthPoint};
+use cfa::harness::workloads::table1;
+use cfa::layout::registry::{self, names};
+use cfa::memsim::MemConfig;
+use cfa::poly::vec::IVec;
+use cfa::util::prop::{run as prop_run, Config};
+
+fn tmp(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(name);
+    std::fs::remove_file(&p).ok();
+    p
+}
+
+fn assert_same_evals(a: &[Evaluation], b: &[Evaluation], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: lengths differ");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.fingerprint(), y.fingerprint(), "{ctx}");
+        assert_eq!(
+            x.effective_mb_s().to_bits(),
+            y.effective_mb_s().to_bits(),
+            "{ctx}: {}",
+            x.fingerprint()
+        );
+        assert_eq!(x.report.timing, y.report.timing, "{ctx}");
+        assert_eq!(x.area, y.area, "{ctx}");
+    }
+}
+
+#[test]
+fn exhaustive_reproduces_fig15_sweep_bit_identically() {
+    let wl = table1(true);
+    let reg = registry::global();
+    let mem = MemConfig::default();
+    let outcome = Explorer::new(Space::fig15(&wl[..2], &mem, 2), Box::new(Exhaustive::new()))
+        .registry(reg.clone())
+        .explore()
+        .unwrap();
+    assert_eq!(outcome.evaluated, outcome.points_total);
+    // independent reference: the serial measurement loop in sweep order
+    let mut manual = Vec::new();
+    for w in &wl[..2] {
+        for tile in &w.tile_sizes {
+            for name in reg.names() {
+                manual.push(measure_bandwidth_named(w, tile, name, &mem, 2, 1, &reg).unwrap());
+            }
+        }
+    }
+    let dse_pts: Vec<BandwidthPoint> = outcome.all.iter().map(bandwidth_point_of).collect();
+    assert_eq!(dse_pts.len(), manual.len());
+    for (d, m) in dse_pts.iter().zip(&manual) {
+        assert_eq!(d, m);
+        assert_eq!(d.raw_mb_s.to_bits(), m.raw_mb_s.to_bits(), "{d:?}");
+        assert_eq!(d.effective_mb_s.to_bits(), m.effective_mb_s.to_bits(), "{d:?}");
+    }
+    // and the public figure sweep is exactly this exploration
+    let wrapper = figures::fig15_sweep_registry(&reg, &wl[..2], &mem, 2, 2);
+    assert_eq!(wrapper, dse_pts);
+}
+
+fn explore_with(strategy: Box<dyn Strategy>, threads: usize, journal_path: &Path) -> Outcome {
+    Explorer::new(Space::builtin("tiny").unwrap(), strategy)
+        .parallel(threads)
+        .journal(journal_path)
+        .explore()
+        .unwrap()
+}
+
+#[test]
+fn parallel_exploration_matches_serial_journal_and_front() {
+    let p1 = tmp("cfa_dse_serial.jsonl");
+    let p4 = tmp("cfa_dse_parallel.jsonl");
+    // exhaustive: proposal order is static
+    let serial = explore_with(Box::new(Exhaustive::new()), 1, &p1);
+    let par = explore_with(Box::new(Exhaustive::new()), 4, &p4);
+    assert_eq!(
+        std::fs::read_to_string(&p1).unwrap(),
+        std::fs::read_to_string(&p4).unwrap(),
+        "journals differ between serial and parallel"
+    );
+    assert_same_evals(&serial.all, &par.all, "exhaustive all");
+    assert_same_evals(&serial.front, &par.front, "exhaustive front");
+    // hill climb: proposals depend on prior *results*, never on worker
+    // interleaving, so the journal sequence is still identical
+    let h1 = explore_with(Box::new(HillClimb::new(9)), 1, &p1);
+    let h4 = explore_with(Box::new(HillClimb::new(9)), 4, &p4);
+    assert_eq!(
+        std::fs::read_to_string(&p1).unwrap(),
+        std::fs::read_to_string(&p4).unwrap(),
+        "hill-climb journals differ between serial and parallel"
+    );
+    assert_same_evals(&h1.all, &h4.all, "hill all");
+    assert_same_evals(&h1.front, &h4.front, "hill front");
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p4).ok();
+}
+
+#[test]
+fn killed_run_resumes_without_reevaluating_and_front_is_identical() {
+    let path = tmp("cfa_dse_resume.jsonl");
+    let space = || Space::builtin("tiny").unwrap();
+    let reference = Explorer::new(space(), Box::new(Exhaustive::new()))
+        .explore()
+        .unwrap();
+    let total = reference.points_total;
+    assert!(total > 3, "tiny space too tiny for the scenario");
+
+    // a "killed" run: budget-limited, journaled
+    let first = Explorer::new(space(), Box::new(Exhaustive::new()))
+        .budget(3)
+        .journal(&path)
+        .explore()
+        .unwrap();
+    assert_eq!(first.evaluated, 3);
+
+    // resume: completes the space without re-evaluating journaled points
+    let resumed = Explorer::new(space(), Box::new(Exhaustive::new()))
+        .resume(&path)
+        .journal(&path)
+        .explore()
+        .unwrap();
+    assert_eq!(resumed.resumed, 3);
+    assert_eq!(resumed.evaluated, total - 3);
+    assert_same_evals(&resumed.all, &reference.all, "resumed all");
+    assert_same_evals(&resumed.front, &reference.front, "resumed front");
+
+    // resume with the full journal: zero evaluations, identical front
+    let nothing = Explorer::new(space(), Box::new(Exhaustive::new()))
+        .resume(&path)
+        .journal(&path)
+        .explore()
+        .unwrap();
+    assert_eq!(nothing.evaluated, 0);
+    assert_eq!(nothing.resumed, total);
+    assert_same_evals(&nothing.front, &reference.front, "full-journal front");
+
+    // the journal holds each point exactly once (fingerprint dedup)
+    let recorded = journal::read(&path).unwrap();
+    assert_eq!(recorded.len(), total);
+    let mut fps: Vec<String> = recorded.iter().map(Evaluation::fingerprint).collect();
+    fps.sort();
+    fps.dedup();
+    assert_eq!(fps.len(), total);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn prop_pareto_front_is_non_dominated_and_complete() {
+    prop_run("pareto front non-domination", Config::default(), |g| {
+        let n = g.usize(0, 40);
+        let items: Vec<(f64, u64)> = (0..n)
+            .map(|_| (g.i64(0, 100) as f64 * 0.5, g.i64(0, 50) as u64))
+            .collect();
+        let front = pareto_indices(&items, |&p| p);
+        for &i in &front {
+            assert!(
+                !items
+                    .iter()
+                    .enumerate()
+                    .any(|(j, &b)| j != i && dominates(b, items[i])),
+                "front member {i} is dominated: {items:?}"
+            );
+        }
+        for i in 0..items.len() {
+            if !front.contains(&i) {
+                assert!(
+                    items
+                        .iter()
+                        .enumerate()
+                        .any(|(j, &b)| j != i && dominates(b, items[i])),
+                    "non-front member {i} is undominated: {items:?}"
+                );
+            }
+        }
+        // the bandwidth optimum always survives on the front
+        if !items.is_empty() {
+            let best = items.iter().map(|p| p.0).fold(f64::NEG_INFINITY, f64::max);
+            assert!(front.iter().any(|&i| items[i].0 == best));
+        }
+    });
+}
+
+#[test]
+fn prop_exhaustive_finds_bruteforce_best_on_tiny_spaces() {
+    prop_run("exhaustive == brute-force best", Config::small(4), |g| {
+        let wl = table1(true);
+        let w = g.choose(&wl);
+        let reg = registry::global();
+        let tiles: Vec<IVec> = (0..g.usize(1, 2))
+            .map(|_| g.choose(&w.tile_sizes).clone())
+            .collect();
+        let mut layouts: Vec<&str> = reg.names().into_iter().filter(|_| g.bool()).collect();
+        if layouts.is_empty() {
+            layouts.push(names::CFA);
+        }
+        let space = Space {
+            workloads: vec![SpaceWorkload {
+                name: w.name.to_string(),
+                deps: w.deps.clone(),
+                tiles: TileSet::List(tiles.clone()),
+            }],
+            tiles_per_dim: 2,
+            layouts: layouts.iter().map(|s| s.to_string()).collect(),
+            mems: vec![MemVariant::paper_default()],
+            pe: vec![64],
+        };
+        let outcome = Explorer::new(space, Box::new(Exhaustive::new()))
+            .explore()
+            .unwrap();
+        // brute-force recomputation, independent of the explorer
+        let mut uniq: Vec<IVec> = Vec::new();
+        for t in &tiles {
+            if !uniq.contains(t) {
+                uniq.push(t.clone());
+            }
+        }
+        let mem = MemConfig::default();
+        let mut best: Option<BandwidthPoint> = None;
+        for tile in &uniq {
+            for layout in &layouts {
+                let p = measure_bandwidth_named(w, tile, layout, &mem, 2, 1, &reg).unwrap();
+                if best
+                    .as_ref()
+                    .map(|b| p.effective_mb_s > b.effective_mb_s)
+                    .unwrap_or(true)
+                {
+                    best = Some(p);
+                }
+            }
+        }
+        let best = best.expect("non-empty space");
+        assert_eq!(outcome.evaluated, uniq.len() * layouts.len());
+        let explored_best = outcome
+            .all
+            .iter()
+            .map(|e| e.effective_mb_s())
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(
+            explored_best.to_bits(),
+            best.effective_mb_s.to_bits(),
+            "explorer best {explored_best} vs brute force {}",
+            best.effective_mb_s
+        );
+        // and that optimum sits on the reported front
+        assert!(outcome
+            .front
+            .iter()
+            .any(|e| e.effective_mb_s().to_bits() == best.effective_mb_s.to_bits()));
+    });
+}

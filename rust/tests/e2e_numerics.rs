@@ -10,9 +10,8 @@
 #![cfg(feature = "pjrt")]
 
 use cfa::coordinator::reference::StencilKind;
-use cfa::coordinator::stencil::{run_stencil, StencilRun};
-use cfa::coordinator::sw::{run_sw, SwRun};
-use cfa::coordinator::AllocKind;
+use cfa::experiment::{ExperimentSpec, Mode, Report, Session};
+use cfa::layout::registry;
 use cfa::memsim::MemConfig;
 use cfa::runtime::Runtime;
 
@@ -33,29 +32,42 @@ fn f32_mem() -> MemConfig {
     }
 }
 
+/// Compile a stencil session against an artifact's own tile shape.
+fn stencil_session(
+    rt: &Runtime,
+    artifact: &str,
+    kind: StencilKind,
+    n: i64,
+    steps: i64,
+    layout: &str,
+    pe: u64,
+) -> anyhow::Result<Session> {
+    let tile = rt.load(artifact)?.info.tile.clone();
+    ExperimentSpec::builder()
+        .stencil(artifact, kind, tile, n, n, steps)
+        .layout(layout)
+        .pe_ops_per_cycle(pe)
+        .mem(f32_mem())
+        .compile()
+}
+
+fn run_data(session: &Session, rt: &Runtime, seed: u64) -> Report {
+    session
+        .run_with_runtime(rt, Mode::Data { seed })
+        .expect("run")
+}
+
 #[test]
 fn jacobi_heat_all_allocations_are_exact() {
     let Some(rt) = runtime() else { return };
     // jacobi2d5p_t4x16x16: r=1; steps=8, n=m=24 -> skewed (8, 32, 32)
-    for alloc in AllocKind::ALL {
-        let cfg = StencilRun {
-            artifact: "jacobi2d5p_t4x16x16".into(),
-            kind: StencilKind::Jacobi5p,
-            n: 24,
-            m: 24,
-            steps: 8,
-            alloc,
-            pe_ops_per_cycle: 64,
-            seed: 11,
-            parallel: 1,
-        };
-        let report = run_stencil(&rt, &cfg, &f32_mem()).expect("run");
-        assert!(
-            report.max_abs_err < 1e-4,
-            "{}: numeric mismatch {:.3e}",
-            alloc.name(),
-            report.max_abs_err
-        );
+    for name in registry::global().names() {
+        let session =
+            stencil_session(&rt, "jacobi2d5p_t4x16x16", StencilKind::Jacobi5p, 24, 8, name, 64)
+                .expect("compile");
+        let report = run_data(&session, &rt, 11);
+        let err = report.max_abs_err.unwrap_or(f64::INFINITY);
+        assert!(err < 1e-4, "{name}: numeric mismatch {err:.3e}");
         assert!(report.raw_bytes >= report.useful_bytes);
         assert!(report.makespan_cycles > 0);
     }
@@ -65,64 +77,39 @@ fn jacobi_heat_all_allocations_are_exact() {
 fn gaussian_blur_cfa_is_exact() {
     let Some(rt) = runtime() else { return };
     // gaussian_t4x16x16: r=2; steps=8, n=m=16 -> skewed (8, 32, 32)
-    let cfg = StencilRun {
-        artifact: "gaussian_t4x16x16".into(),
-        kind: StencilKind::Gaussian,
-        n: 16,
-        m: 16,
-        steps: 8,
-        alloc: AllocKind::Cfa,
-        pe_ops_per_cycle: 64,
-        seed: 3,
-        parallel: 1,
-    };
-    let report = run_stencil(&rt, &cfg, &f32_mem()).expect("run");
-    assert!(
-        report.max_abs_err < 1e-4,
-        "gaussian mismatch {:.3e}",
-        report.max_abs_err
-    );
+    let session = stencil_session(&rt, "gaussian_t4x16x16", StencilKind::Gaussian, 16, 8, "cfa", 64)
+        .expect("compile");
+    let report = run_data(&session, &rt, 3);
+    let err = report.max_abs_err.unwrap_or(f64::INFINITY);
+    assert!(err < 1e-4, "gaussian mismatch {err:.3e}");
 }
 
 #[test]
 fn jacobi9p_cfa_is_exact() {
     let Some(rt) = runtime() else { return };
-    let cfg = StencilRun {
-        artifact: "jacobi2d9p_t4x16x16".into(),
-        kind: StencilKind::Jacobi9p,
-        n: 24,
-        m: 24,
-        steps: 8,
-        alloc: AllocKind::Cfa,
-        pe_ops_per_cycle: 64,
-        seed: 5,
-        parallel: 1,
-    };
-    let report = run_stencil(&rt, &cfg, &f32_mem()).expect("run");
-    assert!(report.max_abs_err < 1e-4, "{:.3e}", report.max_abs_err);
+    let session =
+        stencil_session(&rt, "jacobi2d9p_t4x16x16", StencilKind::Jacobi9p, 24, 8, "cfa", 64)
+            .expect("compile");
+    let report = run_data(&session, &rt, 5);
+    let err = report.max_abs_err.unwrap_or(f64::INFINITY);
+    assert!(err < 1e-4, "{err:.3e}");
 }
 
 #[test]
 fn smith_waterman_all_allocations_are_exact() {
     let Some(rt) = runtime() else { return };
-    for alloc in AllocKind::ALL {
-        let cfg = SwRun {
-            artifact: "sw3_t16x16x16".into(),
-            ni: 32,
-            nj: 32,
-            nk: 32,
-            alloc,
-            pe_ops_per_cycle: 64,
-            seed: 9,
-            parallel: 1,
-        };
-        let report = run_sw(&rt, &cfg, &f32_mem()).expect("run");
-        assert!(
-            report.max_abs_err < 1e-4,
-            "{}: sw mismatch {:.3e}",
-            alloc.name(),
-            report.max_abs_err
-        );
+    let tile = rt.load("sw3_t16x16x16").expect("load").info.tile.clone();
+    for name in registry::global().names() {
+        let session = ExperimentSpec::builder()
+            .sw3("sw3_t16x16x16", tile.clone(), 32, 32, 32)
+            .layout(name)
+            .pe_ops_per_cycle(64)
+            .mem(f32_mem())
+            .compile()
+            .expect("compile");
+        let report = run_data(&session, &rt, 9);
+        let err = report.max_abs_err.unwrap_or(f64::INFINITY);
+        assert!(err < 1e-4, "{name}: sw mismatch {err:.3e}");
     }
 }
 
@@ -131,26 +118,25 @@ fn cfa_beats_baselines_on_effective_bandwidth() {
     // The paper's headline: CFA's effective bandwidth tops every baseline
     // on the same workload.
     let Some(rt) = runtime() else { return };
-    let mem = f32_mem();
     let mut eff = std::collections::BTreeMap::new();
-    for alloc in AllocKind::ALL {
-        let cfg = StencilRun {
-            artifact: "jacobi2d5p_t4x16x16".into(),
-            kind: StencilKind::Jacobi5p,
-            n: 24,
-            m: 24,
-            steps: 8,
-            alloc,
-            pe_ops_per_cycle: 1_000_000, // memory-bound rig (paper Fig 14)
-            seed: 1,
-            parallel: 1,
-        };
-        let report = run_stencil(&rt, &cfg, &mem).expect("run");
-        eff.insert(alloc.name(), report.effective_mb_s(&mem));
+    for name in registry::global().names() {
+        // pe_ops_per_cycle high enough that the run is memory-bound (Fig 14)
+        let session = stencil_session(
+            &rt,
+            "jacobi2d5p_t4x16x16",
+            StencilKind::Jacobi5p,
+            24,
+            8,
+            name,
+            1_000_000,
+        )
+        .expect("compile");
+        let report = run_data(&session, &rt, 1);
+        eff.insert(name.to_string(), report.effective_mb_s);
     }
     let cfa = eff[cfa::layout::registry::names::CFA];
     for (name, &e) in &eff {
-        if *name != cfa::layout::registry::names::CFA {
+        if name != cfa::layout::registry::names::CFA {
             assert!(
                 cfa >= e * 0.99,
                 "cfa {cfa:.1} MB/s should beat {name} {e:.1} MB/s ({eff:?})"
@@ -162,16 +148,7 @@ fn cfa_beats_baselines_on_effective_bandwidth() {
 #[test]
 fn tile_size_mismatch_is_reported() {
     let Some(rt) = runtime() else { return };
-    let cfg = StencilRun {
-        artifact: "jacobi2d5p_t4x16x16".into(),
-        kind: StencilKind::Jacobi5p,
-        n: 23, // skewed space not divisible
-        m: 24,
-        steps: 8,
-        alloc: AllocKind::Cfa,
-        pe_ops_per_cycle: 64,
-        seed: 0,
-        parallel: 1,
-    };
-    assert!(run_stencil(&rt, &cfg, &f32_mem()).is_err());
+    // skewed space not divisible by the artifact tile: rejected at compile
+    let bad = stencil_session(&rt, "jacobi2d5p_t4x16x16", StencilKind::Jacobi5p, 23, 8, "cfa", 64);
+    assert!(bad.is_err());
 }

@@ -4,7 +4,7 @@
 //! tests pin it to the legacy paths it replaced: the batched coordinator
 //! (timing counters, cycle totals **and** output buffers, across every
 //! registered layout and random Table-I tilings), the figure-sweep
-//! measurement shims, and the open-registry contract (a custom layout
+//! measurement, and the open-registry contract (a custom layout
 //! registered by name is reachable from a spec with zero edits to
 //! `coordinator/` or `harness/`).
 
@@ -116,16 +116,10 @@ fn session_timing_and_sweep_match_batch_coordinator_all_layouts() {
                 &format!("{name}/sweep/t{threads}"),
             );
 
-            // the figure-sweep shim returns exactly the session's numbers
-            let p = figures::measure_bandwidth_batched(
-                w,
-                &tiling.tile,
-                AllocKind::parse(name).unwrap(),
-                &mem,
-                3,
-                threads,
-            )
-            .unwrap();
+            // the figure-sweep measurement returns exactly the session's
+            // numbers
+            let p = figures::measure_bandwidth_named(w, &tiling.tile, name, &mem, 3, threads, &reg)
+                .unwrap();
             assert_eq!(p.alloc, name);
             assert_eq!(p.transactions, sweep.transactions, "{name}");
             assert_eq!(p.raw_bytes, sweep.raw_bytes);
@@ -351,12 +345,11 @@ fn e2e_data_mode_reports_disabled_runtime_but_timing_works_offline() {
 
 #[cfg(feature = "pjrt")]
 mod e2e {
-    //! With the runtime available, the legacy driver shims must agree with
-    //! direct session runs (they share the ported driver, so drift here
-    //! means the shim translation broke).
+    //! With the runtime available, the end-to-end data path must be fully
+    //! deterministic: two sessions compiled from the same spec replay to
+    //! the same counters and the same verification error, bit for bit.
     use super::*;
     use cfa::coordinator::reference::StencilKind;
-    use cfa::coordinator::stencil::{run_stencil, StencilRun};
     use cfa::runtime::Runtime;
 
     fn runtime() -> Option<Runtime> {
@@ -364,58 +357,51 @@ mod e2e {
         if dir.join("manifest.json").exists() {
             Some(Runtime::open(dir).expect("open artifacts"))
         } else {
-            eprintln!("artifacts/ missing - skipping e2e shim test");
+            eprintln!("artifacts/ missing - skipping e2e determinism test");
             None
         }
     }
 
     #[test]
-    fn stencil_shim_equals_direct_session_run() {
+    fn stencil_session_runs_are_deterministic() {
         let Some(rt) = runtime() else { return };
         let mem = MemConfig {
             elem_bytes: 4,
             ..MemConfig::default()
         };
         for kind in AllocKind::ALL {
-            let cfg = StencilRun {
-                artifact: "jacobi2d5p_t4x16x16".into(),
-                kind: StencilKind::Jacobi5p,
-                n: 24,
-                m: 24,
-                steps: 8,
-                alloc: kind,
-                pe_ops_per_cycle: 64,
-                seed: 11,
-                parallel: 1,
+            let compile = || {
+                ExperimentSpec::builder()
+                    .stencil(
+                        "jacobi2d5p_t4x16x16",
+                        StencilKind::Jacobi5p,
+                        vec![4, 16, 16],
+                        24,
+                        24,
+                        8,
+                    )
+                    .layout(kind.name())
+                    .mem(mem.clone())
+                    .compile()
+                    .expect("compile")
             };
-            let legacy = run_stencil(&rt, &cfg, &mem).expect("shim run");
-            let session = ExperimentSpec::builder()
-                .stencil(
-                    cfg.artifact.clone(),
-                    cfg.kind,
-                    vec![4, 16, 16],
-                    cfg.n,
-                    cfg.m,
-                    cfg.steps,
-                )
-                .layout(kind.name())
-                .mem(mem.clone())
-                .compile()
-                .expect("compile");
-            let rep = session
-                .run_with_runtime(&rt, Mode::Data { seed: cfg.seed })
+            let a = compile()
+                .run_with_runtime(&rt, Mode::Data { seed: 11 })
                 .expect("session run");
-            assert_eq!(rep.benchmark, legacy.benchmark, "{}", kind.name());
-            assert_eq!(rep.layout, legacy.alloc);
-            assert_eq!(rep.tiles, legacy.tiles);
-            assert_eq!(rep.makespan_cycles, legacy.makespan_cycles);
-            assert_eq!(rep.mem_busy_cycles, legacy.mem_busy_cycles);
-            assert_eq!(rep.raw_bytes, legacy.raw_bytes);
-            assert_eq!(rep.useful_bytes, legacy.useful_bytes);
-            assert_eq!(rep.transactions, legacy.transactions);
+            let b = compile()
+                .run_with_runtime(&rt, Mode::Data { seed: 11 })
+                .expect("session run");
+            assert_eq!(a.benchmark, b.benchmark, "{}", kind.name());
+            assert_eq!(a.layout, b.layout);
+            assert_eq!(a.tiles, b.tiles);
+            assert_eq!(a.makespan_cycles, b.makespan_cycles);
+            assert_eq!(a.mem_busy_cycles, b.mem_busy_cycles);
+            assert_eq!(a.raw_bytes, b.raw_bytes);
+            assert_eq!(a.useful_bytes, b.useful_bytes);
+            assert_eq!(a.transactions, b.transactions);
             assert_eq!(
-                rep.max_abs_err.unwrap().to_bits(),
-                legacy.max_abs_err.to_bits()
+                a.max_abs_err.unwrap().to_bits(),
+                b.max_abs_err.unwrap().to_bits()
             );
         }
     }

@@ -3,24 +3,36 @@
 //! the redundancy sits — for every benchmark in Table I.
 
 use cfa::area::{AreaModel, Device};
-use cfa::coordinator::AllocKind;
-use cfa::harness::figures::{area_sweep, fig16_aggregate, measure_bandwidth};
+use cfa::harness::figures::{area_sweep, fig16_aggregate, measure_bandwidth_named};
 use cfa::harness::workloads::table1;
+use cfa::layout::registry::{self, names};
+use cfa::layout::LayoutRegistry;
 use cfa::memsim::MemConfig;
+
+fn measure(
+    w: &cfa::harness::workloads::Workload,
+    tile: &[i64],
+    layout: &str,
+    mem: &MemConfig,
+    reg: &LayoutRegistry,
+) -> cfa::harness::figures::BandwidthPoint {
+    measure_bandwidth_named(w, tile, layout, mem, 3, 1, reg).unwrap()
+}
 
 #[test]
 fn fig15_shape_cfa_wins_effective_bandwidth_everywhere() {
     let mem = MemConfig::default();
+    let reg = registry::global();
     for w in table1(true) {
         for tile in &w.tile_sizes {
             let mut eff = std::collections::BTreeMap::new();
-            for alloc in AllocKind::ALL {
-                let p = measure_bandwidth(&w, tile, alloc, &mem, 3).unwrap();
+            for name in reg.names() {
+                let p = measure(&w, tile, name, &mem, &reg);
                 assert!(p.raw_mb_s <= mem.peak_mb_s() * 1.001, "{} raw over roofline", w.name);
                 assert!(p.effective_mb_s <= p.raw_mb_s * 1.001);
                 eff.insert(p.alloc.clone(), p);
             }
-            let cfa = &eff[cfa::layout::registry::names::CFA];
+            let cfa = &eff[names::CFA];
             for (name, p) in &eff {
                 // Strict dominance once every tile dimension reaches 32;
                 // below that (notably gaussian's 4-deep time tiles, where
@@ -45,9 +57,10 @@ fn fig15_shape_cfa_near_roofline_at_32cubed() {
     // the paper: "CFA is able to bring the effective bandwidth close to
     // 100% of the bus bandwidth".
     let mem = MemConfig::default();
+    let reg = registry::global();
     for w in table1(true) {
         let tile = w.tile_sizes.iter().find(|t| t[1] >= 32).unwrap();
-        let p = measure_bandwidth(&w, tile, AllocKind::Cfa, &mem, 3).unwrap();
+        let p = measure(&w, tile, names::CFA, &mem, &reg);
         assert!(
             p.effective_mb_s >= 0.85 * mem.peak_mb_s(),
             "{}: CFA effective {:.1} MB/s below 85% of roofline",
@@ -66,13 +79,14 @@ fn fig15_shape_cfa_near_roofline_at_32cubed() {
 #[test]
 fn fig15_shape_baseline_signatures() {
     let mem = MemConfig::default();
+    let reg = registry::global();
     for w in table1(true) {
         let tile = &w.tile_sizes[0];
-        let orig = measure_bandwidth(&w, tile, AllocKind::Original, &mem, 3).unwrap();
+        let orig = measure(&w, tile, names::ORIGINAL, &mem, &reg);
         // original: zero redundancy by construction
         assert_eq!(orig.raw_bytes, orig.useful_bytes, "{}", w.name);
         // bbox: long bursts, heavy redundancy (raw >> effective)
-        let bbox = measure_bandwidth(&w, tile, AllocKind::BoundingBox, &mem, 3).unwrap();
+        let bbox = measure(&w, tile, names::BBOX, &mem, &reg);
         assert!(
             bbox.raw_mb_s > 1.5 * bbox.effective_mb_s,
             "{}: bbox raw {:.1} vs eff {:.1} — not redundant enough",
@@ -81,7 +95,7 @@ fn fig15_shape_baseline_signatures() {
             bbox.effective_mb_s
         );
         // CFA issues far fewer transactions than the original layout
-        let cfa = measure_bandwidth(&w, tile, AllocKind::Cfa, &mem, 3).unwrap();
+        let cfa = measure(&w, tile, names::CFA, &mem, &reg);
         assert!(
             cfa.transactions * 5 < orig.transactions,
             "{}: cfa txns {} vs original {}",

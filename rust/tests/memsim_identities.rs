@@ -9,7 +9,7 @@
 //! * `axi_bursts` equals the segmentation count (≤256-beat bursts, no
 //!   4 KiB boundary crossing).
 
-use cfa::memsim::{Dir, MemConfig, MemSim, Txn};
+use cfa::memsim::{cfa_port_map, Dir, MemConfig, MemSim, MultiPortSim, PortMap, Txn};
 use cfa::util::prop::{run as prop_run, Config, Gen};
 
 /// Re-derive the burst segmentation of one transaction exactly as
@@ -128,6 +128,114 @@ fn identities_survive_reset_and_reuse() {
     sim.run(&txns);
     // a reset simulator replays the same stream to the same counters
     assert_eq!(sim.timing(), &first);
+}
+
+#[test]
+fn prop_multiport_identities_hold_on_every_port() {
+    // the engine identities are per-channel properties: each port of a
+    // multi-port interface is an independent MemSim, so
+    // `row_hits + row_misses == axi_bursts` must hold on every port, for
+    // both routing policies, and the data bus of each port moves exactly
+    // the beats routed to it
+    prop_run("multiport per-port identities", Config::small(40), |g| {
+        let cfg = MemConfig::default();
+        let txns = random_txns(g, g.usize(1, 24));
+        let ports = g.usize(2, 4);
+        let maps = [
+            PortMap::Interleaved {
+                stripe_bytes: 1 << g.usize(8, 12),
+            },
+            PortMap::ByRange {
+                bounds: (0..ports as u64).map(|p| p * (1 << 18)).collect(),
+            },
+        ];
+        for map in maps {
+            let mut mp = MultiPortSim::new(cfg.clone(), ports, map);
+            for t in &txns {
+                mp.submit(t);
+            }
+            let timings = mp.timings();
+            assert_eq!(timings.len(), ports);
+            let mut beats_total = 0u64;
+            for (p, t) in timings.iter().enumerate() {
+                assert_eq!(t.row_hits + t.row_misses, t.axi_bursts, "port {p}: {t:?}");
+                assert!(t.cycles >= t.data_cycles, "port {p}: {t:?}");
+                beats_total += t.data_cycles;
+            }
+            // with elem_bytes == bus_bytes each element is one beat, and
+            // routing splits transactions without changing their volume
+            let elems: u64 = txns.iter().map(|t| t.len).sum();
+            assert_eq!(beats_total, elems);
+            // the aggregate clock is the slowest channel
+            assert_eq!(mp.now(), mp.channel_times().into_iter().max().unwrap());
+        }
+    });
+}
+
+#[test]
+fn prop_single_port_multiport_equals_serial_memsim() {
+    // ports=1 must degenerate to the plain engine bit for bit: same
+    // completion time, same counters — for any routing policy
+    prop_run("multiport(1) == MemSim", Config::small(40), |g| {
+        let cfg = MemConfig::default();
+        let txns = random_txns(g, g.usize(1, 24));
+        let mut serial = MemSim::new(cfg.clone());
+        serial.run(&txns);
+        let maps = [
+            PortMap::Interleaved {
+                stripe_bytes: 1 << g.usize(6, 12),
+            },
+            PortMap::ByRange { bounds: vec![0] },
+        ];
+        for map in maps {
+            let mut mp = MultiPortSim::new(cfg.clone(), 1, map);
+            for t in &txns {
+                mp.submit(t);
+            }
+            assert_eq!(mp.now(), serial.now());
+            assert_eq!(mp.timings()[0], serial.timing());
+        }
+    });
+}
+
+#[test]
+fn cfa_facet_port_map_keeps_identities_per_port() {
+    use cfa::layout::cfa::Cfa;
+    use cfa::layout::Allocation;
+    use cfa::poly::deps::DepPattern;
+    use cfa::poly::tiling::Tiling;
+    // one facet stream per port: every port still satisfies the engine
+    // identities while serving only its facet's address range
+    let tiling = Tiling::new(vec![24, 24, 24], vec![8, 8, 8]);
+    let deps =
+        DepPattern::new(vec![vec![-1, 0, 0], vec![0, -1, 0], vec![0, 0, -2]]).unwrap();
+    let cfa = Cfa::new(tiling.clone(), deps).unwrap();
+    let ports = cfa.facet_arrays().len();
+    let map = cfa_port_map(&cfa, ports);
+    let mut mp = MultiPortSim::new(MemConfig::default(), ports, map);
+    for coords in tiling.tiles() {
+        let plan = cfa.plan(&coords);
+        for r in &plan.read_runs {
+            mp.submit(&Txn {
+                dir: Dir::Read,
+                addr: r.addr,
+                len: r.len,
+            });
+        }
+        for r in &plan.write_runs {
+            mp.submit(&Txn {
+                dir: Dir::Write,
+                addr: r.addr,
+                len: r.len,
+            });
+        }
+    }
+    let timings = mp.timings();
+    assert_eq!(timings.len(), ports);
+    for (p, t) in timings.iter().enumerate() {
+        assert!(t.axi_bursts > 0, "port {p} never used");
+        assert_eq!(t.row_hits + t.row_misses, t.axi_bursts, "port {p}: {t:?}");
+    }
 }
 
 #[test]
