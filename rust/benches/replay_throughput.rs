@@ -1,0 +1,291 @@
+//! Trace-replay throughput: the memory simulator's scalar `Txn`-list path
+//! vs compiled-trace replay (scalar and coalesced-streaming), and the
+//! `cfa tune` evaluation loop cold vs warm trace cache.
+//!
+//! Run: `cargo bench --bench replay_throughput [-- --smoke] [-- --out PATH]`
+//!
+//! Every run first asserts the fast paths **bit-identical** to the scalar
+//! engine (full `ReplayState` snapshots and session reports), then records
+//! machine-readable results to `BENCH_replay.json` at the repo root
+//! (override with `--out`). `--smoke` runs check the rig, not the numbers:
+//! without an explicit `--out` they write `BENCH_replay.smoke.json`, so a
+//! CI smoke pass can never clobber real recorded results.
+
+use std::sync::Arc;
+
+use cfa::dse::{Evaluator, MemVariant, Space};
+use cfa::experiment::{ExperimentSpec, Mode, ScheduleKind, Session};
+use cfa::layout::registry;
+use cfa::memsim::{Dir, MemConfig, MemSim, TraceCache, Txn, TxnTrace};
+use cfa::util::json::Json;
+use cfa::util::stats::{black_box, Bencher, Measurement};
+
+fn measurement_json(m: &Measurement) -> Json {
+    let mut fields = vec![
+        ("name", Json::str(m.name.clone())),
+        ("median_s", Json::num(m.summary.median)),
+        ("p05_s", Json::num(m.summary.p05)),
+        ("p95_s", Json::num(m.summary.p95)),
+        ("samples", Json::num(m.summary.n as f64)),
+    ];
+    if let Some(e) = m.elems_per_sec() {
+        fields.push(("elems_per_s", Json::num(e)));
+    }
+    if let Some(r) = m.runs_per_sec() {
+        fields.push(("bursts_per_s", Json::num(r)));
+    }
+    Json::obj(fields)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| {
+            if smoke {
+                concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_replay.smoke.json").to_string()
+            } else {
+                concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_replay.json").to_string()
+            }
+        });
+    let b = if smoke { Bencher::quick() } else { Bencher::default() };
+    let mut results: Vec<Measurement> = Vec::new();
+    let cfg = MemConfig::default();
+
+    // ---- geometry set: the dse evaluator's shape (flat schedule) over
+    // every registered layout
+    let tile = vec![32i64, 32, 32];
+    let tiles_per_dim = if smoke { 3 } else { 4 };
+    let reg = registry::global();
+    let sessions: Vec<Session> = reg
+        .names()
+        .iter()
+        .map(|&name| {
+            ExperimentSpec::builder()
+                .named("jacobi2d5p", tile.clone(), tiles_per_dim)
+                .layout(name)
+                .schedule(ScheduleKind::Flat)
+                .mem(cfg.clone())
+                .registry(reg.clone())
+                .compile()
+                .expect("compile session")
+        })
+        .collect();
+
+    // identity gate: trace replay (streamed and scalar) == Txn-list replay
+    // == Mode::Timing, for every session, full state compared
+    let mut traces: Vec<TxnTrace> = Vec::new();
+    let mut txn_lists: Vec<Vec<Txn>> = Vec::new();
+    let (mut total_bursts, mut total_elems) = (0u64, 0u64);
+    for session in &sessions {
+        let direct = session.run(Mode::Timing).expect("timing run");
+        let trace = session.compile_trace();
+        let txns = trace.txns();
+        let mut by_list = MemSim::new(cfg.clone());
+        by_list.run(&txns);
+        let mut by_trace = MemSim::new(cfg.clone());
+        by_trace.run_trace(&trace);
+        let mut by_trace_scalar = MemSim::new(cfg.clone());
+        by_trace_scalar.run_trace_scalar(&trace);
+        assert!(by_trace.streaming_enabled());
+        assert_eq!(by_list.snapshot(), by_trace.snapshot(), "{}", session.layout());
+        assert_eq!(by_list.snapshot(), by_trace_scalar.snapshot());
+        let replayed = session.run_trace(&trace).expect("trace run");
+        assert_eq!(replayed.timing, direct.timing, "{}", session.layout());
+        assert_eq!(replayed.makespan_cycles, direct.makespan_cycles);
+        total_bursts += by_list.timing().axi_bursts;
+        total_elems += trace.total_elems();
+        traces.push(trace);
+        txn_lists.push(txns);
+    }
+    println!(
+        "identity: trace replay == scalar engine across {} layouts \
+         ({total_bursts} AXI bursts)",
+        sessions.len()
+    );
+
+    results.push(
+        b.bench("replay txn-list (scalar submit loop)", || {
+            for txns in &txn_lists {
+                let mut sim = MemSim::new(cfg.clone());
+                black_box(sim.run(txns));
+            }
+        })
+        .with_work(total_elems, total_bursts),
+    );
+    results.push(
+        b.bench("replay trace (scalar)", || {
+            for trace in &traces {
+                let mut sim = MemSim::new(cfg.clone());
+                black_box(sim.run_trace_scalar(trace));
+            }
+        })
+        .with_work(total_elems, total_bursts),
+    );
+    let m_trace_scalar = results.last().unwrap().summary.median;
+    results.push(
+        b.bench("replay trace (coalesced streaming)", || {
+            for trace in &traces {
+                let mut sim = MemSim::new(cfg.clone());
+                black_box(sim.run_trace(trace));
+            }
+        })
+        .with_work(total_elems, total_bursts),
+    );
+    let m_trace_streamed = results.last().unwrap().summary.median;
+
+    // ---- the streaming kernel's home turf: long contiguous spans
+    let long: Vec<Txn> = (0..if smoke { 8 } else { 64 })
+        .map(|i| Txn {
+            dir: Dir::Read,
+            addr: i * (1 << 18),
+            len: 1 << 17, // 1 MiB contiguous at 8 B/elem
+        })
+        .collect();
+    let long_trace = {
+        let mut t = TxnTrace::new();
+        for x in &long {
+            t.push(x.dir, x.addr, x.len);
+        }
+        t
+    };
+    let long_bursts = {
+        let mut a = MemSim::new(cfg.clone());
+        a.run(&long);
+        let mut s = MemSim::new(cfg.clone());
+        s.run_trace(&long_trace);
+        assert_eq!(a.snapshot(), s.snapshot(), "long-span identity");
+        a.timing().axi_bursts
+    };
+    let long_elems = long_trace.total_elems();
+    results.push(
+        b.bench("long contiguous spans (scalar)", || {
+            let mut sim = MemSim::new(cfg.clone());
+            black_box(sim.run_trace_scalar(&long_trace));
+        })
+        .with_work(long_elems, long_bursts),
+    );
+    let m_long_scalar = results.last().unwrap().summary.median;
+    results.push(
+        b.bench("long contiguous spans (streaming)", || {
+            let mut sim = MemSim::new(cfg.clone());
+            black_box(sim.run_trace(&long_trace));
+        })
+        .with_work(long_elems, long_bursts),
+    );
+    let m_long_streamed = results.last().unwrap().summary.median;
+
+    // ---- tune points/s, cold vs warm trace cache: several mem variants
+    // per geometry, the shape the cache exists for
+    let mut space = Space::builtin("tiny").unwrap();
+    space.mems = vec![
+        MemVariant::paper_default(),
+        MemVariant::new(
+            "burst64",
+            MemConfig {
+                max_burst_beats: 64,
+                ..MemConfig::default()
+            },
+        ),
+        MemVariant::new(
+            "outst4",
+            MemConfig {
+                max_outstanding: 4,
+                ..MemConfig::default()
+            },
+        ),
+    ];
+    let points = space.enumerate(&reg).unwrap();
+    let n_points = points.len() as u64;
+    // identity: warm == cold, field for field
+    {
+        let warm_ev =
+            Evaluator::new(&space, reg.clone()).with_trace_cache(Arc::new(TraceCache::new()));
+        let cold_ev = Evaluator::new(&space, reg.clone());
+        for p in points.points() {
+            let w = warm_ev.evaluate(p).unwrap();
+            let c = cold_ev.evaluate(p).unwrap();
+            assert_eq!(
+                w.to_json().to_string_compact(),
+                c.to_json().to_string_compact(),
+                "{}",
+                p.fingerprint()
+            );
+        }
+    }
+    results.push(
+        b.bench("tune eval (cold: plan walk per point)", || {
+            let ev = Evaluator::new(&space, reg.clone());
+            for p in points.points() {
+                black_box(ev.evaluate(p).unwrap());
+            }
+        })
+        .with_work(n_points, n_points),
+    );
+    let m_cold = results.last().unwrap().summary.median;
+    let warm_cache = Arc::new(TraceCache::new());
+    let warm_ev = Evaluator::new(&space, reg.clone()).with_trace_cache(warm_cache.clone());
+    for p in points.points() {
+        warm_ev.evaluate(p).unwrap(); // prewarm every geometry
+    }
+    results.push(
+        b.bench("tune eval (warm trace cache)", || {
+            for p in points.points() {
+                black_box(warm_ev.evaluate(p).unwrap());
+            }
+        })
+        .with_work(n_points, n_points),
+    );
+    let m_warm = results.last().unwrap().summary.median;
+    assert!(warm_cache.hits() > 0);
+
+    let replay_speedup = m_trace_scalar / m_trace_streamed;
+    let long_speedup = m_long_scalar / m_long_streamed;
+    let tune_speedup = m_cold / m_warm;
+
+    println!("\nreplay-throughput benchmarks:");
+    for m in &results {
+        println!("  {}", m.line());
+    }
+    println!(
+        "\nspeedups: streaming replay {replay_speedup:.2}x, long-span kernel \
+         {long_speedup:.2}x, warm-cache tune {tune_speedup:.2}x"
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("replay_throughput")),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "workload",
+            Json::obj(vec![
+                ("benchmark", Json::str("jacobi2d5p")),
+                ("tile", Json::arr(tile.iter().map(|&x| Json::num(x as f64)))),
+                ("tiles_per_dim", Json::num(tiles_per_dim as f64)),
+                ("layouts", Json::num(sessions.len() as f64)),
+                ("axi_bursts", Json::num(total_bursts as f64)),
+                ("tune_points", Json::num(n_points as f64)),
+            ]),
+        ),
+        (
+            "speedups",
+            Json::obj(vec![
+                ("trace_streaming_vs_scalar", Json::num(replay_speedup)),
+                ("long_span_streaming_vs_scalar", Json::num(long_speedup)),
+                ("tune_warm_vs_cold", Json::num(tune_speedup)),
+            ]),
+        ),
+        ("identity_asserted", Json::Bool(true)),
+        (
+            "measurements",
+            Json::arr(results.iter().map(measurement_json)),
+        ),
+    ]);
+    match std::fs::write(&out_path, json.to_string_pretty()) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+}

@@ -28,7 +28,7 @@
 
 use crate::coordinator::HostMemory;
 use crate::layout::{linearize, Allocation, PlanCache, PlanCacheState, TilePlan};
-use crate::memsim::{Dir, MemConfig, MemSim, Timing, Txn};
+use crate::memsim::{Dir, MemConfig, MemSim, Timing, Txn, TxnTrace};
 use crate::poly::deps::DepPattern;
 use crate::poly::flow::producer_tiles;
 use crate::poly::tiling::Tiling;
@@ -147,6 +147,41 @@ pub fn plan_tiles(alloc: &dyn Allocation, tiles: &[IVec], threads: usize) -> Vec
 /// across waves/chunks so the canonical interior plan is derived once).
 pub fn plan_tiles_cached(cache: &PlanCache, tiles: &[IVec], threads: usize) -> Vec<TilePlan> {
     parallel_map(tiles, threads, |coords| cache.plan(coords))
+}
+
+/// Compile a schedule's burst plans into a flat [`TxnTrace`]: every tile's
+/// read runs then write runs, tiles in lexicographic order within each
+/// wave, waves in schedule order — **exactly** the submit order
+/// [`BatchCoordinator::run_timing`] replays, so replaying the trace through
+/// [`MemSim::run_trace`](crate::memsim::MemSim::run_trace) is bit-identical
+/// to a coordinator timing run. The trace also accumulates the aggregate
+/// counters a [`BatchReport`] carries (tiles, waves, raw/useful elements),
+/// making it self-contained for report construction.
+///
+/// The trace is **config-independent**: entries are element-unit runs, so
+/// one compilation serves every `MemConfig`/PE variant of the same
+/// geometry (the premise of the `dse` trace cache).
+pub fn compile_trace<'a>(
+    cache: &'a PlanCache<'a>,
+    schedule: &'a Schedule,
+    threads: usize,
+) -> TxnTrace {
+    let mut trace = TxnTrace::new();
+    trace.waves = schedule.num_waves();
+    for wave in schedule.waves() {
+        for plan in PlanStream::with_cache(cache, wave, threads) {
+            for r in &plan.read_runs {
+                trace.push(Dir::Read, r.addr, r.len);
+            }
+            for r in &plan.write_runs {
+                trace.push(Dir::Write, r.addr, r.len);
+            }
+            trace.raw_elems += plan.read_raw() + plan.write_raw();
+            trace.useful_elems += plan.read_useful + plan.write_useful;
+            trace.tiles += 1;
+        }
+    }
+    trace
 }
 
 /// Upper bound on plans a batched executor keeps live at once; chunks of
@@ -577,6 +612,33 @@ mod tests {
                 let direct = alloc.plan(coords);
                 assert_eq!(direct.read_runs, plan.read_runs, "{coords:?}");
                 assert_eq!(direct.write_runs, plan.write_runs, "{coords:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn compiled_trace_replays_bit_identically_to_run_timing() {
+        // the trace is the coordinator's submit stream, flattened: replaying
+        // it must reproduce the timing run's counters exactly, for every
+        // allocation and both schedule shapes, and for any compile threads
+        let (tiling, deps) = setup();
+        for sched in [Schedule::wavefront(&tiling, &deps), Schedule::flat(&tiling)] {
+            for kind in AllocKind::ALL {
+                let alloc = kind.build(&tiling, &deps).unwrap();
+                let coord = BatchCoordinator::new(alloc.as_ref(), &sched, MemConfig::default());
+                let report = coord.run_timing();
+                let cache = PlanCache::new(alloc.as_ref());
+                let trace = compile_trace(&cache, &sched, 1);
+                assert_eq!(compile_trace(&cache, &sched, 3), trace, "{}", kind.name());
+                assert_eq!(trace.tiles, report.tiles, "{}", kind.name());
+                assert_eq!(trace.waves, report.waves);
+                assert_eq!(trace.transactions(), report.transactions);
+                assert_eq!(trace.raw_elems, report.raw_elems);
+                assert_eq!(trace.useful_elems, report.useful_elems);
+                let mut sim = MemSim::new(MemConfig::default());
+                sim.run_trace(&trace);
+                assert_eq!(sim.now(), report.cycles, "{}", kind.name());
+                assert_eq!(*sim.timing(), report.timing, "{}", kind.name());
             }
         }
     }

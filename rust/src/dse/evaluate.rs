@@ -7,14 +7,34 @@
 //! `PlanCacheState` and its timing replay is bit-identical to a serial
 //! figure-sweep measurement. Area comes from the analytic model
 //! ([`AreaModel`]) over the very allocation the session ran.
+//!
+//! **Trace reuse.** Points sharing a (workload × space box × tile ×
+//! layout) *geometry* submit byte-identical transaction streams — they
+//! differ only in [`MemConfig`](crate::memsim::MemConfig) and PE
+//! throughput, which matter at replay, not at plan time. An [`Evaluator`]
+//! holding a shared [`TraceCache`] therefore compiles each geometry's
+//! [`TxnTrace`](crate::memsim::TxnTrace) once
+//! (through the session's plan cache) and replays every mem/PE variant
+//! through the simulator's coalesced fast path
+//! ([`Session::run_trace`](crate::experiment::Session::run_trace)) — turning
+//! the explorer's cost from O(points × plan-walk × burst-split) into
+//! O(geometries × compile + points × stream-replay), bit-identically.
+//!
+//! **Determinism.** Evaluations normalize `wall_secs` to `0.0`: journal
+//! records must be byte-deterministic (serial ≡ parallel, cache on ≡ cache
+//! off, run ≡ re-run), and host wall time is the one report field that is
+//! not a pure function of the point. Throughput is measured by the benches
+//! (`benches/replay_throughput.rs`), not by journal records.
 
 use crate::area::{AreaEstimate, AreaModel};
 use crate::dse::space::{Point, Space};
 use crate::experiment::{ExperimentSpec, Mode, Report, ScheduleKind};
 use crate::layout::LayoutRegistry;
+use crate::memsim::TraceCache;
 use crate::poly::vec::IVec;
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
+use std::sync::Arc;
 
 /// One evaluated point: the timing report plus its area estimate.
 #[derive(Clone, Debug)]
@@ -108,15 +128,57 @@ impl Evaluation {
     }
 }
 
-/// Evaluates points of one space against one layout registry.
+/// Evaluates points of one space against one layout registry, optionally
+/// reusing compiled transaction traces across the mem/PE variants of a
+/// geometry (see the module docs).
 pub struct Evaluator<'a> {
     space: &'a Space,
     registry: LayoutRegistry,
+    traces: Option<Arc<TraceCache>>,
+}
+
+/// The trace-cache key of a point's transaction-stream geometry: every
+/// (mem, PE) variant of the same (workload + deps, space box, tile,
+/// layout) replays the identical stream. The dependence pattern is part
+/// of the key so that even caches shared across spaces whose same-named
+/// workloads carry different deps can never alias.
+pub fn geometry_key(p: &Point, space_box: &[i64], deps: &[IVec]) -> String {
+    let fmt = |xs: &[i64]| {
+        xs.iter()
+            .map(|x| x.to_string())
+            .collect::<Vec<_>>()
+            .join("x")
+    };
+    format!(
+        "{}|d{:?}|s{}|t{}|{}",
+        p.workload,
+        deps,
+        fmt(space_box),
+        fmt(&p.tile),
+        p.layout
+    )
 }
 
 impl<'a> Evaluator<'a> {
     pub fn new(space: &'a Space, registry: LayoutRegistry) -> Evaluator<'a> {
-        Evaluator { space, registry }
+        Evaluator {
+            space,
+            registry,
+            traces: None,
+        }
+    }
+
+    /// Share a trace cache across evaluations (and, via `Arc`, across the
+    /// explorer's `parallel_map` workers). Cache hits replay bit-identically
+    /// to cold compiles, so this changes throughput only, never results.
+    pub fn with_trace_cache(mut self, traces: Arc<TraceCache>) -> Evaluator<'a> {
+        self.traces = Some(traces);
+        self
+    }
+
+    /// The shared trace cache, when one was attached.
+    pub fn trace_cache(&self) -> Option<&Arc<TraceCache>> {
+        self.traces.as_ref()
     }
 
     /// Compile and run one point; see the module docs for the semantics.
@@ -130,6 +192,7 @@ impl<'a> Evaluator<'a> {
             .mem(&p.mem)
             .ok_or_else(|| anyhow!("point references unknown mem variant '{}'", p.mem))?;
         let space_box: IVec = p.tile.iter().map(|t| t * self.space.tiles_per_dim).collect();
+        let key = geometry_key(p, &space_box, &w.deps);
         let session = ExperimentSpec::builder()
             .custom(p.workload.clone(), space_box, p.tile.clone(), w.deps.clone())
             .layout(p.layout.clone())
@@ -140,7 +203,16 @@ impl<'a> Evaluator<'a> {
             .registry(self.registry.clone())
             .compile()
             .with_context(|| format!("compiling {}", p.fingerprint()))?;
-        let report = session.run(Mode::Timing)?;
+        let mut report = match &self.traces {
+            Some(cache) => {
+                let trace = cache.get_or_compile(&key, || session.compile_trace());
+                session.run_trace(&trace)?
+            }
+            None => session.run(Mode::Timing)?,
+        };
+        // journal determinism: wall time is the one field that is not a
+        // pure function of the point (see the module docs)
+        report.wall_secs = 0.0;
         let area = AreaModel::default().estimate(session.allocation(), mv.cfg.elem_bytes);
         Ok(Evaluation {
             point: p.clone(),
@@ -178,6 +250,53 @@ pub fn pareto_front(evals: &[Evaluation]) -> Vec<Evaluation> {
         .collect()
 }
 
+/// An incrementally maintained Pareto front over (bandwidth ↑, BRAM ↓).
+///
+/// [`ParetoFront::offer`] keeps the non-domination invariant on every
+/// insertion — O(front) per evaluation instead of the O(n²) full recompute
+/// [`pareto_indices`] performs — while reporting exactly the same surviving
+/// indices in the same (insertion) order. `pareto_indices` stays as the
+/// property-test oracle for this structure (the unit tests below check the
+/// equivalence on random objective sets), and a debug assertion in the
+/// explorer cross-checks them at the end of every exploration.
+#[derive(Clone, Debug, Default)]
+pub struct ParetoFront {
+    /// Surviving (insertion index, objectives), insertion order.
+    members: Vec<(usize, (f64, u64))>,
+}
+
+impl ParetoFront {
+    pub fn new() -> ParetoFront {
+        ParetoFront::default()
+    }
+
+    /// Offer a point; evicts every member it dominates. Returns true iff
+    /// the point joined the front. Equal-objective members coexist (neither
+    /// dominates), matching [`pareto_indices`] exactly.
+    pub fn offer(&mut self, index: usize, key: (f64, u64)) -> bool {
+        if self.members.iter().any(|&(_, k)| dominates(k, key)) {
+            return false;
+        }
+        self.members.retain(|&(_, k)| !dominates(key, k));
+        self.members.push((index, key));
+        true
+    }
+
+    /// Indices of the surviving members, in insertion order — identical to
+    /// `pareto_indices` over the full insertion sequence.
+    pub fn indices(&self) -> Vec<usize> {
+        self.members.iter().map(|&(i, _)| i).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -196,5 +315,40 @@ mod tests {
         let front = pareto_indices(&pts, |&p| p);
         // (9.0, 10) is dominated by (10.0, 10); the duplicate optimum stays
         assert_eq!(front, vec![0, 1, 2, 4]);
+    }
+
+    #[test]
+    fn incremental_front_matches_batch_recompute() {
+        let pts = [(10.0, 10u64), (12.0, 20), (8.0, 5), (9.0, 10), (12.0, 20)];
+        let mut front = ParetoFront::new();
+        for (i, &p) in pts.iter().enumerate() {
+            front.offer(i, p);
+        }
+        assert_eq!(front.indices(), pareto_indices(&pts, |&p| p));
+        assert_eq!(front.len(), 4);
+    }
+
+    #[test]
+    fn prop_incremental_front_equals_oracle() {
+        use crate::util::prop::{run, Config};
+        run("ParetoFront == pareto_indices", Config::default(), |g| {
+            let n = g.usize(0, 40);
+            let pts: Vec<(f64, u64)> = (0..n)
+                .map(|_| (g.i64(0, 20) as f64 * 0.5, g.i64(0, 12) as u64))
+                .collect();
+            let mut front = ParetoFront::new();
+            for (i, &p) in pts.iter().enumerate() {
+                let joined = front.offer(i, p);
+                // a point joins iff nothing before it dominates it
+                let expect = !pts[..i].iter().any(|&q| dominates(q, p));
+                assert_eq!(joined, expect, "offer({i}) on {pts:?}");
+            }
+            assert_eq!(
+                front.indices(),
+                pareto_indices(&pts, |&p| p),
+                "front diverged from the oracle on {pts:?}"
+            );
+            assert_eq!(front.is_empty(), pts.is_empty());
+        });
     }
 }

@@ -10,16 +10,26 @@
 //! strategy. Batches are composed from results only — never from worker
 //! timing — so the journal sequence and the front are identical for any
 //! `--parallel` setting.
+//!
+//! Two hot-loop mechanisms keep large explorations cheap without touching
+//! results: a shared [`TraceCache`] compiles each geometry's transaction
+//! stream once and replays every mem/PE variant through the simulator's
+//! coalesced fast path (`--trace-cache off` disables it; journals are
+//! byte-identical either way), and the Pareto front is maintained
+//! incrementally per evaluation ([`ParetoFront`]) instead of recomputed
+//! O(n²) at the end.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::PathBuf;
+use std::sync::Arc;
 
-use crate::dse::evaluate::{pareto_front, Evaluation, Evaluator};
+use crate::dse::evaluate::{Evaluation, Evaluator, ParetoFront};
 use crate::dse::journal::{self, Journal};
 use crate::dse::space::Space;
 use crate::dse::strategy::{Ctx, Strategy};
 use crate::layout::registry;
 use crate::layout::LayoutRegistry;
+use crate::memsim::TraceCache;
 use crate::util::par::parallel_map;
 use anyhow::Result;
 
@@ -33,6 +43,7 @@ pub struct Explorer {
     budget: Option<usize>,
     out: Option<PathBuf>,
     resume: Option<PathBuf>,
+    trace_cache: bool,
 }
 
 /// What an exploration produced.
@@ -86,7 +97,17 @@ impl Explorer {
             budget: None,
             out: None,
             resume: None,
+            trace_cache: true,
         }
+    }
+
+    /// Reuse compiled transaction traces across the mem/PE variants of a
+    /// geometry (default: on). Off forces every point through the plan-walk
+    /// path; results are bit-identical either way — this knob exists for
+    /// benchmarking and for the identity tests that prove it.
+    pub fn trace_cache(mut self, enabled: bool) -> Explorer {
+        self.trace_cache = enabled;
+        self
     }
 
     /// Resolve layouts against this registry instead of the global one.
@@ -133,6 +154,13 @@ impl Explorer {
         let mut attempted: BTreeSet<usize> = BTreeSet::new();
         let mut scores: BTreeMap<usize, f64> = BTreeMap::new();
         let mut all: Vec<Evaluation> = Vec::new();
+        // the front is maintained incrementally as evaluations arrive —
+        // O(front) per point instead of an O(n²) recompute at the end
+        let mut front = ParetoFront::new();
+        let offer = |front: &mut ParetoFront, all: &mut Vec<Evaluation>, eval: Evaluation| {
+            front.offer(all.len(), (eval.effective_mb_s(), eval.bram36()));
+            all.push(eval);
+        };
         let mut resumed = 0usize;
         if let Some(path) = &self.resume {
             for eval in journal::read(path)? {
@@ -143,7 +171,7 @@ impl Explorer {
                 };
                 if attempted.insert(i) {
                     scores.insert(i, eval.effective_mb_s());
-                    all.push(eval);
+                    offer(&mut front, &mut all, eval);
                     resumed += 1;
                 }
             }
@@ -169,7 +197,12 @@ impl Explorer {
             }
         };
 
-        let evaluator = Evaluator::new(&self.space, self.registry.clone());
+        let mut evaluator = Evaluator::new(&self.space, self.registry.clone());
+        if self.trace_cache {
+            // one cache for the whole run, shared by reference across the
+            // parallel_map workers below (sharded internally)
+            evaluator = evaluator.with_trace_cache(Arc::new(TraceCache::new()));
+        }
         let mut evaluated = 0usize;
         let mut failed = 0usize;
         loop {
@@ -204,7 +237,7 @@ impl Explorer {
                             w.push(&eval)?;
                         }
                         scores.insert(i, eval.effective_mb_s());
-                        all.push(eval);
+                        offer(&mut front, &mut all, eval);
                         evaluated += 1;
                     }
                     Err(e) => {
@@ -215,7 +248,15 @@ impl Explorer {
             }
         }
 
-        let front = pareto_front(&all);
+        // pareto_indices is the oracle the incremental front is checked
+        // against (cheap at exploration sizes, compiled out in release)
+        debug_assert_eq!(
+            front.indices(),
+            crate::dse::evaluate::pareto_indices(&all, |e| (e.effective_mb_s(), e.bram36())),
+            "incremental Pareto front diverged from the batch oracle"
+        );
+        let front: Vec<Evaluation> =
+            front.indices().into_iter().map(|i| all[i].clone()).collect();
         Ok(Outcome {
             strategy: self.strategy.name().to_string(),
             points_total: enumerated.len(),
@@ -260,6 +301,29 @@ mod tests {
             .unwrap();
         assert_eq!(out.evaluated, 3);
         assert_eq!(out.all.len(), 3);
+    }
+
+    #[test]
+    fn trace_cache_changes_nothing_but_work() {
+        let cached = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+            .trace_cache(true)
+            .explore()
+            .unwrap();
+        let cold = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+            .trace_cache(false)
+            .explore()
+            .unwrap();
+        assert_eq!(cached.all.len(), cold.all.len());
+        for (a, b) in cached.all.iter().zip(&cold.all) {
+            assert_eq!(a.fingerprint(), b.fingerprint());
+            assert_eq!(
+                a.to_json().to_string_compact(),
+                b.to_json().to_string_compact(),
+                "{}",
+                a.fingerprint()
+            );
+        }
+        assert_eq!(cached.front.len(), cold.front.len());
     }
 
     #[test]

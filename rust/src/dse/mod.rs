@@ -20,8 +20,14 @@
 //!   cost from the [`area`](crate::area) model;
 //! * [`Explorer`] — batched, [`parallel_map`](crate::util::par)-fanned
 //!   evaluation with fingerprint dedup, a flushed JSONL journal
-//!   ([`journal`]) and resume (`--resume` skips journaled points), and a
-//!   Pareto front ([`pareto_front`]) over (bandwidth ↑, BRAM ↓).
+//!   ([`journal`]) and resume (`--resume` skips journaled points), and an
+//!   incrementally maintained Pareto front ([`ParetoFront`], oracle
+//!   [`pareto_indices`]) over (bandwidth ↑, BRAM ↓). Points sharing a
+//!   (workload × space × tile × layout) geometry reuse one compiled
+//!   transaction trace through a shared
+//!   [`TraceCache`](crate::memsim::TraceCache) and replay it through the
+//!   memory simulator's coalesced fast path — bit-identical to the
+//!   plan-walk path, just without re-deriving the stream per point.
 //!
 //! The figure sweeps are thin wrappers over `Exhaustive` spaces
 //! ([`Space::fig15`] / [`Space::area`]; see `harness::figures`), and the
@@ -46,7 +52,9 @@ pub mod journal;
 pub mod space;
 pub mod strategy;
 
-pub use evaluate::{dominates, pareto_front, pareto_indices, Evaluation, Evaluator};
+pub use evaluate::{
+    dominates, geometry_key, pareto_front, pareto_indices, Evaluation, Evaluator, ParetoFront,
+};
 pub use explore::{Explorer, Outcome};
 pub use space::{Enumerated, MemVariant, Point, Space, SpaceWorkload, TileSet};
 pub use strategy::{Ctx, Exhaustive, HillClimb, RandomSearch, Strategy};

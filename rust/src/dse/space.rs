@@ -532,6 +532,11 @@ fn mem_variant_from_json(j: &Json, idx: usize) -> Result<MemVariant> {
             _ => bail!("space json: unknown mem field '{k}'"),
         }
     }
+    // a degenerate config (max_outstanding 0, zero bus/boundary/banks, a
+    // boundary that is not a multiple of the bus width, …) must fail here
+    // with a message, not panic later inside the simulator's burst loop
+    cfg.validate()
+        .map_err(|e| anyhow!("space json: mem variant '{name}': {e}"))?;
     Ok(MemVariant { name, cfg })
 }
 
@@ -654,6 +659,36 @@ mod tests {
             r#"{"workloads": ["jacobi2d5p"], "tiles": [[16, 16]]}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn degenerate_mem_variants_error_instead_of_panicking() {
+        // used to panic later, inside submit_axi's window pop
+        let err = Space::parse(
+            r#"{"workloads": ["jacobi2d5p"],
+                "mem": [{"name": "broken", "max_outstanding": 0}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(
+            err.contains("broken") && err.contains("max_outstanding"),
+            "{err}"
+        );
+        let err = Space::parse(
+            r#"{"workloads": ["jacobi2d5p"],
+                "mem": [{"name": "odd", "boundary_bytes": 4100}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("multiple of bus_bytes"), "{err}");
+        // zero bus width / banks are equally construction-time errors
+        for field in ["bus_bytes", "banks", "boundary_bytes"] {
+            let text = format!(
+                r#"{{"workloads": ["jacobi2d5p"], "mem": [{{"name": "z", "{field}": 0}}]}}"#
+            );
+            let err = Space::parse(&text).unwrap_err().to_string();
+            assert!(err.contains(field), "{field}: {err}");
+        }
     }
 
     #[test]

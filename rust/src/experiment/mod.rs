@@ -44,13 +44,13 @@
 
 mod e2e;
 
-use crate::coordinator::batch::{BatchCoordinator, Schedule};
+use crate::coordinator::batch::{self, BatchCoordinator, BatchReport, Schedule};
 use crate::coordinator::reference::{sw3_deps, StencilKind};
 use crate::coordinator::HostMemory;
 use crate::harness::workloads;
 use crate::layout::registry::{self, LayoutRegistry};
 use crate::layout::{Allocation, PlanCache, PlanCacheState};
-use crate::memsim::{MemConfig, Timing};
+use crate::memsim::{MemConfig, MemSim, Timing, TxnTrace};
 use crate::poly::deps::DepPattern;
 use crate::poly::tiling::Tiling;
 use crate::poly::vec::IVec;
@@ -527,6 +527,9 @@ pub struct Session {
 impl Session {
     /// Resolve and validate `spec` against `registry`.
     pub fn compile_with(spec: ExperimentSpec, registry: &LayoutRegistry) -> Result<Session> {
+        spec.mem
+            .validate()
+            .context("experiment spec has an invalid memory configuration")?;
         let (benchmark, tiling, deps) = resolve_workload(&spec.workload)?;
         let entry = registry.resolve_or_err(&spec.layout.name)?;
         let alloc = entry.build(&tiling, &deps)?;
@@ -587,6 +590,81 @@ impl Session {
     /// canonical interior plan is derived once per session).
     pub fn cache(&self) -> PlanCache<'_> {
         PlanCache::with_state(self.alloc.as_ref(), &self.cache)
+    }
+
+    /// Compile this session's schedule into a flat, config-independent
+    /// [`TxnTrace`] — the exact transaction stream `run(Mode::Timing)`
+    /// submits, fed from the session-owned [`PlanCacheState`] so interior
+    /// tiles rebase the canonical plan rather than re-deriving it. The
+    /// trace depends only on the session's *geometry* (workload × space ×
+    /// tile × layout × schedule), never on [`MemConfig`] or PE throughput,
+    /// so sessions sharing a geometry can share one compiled trace (the
+    /// `dse` trace cache does exactly this).
+    pub fn compile_trace(&self) -> TxnTrace {
+        let cache = self.cache();
+        let mut trace = batch::compile_trace(&cache, &self.schedule, self.spec.exec.threads);
+        trace.geometry = self.trace_geometry();
+        trace
+    }
+
+    /// The geometry fingerprint stamped on compiled traces: everything the
+    /// transaction stream depends on (workload label, dependence pattern,
+    /// layout, iteration space, tile, schedule shape) and nothing it does
+    /// not (`MemConfig`, PE throughput) — so sessions differing only in
+    /// mem/PE accept each other's traces, and a trace from a different
+    /// layout (or a same-named workload with different deps) is rejected.
+    fn trace_geometry(&self) -> String {
+        format!(
+            "{}|d{:?}|{}|s{:?}|t{:?}|{:?}",
+            self.benchmark,
+            self.deps.vecs(),
+            self.layout,
+            self.tiling.space,
+            self.tiling.tile,
+            self.spec.exec.schedule
+        )
+    }
+
+    /// `Mode::Timing` over a pre-compiled trace: replay `trace` through the
+    /// memory simulator's coalesced fast path and report exactly what
+    /// `run(Mode::Timing)` would — same `Timing` counters, same cycles,
+    /// same derived bandwidth, bit for bit. The trace must carry this
+    /// session's geometry stamp ([`Session::compile_trace`] from a session
+    /// that differs at most in `MemConfig`/PE): tile/wave counts alone
+    /// cannot distinguish two layouts over the same tiling, and a foreign
+    /// trace would replay silently wrong numbers.
+    pub fn run_trace(&self, trace: &TxnTrace) -> Result<Report> {
+        let expected = self.trace_geometry();
+        if trace.geometry != expected {
+            let got = if trace.geometry.is_empty() {
+                "<unstamped>"
+            } else {
+                trace.geometry.as_str()
+            };
+            bail!("trace geometry mismatch: got '{got}', session expects '{expected}'");
+        }
+        if trace.tiles != self.schedule.num_tiles() || trace.waves != self.schedule.num_waves() {
+            bail!(
+                "trace shape mismatch: trace has {} tiles / {} waves, session schedule has {} / {}",
+                trace.tiles,
+                trace.waves,
+                self.schedule.num_tiles(),
+                self.schedule.num_waves()
+            );
+        }
+        let wall0 = Instant::now();
+        let mut sim = MemSim::new(self.spec.mem.clone());
+        sim.run_trace(trace);
+        let rep = BatchReport {
+            tiles: trace.tiles,
+            waves: trace.waves,
+            cycles: sim.now(),
+            timing: sim.timing().clone(),
+            raw_elems: trace.raw_elems,
+            useful_elems: trace.useful_elems,
+            transactions: trace.transactions(),
+        };
+        Ok(self.report_from_batch("timing", &rep, wall0.elapsed().as_secs_f64()))
     }
 
     /// Execute the session. End-to-end workloads in `Mode::Data` open the
@@ -848,6 +926,61 @@ mod tests {
             .unwrap();
         let err = s.run(Mode::Data { seed: 1 }).unwrap_err().to_string();
         assert!(err.contains("Wavefront"), "{err}");
+    }
+
+    #[test]
+    fn invalid_mem_config_rejected_at_compile() {
+        let err = ExperimentSpec::builder()
+            .named("jacobi2d5p", vec![8, 8, 8], 3)
+            .mem(MemConfig {
+                max_outstanding: 0,
+                ..MemConfig::default()
+            })
+            .compile()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("max_outstanding"), "{err:#}");
+    }
+
+    #[test]
+    fn compiled_trace_timing_matches_mode_timing() {
+        for layout in registry::global().names() {
+            let s = quick_session(layout);
+            let direct = s.run(Mode::Timing).unwrap();
+            let trace = s.compile_trace();
+            let via_trace = s.run_trace(&trace).unwrap();
+            assert_eq!(via_trace.mode, "timing");
+            assert_eq!(via_trace.makespan_cycles, direct.makespan_cycles, "{layout}");
+            assert_eq!(via_trace.timing, direct.timing, "{layout}");
+            assert_eq!(via_trace.transactions, direct.transactions);
+            assert_eq!(via_trace.raw_bytes, direct.raw_bytes);
+            assert_eq!(via_trace.useful_bytes, direct.useful_bytes);
+            assert_eq!(via_trace.tiles, direct.tiles);
+            assert_eq!(via_trace.waves, direct.waves);
+            assert_eq!(
+                via_trace.effective_mb_s.to_bits(),
+                direct.effective_mb_s.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn mismatched_trace_is_rejected() {
+        let s = quick_session("cfa");
+        let other = ExperimentSpec::builder()
+            .named("jacobi2d5p", vec![8, 8, 8], 2)
+            .layout("cfa")
+            .compile()
+            .unwrap();
+        let err = s.run_trace(&other.compile_trace()).unwrap_err().to_string();
+        assert!(err.contains("mismatch"), "{err}");
+        // same tiling and schedule shape, different layout: tile/wave
+        // counts are identical, so only the geometry stamp can catch it
+        let orig = quick_session("original");
+        let err = orig.run_trace(&s.compile_trace()).unwrap_err().to_string();
+        assert!(err.contains("geometry"), "{err}");
+        // an unstamped (hand-built) trace is rejected too
+        let err = s.run_trace(&TxnTrace::new()).unwrap_err().to_string();
+        assert!(err.contains("unstamped"), "{err}");
     }
 
     #[test]

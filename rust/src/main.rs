@@ -59,7 +59,7 @@ fn print_help() {
          \x20 plan                 show layout + burst plan (--benchmark, --tile, --alloc)\n\
          \x20 run                  end-to-end verified run (--benchmark, --alloc, --parallel N, ...)\n\
          \x20 bench                figure sweeps (--figure fig15|fig16|fig17, --quick, --parallel N, --json PATH)\n\
-         \x20 tune                 design-space exploration (--space, --strategy, --budget, --parallel, --out, --resume)\n\
+         \x20 tune                 design-space exploration (--space, --strategy, --budget, --parallel, --out, --resume, --trace-cache)\n\
          \x20 codegen              emit HLS C (--benchmark, --tile)\n\n\
          layouts are named through the open registry (`cfa layouts`); every\n\
          --alloc option accepts a canonical name, an alias, or 'all'.\n"
@@ -347,7 +347,12 @@ fn cmd_tune() -> anyhow::Result<()> {
         .opt("parallel", "worker threads across points", Some("1"))
         .opt("seed", "seed for the random/hill strategies", Some("0"))
         .opt("out", "JSONL results journal path", Some("tune.jsonl"))
-        .opt("resume", "journal to resume from (skips evaluated points)", None);
+        .opt("resume", "journal to resume from (skips evaluated points)", None)
+        .opt(
+            "trace-cache",
+            "reuse compiled txn traces across mem/PE variants (on | off; results identical)",
+            Some("on"),
+        );
     let a = cmd.parse(&env_args(1)).map_err(anyhow::Error::msg)?;
     let space_arg = a.get_or("space", "fig15-quick");
     let space = match Space::builtin(space_arg) {
@@ -371,7 +376,15 @@ fn cmd_tune() -> anyhow::Result<()> {
     let budget = a.get_usize("budget", 0).map_err(anyhow::Error::msg)?;
     let parallel = a.get_usize("parallel", 1).map_err(anyhow::Error::msg)?;
     let out = a.get_or("out", "tune.jsonl").to_string();
-    let mut explorer = Explorer::new(space, strategy).parallel(parallel).journal(&out);
+    let trace_cache = match a.get_or("trace-cache", "on") {
+        "on" => true,
+        "off" => false,
+        s => anyhow::bail!("--trace-cache must be 'on' or 'off', got '{s}'"),
+    };
+    let mut explorer = Explorer::new(space, strategy)
+        .parallel(parallel)
+        .journal(&out)
+        .trace_cache(trace_cache);
     if budget > 0 {
         explorer = explorer.budget(budget);
     }

@@ -19,9 +19,11 @@
 
 pub mod engine;
 pub mod multiport;
+pub mod trace;
 
 pub use engine::{MemSim, ReplayState, Timing};
 pub use multiport::{cfa_port_map, MultiPortSim, PortMap};
+pub use trace::{TraceCache, TxnTrace};
 
 /// Transfer direction.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -93,6 +95,48 @@ impl Default for MemConfig {
 }
 
 impl MemConfig {
+    /// Check the structural invariants the queuing model relies on.
+    ///
+    /// The simulator divides by `bus_bytes`, `boundary_bytes`, `row_bytes`
+    /// and `banks`, and pops the in-flight window whenever it holds
+    /// `max_outstanding` entries — a zero in any of those fields used to
+    /// surface as a panic (or an infinite split loop) deep inside
+    /// `submit_axi`. [`MemSim::new`] enforces this at construction, and the
+    /// `dse` space parser surfaces it as a JSON error, so a bad
+    /// `--space` file fails with a message instead of a backtrace.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        use anyhow::bail;
+        if self.max_outstanding == 0 {
+            bail!("max_outstanding must be >= 1 (the command path needs an in-flight window)");
+        }
+        if self.bus_bytes == 0 {
+            bail!("bus_bytes must be nonzero");
+        }
+        if self.elem_bytes == 0 {
+            bail!("elem_bytes must be nonzero");
+        }
+        if self.boundary_bytes == 0 {
+            bail!("boundary_bytes must be nonzero");
+        }
+        if self.max_burst_beats == 0 {
+            bail!("max_burst_beats must be nonzero (bursts could never make progress)");
+        }
+        if self.row_bytes == 0 {
+            bail!("row_bytes must be nonzero");
+        }
+        if self.banks == 0 {
+            bail!("banks must be nonzero");
+        }
+        if self.boundary_bytes % self.bus_bytes != 0 {
+            bail!(
+                "boundary_bytes ({}) must be a multiple of bus_bytes ({})",
+                self.boundary_bytes,
+                self.bus_bytes
+            );
+        }
+        Ok(())
+    }
+
     /// Peak bandwidth in MB/s (the roofline of Fig 15).
     pub fn peak_mb_s(&self) -> f64 {
         self.bus_bytes as f64 * self.clock_mhz
@@ -167,6 +211,59 @@ mod tests {
             ..MemConfig::default()
         };
         assert_eq!(cfg4.beats(3), 2); // 12 bytes on an 8-byte bus
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_configs() {
+        assert!(MemConfig::default().validate().is_ok());
+        let cases: Vec<(&str, MemConfig)> = vec![
+            (
+                "max_outstanding",
+                MemConfig {
+                    max_outstanding: 0,
+                    ..MemConfig::default()
+                },
+            ),
+            (
+                "bus_bytes",
+                MemConfig {
+                    bus_bytes: 0,
+                    ..MemConfig::default()
+                },
+            ),
+            (
+                "boundary_bytes",
+                MemConfig {
+                    boundary_bytes: 0,
+                    ..MemConfig::default()
+                },
+            ),
+            (
+                "banks",
+                MemConfig {
+                    banks: 0,
+                    ..MemConfig::default()
+                },
+            ),
+            (
+                "row_bytes",
+                MemConfig {
+                    row_bytes: 0,
+                    ..MemConfig::default()
+                },
+            ),
+            (
+                "multiple of bus_bytes",
+                MemConfig {
+                    boundary_bytes: 4100,
+                    ..MemConfig::default()
+                },
+            ),
+        ];
+        for (needle, cfg) in cases {
+            let err = cfg.validate().expect_err(needle).to_string();
+            assert!(err.contains(needle), "'{err}' should mention {needle}");
+        }
     }
 
     #[test]

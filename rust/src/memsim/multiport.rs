@@ -14,7 +14,7 @@
 //!   per port* is the natural balanced repartition the paper anticipates —
 //!   reads and writes of different facets then proceed concurrently.
 
-use crate::memsim::{MemConfig, MemSim, Timing, Txn};
+use crate::memsim::{MemConfig, MemSim, Timing, Txn, TxnTrace};
 
 /// Transaction-to-port routing policy.
 #[derive(Clone, Debug)]
@@ -100,6 +100,15 @@ impl MultiPortSim {
                 }
             }
         }
+    }
+
+    /// Replay a compiled [`TxnTrace`] through the port map, entry by entry
+    /// (no `Txn` list materialized). Returns the completion time.
+    pub fn run_trace(&mut self, trace: &TxnTrace) -> u64 {
+        for (dir, addr, len) in trace.iter() {
+            self.submit(&Txn { dir, addr, len });
+        }
+        self.now()
     }
 
     /// Completion time = the slowest channel (they run concurrently).
@@ -212,6 +221,33 @@ mod tests {
         let speedup = one.now() as f64 / two.now() as f64;
         assert!(speedup > 1.8, "speedup {speedup}");
         assert!(two.imbalance() < 1.1);
+    }
+
+    #[test]
+    fn trace_replay_equals_txn_replay_per_port() {
+        let txns: Vec<Txn> = (0..48)
+            .map(|i| Txn {
+                dir: if i % 4 == 0 { Dir::Write } else { Dir::Read },
+                addr: i * 713,
+                len: 96,
+            })
+            .collect();
+        let mut trace = TxnTrace::new();
+        for t in &txns {
+            trace.push(t.dir, t.addr, t.len);
+        }
+        let map = || PortMap::Interleaved { stripe_bytes: 512 };
+        let mut by_txn = MultiPortSim::new(cfg(), 3, map());
+        for t in &txns {
+            by_txn.submit(t);
+        }
+        let mut by_trace = MultiPortSim::new(cfg(), 3, map());
+        by_trace.run_trace(&trace);
+        assert_eq!(by_txn.now(), by_trace.now());
+        assert_eq!(by_txn.channel_times(), by_trace.channel_times());
+        for (a, b) in by_txn.timings().iter().zip(by_trace.timings()) {
+            assert_eq!(*a, b);
+        }
     }
 
     #[test]

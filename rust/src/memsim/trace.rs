@@ -1,0 +1,290 @@
+//! Compiled transaction traces and the cross-point trace cache.
+//!
+//! A `cfa tune` point replays the burst transactions its (workload × space
+//! box × tile × layout) *geometry* induces — and that stream is entirely
+//! independent of the memory configuration and PE throughput the point
+//! varies: [`MemConfig`](crate::memsim::MemConfig) only decides how the
+//! stream splits into AXI bursts and how long they take at **replay**.
+//! The explorer used to pay the full plan walk (region algebra →
+//! `runs_of_box` → `merge_runs` → `Txn` list) for every point anyway.
+//!
+//! [`TxnTrace`] is the compiled form of that stream: flat
+//! structure-of-arrays columns (`dir` / element address / element length,
+//! one entry per planned burst run) plus the aggregate counters a timing
+//! report needs (tiles, waves, raw/useful elements), built **once** from a
+//! schedule's plans (`coordinator::batch::compile_trace`) and replayed any
+//! number of times through [`MemSim::run_trace`](crate::memsim::MemSim::run_trace)
+//! without reconstructing `Txn` values.
+//!
+//! [`TraceCache`] shares compiled traces across the points of a design
+//! space: keyed by the geometry fingerprint, sharded behind mutexes so the
+//! `dse` explorer's `parallel_map` workers contend only per shard, with
+//! hit/miss counters for observability. A cache hit replays bit-identically
+//! to a cold compile — the contract `tests/trace_replay.rs` pins down.
+
+use crate::memsim::{Dir, Txn};
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A compiled, config-independent transaction trace in SoA form.
+///
+/// Entries are element-unit burst runs in exact replay order (waves in
+/// schedule order, tiles lexicographic within a wave, reads before writes
+/// per tile — the order `BatchCoordinator::run_timing` submits). The
+/// aggregate fields carry the geometry facts a
+/// [`Report`](crate::experiment::Report) needs beyond simulator counters.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TxnTrace {
+    dirs: Vec<Dir>,
+    addrs: Vec<u64>,
+    lens: Vec<u64>,
+    /// Tiles whose plans the trace contains.
+    pub tiles: u64,
+    /// Waves of the schedule the trace was compiled from.
+    pub waves: usize,
+    /// Raw elements moved (burst lengths summed, redundancy included).
+    pub raw_elems: u64,
+    /// Application-useful elements moved.
+    pub useful_elems: u64,
+    /// Fingerprint of the geometry the trace was compiled from (stamped by
+    /// `Session::compile_trace`; empty for hand-built traces). Two
+    /// same-shaped schedules over *different layouts* submit different
+    /// streams with identical tile/wave counts, so consumers that accept
+    /// foreign traces (`Session::run_trace`) compare this, not the counts.
+    pub geometry: String,
+}
+
+impl TxnTrace {
+    pub fn new() -> TxnTrace {
+        TxnTrace::default()
+    }
+
+    /// Append one burst run (element units).
+    pub fn push(&mut self, dir: Dir, addr: u64, len: u64) {
+        self.dirs.push(dir);
+        self.addrs.push(addr);
+        self.lens.push(len);
+    }
+
+    /// Number of burst-run entries.
+    pub fn len(&self) -> usize {
+        self.dirs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.dirs.is_empty()
+    }
+
+    /// Total transactions (what a `BatchReport` counts).
+    pub fn transactions(&self) -> u64 {
+        self.dirs.len() as u64
+    }
+
+    /// Entry `i` as `(dir, element address, element length)`.
+    #[inline]
+    pub fn entry(&self, i: usize) -> (Dir, u64, u64) {
+        (self.dirs[i], self.addrs[i], self.lens[i])
+    }
+
+    /// Iterate entries in replay order.
+    pub fn iter(&self) -> impl Iterator<Item = (Dir, u64, u64)> + '_ {
+        (0..self.len()).map(|i| self.entry(i))
+    }
+
+    /// Materialize the trace as a `Txn` list (tests and benches comparing
+    /// against the scalar [`MemSim::run`](crate::memsim::MemSim::run)).
+    pub fn txns(&self) -> Vec<Txn> {
+        self.iter()
+            .map(|(dir, addr, len)| Txn { dir, addr, len })
+            .collect()
+    }
+
+    /// Total elements across all entries.
+    pub fn total_elems(&self) -> u64 {
+        self.lens.iter().sum()
+    }
+}
+
+/// Shard count of the [`TraceCache`] (power of two; bounds lock contention
+/// between `parallel_map` workers compiling different geometries).
+const SHARDS: usize = 16;
+
+/// One cache shard: a mutex-guarded slice of the key space.
+type Shard = Mutex<HashMap<String, Arc<TxnTrace>>>;
+
+/// A shared cache of compiled traces, keyed by geometry fingerprint.
+///
+/// Scope matters: keys are geometry fingerprints *within one design space*
+/// (workload names resolve to one dependence pattern per space), so share a
+/// cache across the points of one exploration, not across unrelated spaces.
+/// Compilation runs outside the shard lock — two workers racing on the same
+/// cold key may both compile, but the traces are identical and the first
+/// insert wins, so results are deterministic either way.
+pub struct TraceCache {
+    shards: Vec<Shard>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl TraceCache {
+    pub fn new() -> TraceCache {
+        TraceCache {
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: &str) -> &Shard {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % SHARDS]
+    }
+
+    /// The cached trace for `key`, if present (counts as a hit).
+    pub fn get(&self, key: &str) -> Option<Arc<TxnTrace>> {
+        let found = self
+            .shard(key)
+            .lock()
+            .expect("trace cache poisoned")
+            .get(key)
+            .cloned();
+        if found.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        found
+    }
+
+    /// The trace for `key`, compiling it with `compile` on a miss.
+    pub fn get_or_compile(
+        &self,
+        key: &str,
+        compile: impl FnOnce() -> TxnTrace,
+    ) -> Arc<TxnTrace> {
+        if let Some(t) = self.shard(key).lock().expect("trace cache poisoned").get(key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return t.clone();
+        }
+        // compile outside the lock: a cold geometry must not block other
+        // geometries that hash to the same shard
+        let built = Arc::new(compile());
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut shard = self.shard(key).lock().expect("trace cache poisoned");
+        shard.entry(key.to_string()).or_insert(built).clone()
+    }
+
+    /// Cache hits observed so far.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache misses (compilations) observed so far.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Number of cached traces.
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().expect("trace cache poisoned").len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every cached trace (counters keep accumulating).
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.lock().expect("trace cache poisoned").clear();
+        }
+    }
+}
+
+impl Default for TraceCache {
+    fn default() -> TraceCache {
+        TraceCache::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::par::parallel_map;
+
+    fn sample_trace(n: u64) -> TxnTrace {
+        let mut t = TxnTrace::new();
+        for i in 0..n {
+            let dir = if i % 3 == 0 { Dir::Write } else { Dir::Read };
+            t.push(dir, i * 100, i + 1);
+        }
+        t.tiles = n;
+        t.waves = 1;
+        t.raw_elems = t.total_elems();
+        t.useful_elems = t.total_elems();
+        t
+    }
+
+    #[test]
+    fn soa_round_trips_entries_in_order() {
+        let t = sample_trace(7);
+        assert_eq!(t.len(), 7);
+        assert_eq!(t.transactions(), 7);
+        assert!(!t.is_empty());
+        for (i, (dir, addr, len)) in t.iter().enumerate() {
+            assert_eq!(t.entry(i), (dir, addr, len));
+            assert_eq!(addr, i as u64 * 100);
+            assert_eq!(len, i as u64 + 1);
+        }
+        let txns = t.txns();
+        assert_eq!(txns.len(), 7);
+        assert_eq!(txns[3].dir, Dir::Write);
+        assert_eq!(t.total_elems(), (1..=7).sum::<u64>());
+    }
+
+    #[test]
+    fn cache_hits_and_misses_are_counted() {
+        let cache = TraceCache::new();
+        assert!(cache.is_empty());
+        assert!(cache.get("k").is_none());
+        assert_eq!(cache.misses(), 1);
+        let a = cache.get_or_compile("k", || sample_trace(4));
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(cache.hits(), 0);
+        let b = cache.get_or_compile("k", || panic!("must not recompile"));
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(*a, *b);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.len(), 1);
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn concurrent_get_or_compile_is_deterministic() {
+        // many workers racing on few keys: every returned trace equals the
+        // single-threaded compile, and the cache ends with one entry per key
+        let cache = TraceCache::new();
+        let items: Vec<u64> = (0..64).collect();
+        let out = parallel_map(&items, 8, |&i| {
+            let n = i % 4 + 1;
+            let key = format!("geom{n}");
+            cache.get_or_compile(&key, || sample_trace(n))
+        });
+        for (i, t) in items.iter().zip(&out) {
+            assert_eq!(**t, sample_trace(i % 4 + 1));
+        }
+        assert_eq!(cache.len(), 4);
+        assert_eq!(cache.hits() + cache.misses(), 64);
+        // every key misses at least once; racing workers may compile a cold
+        // key more than once (first insert wins), but never after it lands
+        assert!(cache.misses() >= 4, "misses {}", cache.misses());
+    }
+}

@@ -1,0 +1,283 @@
+//! Acceptance tests for the trace compilation + fast replay subsystem:
+//!
+//! * the coalesced streaming kernel (`MemSim::run_trace`) and the scalar
+//!   trace replay are **bit-identical** — full `ReplayState`, counters
+//!   included — to the scalar `MemSim::run`, across random `Txn` streams ×
+//!   random (validated) `MemConfig`s;
+//! * a `Session`'s compiled trace replays bit-identically to
+//!   `Session::run(Mode::Timing)` for every registered layout;
+//! * a `TraceCache` hit evaluates bit-identically to a cold compile, and a
+//!   `cfa tune`-shaped exploration journals **byte-identical** files with
+//!   the cache on and off (the PR's acceptance criterion, on the
+//!   `fig15-quick` builtin);
+//! * degenerate memory configs error at the `dse` space-parsing front door
+//!   instead of panicking inside the simulator.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use cfa::dse::{geometry_key, Evaluator, Exhaustive, Explorer, Space};
+use cfa::experiment::{ExperimentSpec, Mode, ScheduleKind};
+use cfa::layout::registry;
+use cfa::memsim::{Dir, MemConfig, MemSim, TraceCache, Txn, TxnTrace};
+use cfa::util::prop::{run as prop_run, Config, Gen};
+
+fn tmp(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(name);
+    std::fs::remove_file(&p).ok();
+    p
+}
+
+/// A random but always-valid memory configuration: every field the
+/// simulator divides by is nonzero and the AXI boundary is a multiple of
+/// the bus width. Roughly half the draws satisfy the streaming conditions
+/// (exercising the coalesced kernel), the rest exercise its scalar
+/// fallback — identity must hold either way.
+fn random_cfg(g: &Gen) -> MemConfig {
+    let bus_bytes = *g.choose(&[1u64, 2, 4, 8, 16]);
+    // keep the minimum chunk >= 64 bytes so the burst count per test case
+    // stays bounded even for the smallest bus widths
+    let boundary_bytes = bus_bytes * *g.choose(&[64u64, 512, 4096]);
+    MemConfig {
+        elem_bytes: *g.choose(&[1u64, 2, 4, 8]),
+        bus_bytes,
+        clock_mhz: 100.0,
+        max_burst_beats: g.i64(16, 256) as u64,
+        boundary_bytes,
+        issue_cycles: g.i64(0, 8) as u64,
+        row_hit_cycles: g.i64(0, 30) as u64,
+        row_miss_cycles: g.i64(0, 60) as u64,
+        row_bytes: *g.choose(&[256u64, 1024, 8192, 600]),
+        banks: g.i64(1, 8) as u64,
+        max_outstanding: g.usize(1, 4),
+        turnaround_cycles: g.i64(0, 10) as u64,
+    }
+}
+
+fn random_txns(g: &Gen, n: usize) -> Vec<Txn> {
+    (0..n)
+        .map(|_| Txn {
+            dir: if g.bool() { Dir::Read } else { Dir::Write },
+            addr: g.i64(0, 1 << 18) as u64,
+            len: g.i64(1, 4096) as u64,
+        })
+        .collect()
+}
+
+fn trace_of(txns: &[Txn]) -> TxnTrace {
+    let mut t = TxnTrace::new();
+    for x in txns {
+        t.push(x.dir, x.addr, x.len);
+    }
+    t
+}
+
+#[test]
+fn prop_trace_replay_bit_identical_to_scalar_run() {
+    prop_run(
+        "run_trace == run_trace_scalar == run",
+        Config::small(80),
+        |g| {
+            let cfg = random_cfg(g);
+            let txns = random_txns(g, g.usize(1, 16));
+            let trace = trace_of(&txns);
+            let mut scalar = MemSim::new(cfg.clone());
+            let mut streamed = MemSim::new(cfg.clone());
+            let mut trace_scalar = MemSim::new(cfg.clone());
+            let a = scalar.run(&txns);
+            let b = streamed.run_trace(&trace);
+            let c = trace_scalar.run_trace_scalar(&trace);
+            assert_eq!(a, b, "streamed cycles diverged ({cfg:?})");
+            assert_eq!(a, c, "scalar trace cycles diverged ({cfg:?})");
+            // the whole replay state — bank rows, in-flight window, clocks,
+            // every counter — must match, not just the headline number
+            assert_eq!(scalar.snapshot(), streamed.snapshot(), "{cfg:?}");
+            assert_eq!(scalar.snapshot(), trace_scalar.snapshot(), "{cfg:?}");
+        },
+    );
+}
+
+#[test]
+fn prop_streaming_survives_contiguous_runs_and_turnarounds() {
+    // adversarial shape for the coalesced kernel: long contiguous
+    // same-direction spans (bulk advance territory) interleaved with
+    // direction flips and short scattered bursts
+    prop_run("streaming on contiguous spans", Config::small(40), |g| {
+        let cfg = MemConfig {
+            max_outstanding: g.usize(2, 4),
+            ..MemConfig::default()
+        };
+        let mut txns = Vec::new();
+        let mut cursor = g.i64(0, 1000) as u64;
+        for _ in 0..g.usize(1, 10) {
+            match g.usize(0, 2) {
+                0 => {
+                    // a long contiguous read span, possibly split into
+                    // back-to-back transactions
+                    let pieces = g.usize(1, 3);
+                    for _ in 0..pieces {
+                        let len = g.i64(1, 1 << 16) as u64;
+                        txns.push(Txn {
+                            dir: Dir::Read,
+                            addr: cursor,
+                            len,
+                        });
+                        cursor += len;
+                    }
+                }
+                1 => {
+                    let len = g.i64(1, 64) as u64;
+                    txns.push(Txn {
+                        dir: Dir::Write,
+                        addr: g.i64(0, 1 << 20) as u64,
+                        len,
+                    });
+                }
+                _ => {
+                    cursor = g.i64(0, 1 << 20) as u64;
+                }
+            }
+        }
+        if txns.is_empty() {
+            return;
+        }
+        let trace = trace_of(&txns);
+        let mut scalar = MemSim::new(cfg.clone());
+        let mut streamed = MemSim::new(cfg.clone());
+        assert!(streamed.streaming_enabled());
+        scalar.run(&txns);
+        streamed.run_trace(&trace);
+        assert_eq!(scalar.snapshot(), streamed.snapshot());
+    });
+}
+
+#[test]
+fn session_trace_replay_matches_timing_mode_across_layouts() {
+    // the dse evaluator's exact shape: flat schedule, Mode::Timing
+    for layout in registry::global().names() {
+        let session = ExperimentSpec::builder()
+            .named("jacobi2d5p", vec![16, 16, 16], 3)
+            .layout(layout)
+            .schedule(ScheduleKind::Flat)
+            .compile()
+            .unwrap();
+        let direct = session.run(Mode::Timing).unwrap();
+        let trace = session.compile_trace();
+        assert_eq!(trace.transactions(), direct.transactions, "{layout}");
+        let replayed = session.run_trace(&trace).unwrap();
+        assert_eq!(replayed.timing, direct.timing, "{layout}");
+        assert_eq!(replayed.makespan_cycles, direct.makespan_cycles);
+        assert_eq!(replayed.raw_bytes, direct.raw_bytes);
+        assert_eq!(replayed.useful_bytes, direct.useful_bytes);
+        assert_eq!(
+            replayed.effective_mb_s.to_bits(),
+            direct.effective_mb_s.to_bits(),
+            "{layout}"
+        );
+    }
+}
+
+#[test]
+fn cache_hit_evaluates_bit_identically_to_cold_compile() {
+    // two mem variants of one geometry: the second evaluation hits the
+    // trace the first compiled; both must equal the uncached evaluator's
+    // results field for field (wall_secs is normalized, so full JSON
+    // equality is the strongest possible check)
+    let mut space = Space::builtin("tiny").unwrap();
+    space.mems.push(cfa::dse::MemVariant::new(
+        "narrow",
+        MemConfig {
+            max_outstanding: 4,
+            max_burst_beats: 64,
+            ..MemConfig::default()
+        },
+    ));
+    let reg = registry::global();
+    let points = space.enumerate(&reg).unwrap();
+    assert!(points.len() >= 16, "expected mem-variant pairs");
+    let cache = Arc::new(TraceCache::new());
+    let cached_ev = Evaluator::new(&space, reg.clone()).with_trace_cache(cache.clone());
+    let cold_ev = Evaluator::new(&space, reg.clone());
+    for p in points.points() {
+        let warm = cached_ev.evaluate(p).unwrap();
+        let cold = cold_ev.evaluate(p).unwrap();
+        assert_eq!(
+            warm.to_json().to_string_compact(),
+            cold.to_json().to_string_compact(),
+            "{}",
+            p.fingerprint()
+        );
+    }
+    // geometries = points / mem variants; every extra variant was a hit
+    assert_eq!(cache.len(), points.len() / space.mems.len());
+    assert!(cache.hits() > 0, "no trace reuse observed");
+    // evaluating the same point again is a pure cache hit
+    let before = cache.hits();
+    cached_ev.evaluate(&points.points()[0]).unwrap();
+    assert_eq!(cache.hits(), before + 1);
+}
+
+#[test]
+fn geometry_key_ignores_mem_and_pe_only() {
+    let space = Space::builtin("tiny").unwrap();
+    let reg = registry::global();
+    let points = space.enumerate(&reg).unwrap();
+    let p0 = &points.points()[0];
+    let deps = &space.workload(&p0.workload).unwrap().deps;
+    let space_box: Vec<i64> = p0.tile.iter().map(|t| t * space.tiles_per_dim).collect();
+    let k0 = geometry_key(p0, &space_box, deps);
+    let mut mem_variant = p0.clone();
+    mem_variant.mem = "other".into();
+    mem_variant.pe = 999;
+    assert_eq!(geometry_key(&mem_variant, &space_box, deps), k0);
+    let mut other_layout = p0.clone();
+    other_layout.layout = "something-else".into();
+    assert_ne!(geometry_key(&other_layout, &space_box, deps), k0);
+    let mut other_tile = p0.clone();
+    other_tile.tile[0] += 1;
+    assert_ne!(geometry_key(&other_tile, &space_box, deps), k0);
+    // a same-named workload with a different dependence pattern must not
+    // alias (caches may be shared across spaces)
+    let mut other_deps = deps.clone();
+    other_deps.push(vec![0, -2, 0]);
+    assert_ne!(geometry_key(p0, &space_box, &other_deps), k0);
+}
+
+#[test]
+fn tune_journal_bytes_identical_with_cache_on_and_off() {
+    // the PR's acceptance criterion, on the fig15-quick builtin
+    let space = || Space::builtin("fig15-quick").unwrap();
+    let on = tmp("cfa_trace_tune_on.jsonl");
+    let off = tmp("cfa_trace_tune_off.jsonl");
+    Explorer::new(space(), Box::new(Exhaustive::new()))
+        .parallel(2)
+        .trace_cache(true)
+        .journal(&on)
+        .explore()
+        .unwrap();
+    Explorer::new(space(), Box::new(Exhaustive::new()))
+        .trace_cache(false)
+        .journal(&off)
+        .explore()
+        .unwrap();
+    let on_bytes = std::fs::read(&on).unwrap();
+    let off_bytes = std::fs::read(&off).unwrap();
+    assert!(!on_bytes.is_empty());
+    assert_eq!(
+        on_bytes, off_bytes,
+        "trace cache changed journal bytes (fig15-quick)"
+    );
+    std::fs::remove_file(&on).ok();
+    std::fs::remove_file(&off).ok();
+}
+
+#[test]
+fn degenerate_space_configs_error_at_parse_time() {
+    let err = Space::parse(
+        r#"{"workloads": ["jacobi2d5p"],
+            "mem": [{"name": "zero-window", "max_outstanding": 0}]}"#,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("max_outstanding"), "{err}");
+}
