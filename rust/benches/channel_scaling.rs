@@ -1,0 +1,190 @@
+//! Multi-channel scaling: simulated effective MB/s and host replay
+//! throughput (bursts/s) vs channel count, for every striping policy.
+//!
+//! Run: `cargo bench --bench channel_scaling [-- --smoke] [-- --out PATH]`
+//!
+//! Every run first asserts the multi-channel identities **bit-identical**
+//! (channels=1 ≡ the single-port engine under each policy; pre-split
+//! parallel replay ≡ entry-wise submit, full per-channel snapshots), then
+//! sweeps channels × striping over one compiled session trace and records
+//! machine-readable results to `BENCH_channels.json` at the repo root
+//! (override with `--out`). `--smoke` runs check the rig, not the numbers:
+//! without an explicit `--out` they write `BENCH_channels.smoke.json`, so
+//! a CI smoke pass can never clobber real recorded results.
+
+use cfa::experiment::{ExperimentSpec, ScheduleKind};
+use cfa::memsim::{MemConfig, MemSim, MultiPortSim, Striping, Txn};
+use cfa::util::json::Json;
+use cfa::util::stats::{black_box, Bencher, Measurement};
+
+fn measurement_json(m: &Measurement) -> Json {
+    let mut fields = vec![
+        ("name", Json::str(m.name.clone())),
+        ("median_s", Json::num(m.summary.median)),
+        ("p05_s", Json::num(m.summary.p05)),
+        ("p95_s", Json::num(m.summary.p95)),
+        ("samples", Json::num(m.summary.n as f64)),
+    ];
+    if let Some(e) = m.elems_per_sec() {
+        fields.push(("elems_per_s", Json::num(e)));
+    }
+    if let Some(r) = m.runs_per_sec() {
+        fields.push(("bursts_per_s", Json::num(r)));
+    }
+    Json::obj(fields)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| {
+            if smoke {
+                concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_channels.smoke.json").to_string()
+            } else {
+                concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_channels.json").to_string()
+            }
+        });
+    let b = if smoke { Bencher::quick() } else { Bencher::default() };
+    let cfg = MemConfig::default();
+
+    // one compiled trace, shared by every (channels, striping) variant —
+    // exactly what the tune evaluator exploits (routing happens at replay)
+    let tile = vec![32i64, 32, 32];
+    let tiles_per_dim = if smoke { 3 } else { 4 };
+    let session = ExperimentSpec::builder()
+        .named("jacobi2d5p", tile.clone(), tiles_per_dim)
+        .schedule(ScheduleKind::Flat)
+        .mem(cfg.clone())
+        .compile()
+        .expect("compile session");
+    let trace = session.compile_trace();
+    let txns: Vec<Txn> = trace.txns();
+    let elems = trace.total_elems();
+    let useful = trace.useful_elems;
+    let stripings = [
+        Striping::Address { stripe_bytes: 4096 },
+        Striping::Facet,
+        Striping::Tile,
+    ];
+
+    // ---- identity gate, full replay state compared
+    let serial_snapshot = {
+        let mut s = MemSim::new(cfg.clone());
+        s.run_trace(&trace);
+        s.snapshot()
+    };
+    for striping in &stripings {
+        // channels=1 is the plain single-port engine, whatever the policy
+        let map = striping
+            .resolve(session.allocation(), cfg.elem_bytes, 1)
+            .expect("resolve striping");
+        let mut one = MultiPortSim::new(cfg.clone(), 1, map);
+        one.run_trace_parallel(&trace, 2);
+        assert_eq!(
+            one.channel_snapshots()[0],
+            serial_snapshot,
+            "channels=1 diverged from MemSim under {striping}"
+        );
+        // pre-split parallel replay == entry-wise submit, per channel
+        let map = striping
+            .resolve(session.allocation(), cfg.elem_bytes, 4)
+            .expect("resolve striping");
+        let mut by_txn = MultiPortSim::new(cfg.clone(), 4, map.clone());
+        for t in &txns {
+            by_txn.submit(t);
+        }
+        let mut pre_split = MultiPortSim::new(cfg.clone(), 4, map);
+        pre_split.run_trace_parallel(&trace, 4);
+        assert_eq!(
+            pre_split.channel_snapshots(),
+            by_txn.channel_snapshots(),
+            "pre-split replay diverged from entry-wise submit under {striping}"
+        );
+    }
+    println!("identity: multi-channel replay == single-port / entry-wise reference\n");
+
+    // ---- the sweep: simulated bandwidth and host replay throughput
+    let channel_counts = [1usize, 2, 4, 8];
+    let mut results: Vec<Measurement> = Vec::new();
+    let mut scaling: Vec<Json> = Vec::new();
+    println!(
+        "{:<10} {:>9} {:>14} {:>12} {:>10}",
+        "striping", "channels", "eff MB/s", "roofline", "imbalance"
+    );
+    for striping in &stripings {
+        for &channels in &channel_counts {
+            let map = striping
+                .resolve(session.allocation(), cfg.elem_bytes, channels)
+                .expect("resolve striping");
+            let mut mp = MultiPortSim::new(cfg.clone(), channels, map.clone());
+            mp.run_trace_parallel(&trace, channels);
+            let bw = mp.bandwidth(useful);
+            let eff_mb_s = bw.useful_bytes as f64 / 1e6 / cfg.secs(bw.cycles.max(1));
+            let imbalance = mp.imbalance();
+            let bursts = bw.bursts;
+            let roofline = cfg.peak_mb_s() * channels as f64;
+            println!(
+                "{:<10} {:>9} {:>14.1} {:>12.1} {:>10.3}",
+                striping.label(),
+                channels,
+                eff_mb_s,
+                roofline,
+                imbalance
+            );
+            scaling.push(Json::obj(vec![
+                ("striping", Json::str(striping.label())),
+                ("channels", Json::num(channels as f64)),
+                ("eff_mb_s", Json::num(eff_mb_s)),
+                ("roofline_mb_s", Json::num(roofline)),
+                ("imbalance", Json::num(imbalance)),
+                ("axi_bursts", Json::num(bursts as f64)),
+                ("makespan_cycles", Json::num(bw.cycles as f64)),
+            ]));
+            results.push(
+                b.bench(
+                    &format!("replay {} x{}", striping.label(), channels),
+                    || {
+                        let mut sim = MultiPortSim::new(cfg.clone(), channels, map.clone());
+                        black_box(sim.run_trace_parallel(&trace, channels));
+                    },
+                )
+                .with_work(elems, bursts),
+            );
+        }
+    }
+
+    println!("\nhost replay throughput:");
+    for m in &results {
+        println!("  {}", m.line());
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("channel_scaling")),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "workload",
+            Json::obj(vec![
+                ("benchmark", Json::str("jacobi2d5p")),
+                ("tile", Json::arr(tile.iter().map(|&x| Json::num(x as f64)))),
+                ("tiles_per_dim", Json::num(tiles_per_dim as f64)),
+                ("trace_elems", Json::num(elems as f64)),
+                ("peak_mb_s_per_channel", Json::num(cfg.peak_mb_s())),
+            ]),
+        ),
+        ("identity_asserted", Json::Bool(true)),
+        ("scaling", Json::arr(scaling.into_iter())),
+        (
+            "measurements",
+            Json::arr(results.iter().map(measurement_json)),
+        ),
+    ]);
+    match std::fs::write(&out_path, json.to_string_pretty()) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+}

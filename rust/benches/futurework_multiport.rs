@@ -63,7 +63,10 @@ fn main() {
         for ports in [1usize, 2, 4] {
             let map = match which {
                 0 => cfa_port_map(&cfa, ports),
-                _ => PortMap::Interleaved { stripe_bytes: 4096 },
+                // 4 KiB byte stripes, expressed in element units
+                _ => PortMap::Interleaved {
+                    stripe_elems: 4096 / mem.elem_bytes.max(1),
+                },
             };
             let mut sim = MultiPortSim::new(mem.clone(), ports, map);
             let (cycles, useful) = match which {

@@ -141,7 +141,10 @@ pub struct Evaluator<'a> {
 /// (mem, PE) variant of the same (workload + deps, space box, tile,
 /// layout) replays the identical stream. The dependence pattern is part
 /// of the key so that even caches shared across spaces whose same-named
-/// workloads carry different deps can never alias.
+/// workloads carry different deps can never alias. Channel count and
+/// striping are deliberately *not* part of the key: the compiled trace is
+/// routing-agnostic (splitting across channels happens at replay), so all
+/// channel/striping variants of a geometry share one compiled trace.
 pub fn geometry_key(p: &Point, space_box: &[i64], deps: &[IVec]) -> String {
     let fmt = |xs: &[i64]| {
         xs.iter()
@@ -200,6 +203,8 @@ impl<'a> Evaluator<'a> {
             .threads(1)
             .pe_ops_per_cycle(p.pe)
             .mem(mv.cfg.clone())
+            .channels(p.channels)
+            .striping(p.striping.clone())
             .registry(self.registry.clone())
             .compile()
             .with_context(|| format!("compiling {}", p.fingerprint()))?;

@@ -3,11 +3,13 @@
 //! A [`Space`] is the cross product of workloads (each with its own tile
 //! candidates), layouts (registry names; empty = every registered layout),
 //! memory-interface variants (named [`MemConfig`] overrides — burst width,
-//! element width, outstanding window, …) and modeled PE throughputs.
-//! [`Space::enumerate`] materializes the product in a deterministic
-//! nesting order (workload → tile → layout → mem → PE, the same order the
-//! figure sweeps use), together with the structured coordinates hill-climb
-//! neighborhoods are defined over.
+//! element width, outstanding window, …), channel counts × striping
+//! policies (the multi-channel "memory wall" axes) and modeled PE
+//! throughputs. [`Space::enumerate`] materializes the product in a
+//! deterministic nesting order (workload → tile → layout → mem →
+//! channels → striping → PE, the same order the figure sweeps use),
+//! together with the structured coordinates hill-climb neighborhoods are
+//! defined over.
 //!
 //! Spaces are either built programmatically ([`Space::fig15`],
 //! [`Space::area`], [`Space::builtin`]) or parsed from a JSON description
@@ -18,7 +20,7 @@ use std::collections::BTreeMap;
 
 use crate::harness::workloads::{self, Workload};
 use crate::layout::LayoutRegistry;
-use crate::memsim::MemConfig;
+use crate::memsim::{MemConfig, Striping};
 use crate::poly::vec::IVec;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
@@ -105,6 +107,11 @@ pub struct Space {
     /// Layout names (canonical or alias); empty = every registered layout.
     pub layouts: Vec<String>,
     pub mems: Vec<MemVariant>,
+    /// Memory channel counts to sweep (each >= 1; `[1]` = single-port).
+    pub channels: Vec<usize>,
+    /// Channel interleaving policies to sweep (paired with every channel
+    /// count; with `channels == [1]` the policy is inert).
+    pub stripings: Vec<Striping>,
     /// Modeled PE throughputs (ops/cycle) for the exec stage.
     pub pe: Vec<u64>,
 }
@@ -118,6 +125,10 @@ pub struct Point {
     pub layout: String,
     /// Memory-variant name (resolved against [`Space::mems`]).
     pub mem: String,
+    /// Memory channels (1 = the single-port [`crate::memsim::MemSim`]).
+    pub channels: usize,
+    /// Channel interleaving policy.
+    pub striping: Striping,
     pub pe: u64,
 }
 
@@ -132,11 +143,13 @@ impl Point {
     /// Stable identity of the point — the journal's dedup key.
     pub fn fingerprint(&self) -> String {
         format!(
-            "{}|t{}|{}|{}|pe{}",
+            "{}|t{}|{}|{}|c{}|{}|pe{}",
             self.workload,
             fmt_tile(&self.tile),
             self.layout,
             self.mem,
+            self.channels,
+            self.striping.label(),
             self.pe
         )
     }
@@ -150,6 +163,8 @@ impl Point {
             ),
             ("layout", Json::str(self.layout.clone())),
             ("mem", Json::str(self.mem.clone())),
+            ("channels", Json::num(self.channels as f64)),
+            ("striping", Json::str(self.striping.label())),
             ("pe", Json::num(self.pe as f64)),
         ])
     }
@@ -176,11 +191,24 @@ impl Point {
             .get("pe")
             .and_then(Json::as_f64)
             .ok_or_else(|| anyhow!("point json: missing number 'pe'"))? as u64;
+        // channels/striping default for journals written before the
+        // multi-channel axes existed (their points were all single-port)
+        let channels = match j.get("channels").and_then(Json::as_f64) {
+            Some(c) if c >= 1.0 => c as usize,
+            Some(c) => bail!("point json: channels must be >= 1, got {c}"),
+            None => 1,
+        };
+        let striping = match j.get("striping").and_then(Json::as_str) {
+            Some(s) => Striping::parse(s).map_err(|e| anyhow!("point json: {e}"))?,
+            None => Striping::default(),
+        };
         Ok(Point {
             workload: text("workload")?,
             tile,
             layout: text("layout")?,
             mem: text("mem")?,
+            channels,
+            striping,
             pe,
         })
     }
@@ -191,7 +219,8 @@ impl Point {
 #[derive(Clone, Debug)]
 pub struct Enumerated {
     points: Vec<Point>,
-    /// Flattened coordinates per point: `[workload, tile..., layout, mem, pe]`.
+    /// Flattened coordinates per point:
+    /// `[workload, tile..., layout, mem, channels, striping, pe]`.
     coords: Vec<Vec<usize>>,
     by_coords: BTreeMap<Vec<usize>, usize>,
 }
@@ -256,6 +285,24 @@ impl Space {
         if self.pe.is_empty() {
             bail!("space has no PE settings");
         }
+        if self.channels.is_empty() {
+            bail!("space has no channel counts (use [1] for a single port)");
+        }
+        if let Some(c) = self.channels.iter().find(|&&c| c == 0) {
+            bail!("space channel counts must be >= 1, got {c}");
+        }
+        if self.stripings.is_empty() {
+            bail!("space has no striping policies (use [\"address:4096\"])");
+        }
+        // an unaligned byte stripe cannot be honored against any variant's
+        // element size — reject the space at its front door
+        for s in &self.stripings {
+            for mv in &self.mems {
+                s.validate(mv.cfg.elem_bytes).map_err(|e| {
+                    anyhow!("space striping '{}' vs mem variant '{}': {e}", s.label(), mv.name)
+                })?;
+            }
+        }
         let layouts: Vec<String> = if self.layouts.is_empty() {
             registry.names().iter().map(|s| s.to_string()).collect()
         } else {
@@ -276,26 +323,34 @@ impl Space {
             for (tc, tile) in w.tiles.enumerate() {
                 for (li, layout) in layouts.iter().enumerate() {
                     for (mi, mv) in self.mems.iter().enumerate() {
-                        for (pi, &pe) in self.pe.iter().enumerate() {
-                            let point = Point {
-                                workload: w.name.clone(),
-                                tile: tile.clone(),
-                                layout: layout.clone(),
-                                mem: mv.name.clone(),
-                                pe,
-                            };
-                            if !seen.insert(point.fingerprint()) {
-                                continue;
+                        for (ci, &channels) in self.channels.iter().enumerate() {
+                            for (si, striping) in self.stripings.iter().enumerate() {
+                                for (pi, &pe) in self.pe.iter().enumerate() {
+                                    let point = Point {
+                                        workload: w.name.clone(),
+                                        tile: tile.clone(),
+                                        layout: layout.clone(),
+                                        mem: mv.name.clone(),
+                                        channels,
+                                        striping: striping.clone(),
+                                        pe,
+                                    };
+                                    if !seen.insert(point.fingerprint()) {
+                                        continue;
+                                    }
+                                    let mut c = Vec::with_capacity(tc.len() + 6);
+                                    c.push(wi);
+                                    c.extend_from_slice(&tc);
+                                    c.push(li);
+                                    c.push(mi);
+                                    c.push(ci);
+                                    c.push(si);
+                                    c.push(pi);
+                                    by_coords.insert(c.clone(), points.len());
+                                    coords.push(c);
+                                    points.push(point);
+                                }
                             }
-                            let mut c = Vec::with_capacity(tc.len() + 4);
-                            c.push(wi);
-                            c.extend_from_slice(&tc);
-                            c.push(li);
-                            c.push(mi);
-                            c.push(pi);
-                            by_coords.insert(c.clone(), points.len());
-                            coords.push(c);
-                            points.push(point);
                         }
                     }
                 }
@@ -323,6 +378,8 @@ impl Space {
             tiles_per_dim,
             layouts: Vec::new(),
             mems: vec![MemVariant::new("default", mem_cfg.clone())],
+            channels: vec![1],
+            stripings: vec![Striping::default()],
             pe: vec![64],
         }
     }
@@ -446,7 +503,7 @@ impl Space {
                 })
                 .collect::<Result<_>>()?,
         };
-        let mems = match j.get("mem").and_then(Json::as_arr) {
+        let mems: Vec<MemVariant> = match j.get("mem").and_then(Json::as_arr) {
             None => vec![MemVariant::paper_default()],
             Some(ms) => ms
                 .iter()
@@ -454,11 +511,61 @@ impl Space {
                 .map(|(i, m)| mem_variant_from_json(m, i))
                 .collect::<Result<_>>()?,
         };
+        let channels = match j.get("channels").and_then(Json::as_arr) {
+            None => vec![1],
+            Some(cs) => {
+                let mut out = Vec::new();
+                for c in cs {
+                    let n = c
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("space json: 'channels' entries must be numbers"))?;
+                    if n < 1.0 {
+                        bail!("space json: 'channels' entries must be >= 1, got {n}");
+                    }
+                    out.push(n as usize);
+                }
+                if out.is_empty() {
+                    bail!("space json: 'channels' is empty");
+                }
+                out
+            }
+        };
+        let stripings = match j.get("striping").and_then(Json::as_arr) {
+            None => vec![Striping::default()],
+            Some(ss) => {
+                let mut out = Vec::new();
+                for s in ss {
+                    let name = s
+                        .as_str()
+                        .ok_or_else(|| anyhow!("space json: 'striping' entries must be strings"))?;
+                    out.push(Striping::parse(name).map_err(|e| anyhow!("space json: {e}"))?);
+                }
+                if out.is_empty() {
+                    bail!("space json: 'striping' is empty");
+                }
+                out
+            }
+        };
+        // reject unaligned byte stripes at the parse front door, with the
+        // mem variant they collide with named in the error
+        for s in &stripings {
+            for mv in &mems {
+                s.validate(mv.cfg.elem_bytes).map_err(|e| {
+                    anyhow!(
+                        "space json: striping '{}' vs mem variant '{}': {e}",
+                        s.label(),
+                        mv.name
+                    )
+                })?;
+            }
+        }
         Ok(Space {
             workloads: sws,
             tiles_per_dim,
             layouts,
             mems,
+            channels,
+            stripings,
             pe,
         })
     }
@@ -529,6 +636,7 @@ fn mem_variant_from_json(j: &Json, idx: usize) -> Result<MemVariant> {
             "banks" => cfg.banks = num()? as u64,
             "max_outstanding" => cfg.max_outstanding = num()? as usize,
             "turnaround_cycles" => cfg.turnaround_cycles = num()? as u64,
+            "cmd_shared_cycles" => cfg.cmd_shared_cycles = num()? as u64,
             _ => bail!("space json: unknown mem field '{k}'"),
         }
     }
@@ -698,10 +806,108 @@ mod tests {
             tile: vec![16, 24, 16],
             layout: "cfa".into(),
             mem: "default".into(),
+            channels: 4,
+            striping: Striping::Facet,
             pe: 64,
         };
         let back = Point::from_json(&p.to_json()).unwrap();
         assert_eq!(back, p);
         assert_eq!(back.fingerprint(), p.fingerprint());
+        // journals written before the channel axes existed still parse,
+        // defaulting to the single-port interface they were measured on
+        let legacy = crate::util::json::parse(
+            r#"{"workload": "jacobi2d5p", "tile": [16, 24, 16],
+                "layout": "cfa", "mem": "default", "pe": 64}"#,
+        )
+        .unwrap();
+        let old = Point::from_json(&legacy).unwrap();
+        assert_eq!(old.channels, 1);
+        assert_eq!(old.striping, Striping::default());
+    }
+
+    #[test]
+    fn channel_axes_enumerate_and_neighbor_like_any_dimension() {
+        let mut space = Space::builtin("tiny").unwrap();
+        space.channels = vec![1, 4];
+        space.stripings = vec![
+            Striping::Address { stripe_bytes: 4096 },
+            Striping::Facet,
+        ];
+        let reg = LayoutRegistry::with_builtins();
+        let e = space.enumerate(&reg).unwrap();
+        assert_eq!(e.len(), 8 * 4, "tiny (8) x channels (2) x striping (2)");
+        let mut fps: Vec<String> = e.points().iter().map(Point::fingerprint).collect();
+        fps.sort();
+        fps.dedup();
+        assert_eq!(fps.len(), e.len(), "channel axes must not alias fingerprints");
+        // the first point's neighborhood now includes a channel step and a
+        // striping step (plus tile and layout as before)
+        let p0 = &e.points()[0];
+        assert_eq!((p0.channels, &p0.striping), (1, &space.stripings[0]));
+        let ns = e.neighbors(0);
+        assert_eq!(ns.len(), 4, "{ns:?}");
+        let channel_steps = ns
+            .iter()
+            .filter(|&&n| {
+                let p = &e.points()[n];
+                p.channels != p0.channels && p.striping == p0.striping && p.tile == p0.tile
+            })
+            .count();
+        let striping_steps = ns
+            .iter()
+            .filter(|&&n| {
+                let p = &e.points()[n];
+                p.striping != p0.striping && p.channels == p0.channels && p.tile == p0.tile
+            })
+            .count();
+        assert_eq!((channel_steps, striping_steps), (1, 1));
+    }
+
+    #[test]
+    fn unaligned_stripes_rejected_at_both_front_doors() {
+        // JSON parser
+        let err = Space::parse(
+            r#"{"workloads": ["jacobi2d5p"],
+                "channels": [2],
+                "striping": ["address:12"]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("stripe_bytes"), "{err}");
+        // programmatic spaces are caught at enumerate
+        let mut space = Space::builtin("tiny").unwrap();
+        space.stripings = vec![Striping::Address { stripe_bytes: 12 }];
+        let reg = LayoutRegistry::with_builtins();
+        let err = space.enumerate(&reg).unwrap_err().to_string();
+        assert!(err.contains("stripe_bytes"), "{err}");
+        // zero channels are equally structural errors
+        assert!(Space::parse(
+            r#"{"workloads": ["jacobi2d5p"], "channels": [0]}"#
+        )
+        .is_err());
+        let mut space = Space::builtin("tiny").unwrap();
+        space.channels = vec![0];
+        assert!(space.enumerate(&reg).is_err());
+    }
+
+    #[test]
+    fn channels_and_striping_parse_from_json_grammar() {
+        let space = Space::parse(
+            r#"{"workloads": ["jacobi2d5p"],
+                "channels": [1, 4],
+                "striping": ["address:4096", "facet", "tile"],
+                "mem": [{"name": "walled", "cmd_shared_cycles": 6}]}"#,
+        )
+        .unwrap();
+        assert_eq!(space.channels, vec![1, 4]);
+        assert_eq!(
+            space.stripings,
+            vec![
+                Striping::Address { stripe_bytes: 4096 },
+                Striping::Facet,
+                Striping::Tile
+            ]
+        );
+        assert_eq!(space.mems[0].cfg.cmd_shared_cycles, 6);
     }
 }

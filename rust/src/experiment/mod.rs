@@ -50,7 +50,7 @@ use crate::coordinator::HostMemory;
 use crate::harness::workloads;
 use crate::layout::registry::{self, LayoutRegistry};
 use crate::layout::{Allocation, PlanCache, PlanCacheState};
-use crate::memsim::{MemConfig, MemSim, Timing, TxnTrace};
+use crate::memsim::{MemConfig, MemSim, MultiPortSim, Striping, Timing, TxnTrace};
 use crate::poly::deps::DepPattern;
 use crate::poly::tiling::Tiling;
 use crate::poly::vec::IVec;
@@ -137,6 +137,13 @@ pub struct ExecSpec {
     pub pe_ops_per_cycle: u64,
     /// Artifacts directory for the PJRT end-to-end workloads.
     pub artifacts_dir: String,
+    /// Memory channels. 1 replays through the single-port [`MemSim`]
+    /// exactly as before; >1 routes timing replays through a
+    /// [`MultiPortSim`] of independent per-channel controllers.
+    pub channels: usize,
+    /// How element addresses interleave over channels (ignored when
+    /// `channels == 1`).
+    pub striping: Striping,
 }
 
 impl Default for ExecSpec {
@@ -146,6 +153,8 @@ impl Default for ExecSpec {
             threads: 1,
             pe_ops_per_cycle: 64,
             artifacts_dir: "artifacts".to_string(),
+            channels: 1,
+            striping: Striping::default(),
         }
     }
 }
@@ -296,6 +305,18 @@ impl ExperimentBuilder {
 
     pub fn artifacts_dir(mut self, dir: impl Into<String>) -> Self {
         self.exec.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Memory channels (>= 1; validated at compile).
+    pub fn channels(mut self, n: usize) -> Self {
+        self.exec.channels = n;
+        self
+    }
+
+    /// Channel interleaving policy (only meaningful with `channels > 1`).
+    pub fn striping(mut self, s: Striping) -> Self {
+        self.exec.striping = s;
         self
     }
 
@@ -530,6 +551,13 @@ impl Session {
         spec.mem
             .validate()
             .context("experiment spec has an invalid memory configuration")?;
+        if spec.exec.channels == 0 {
+            bail!("experiment spec needs at least one memory channel (channels >= 1)");
+        }
+        spec.exec
+            .striping
+            .validate(spec.mem.elem_bytes)
+            .context("experiment spec has an invalid striping")?;
         let (benchmark, tiling, deps) = resolve_workload(&spec.workload)?;
         let entry = registry.resolve_or_err(&spec.layout.name)?;
         let alloc = entry.build(&tiling, &deps)?;
@@ -653,18 +681,38 @@ impl Session {
             );
         }
         let wall0 = Instant::now();
-        let mut sim = MemSim::new(self.spec.mem.clone());
-        sim.run_trace(trace);
-        let rep = BatchReport {
+        let rep = self.replay_trace(trace)?;
+        Ok(self.report_from_batch("timing", &rep, wall0.elapsed().as_secs_f64()))
+    }
+
+    /// Replay a trace through the session's memory interface: the
+    /// single-port [`MemSim`] when `channels == 1` (bit-identical to the
+    /// pre-multichannel path), a [`MultiPortSim`] with the striping
+    /// resolved against this session's allocation otherwise (one routing
+    /// pass, then parallel per-channel replay).
+    fn replay_trace(&self, trace: &TxnTrace) -> Result<BatchReport> {
+        let exec = &self.spec.exec;
+        let (cycles, timing) = if exec.channels > 1 {
+            let map =
+                exec.striping
+                    .resolve(self.alloc.as_ref(), self.spec.mem.elem_bytes, exec.channels)?;
+            let mut mp = MultiPortSim::new(self.spec.mem.clone(), exec.channels, map);
+            mp.run_trace_parallel(trace, exec.threads);
+            (mp.now(), mp.aggregate_timing())
+        } else {
+            let mut sim = MemSim::new(self.spec.mem.clone());
+            sim.run_trace(trace);
+            (sim.now(), sim.timing().clone())
+        };
+        Ok(BatchReport {
             tiles: trace.tiles,
             waves: trace.waves,
-            cycles: sim.now(),
-            timing: sim.timing().clone(),
+            cycles,
+            timing,
             raw_elems: trace.raw_elems,
             useful_elems: trace.useful_elems,
             transactions: trace.transactions(),
-        };
-        Ok(self.report_from_batch("timing", &rep, wall0.elapsed().as_secs_f64()))
+        })
     }
 
     /// Execute the session. End-to-end workloads in `Mode::Data` open the
@@ -683,6 +731,16 @@ impl Session {
     /// [`Session::run`] against a caller-owned runtime (used by the CLI
     /// and the legacy driver shims, which open the runtime once).
     pub fn run_with_runtime(&self, rt: &Runtime, mode: Mode) -> Result<Report> {
+        if self.spec.workload.is_e2e()
+            && matches!(mode, Mode::Data { .. })
+            && self.spec.exec.channels > 1
+        {
+            bail!(
+                "Mode::Data drives the single-channel data path; a {}-channel session \
+                 supports Mode::Timing and Mode::Sweep",
+                self.spec.exec.channels
+            );
+        }
         match (&self.spec.workload, mode) {
             (WorkloadSpec::Stencil { .. }, Mode::Data { seed }) => e2e::run_stencil(self, rt, seed),
             (WorkloadSpec::Sw3 { .. }, Mode::Data { seed }) => e2e::run_sw3(self, rt, seed),
@@ -703,6 +761,13 @@ impl Session {
                  end-to-end workload through Session::run(Mode::Data) instead"
             );
         }
+        if self.spec.exec.channels > 1 {
+            bail!(
+                "Mode::Data drives the single-channel data path; a {}-channel session \
+                 supports Mode::Timing and Mode::Sweep",
+                self.spec.exec.channels
+            );
+        }
         if !self.schedule.is_dependence_safe() {
             bail!(
                 "Mode::Data needs a dependence-respecting schedule: compile the session \
@@ -717,10 +782,32 @@ impl Session {
 
     fn run_offline(&self, mode: Mode) -> Result<Report> {
         let wall0 = Instant::now();
+        let multi = self.spec.exec.channels > 1;
         match mode {
+            Mode::Timing if multi => {
+                // multi-channel timing goes through the compiled trace —
+                // the coordinator stays single-port and untouched
+                let trace = self.compile_trace();
+                let rep = self.replay_trace(&trace)?;
+                Ok(self.report_from_batch("timing", &rep, wall0.elapsed().as_secs_f64()))
+            }
             Mode::Timing => {
                 let rep = self.coordinator(&self.schedule).run_timing();
                 Ok(self.report_from_batch("timing", &rep, wall0.elapsed().as_secs_f64()))
+            }
+            Mode::Sweep if multi => {
+                // flat replay order regardless of the session schedule
+                let flat;
+                let schedule = if self.spec.exec.schedule == ScheduleKind::Flat {
+                    &self.schedule
+                } else {
+                    flat = Schedule::flat(&self.tiling);
+                    &flat
+                };
+                let cache = self.cache();
+                let trace = batch::compile_trace(&cache, schedule, self.spec.exec.threads);
+                let rep = self.replay_trace(&trace)?;
+                Ok(self.report_from_batch("sweep", &rep, wall0.elapsed().as_secs_f64()))
             }
             Mode::Sweep => {
                 // the memory-bound rig always replays flat, back-to-back
@@ -769,7 +856,8 @@ impl Session {
             transactions: rep.transactions,
             raw_mb_s: raw_bytes as f64 / 1e6 / secs,
             effective_mb_s: useful_bytes as f64 / 1e6 / secs,
-            peak_mb_s: mem.peak_mb_s(),
+            // the roofline of the whole interface: one bus per channel
+            peak_mb_s: mem.peak_mb_s() * self.spec.exec.channels.max(1) as f64,
             timing: Some(rep.timing.clone()),
             max_abs_err: None,
             wall_secs,
@@ -998,6 +1086,64 @@ mod tests {
         assert_eq!(back.raw_mb_s.to_bits(), rep.raw_mb_s.to_bits());
         assert_eq!(back.timing, rep.timing);
         assert_eq!(back.max_abs_err, rep.max_abs_err);
+    }
+
+    #[test]
+    fn invalid_striping_and_channels_rejected_at_compile() {
+        let err = ExperimentSpec::builder()
+            .named("jacobi2d5p", vec![8, 8, 8], 3)
+            .channels(2)
+            .striping(Striping::Address { stripe_bytes: 12 })
+            .compile()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("stripe_bytes"), "{err:#}");
+        let err = ExperimentSpec::builder()
+            .named("jacobi2d5p", vec![8, 8, 8], 3)
+            .channels(0)
+            .compile()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("channel"), "{err:#}");
+    }
+
+    #[test]
+    fn multichannel_timing_matches_trace_replay_for_every_striping() {
+        for striping in [
+            Striping::Address { stripe_bytes: 4096 },
+            Striping::Facet,
+            Striping::Tile,
+        ] {
+            let s = ExperimentSpec::builder()
+                .named("jacobi2d5p", vec![8, 8, 8], 3)
+                .schedule(ScheduleKind::Flat)
+                .channels(4)
+                .striping(striping.clone())
+                .compile()
+                .unwrap();
+            let direct = s.run(Mode::Timing).unwrap();
+            // the roofline is the whole interface: one bus per channel
+            assert!(
+                (direct.peak_mb_s - 4.0 * MemConfig::default().peak_mb_s()).abs() < 1e-9,
+                "{striping:?}"
+            );
+            let trace = s.compile_trace();
+            let replayed = s.run_trace(&trace).unwrap();
+            assert_eq!(replayed.makespan_cycles, direct.makespan_cycles, "{striping:?}");
+            assert_eq!(replayed.timing, direct.timing, "{striping:?}");
+            assert_eq!(replayed.raw_bytes, direct.raw_bytes);
+            assert_eq!(replayed.transactions, direct.transactions);
+        }
+    }
+
+    #[test]
+    fn data_mode_refuses_multichannel_sessions() {
+        let s = ExperimentSpec::builder()
+            .named("jacobi2d5p", vec![8, 8, 8], 3)
+            .schedule(ScheduleKind::Wavefront)
+            .channels(2)
+            .compile()
+            .unwrap();
+        let err = s.run(Mode::Data { seed: 1 }).unwrap_err().to_string();
+        assert!(err.contains("single-channel"), "{err}");
     }
 
     #[test]

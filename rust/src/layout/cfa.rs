@@ -375,6 +375,12 @@ impl Allocation for Cfa {
         self.total
     }
 
+    fn regions(&self) -> Vec<(u64, u64)> {
+        // one contiguous region per facet array — the natural channel
+        // repartition the paper's §VII anticipates
+        self.facets.iter().map(|f| (f.base, f.size())).collect()
+    }
+
     fn num_arrays(&self) -> usize {
         self.facets.len()
     }

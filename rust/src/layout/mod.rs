@@ -125,6 +125,16 @@ pub trait Allocation: Send + Sync {
     /// Total off-chip storage, in elements.
     fn footprint(&self) -> u64;
 
+    /// Contiguous storage regions as ascending `(base element address,
+    /// elements)` pairs covering the footprint. Multi-channel striping
+    /// policies ([`Striping::Facet`](crate::memsim::Striping) /
+    /// [`Striping::Tile`](crate::memsim::Striping)) partition these over
+    /// channels; the default is one region spanning the whole allocation,
+    /// and CFA overrides it with one region per facet array.
+    fn regions(&self) -> Vec<(u64, u64)> {
+        vec![(0, self.footprint())]
+    }
+
     /// Number of internal arrays (CFA: one facet array per active axis).
     fn num_arrays(&self) -> usize;
 

@@ -20,7 +20,7 @@ use cfa::experiment::{ExperimentSpec, Mode, Session};
 use cfa::harness::{figures, workloads};
 use cfa::layout::cfa::Cfa;
 use cfa::layout::registry;
-use cfa::memsim::MemConfig;
+use cfa::memsim::{MemConfig, Striping};
 use cfa::poly::deps::DepPattern;
 use cfa::poly::tiling::Tiling;
 use cfa::runtime::Runtime;
@@ -57,9 +57,10 @@ fn print_help() {
          \x20 list                 print the Table I benchmark registry\n\
          \x20 layouts              print the layout registry (canonical names + aliases)\n\
          \x20 plan                 show layout + burst plan (--benchmark, --tile, --alloc)\n\
-         \x20 run                  end-to-end verified run (--benchmark, --alloc, --parallel N, ...)\n\
+         \x20 run                  end-to-end verified run (--benchmark, --alloc, --channels N, --striping P, --parallel N, ...)\n\
          \x20 bench                figure sweeps (--figure fig15|fig16|fig17, --quick, --parallel N, --json PATH)\n\
-         \x20 tune                 design-space exploration (--space, --strategy, --budget, --parallel, --out, --resume, --trace-cache)\n\
+         \x20 tune                 design-space exploration (--space, --strategy, --budget, --parallel,\n\
+         \x20                      --channels LIST, --striping LIST, --out, --resume, --trace-cache)\n\
          \x20 codegen              emit HLS C (--benchmark, --tile)\n\n\
          layouts are named through the open registry (`cfa layouts`); every\n\
          --alloc option accepts a canonical name, an alias, or 'all'.\n"
@@ -193,12 +194,16 @@ fn run_session(
     steps_override: Option<i64>,
     parallel: usize,
     mem: &MemConfig,
+    channels: usize,
+    striping: &Striping,
 ) -> anyhow::Result<(Session, u64)> {
     let builder = ExperimentSpec::builder()
         .layout(layout)
         .threads(parallel)
         .pe_ops_per_cycle(64)
-        .mem(mem.clone());
+        .mem(mem.clone())
+        .channels(channels)
+        .striping(striping.clone());
     Ok(match bench {
         "sw3" | "smith-waterman-3seq" => {
             let artifact = "sw3_t16x16x16";
@@ -241,7 +246,9 @@ fn cmd_run() -> anyhow::Result<()> {
         .opt("artifacts", "artifacts directory", Some("artifacts"))
         .opt("n", "grid rows (stencils) / seq len (sw3)", None)
         .opt("steps", "time steps (stencils)", None)
-        .opt("parallel", "worker threads for burst planning", Some("1"));
+        .opt("parallel", "worker threads for burst planning", Some("1"))
+        .opt("channels", "memory channels (>1 runs the timing model, no data verify)", Some("1"))
+        .opt("striping", "channel striping: address[:BYTES] | facet | tile", Some("address:4096"));
     let a = cmd.parse(&env_args(1)).map_err(anyhow::Error::msg)?;
     let parallel = a.get_usize("parallel", 1).map_err(anyhow::Error::msg)?;
     let rt = Runtime::open(a.get_or("artifacts", "artifacts"))?;
@@ -266,6 +273,11 @@ fn cmd_run() -> anyhow::Result<()> {
         Some(v) => Some(v.parse().map_err(|_| anyhow::anyhow!("bad --steps"))?),
         None => None,
     };
+    let channels = a.get_usize("channels", 1).map_err(anyhow::Error::msg)?;
+    let striping = Striping::parse(a.get_or("striping", "address:4096"))?;
+    striping
+        .validate(mem.elem_bytes)
+        .map_err(|e| anyhow::anyhow!("--striping: {e}"))?;
     let bench = a.get_or("benchmark", "jacobi2d5p").to_string();
     for layout in layouts {
         let (session, seed) = run_session(
@@ -276,8 +288,16 @@ fn cmd_run() -> anyhow::Result<()> {
             steps_override,
             parallel,
             &mem,
+            channels,
+            &striping,
         )?;
-        let report = session.run_with_runtime(&rt, Mode::Data { seed })?;
+        // the data path drives a single memory interface; multi-channel
+        // sessions report the timing model instead of verifying data
+        let report = if channels > 1 {
+            session.run(Mode::Timing)?
+        } else {
+            session.run_with_runtime(&rt, Mode::Data { seed })?
+        };
         println!("{}", report.summary());
         if report.max_abs_err.unwrap_or(0.0) > 1e-4 {
             anyhow::bail!(
@@ -286,7 +306,11 @@ fn cmd_run() -> anyhow::Result<()> {
             );
         }
     }
-    println!("verification: OK");
+    if channels > 1 {
+        println!("timing-only run ({channels} channels, {striping} striping): data verify skipped");
+    } else {
+        println!("verification: OK");
+    }
     Ok(())
 }
 
@@ -349,13 +373,23 @@ fn cmd_tune() -> anyhow::Result<()> {
         .opt("out", "JSONL results journal path", Some("tune.jsonl"))
         .opt("resume", "journal to resume from (skips evaluated points)", None)
         .opt(
+            "channels",
+            "override the space's channel axis, comma-separated (e.g. 1,4)",
+            None,
+        )
+        .opt(
+            "striping",
+            "override the space's striping axis, comma-separated (address[:BYTES] | facet | tile)",
+            None,
+        )
+        .opt(
             "trace-cache",
             "reuse compiled txn traces across mem/PE variants (on | off; results identical)",
             Some("on"),
         );
     let a = cmd.parse(&env_args(1)).map_err(anyhow::Error::msg)?;
     let space_arg = a.get_or("space", "fig15-quick");
-    let space = match Space::builtin(space_arg) {
+    let mut space = match Space::builtin(space_arg) {
         Some(s) => s,
         None => {
             let text = std::fs::read_to_string(space_arg).map_err(|e| {
@@ -366,6 +400,36 @@ fn cmd_tune() -> anyhow::Result<()> {
             Space::parse(&text)?
         }
     };
+    if let Some(list) = a.get("channels") {
+        let mut channels = Vec::new();
+        for part in list.split(',') {
+            let n: usize = part
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--channels: '{part}' is not a channel count"))?;
+            if n == 0 {
+                anyhow::bail!("--channels entries must be >= 1");
+            }
+            channels.push(n);
+        }
+        space.channels = channels;
+    }
+    if let Some(list) = a.get("striping") {
+        let mut stripings = Vec::new();
+        for part in list.split(',') {
+            stripings.push(Striping::parse(part.trim()).map_err(|e| anyhow::anyhow!("--striping: {e}"))?);
+        }
+        space.stripings = stripings;
+    }
+    // CLI front door: reject invalid striping x element-width combinations
+    // here, with the flag named, rather than deep in enumeration
+    for s in &space.stripings {
+        for mv in &space.mems {
+            s.validate(mv.cfg.elem_bytes).map_err(|e| {
+                anyhow::anyhow!("--striping '{}' vs mem variant '{}': {e}", s.label(), mv.name)
+            })?;
+        }
+    }
     let seed = a.get_usize("seed", 0).map_err(anyhow::Error::msg)? as u64;
     let strategy: Box<dyn Strategy> = match a.get_or("strategy", "exhaustive") {
         "exhaustive" => Box::new(Exhaustive::new()),

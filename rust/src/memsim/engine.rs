@@ -34,6 +34,25 @@ pub struct Timing {
     pub turnarounds: u64,
 }
 
+impl Timing {
+    /// Cross-channel aggregate of independent controllers: counters sum,
+    /// `cycles` is the max (channels run concurrently, so the makespan is
+    /// the slowest one's clock).
+    pub fn merge<'a>(parts: impl IntoIterator<Item = &'a Timing>) -> Timing {
+        let mut out = Timing::default();
+        for t in parts {
+            out.cycles = out.cycles.max(t.cycles);
+            out.data_cycles += t.data_cycles;
+            out.axi_bursts += t.axi_bursts;
+            out.row_hits += t.row_hits;
+            out.row_misses += t.row_misses;
+            out.row_switches += t.row_switches;
+            out.turnarounds += t.turnarounds;
+        }
+        out
+    }
+}
+
 /// **Replay-time** state of the memory interface: DRAM bank rows, the
 /// in-flight window, resource clocks and the running counters.
 ///

@@ -22,7 +22,7 @@ pub mod multiport;
 pub mod trace;
 
 pub use engine::{MemSim, ReplayState, Timing};
-pub use multiport::{cfa_port_map, MultiPortSim, PortMap};
+pub use multiport::{cfa_port_map, MultiPortSim, PortMap, Striping};
 pub use trace::{TraceCache, TxnTrace};
 
 /// Transfer direction.
@@ -73,6 +73,13 @@ pub struct MemConfig {
     pub max_outstanding: usize,
     /// Bus turnaround penalty when switching read<->write.
     pub turnaround_cycles: u64,
+    /// Shared-command-path contention (multi-channel interfaces only):
+    /// every channel beyond the first adds this many cycles to each
+    /// burst's address phase, modeling the arbitration the channels'
+    /// common command path serializes — the "memory controller wall"
+    /// effect that keeps N channels from buying N× bandwidth. A
+    /// single-channel interface ignores it entirely.
+    pub cmd_shared_cycles: u64,
 }
 
 impl Default for MemConfig {
@@ -90,6 +97,7 @@ impl Default for MemConfig {
             banks: 8,
             max_outstanding: 2,
             turnaround_cycles: 7,
+            cmd_shared_cycles: 0,
         }
     }
 }

@@ -1,66 +1,294 @@
-//! Multi-port memory extension (§VII future work): "the machine model we
-//! have considered may be extended to multi-port memory accesses, such as
-//! high-bandwidth memory … one has to find an adequate repartition of data
-//! over each memory port to balance accesses."
+//! Multi-channel "memory wall" model (§VII future work): "the machine
+//! model we have considered may be extended to multi-port memory accesses,
+//! such as high-bandwidth memory … one has to find an adequate repartition
+//! of data over each memory port to balance accesses."
 //!
-//! [`MultiPortSim`] aggregates N independent AXI channels (each its own
-//! [`MemSim`]); a [`PortMap`] decides which channel serves each
-//! transaction:
+//! [`MultiPortSim`] aggregates N channels, each a full independent
+//! [`MemSim`] controller with its own open rows, in-flight window,
+//! turnaround state and clocks. Two knobs decide what N channels buy:
 //!
-//! * [`PortMap::Interleaved`] — address-striped at a fixed granularity
-//!   (what a memory controller does to an unmodified layout);
-//! * [`PortMap::ByRange`] — explicit address ranges per port. CFA's facet
-//!   arrays are contiguous and independent, so mapping *one facet array
-//!   per port* is the natural balanced repartition the paper anticipates —
-//!   reads and writes of different facets then proceed concurrently.
+//! * a [`PortMap`] routes each element run to a channel, derived from a
+//!   first-class [`Striping`] policy —
+//!   [`Striping::Address`] (fixed-granularity address interleave, what a
+//!   controller does to an unmodified layout), [`Striping::Facet`] (one
+//!   contiguous allocation region — for CFA, one facet array — per
+//!   channel, the balanced repartition the paper anticipates) and
+//!   [`Striping::Tile`] (per-tile chunks of every region round-robined
+//!   across channels);
+//! * [`MemConfig::cmd_shared_cycles`] models the *shared command path*:
+//!   each extra channel adds that many arbitration cycles to every
+//!   burst's address phase, so bandwidth stops scaling linearly — the
+//!   "memory controller wall" effect.
+//!
+//! Compiled [`TxnTrace`]s replay across channels in parallel: one routing
+//! pass pre-splits the SoA columns into per-channel sub-traces
+//! ([`MultiPortSim::split_trace`]), then
+//! [`parallel_map`](crate::util::par::parallel_map) replays each through
+//! its channel's coalesced kernel — bit-identical to entry-wise
+//! [`MultiPortSim::submit`] (pinned by `tests/multichannel.rs`).
+//!
+//! Stripes are defined in **element units** end-to-end: splitting and
+//! routing use the same granularity, so a run chunk never straddles a
+//! stripe it wasn't charged to. [`Striping::validate`] rejects byte
+//! stripes that don't fall on element boundaries at every front door.
 
-use crate::memsim::{MemConfig, MemSim, Timing, Txn, TxnTrace};
+use crate::memsim::{Bandwidth, MemConfig, MemSim, ReplayState, Timing, Txn, TxnTrace};
+use crate::util::par::parallel_map;
+use anyhow::bail;
 
-/// Transaction-to-port routing policy.
-#[derive(Clone, Debug)]
+/// Interleaving policy: how element addresses spread over channels.
+///
+/// `Facet` and `Tile` are computed from the *allocation* (via
+/// [`Striping::resolve`]), generalizing [`cfa_port_map`] to every
+/// registered layout: any allocation exposes its contiguous storage
+/// regions through [`Allocation::regions`](crate::layout::Allocation::regions).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Striping {
+    /// Fixed-granularity address interleave: stripe `s` lives on channel
+    /// `s % channels`. `stripe_bytes` must be a positive multiple of the
+    /// element size.
+    Address { stripe_bytes: u64 },
+    /// One allocation region (CFA: one facet array) per channel;
+    /// consecutive regions share a channel when there are more regions
+    /// than channels, and surplus channels stay idle (disengaged).
+    Facet,
+    /// Per-tile chunks of each allocation region round-robined across
+    /// channels: tile `t` of a region lives on channel `t % channels`.
+    Tile,
+}
+
+impl Default for Striping {
+    fn default() -> Striping {
+        Striping::Address { stripe_bytes: 4096 }
+    }
+}
+
+impl Striping {
+    /// Parse `"address[:BYTES]"` (alias `"addr"`; default 4096), `"facet"`
+    /// or `"tile"`.
+    pub fn parse(s: &str) -> anyhow::Result<Striping> {
+        let s = s.trim();
+        match s {
+            "facet" => Ok(Striping::Facet),
+            "tile" => Ok(Striping::Tile),
+            _ => {
+                let rest = s
+                    .strip_prefix("address")
+                    .or_else(|| s.strip_prefix("addr"))
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown striping '{s}' (expected address[:BYTES], facet or tile)"
+                        )
+                    })?;
+                // bare "address" defaults to 4096; "address:N" and the
+                // label form "addrN" both name an explicit stripe
+                let stripe_bytes = if rest.is_empty() {
+                    4096
+                } else {
+                    let n = rest.strip_prefix(':').unwrap_or(rest).trim();
+                    n.parse::<u64>().map_err(|_| {
+                        anyhow::anyhow!("striping '{s}': '{n}' is not a byte count")
+                    })?
+                };
+                Ok(Striping::Address { stripe_bytes })
+            }
+        }
+    }
+
+    /// Short stable label (fingerprints, journals, reports).
+    pub fn label(&self) -> String {
+        match self {
+            Striping::Address { stripe_bytes } => format!("addr{stripe_bytes}"),
+            Striping::Facet => "facet".into(),
+            Striping::Tile => "tile".into(),
+        }
+    }
+
+    /// Reject stripes that don't fall on element boundaries. Splitting
+    /// and routing both work in element units, so a byte stripe that is
+    /// not a multiple of `elem_bytes` cannot be honored exactly — it is
+    /// an error at every front door (space parser, CLI, `compile`), not a
+    /// silently rounded approximation.
+    pub fn validate(&self, elem_bytes: u64) -> anyhow::Result<()> {
+        if let Striping::Address { stripe_bytes } = self {
+            if *stripe_bytes == 0 {
+                bail!("striping stripe_bytes must be nonzero");
+            }
+            if elem_bytes > 0 && stripe_bytes % elem_bytes != 0 {
+                bail!(
+                    "striping stripe_bytes ({stripe_bytes}) must be a multiple of \
+                     elem_bytes ({elem_bytes}) so stripes fall on element boundaries"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Concretize the policy into a [`PortMap`] for one allocation.
+    pub fn resolve(
+        &self,
+        alloc: &dyn crate::layout::Allocation,
+        elem_bytes: u64,
+        channels: usize,
+    ) -> anyhow::Result<PortMap> {
+        self.validate(elem_bytes)?;
+        Ok(match self {
+            Striping::Address { stripe_bytes } => PortMap::Interleaved {
+                stripe_elems: (stripe_bytes / elem_bytes.max(1)).max(1),
+            },
+            Striping::Facet => {
+                let bases: Vec<u64> = alloc.regions().iter().map(|&(b, _)| b).collect();
+                PortMap::by_regions(&bases, channels)
+            }
+            Striping::Tile => {
+                let tiles = alloc.tiling().num_tiles().max(1);
+                let regions = alloc
+                    .regions()
+                    .iter()
+                    .map(|&(base, elems)| (base, (elems / tiles).max(1)))
+                    .collect();
+                PortMap::TileStriped { regions }
+            }
+        })
+    }
+}
+
+impl std::fmt::Display for Striping {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// Transaction-to-port routing, in **element units** end-to-end: the same
+/// granularity splits runs ([`PortMap::span_of`]) and routes the pieces
+/// ([`PortMap::port_of`]), so every beat of a chunk is charged to the
+/// channel that serves it.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum PortMap {
-    /// `port = (byte_addr / stripe_bytes) % ports`.
-    Interleaved { stripe_bytes: u64 },
-    /// Half-open element-address ranges, one entry per port boundary:
-    /// port p serves addresses in `[bounds[p], bounds[p+1])`; the last
-    /// port serves everything above `bounds[ports-1]`.
+    /// `port = (elem_addr / stripe_elems) % ports`.
+    Interleaved { stripe_elems: u64 },
+    /// Half-open element-address ranges: port `p` serves
+    /// `[bounds[p], bounds[p+1])`, the last bound extending to infinity.
+    /// Bounds are **strictly increasing**; when a map engages fewer
+    /// ranges than the interface has channels, trailing channels are
+    /// disengaged (no traffic, excluded from [`MultiPortSim::imbalance`]).
     ByRange { bounds: Vec<u64> },
+    /// Ascending `(base, chunk_elems)` regions; within the region starting
+    /// at `base`, chunk `c = (addr - base) / chunk_elems` lives on port
+    /// `c % ports`. The last region extends to infinity.
+    TileStriped { regions: Vec<(u64, u64)> },
 }
 
 impl PortMap {
+    /// Range map with one region per port, consecutive regions sharing a
+    /// port when `bases.len() > ports`. Effective ports are clamped to
+    /// the region count so the bounds are strictly increasing — trailing
+    /// ports of a wider interface simply stay disengaged (the
+    /// `ports > facets` duplicate-bounds bug made the last region's
+    /// routing depend on `binary_search`'s unspecified choice).
+    pub fn by_regions(bases: &[u64], ports: usize) -> PortMap {
+        assert!(!bases.is_empty(), "by_regions needs at least one region");
+        assert!(ports >= 1);
+        let eff0 = ports.min(bases.len());
+        let per = bases.len().div_ceil(eff0);
+        // recompute: len=4, ports=3 gives per=2 and only 2 engaged ports
+        let eff = bases.len().div_ceil(per);
+        let bounds = (0..eff)
+            .map(|p| if p == 0 { 0 } else { bases[p * per] })
+            .collect();
+        PortMap::ByRange { bounds }
+    }
+
     /// Port index for an element address.
-    pub fn port_of(&self, addr: u64, elem_bytes: u64, ports: usize) -> usize {
+    pub fn port_of(&self, addr: u64, ports: usize) -> usize {
         match self {
-            PortMap::Interleaved { stripe_bytes } => {
-                ((addr * elem_bytes / (*stripe_bytes).max(1)) % ports as u64) as usize
+            PortMap::Interleaved { stripe_elems } => {
+                ((addr / (*stripe_elems).max(1)) % ports as u64) as usize
             }
             PortMap::ByRange { bounds } => {
-                debug_assert_eq!(bounds.len(), ports);
+                let last = bounds.len().min(ports).max(1) - 1;
                 match bounds.binary_search(&addr) {
-                    Ok(i) => i.min(ports - 1),
+                    Ok(i) => i.min(last),
                     Err(0) => 0,
-                    Err(i) => (i - 1).min(ports - 1),
+                    Err(i) => (i - 1).min(last),
+                }
+            }
+            PortMap::TileStriped { regions } => {
+                let (base, chunk) = Self::region_of(regions, addr);
+                ((addr.saturating_sub(base) / chunk.max(1)) % ports as u64) as usize
+            }
+        }
+    }
+
+    /// Longest contiguous element span starting at `addr` that stays on
+    /// one port (the split granularity of [`MultiPortSim::submit`]).
+    /// Always >= 1.
+    pub fn span_of(&self, addr: u64) -> u64 {
+        match self {
+            PortMap::Interleaved { stripe_elems } => {
+                let s = (*stripe_elems).max(1);
+                s - addr % s
+            }
+            PortMap::ByRange { bounds } => match bounds.iter().find(|&&b| b > addr) {
+                Some(next) => next - addr,
+                None => u64::MAX,
+            },
+            PortMap::TileStriped { regions } => {
+                let (base, chunk) = Self::region_of(regions, addr);
+                let chunk = chunk.max(1);
+                let off = addr.saturating_sub(base);
+                let in_chunk = chunk - off % chunk;
+                match regions.iter().find(|&&(b, _)| b > addr) {
+                    Some(&(next, _)) => in_chunk.min(next - addr),
+                    None => in_chunk,
                 }
             }
         }
     }
+
+    /// Channels this map can ever route to, out of `ports`. Address and
+    /// tile striping engage every channel; a range map engages one per
+    /// bound.
+    pub fn engaged(&self, ports: usize) -> usize {
+        match self {
+            PortMap::ByRange { bounds } => bounds.len().min(ports).max(1),
+            _ => ports,
+        }
+    }
+
+    fn region_of(regions: &[(u64, u64)], addr: u64) -> (u64, u64) {
+        let i = regions.partition_point(|&(b, _)| b <= addr);
+        regions[i.saturating_sub(1).min(regions.len() - 1)]
+    }
 }
 
-/// N-channel memory interface.
+/// N-channel memory interface: independent per-channel controllers behind
+/// one routing map, with the shared-command-path contention of
+/// [`MemConfig::cmd_shared_cycles`] folded into each channel's issue cost.
 pub struct MultiPortSim {
     channels: Vec<MemSim>,
     map: PortMap,
     elem_bytes: u64,
+    submitted_elems: u64,
 }
 
 impl MultiPortSim {
+    /// `ports` channels of `cfg`. Each channel's address phase pays
+    /// `cmd_shared_cycles` extra per additional channel (the shared
+    /// command path serializes that much arbitration work per burst); a
+    /// single-port interface is exactly [`MemSim`], whatever the knob.
+    /// The adjustment happens **before** [`MemSim::new`] so the streaming
+    /// kernel's closed form derives from the effective config.
     pub fn new(cfg: MemConfig, ports: usize, map: PortMap) -> MultiPortSim {
-        assert!(ports >= 1);
+        assert!(ports >= 1, "a memory interface needs at least one port");
         let elem_bytes = cfg.elem_bytes;
+        let mut chan_cfg = cfg;
+        chan_cfg.issue_cycles += chan_cfg.cmd_shared_cycles * (ports as u64 - 1);
         MultiPortSim {
-            channels: (0..ports).map(|_| MemSim::new(cfg.clone())).collect(),
+            channels: (0..ports).map(|_| MemSim::new(chan_cfg.clone())).collect(),
             map,
             elem_bytes,
+            submitted_elems: 0,
         }
     }
 
@@ -68,46 +296,86 @@ impl MultiPortSim {
         self.channels.len()
     }
 
-    /// Submit a transaction; interleaved maps may split it across ports.
+    pub fn map(&self) -> &PortMap {
+        &self.map
+    }
+
+    /// Submit a transaction, splitting it at port boundaries
+    /// ([`PortMap::span_of`]) so every piece lands whole on the channel
+    /// that serves it. A single-port interface forwards unsplit.
     pub fn submit(&mut self, txn: &Txn) {
+        self.submitted_elems += txn.len;
         let ports = self.channels.len();
         if ports == 1 {
             self.channels[0].submit(txn);
             return;
         }
-        match &self.map {
-            PortMap::ByRange { .. } => {
-                let p = self.map.port_of(txn.addr, self.elem_bytes, ports);
-                self.channels[p].submit(txn);
-            }
-            PortMap::Interleaved { stripe_bytes } => {
-                // split the run at stripe boundaries; each piece goes to
-                // its stripe's port.
-                let stripe_elems = (stripe_bytes / self.elem_bytes).max(1);
-                let mut addr = txn.addr;
-                let mut remaining = txn.len;
-                while remaining > 0 {
-                    let in_stripe = stripe_elems - (addr % stripe_elems);
-                    let chunk = remaining.min(in_stripe);
-                    let p = self.map.port_of(addr, self.elem_bytes, ports);
-                    self.channels[p].submit(&Txn {
-                        dir: txn.dir,
-                        addr,
-                        len: chunk,
-                    });
-                    addr += chunk;
-                    remaining -= chunk;
-                }
-            }
+        let mut addr = txn.addr;
+        let mut remaining = txn.len;
+        while remaining > 0 {
+            let chunk = remaining.min(self.map.span_of(addr));
+            let p = self.map.port_of(addr, ports);
+            self.channels[p].submit(&Txn {
+                dir: txn.dir,
+                addr,
+                len: chunk,
+            });
+            addr += chunk;
+            remaining -= chunk;
         }
     }
 
-    /// Replay a compiled [`TxnTrace`] through the port map, entry by entry
-    /// (no `Txn` list materialized). Returns the completion time.
+    /// Route a compiled trace into per-channel sub-traces in one pass
+    /// over the SoA columns — the same split [`MultiPortSim::submit`]
+    /// performs, so replaying sub-trace `p` through channel `p` is
+    /// bit-identical to entry-wise submission (order within a channel is
+    /// preserved; cross-channel order is irrelevant, the controllers are
+    /// independent).
+    pub fn split_trace(&self, trace: &TxnTrace) -> Vec<TxnTrace> {
+        let ports = self.channels.len();
+        let mut subs: Vec<TxnTrace> = (0..ports)
+            .map(|_| TxnTrace::with_capacity(trace.len() / ports + 1))
+            .collect();
+        for (dir, mut addr, mut remaining) in trace.iter() {
+            if ports == 1 {
+                subs[0].push(dir, addr, remaining);
+                continue;
+            }
+            while remaining > 0 {
+                let chunk = remaining.min(self.map.span_of(addr));
+                subs[self.map.port_of(addr, ports)].push(dir, addr, chunk);
+                addr += chunk;
+                remaining -= chunk;
+            }
+        }
+        subs
+    }
+
+    /// Replay a compiled [`TxnTrace`] entry by entry (the scalar
+    /// reference path). Returns the completion time.
     pub fn run_trace(&mut self, trace: &TxnTrace) -> u64 {
         for (dir, addr, len) in trace.iter() {
             self.submit(&Txn { dir, addr, len });
         }
+        self.now()
+    }
+
+    /// Replay a compiled trace with one routing pass and `threads`-way
+    /// parallel per-channel replay (each sub-trace takes its channel's
+    /// coalesced streaming kernel). Bit-identical to [`run_trace`]
+    /// (`tests/multichannel.rs` pins the full per-channel `ReplayState`).
+    ///
+    /// [`run_trace`]: MultiPortSim::run_trace
+    pub fn run_trace_parallel(&mut self, trace: &TxnTrace, threads: usize) -> u64 {
+        self.submitted_elems += trace.total_elems();
+        let subs = self.split_trace(trace);
+        let items: Vec<(MemSim, TxnTrace)> =
+            std::mem::take(&mut self.channels).into_iter().zip(subs).collect();
+        self.channels = parallel_map(&items, threads, |(sim, sub)| {
+            let mut sim = sim.clone();
+            sim.run_trace(sub);
+            sim
+        });
         self.now()
     }
 
@@ -128,9 +396,38 @@ impl MultiPortSim {
         self.channels.iter().map(|c| c.timing()).collect()
     }
 
-    /// Load imbalance: max channel time / mean channel time (1.0 = ideal).
+    /// Per-channel replay state (bit-for-bit identity tests).
+    pub fn channel_snapshots(&self) -> Vec<ReplayState> {
+        self.channels.iter().map(|c| c.snapshot()).collect()
+    }
+
+    /// Cross-channel aggregate: counters summed, `cycles` the slowest
+    /// channel.
+    pub fn aggregate_timing(&self) -> Timing {
+        Timing::merge(self.channels.iter().map(|c| c.timing()))
+    }
+
+    /// Cross-channel [`Bandwidth`]: bytes summed over channels, cycles
+    /// from the slowest — the number a multi-channel roofline compares
+    /// against `channels * peak_mb_s`.
+    pub fn bandwidth(&self, useful_elems: u64) -> Bandwidth {
+        let t = self.aggregate_timing();
+        Bandwidth {
+            raw_bytes: self.submitted_elems * self.elem_bytes,
+            useful_bytes: useful_elems * self.elem_bytes,
+            cycles: self.now(),
+            bursts: t.axi_bursts,
+            row_misses: t.row_misses + t.row_switches,
+        }
+    }
+
+    /// Load imbalance over **engaged** channels: max time / mean time
+    /// (1.0 = ideal). Channels a range map cannot route to are excluded —
+    /// counting structurally idle channels made a perfectly balanced
+    /// facet map on a wide interface look pathological.
     pub fn imbalance(&self) -> f64 {
-        let times = self.channel_times();
+        let engaged = self.map.engaged(self.channels.len());
+        let times = &self.channel_times()[..engaged];
         let max = *times.iter().max().unwrap_or(&0) as f64;
         let mean = times.iter().sum::<u64>() as f64 / times.len().max(1) as f64;
         if mean == 0.0 {
@@ -144,24 +441,17 @@ impl MultiPortSim {
         for c in &mut self.channels {
             c.reset();
         }
+        self.submitted_elems = 0;
     }
 }
 
-/// The facet-per-port repartition for a CFA allocation: port boundaries at
-/// the facet arrays' base addresses, round-robin when there are more facets
-/// than ports.
+/// The facet-per-port repartition for a CFA allocation: port boundaries
+/// at the facet arrays' base addresses (see [`PortMap::by_regions`] for
+/// the `ports != facets` semantics). Equivalent to resolving
+/// [`Striping::Facet`] against the allocation.
 pub fn cfa_port_map(cfa: &crate::layout::cfa::Cfa, ports: usize) -> PortMap {
-    // With ports >= facets this is exactly one facet array per port; with
-    // fewer ports, consecutive facet arrays share a port (they are still
-    // contiguous ranges, preserving ByRange semantics).
-    let facets = cfa.facet_arrays();
-    let per_port = facets.len().div_ceil(ports);
-    let mut bounds = Vec::with_capacity(ports);
-    for p in 0..ports {
-        let fi = (p * per_port).min(facets.len() - 1);
-        bounds.push(if p == 0 { 0 } else { facets[fi].base });
-    }
-    PortMap::ByRange { bounds }
+    let bases: Vec<u64> = cfa.facet_arrays().iter().map(|f| f.base).collect();
+    PortMap::by_regions(&bases, ports)
 }
 
 #[cfg(test)]
@@ -171,6 +461,15 @@ mod tests {
 
     fn cfg() -> MemConfig {
         MemConfig::default()
+    }
+
+    fn test_cfa() -> crate::layout::cfa::Cfa {
+        use crate::poly::deps::DepPattern;
+        use crate::poly::tiling::Tiling;
+        let tiling = Tiling::new(vec![24, 24, 24], vec![8, 8, 8]);
+        let deps =
+            DepPattern::new(vec![vec![-1, 0, 0], vec![0, -1, 0], vec![0, 0, -2]]).unwrap();
+        crate::layout::cfa::Cfa::new(tiling, deps).unwrap()
     }
 
     #[test]
@@ -184,7 +483,8 @@ mod tests {
             .collect();
         let mut single = MemSim::new(cfg());
         let t_ref = single.run(&txns);
-        let mut mp = MultiPortSim::new(cfg(), 1, PortMap::Interleaved { stripe_bytes: 4096 });
+        let mut mp =
+            MultiPortSim::new(cfg(), 1, PortMap::Interleaved { stripe_elems: 512 });
         for t in &txns {
             mp.submit(t);
         }
@@ -236,7 +536,7 @@ mod tests {
         for t in &txns {
             trace.push(t.dir, t.addr, t.len);
         }
-        let map = || PortMap::Interleaved { stripe_bytes: 512 };
+        let map = || PortMap::Interleaved { stripe_elems: 64 };
         let mut by_txn = MultiPortSim::new(cfg(), 3, map());
         for t in &txns {
             by_txn.submit(t);
@@ -248,12 +548,18 @@ mod tests {
         for (a, b) in by_txn.timings().iter().zip(by_trace.timings()) {
             assert_eq!(*a, b);
         }
+        // and the pre-split parallel replay matches both, snapshots included
+        let mut pre_split = MultiPortSim::new(cfg(), 3, map());
+        pre_split.run_trace_parallel(&trace, 3);
+        assert_eq!(pre_split.channel_snapshots(), by_trace.channel_snapshots());
+        assert_eq!(pre_split.bandwidth(0).raw_bytes, by_trace.bandwidth(0).raw_bytes);
     }
 
     #[test]
     fn interleaved_splits_at_stripes() {
-        let mut mp = MultiPortSim::new(cfg(), 2, PortMap::Interleaved { stripe_bytes: 256 });
-        // 64 elems * 8B = 512B: spans 2 stripes → both channels busy
+        let mut mp =
+            MultiPortSim::new(cfg(), 2, PortMap::Interleaved { stripe_elems: 32 });
+        // 64 elems across two 32-element stripes -> both channels busy
         mp.submit(&Txn {
             dir: Dir::Read,
             addr: 0,
@@ -264,29 +570,220 @@ mod tests {
     }
 
     #[test]
+    fn unaligned_byte_stripes_are_rejected() {
+        // regression (routing bug 1): stripe_bytes 12 over 8-byte elements
+        // used to split runs at 1-element stripes but route them at byte
+        // granularity, charging straddling chunks to the wrong channel.
+        // Now the config is refused wherever a striping enters.
+        let s = Striping::Address { stripe_bytes: 12 };
+        let err = s.validate(8).unwrap_err().to_string();
+        assert!(err.contains("stripe_bytes"), "{err}");
+        let cfa = test_cfa();
+        assert!(s.resolve(&cfa, 8, 2).is_err());
+        assert!(Striping::Address { stripe_bytes: 0 }.validate(8).is_err());
+        // aligned stripes resolve to the element-unit interleave
+        let map = Striping::Address { stripe_bytes: 4096 }.resolve(&cfa, 8, 2).unwrap();
+        assert_eq!(map, PortMap::Interleaved { stripe_elems: 512 });
+    }
+
+    #[test]
+    fn split_chunks_never_straddle_a_port() {
+        // every chunk split_trace emits must live whole on its channel:
+        // first and last element route identically
+        let mut trace = TxnTrace::new();
+        for i in 0..64u64 {
+            trace.push(Dir::Read, i * 97, 1 + (i * 37) % 300);
+        }
+        for map in [
+            PortMap::Interleaved { stripe_elems: 7 },
+            PortMap::ByRange {
+                bounds: vec![0, 500, 3000],
+            },
+            PortMap::TileStriped {
+                regions: vec![(0, 64), (2048, 100)],
+            },
+        ] {
+            let mp = MultiPortSim::new(cfg(), 3, map.clone());
+            let subs = mp.split_trace(&trace);
+            let mut elems = 0u64;
+            for (p, sub) in subs.iter().enumerate() {
+                for (_, addr, len) in sub.iter() {
+                    assert_eq!(map.port_of(addr, 3), p, "{map:?}");
+                    assert_eq!(map.port_of(addr + len - 1, 3), p, "{map:?}");
+                    elems += len;
+                }
+            }
+            assert_eq!(elems, trace.total_elems(), "{map:?}");
+        }
+    }
+
+    #[test]
     fn port_of_range_boundaries() {
         let m = PortMap::ByRange {
             bounds: vec![0, 100, 200],
         };
-        assert_eq!(m.port_of(0, 8, 3), 0);
-        assert_eq!(m.port_of(99, 8, 3), 0);
-        assert_eq!(m.port_of(100, 8, 3), 1);
-        assert_eq!(m.port_of(250, 8, 3), 2);
+        assert_eq!(m.port_of(0, 3), 0);
+        assert_eq!(m.port_of(99, 3), 0);
+        assert_eq!(m.port_of(100, 3), 1);
+        assert_eq!(m.port_of(250, 3), 2);
+        assert_eq!(m.span_of(40), 60);
+        assert_eq!(m.span_of(100), 100);
+        assert_eq!(m.span_of(250), u64::MAX);
+    }
+
+    #[test]
+    fn tile_striping_round_robins_chunks() {
+        let m = PortMap::TileStriped {
+            regions: vec![(0, 10), (100, 25)],
+        };
+        assert_eq!(m.port_of(0, 2), 0);
+        assert_eq!(m.port_of(10, 2), 1);
+        assert_eq!(m.port_of(20, 2), 0);
+        assert_eq!(m.span_of(5), 5);
+        assert_eq!(m.span_of(95), 5); // clipped at the next region base
+        assert_eq!(m.port_of(100, 2), 0);
+        assert_eq!(m.port_of(125, 2), 1);
+        assert_eq!(m.span_of(130), 20);
     }
 
     #[test]
     fn cfa_map_assigns_facets_to_ports() {
-        use crate::poly::deps::DepPattern;
-        use crate::poly::tiling::Tiling;
-        let tiling = Tiling::new(vec![24, 24, 24], vec![8, 8, 8]);
-        let deps = DepPattern::new(vec![vec![-1, 0, 0], vec![0, -1, 0], vec![0, 0, -2]])
-            .unwrap();
-        let cfa = crate::layout::cfa::Cfa::new(tiling, deps).unwrap();
+        let cfa = test_cfa();
         let map = cfa_port_map(&cfa, 3);
         let facets = cfa.facet_arrays();
         for (i, fa) in facets.iter().enumerate() {
-            assert_eq!(map.port_of(fa.base, 8, 3), i, "facet {i}");
-            assert_eq!(map.port_of(fa.base + fa.size() - 1, 8, 3), i);
+            assert_eq!(map.port_of(fa.base, 3), i, "facet {i}");
+            assert_eq!(map.port_of(fa.base + fa.size() - 1, 3), i);
         }
+        // Striping::Facet resolves to the same map
+        let resolved = Striping::Facet.resolve(&cfa, 8, 3).unwrap();
+        assert_eq!(resolved, map);
+    }
+
+    #[test]
+    fn more_ports_than_facets_keeps_bounds_strict_and_imbalance_engaged() {
+        // regression (routing bug 2): ports > facets used to duplicate
+        // bounds, making the last facet's port unspecified and the idle
+        // trailing ports drag imbalance() down
+        let cfa = test_cfa();
+        let facets = cfa.facet_arrays();
+        assert_eq!(facets.len(), 3);
+        let map = cfa_port_map(&cfa, 5);
+        let PortMap::ByRange { bounds } = &map else {
+            panic!("cfa map must be ByRange")
+        };
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "{bounds:?}");
+        assert_eq!(bounds.len(), 3, "effective ports clamp to facet count");
+        assert_eq!(map.engaged(5), 3);
+        // every facet routes whole to its own engaged port
+        let mut mp = MultiPortSim::new(cfg(), 5, map.clone());
+        for (i, fa) in facets.iter().enumerate() {
+            assert_eq!(map.port_of(fa.base, 5), i);
+            assert_eq!(map.port_of(fa.base + fa.size() - 1, 5), i);
+            mp.submit(&Txn {
+                dir: Dir::Read,
+                addr: fa.base,
+                len: fa.size().min(4096),
+            });
+        }
+        let times = mp.channel_times();
+        assert!(times[..3].iter().all(|&t| t > 0), "{times:?}");
+        assert!(times[3..].iter().all(|&t| t == 0), "{times:?}");
+        // balanced over engaged channels despite two idle ones
+        assert!(mp.imbalance() < 1.5, "imbalance {}", mp.imbalance());
+    }
+
+    #[test]
+    fn by_regions_bounds_always_strictly_increase() {
+        for len in 1..8usize {
+            let bases: Vec<u64> = (0..len as u64).map(|i| i * 1000).collect();
+            for ports in 1..10usize {
+                let PortMap::ByRange { bounds } = PortMap::by_regions(&bases, ports)
+                else {
+                    unreachable!()
+                };
+                assert!(
+                    bounds.windows(2).all(|w| w[0] < w[1]),
+                    "len={len} ports={ports}: {bounds:?}"
+                );
+                assert!(bounds.len() <= ports.min(len));
+                assert!(!bounds.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn shared_command_path_throttles_scaling_but_not_one_port() {
+        let base = MemConfig::default();
+        let contended = MemConfig {
+            cmd_shared_cycles: 6,
+            ..MemConfig::default()
+        };
+        let txns: Vec<Txn> = (0..64)
+            .map(|i| Txn {
+                dir: Dir::Read,
+                addr: i * 40,
+                len: 24,
+            })
+            .collect();
+        // one port: the knob is inert (no other channel to arbitrate with)
+        let mut serial = MemSim::new(base.clone());
+        serial.run(&txns);
+        let map = || PortMap::Interleaved { stripe_elems: 16 };
+        let mut one = MultiPortSim::new(contended.clone(), 1, map());
+        for t in &txns {
+            one.submit(t);
+        }
+        assert_eq!(one.now(), serial.now());
+        assert_eq!(one.timings()[0], serial.timing());
+        // four ports: contention makes every burst's issue phase dearer
+        let mut free = MultiPortSim::new(base, 4, map());
+        let mut walled = MultiPortSim::new(contended, 4, map());
+        for t in &txns {
+            free.submit(t);
+            walled.submit(t);
+        }
+        assert!(walled.now() > free.now(), "{} <= {}", walled.now(), free.now());
+    }
+
+    #[test]
+    fn aggregate_timing_and_bandwidth_sum_channels() {
+        let mut mp = MultiPortSim::new(cfg(), 2, PortMap::Interleaved { stripe_elems: 8 });
+        mp.submit(&Txn {
+            dir: Dir::Read,
+            addr: 0,
+            len: 100,
+        });
+        let agg = mp.aggregate_timing();
+        let per = mp.timings();
+        assert_eq!(agg.cycles, mp.now());
+        assert_eq!(agg.data_cycles, per[0].data_cycles + per[1].data_cycles);
+        assert_eq!(agg.axi_bursts, per[0].axi_bursts + per[1].axi_bursts);
+        let bw = mp.bandwidth(100);
+        assert_eq!(bw.raw_bytes, 100 * 8);
+        assert_eq!(bw.useful_bytes, 100 * 8);
+        assert_eq!(bw.cycles, mp.now());
+        assert_eq!(bw.bursts, agg.axi_bursts);
+        mp.reset();
+        assert_eq!(mp.bandwidth(0).raw_bytes, 0);
+        assert_eq!(mp.now(), 0);
+    }
+
+    #[test]
+    fn striping_parse_label_round_trip() {
+        for (s, want) in [
+            ("address:4096", Striping::Address { stripe_bytes: 4096 }),
+            ("addr:256", Striping::Address { stripe_bytes: 256 }),
+            ("address", Striping::Address { stripe_bytes: 4096 }),
+            ("addr256", Striping::Address { stripe_bytes: 256 }),
+            ("facet", Striping::Facet),
+            ("tile", Striping::Tile),
+        ] {
+            assert_eq!(Striping::parse(s).unwrap(), want, "{s}");
+        }
+        assert_eq!(Striping::parse("addr:256").unwrap().label(), "addr256");
+        assert_eq!(Striping::parse("facet").unwrap().label(), "facet");
+        assert!(Striping::parse("diagonal").is_err());
+        assert!(Striping::parse("address:x").is_err());
     }
 }

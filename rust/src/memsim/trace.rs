@@ -62,6 +62,17 @@ impl TxnTrace {
         TxnTrace::default()
     }
 
+    /// An empty trace with room for `n` entries (the multi-channel
+    /// pre-split allocates one per channel).
+    pub fn with_capacity(n: usize) -> TxnTrace {
+        TxnTrace {
+            dirs: Vec::with_capacity(n),
+            addrs: Vec::with_capacity(n),
+            lens: Vec::with_capacity(n),
+            ..TxnTrace::default()
+        }
+    }
+
     /// Append one burst run (element units).
     pub fn push(&mut self, dir: Dir, addr: u64, len: u64) {
         self.dirs.push(dir);

@@ -220,6 +220,8 @@ fn prop_exhaustive_finds_bruteforce_best_on_tiny_spaces() {
             tiles_per_dim: 2,
             layouts: layouts.iter().map(|s| s.to_string()).collect(),
             mems: vec![MemVariant::paper_default()],
+            channels: vec![1],
+            stripings: vec![cfa::memsim::Striping::default()],
             pe: vec![64],
         };
         let outcome = Explorer::new(space, Box::new(Exhaustive::new()))

@@ -143,7 +143,7 @@ fn prop_multiport_identities_hold_on_every_port() {
         let ports = g.usize(2, 4);
         let maps = [
             PortMap::Interleaved {
-                stripe_bytes: 1 << g.usize(8, 12),
+                stripe_elems: 1 << g.usize(5, 9),
             },
             PortMap::ByRange {
                 bounds: (0..ports as u64).map(|p| p * (1 << 18)).collect(),
@@ -183,7 +183,7 @@ fn prop_single_port_multiport_equals_serial_memsim() {
         serial.run(&txns);
         let maps = [
             PortMap::Interleaved {
-                stripe_bytes: 1 << g.usize(6, 12),
+                stripe_elems: 1 << g.usize(3, 9),
             },
             PortMap::ByRange { bounds: vec![0] },
         ];

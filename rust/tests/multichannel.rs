@@ -1,0 +1,258 @@
+//! Identity contracts of the multi-channel "memory wall" model, across
+//! random validated configurations (the `util::prop` substrate):
+//!
+//! * **beat conservation**: routing a stream over N channels moves exactly
+//!   the beats the single-port engine moves, under every `Striping`;
+//! * **pre-split parallel replay ≡ entry-wise submit**: one routing pass
+//!   plus per-channel streamed replay reproduces the full per-channel
+//!   `ReplayState`, for every policy and thread count;
+//! * **channels=1 ≡ MemSim bit-for-bit**: a single-port interface is the
+//!   plain engine whatever the routing policy or contention knob — at the
+//!   simulator level and through the `Session` front door;
+//! * **journal determinism**: `channels` × `striping` sweep axes journal
+//!   byte-identically serial vs parallel, and resume re-evaluates nothing.
+
+use std::path::PathBuf;
+
+use cfa::dse::{Exhaustive, Explorer, Space};
+use cfa::experiment::{ExperimentSpec, Mode, ScheduleKind};
+use cfa::layout::cfa::Cfa;
+use cfa::memsim::{Dir, MemConfig, MemSim, MultiPortSim, Striping, Txn, TxnTrace};
+use cfa::poly::deps::DepPattern;
+use cfa::poly::tiling::Tiling;
+use cfa::util::prop::{run as prop_run, Config, Gen};
+
+fn tmp(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(name);
+    std::fs::remove_file(&p).ok();
+    p
+}
+
+/// A random always-valid config (cf. `tests/trace_replay.rs`); when
+/// `equal_beats` is set, `elem_bytes == bus_bytes` so one element is one
+/// beat and splitting a run can never change the beat count.
+fn random_cfg(g: &Gen, equal_beats: bool) -> MemConfig {
+    let bus_bytes = *g.choose(&[1u64, 2, 4, 8]);
+    let elem_bytes = if equal_beats {
+        bus_bytes
+    } else {
+        *g.choose(&[1u64, 2, 4, 8])
+    };
+    MemConfig {
+        elem_bytes,
+        bus_bytes,
+        clock_mhz: 200.0,
+        max_burst_beats: g.i64(16, 256) as u64,
+        boundary_bytes: bus_bytes * *g.choose(&[64u64, 512, 4096]),
+        issue_cycles: g.i64(0, 8) as u64,
+        row_hit_cycles: g.i64(0, 30) as u64,
+        row_miss_cycles: g.i64(0, 60) as u64,
+        row_bytes: *g.choose(&[256u64, 1024, 8192]),
+        banks: g.i64(1, 8) as u64,
+        max_outstanding: g.usize(1, 4),
+        turnaround_cycles: g.i64(0, 10) as u64,
+        cmd_shared_cycles: g.i64(0, 6) as u64,
+    }
+}
+
+fn random_txns(g: &Gen, n: usize) -> Vec<Txn> {
+    (0..n)
+        .map(|_| Txn {
+            dir: if g.bool() { Dir::Read } else { Dir::Write },
+            addr: g.i64(0, 1 << 18) as u64,
+            len: g.i64(1, 2000) as u64,
+        })
+        .collect()
+}
+
+/// A 3-facet CFA allocation for resolving `Facet`/`Tile` stripings.
+fn test_cfa() -> Cfa {
+    let tiling = Tiling::new(vec![24, 24, 24], vec![8, 8, 8]);
+    let deps = DepPattern::new(vec![vec![-1, 0, 0], vec![0, -1, 0], vec![0, 0, -2]]).unwrap();
+    Cfa::new(tiling, deps).unwrap()
+}
+
+/// All three policies, the address stripe drawn at a random (always
+/// element-aligned) granularity.
+fn random_stripings(g: &Gen, elem_bytes: u64) -> Vec<Striping> {
+    vec![
+        Striping::Address {
+            stripe_bytes: elem_bytes * (1 << g.usize(0, 9)) as u64,
+        },
+        Striping::Facet,
+        Striping::Tile,
+    ]
+}
+
+#[test]
+fn prop_beat_conservation_under_every_striping() {
+    prop_run("multichannel beat conservation", Config::small(30), |g| {
+        let cfg = random_cfg(g, true);
+        let txns = random_txns(g, g.usize(1, 16));
+        let ports = g.usize(2, 4);
+        let alloc = test_cfa();
+        let mut serial = MemSim::new(cfg.clone());
+        serial.run(&txns);
+        let serial_beats = serial.timing().data_cycles;
+        for s in random_stripings(g, cfg.elem_bytes) {
+            let map = s.resolve(&alloc, cfg.elem_bytes, ports).unwrap();
+            let mut mp = MultiPortSim::new(cfg.clone(), ports, map);
+            for t in &txns {
+                mp.submit(t);
+            }
+            // the data buses together move exactly the single-port beats:
+            // routing redistributes work, it never creates or loses any
+            let beats: u64 = mp.timings().iter().map(|t| t.data_cycles).sum();
+            assert_eq!(beats, serial_beats, "{s:?} over {ports} ports");
+            // and each channel obeys the engine's accounting identity
+            for (p, t) in mp.timings().iter().enumerate() {
+                assert_eq!(t.row_hits + t.row_misses, t.axi_bursts, "{s:?} port {p}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_presplit_parallel_replay_equals_entrywise_submit() {
+    prop_run("pre-split replay == entry-wise submit", Config::small(30), |g| {
+        let cfg = random_cfg(g, false);
+        let txns = random_txns(g, g.usize(1, 16));
+        let mut trace = TxnTrace::new();
+        for t in &txns {
+            trace.push(t.dir, t.addr, t.len);
+        }
+        let ports = g.usize(2, 4);
+        let threads = *g.choose(&[1usize, 2, 4]);
+        let alloc = test_cfa();
+        for s in random_stripings(g, cfg.elem_bytes) {
+            let map = s.resolve(&alloc, cfg.elem_bytes, ports).unwrap();
+            let mut by_txn = MultiPortSim::new(cfg.clone(), ports, map.clone());
+            for t in &txns {
+                by_txn.submit(t);
+            }
+            let mut pre_split = MultiPortSim::new(cfg.clone(), ports, map);
+            pre_split.run_trace_parallel(&trace, threads);
+            // full per-channel replay state, not just the clocks: the
+            // split must be *the* split submit performs, not an equivalent
+            assert_eq!(
+                pre_split.channel_snapshots(),
+                by_txn.channel_snapshots(),
+                "{s:?} over {ports} ports, {threads} threads"
+            );
+            assert_eq!(pre_split.now(), by_txn.now(), "{s:?}");
+            assert_eq!(pre_split.aggregate_timing(), by_txn.aggregate_timing(), "{s:?}");
+            assert_eq!(
+                pre_split.bandwidth(0).raw_bytes,
+                by_txn.bandwidth(0).raw_bytes,
+                "{s:?}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_single_channel_is_memsim_bit_for_bit_under_every_policy() {
+    prop_run("channels=1 == MemSim", Config::small(30), |g| {
+        // cmd_shared_cycles is drawn nonzero too: with one channel there
+        // is nothing to arbitrate with, so the knob must stay inert
+        let cfg = random_cfg(g, false);
+        let txns = random_txns(g, g.usize(1, 16));
+        let mut trace = TxnTrace::new();
+        for t in &txns {
+            trace.push(t.dir, t.addr, t.len);
+        }
+        let mut serial = MemSim::new(cfg.clone());
+        serial.run(&txns);
+        let alloc = test_cfa();
+        for s in random_stripings(g, cfg.elem_bytes) {
+            let map = s.resolve(&alloc, cfg.elem_bytes, 1).unwrap();
+            let mut mp = MultiPortSim::new(cfg.clone(), 1, map.clone());
+            for t in &txns {
+                mp.submit(t);
+            }
+            assert_eq!(mp.now(), serial.now(), "{s:?}");
+            assert_eq!(mp.timings()[0], serial.timing(), "{s:?}");
+            assert_eq!(mp.channel_snapshots()[0], serial.snapshot(), "{s:?}");
+            // the streamed path degenerates identically
+            let mut streamed = MultiPortSim::new(cfg.clone(), 1, map);
+            streamed.run_trace_parallel(&trace, 2);
+            assert_eq!(streamed.channel_snapshots()[0], serial.snapshot(), "{s:?}");
+        }
+    });
+}
+
+#[test]
+fn session_single_channel_reports_match_plain_sessions_for_every_striping() {
+    // through the front door: a channels=1 spec is the session the stack
+    // always ran, whatever striping rides along
+    let baseline = ExperimentSpec::builder()
+        .named("jacobi2d5p", vec![8, 8, 8], 3)
+        .schedule(ScheduleKind::Flat)
+        .compile()
+        .unwrap()
+        .run(Mode::Timing)
+        .unwrap();
+    for striping in [
+        Striping::Address { stripe_bytes: 4096 },
+        Striping::Facet,
+        Striping::Tile,
+    ] {
+        let report = ExperimentSpec::builder()
+            .named("jacobi2d5p", vec![8, 8, 8], 3)
+            .schedule(ScheduleKind::Flat)
+            .channels(1)
+            .striping(striping.clone())
+            .compile()
+            .unwrap()
+            .run(Mode::Timing)
+            .unwrap();
+        assert_eq!(report.timing, baseline.timing, "{striping:?}");
+        assert_eq!(report.makespan_cycles, baseline.makespan_cycles, "{striping:?}");
+        assert_eq!(report.raw_bytes, baseline.raw_bytes, "{striping:?}");
+        assert_eq!(report.transactions, baseline.transactions, "{striping:?}");
+        assert_eq!(
+            report.effective_mb_s.to_bits(),
+            baseline.effective_mb_s.to_bits(),
+            "{striping:?}"
+        );
+    }
+}
+
+#[test]
+fn channel_axes_journal_deterministically_and_resume_evaluates_zero() {
+    let space = || {
+        let mut s = Space::builtin("tiny").unwrap();
+        s.channels = vec![1, 4];
+        s.stripings = vec![Striping::default(), Striping::Facet];
+        s
+    };
+    let p1 = tmp("cfa_multichannel_serial.jsonl");
+    let p4 = tmp("cfa_multichannel_parallel.jsonl");
+    let serial = Explorer::new(space(), Box::new(Exhaustive::new()))
+        .parallel(1)
+        .journal(&p1)
+        .explore()
+        .unwrap();
+    let par = Explorer::new(space(), Box::new(Exhaustive::new()))
+        .parallel(4)
+        .journal(&p4)
+        .explore()
+        .unwrap();
+    assert_eq!(serial.evaluated, 32, "tiny (8) x channels (2) x striping (2)");
+    assert_eq!(par.evaluated, 32);
+    assert_eq!(
+        std::fs::read_to_string(&p1).unwrap(),
+        std::fs::read_to_string(&p4).unwrap(),
+        "channel-axis journals differ between serial and parallel"
+    );
+    // resume with the full journal performs zero evaluations
+    let resumed = Explorer::new(space(), Box::new(Exhaustive::new()))
+        .resume(&p1)
+        .journal(&p1)
+        .explore()
+        .unwrap();
+    assert_eq!(resumed.evaluated, 0);
+    assert_eq!(resumed.resumed, 32);
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p4).ok();
+}

@@ -51,6 +51,7 @@ fn random_cfg(g: &Gen) -> MemConfig {
         banks: g.i64(1, 8) as u64,
         max_outstanding: g.usize(1, 4),
         turnaround_cycles: g.i64(0, 10) as u64,
+        cmd_shared_cycles: g.i64(0, 6) as u64,
     }
 }
 
