@@ -23,8 +23,8 @@ fn main() {
         print!("{}", figures::render_fig15(&pts, w.name, &mem));
     }
     std::fs::create_dir_all("bench_results").ok();
-    std::fs::write("bench_results/fig15.csv", figures::fig15_csv(&pts)).ok();
-    std::fs::write(
+    cfa::util::fsx::write_atomic("bench_results/fig15.csv", figures::fig15_csv(&pts)).ok();
+    cfa::util::fsx::write_atomic(
         "bench_results/fig15.json",
         figures::fig15_json(&pts, &mem).to_string_pretty(),
     )

@@ -14,7 +14,7 @@ fn main() {
     let wl = workloads::table1(quick);
     let pts = figures::area_sweep(&wl, 8, 3);
     std::fs::create_dir_all("bench_results").ok();
-    std::fs::write("bench_results/fig17.csv", figures::area_csv(&pts)).ok();
+    cfa::util::fsx::write_atomic("bench_results/fig17.csv", figures::area_csv(&pts)).ok();
     let dev = Device::default();
     let reg = cfa::layout::registry::global();
     for w in &wl {

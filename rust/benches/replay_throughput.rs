@@ -284,7 +284,8 @@ fn main() {
             Json::arr(results.iter().map(measurement_json)),
         ),
     ]);
-    match std::fs::write(&out_path, json.to_string_pretty()) {
+    // temp-then-rename: a killed bench never leaves a truncated schema seed
+    match cfa::util::fsx::write_atomic(&out_path, json.to_string_pretty()) {
         Ok(()) => println!("wrote {out_path}"),
         Err(e) => eprintln!("could not write {out_path}: {e}"),
     }

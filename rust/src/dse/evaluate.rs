@@ -36,45 +36,129 @@ use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
 use std::sync::Arc;
 
-/// One evaluated point: the timing report plus its area estimate.
+/// One journaled record: a successfully evaluated point — the timing
+/// report plus its area estimate — or a quarantined failure. Failures are
+/// first-class records so a resumed run knows what already broke (and
+/// retries it exactly once, unless told not to) instead of losing the
+/// information with the process.
 #[derive(Clone, Debug)]
-pub struct Evaluation {
-    pub point: Point,
-    pub report: Report,
-    pub area: AreaEstimate,
+pub enum Evaluation {
+    /// The point compiled and ran; objectives are valid.
+    Success {
+        point: Point,
+        report: Report,
+        area: AreaEstimate,
+    },
+    /// The point failed to compile/run (or its evaluation panicked); the
+    /// rendered error is all that survives.
+    Failed { point: Point, error: String },
 }
 
 impl Evaluation {
+    /// A successful evaluation record.
+    pub fn success(point: Point, report: Report, area: AreaEstimate) -> Evaluation {
+        Evaluation::Success {
+            point,
+            report,
+            area,
+        }
+    }
+
+    /// A quarantined-failure record.
+    pub fn failed(point: Point, error: impl Into<String>) -> Evaluation {
+        Evaluation::Failed {
+            point,
+            error: error.into(),
+        }
+    }
+
+    /// The evaluated point (both variants carry one).
+    pub fn point(&self) -> &Point {
+        match self {
+            Evaluation::Success { point, .. } | Evaluation::Failed { point, .. } => point,
+        }
+    }
+
     /// The point's journal identity.
     pub fn fingerprint(&self) -> String {
-        self.point.fingerprint()
+        self.point().fingerprint()
+    }
+
+    pub fn is_failed(&self) -> bool {
+        matches!(self, Evaluation::Failed { .. })
+    }
+
+    /// The quarantined error, for [`Evaluation::Failed`] records.
+    pub fn error(&self) -> Option<&str> {
+        match self {
+            Evaluation::Failed { error, .. } => Some(error),
+            Evaluation::Success { .. } => None,
+        }
+    }
+
+    /// The timing report, for successful records.
+    pub fn report(&self) -> Option<&Report> {
+        match self {
+            Evaluation::Success { report, .. } => Some(report),
+            Evaluation::Failed { .. } => None,
+        }
+    }
+
+    /// The area estimate, for successful records.
+    pub fn area(&self) -> Option<&AreaEstimate> {
+        match self {
+            Evaluation::Success { area, .. } => Some(area),
+            Evaluation::Failed { .. } => None,
+        }
     }
 
     /// Bandwidth objective (maximize): effective MB/s over the makespan.
+    /// A failure scores `-inf` — never on the front, dominated by anything.
     pub fn effective_mb_s(&self) -> f64 {
-        self.report.effective_mb_s
+        match self {
+            Evaluation::Success { report, .. } => report.effective_mb_s,
+            Evaluation::Failed { .. } => f64::NEG_INFINITY,
+        }
     }
 
     /// Area objective (minimize): BRAM-36 blocks of the on-chip buffers.
+    /// A failure costs `u64::MAX` for the same reason.
     pub fn bram36(&self) -> u64 {
-        self.area.bram36
+        match self {
+            Evaluation::Success { area, .. } => area.bram36,
+            Evaluation::Failed { .. } => u64::MAX,
+        }
     }
 
-    /// One journal line's JSON record.
+    /// One journal line's JSON record. Success records keep the exact
+    /// pre-quarantine shape (clean-run journals are byte-identical across
+    /// versions); failures carry `error` instead of `report`/`area`, which
+    /// is also how [`Evaluation::from_json`] tells them apart.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("fingerprint", Json::str(self.fingerprint())),
-            ("point", self.point.to_json()),
-            ("report", self.report.to_json()),
-            (
-                "area",
-                Json::obj(vec![
-                    ("slices", Json::num(self.area.slices as f64)),
-                    ("dsp", Json::num(self.area.dsp as f64)),
-                    ("bram36", Json::num(self.area.bram36 as f64)),
-                ]),
-            ),
-        ])
+        match self {
+            Evaluation::Success {
+                point,
+                report,
+                area,
+            } => Json::obj(vec![
+                ("fingerprint", Json::str(self.fingerprint())),
+                ("point", point.to_json()),
+                ("report", report.to_json()),
+                (
+                    "area",
+                    Json::obj(vec![
+                        ("slices", Json::num(area.slices as f64)),
+                        ("dsp", Json::num(area.dsp as f64)),
+                        ("bram36", Json::num(area.bram36 as f64)),
+                    ]),
+                ),
+            ]),
+            Evaluation::Failed { point, error } => Json::obj(vec![
+                ("fingerprint", Json::str(self.fingerprint())),
+                ("point", point.to_json()),
+                ("error", Json::str(error)),
+            ]),
+        }
     }
 
     /// Parse a record produced by [`Evaluation::to_json`]; the stored
@@ -92,6 +176,9 @@ impl Evaluation {
                 );
             }
         }
+        if let Some(error) = j.get("error").and_then(Json::as_str) {
+            return Ok(Evaluation::failed(point, error));
+        }
         let report = Report::from_json(
             j.get("report")
                 .ok_or_else(|| anyhow!("evaluation json: missing 'report'"))?,
@@ -105,26 +192,32 @@ impl Evaluation {
                 .map(|x| x as u64)
                 .ok_or_else(|| anyhow!("evaluation json: missing area '{k}'"))
         };
-        Ok(Evaluation {
+        Ok(Evaluation::success(
             point,
             report,
-            area: AreaEstimate {
+            AreaEstimate {
                 slices: field("slices")?,
                 dsp: field("dsp")?,
                 bram36: field("bram36")?,
             },
-        })
+        ))
     }
 
-    /// One-line summary: the report line plus the area objectives.
+    /// One-line summary: the report line plus the area objectives, or the
+    /// quarantined error.
     pub fn summary(&self) -> String {
-        format!(
-            "{}  area: {} slices, {} dsp, {} bram36",
-            self.report.summary(),
-            self.area.slices,
-            self.area.dsp,
-            self.area.bram36
-        )
+        match self {
+            Evaluation::Success { report, area, .. } => format!(
+                "{}  area: {} slices, {} dsp, {} bram36",
+                report.summary(),
+                area.slices,
+                area.dsp,
+                area.bram36
+            ),
+            Evaluation::Failed { error, .. } => {
+                format!("{}  FAILED: {error}", self.fingerprint())
+            }
+        }
     }
 }
 
@@ -219,11 +312,7 @@ impl<'a> Evaluator<'a> {
         // pure function of the point (see the module docs)
         report.wall_secs = 0.0;
         let area = AreaModel::default().estimate(session.allocation(), mv.cfg.elem_bytes);
-        Ok(Evaluation {
-            point: p.clone(),
-            report,
-            area,
-        })
+        Ok(Evaluation::success(p.clone(), report, area))
     }
 }
 

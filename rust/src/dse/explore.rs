@@ -4,12 +4,22 @@
 //! [`Explorer::explore`] enumerates the space once, seeds the attempted
 //! set from a resume journal (skipping every already-journaled
 //! fingerprint), then loops: ask the [`Strategy`] for a batch, fan the
-//! batch out over [`parallel_map`] workers (each point owns its session
-//! and simulator, so per-point timing is bit-identical to a serial run),
-//! journal each result in batch order, feed the scores back to the
-//! strategy. Batches are composed from results only — never from worker
-//! timing — so the journal sequence and the front are identical for any
-//! `--parallel` setting.
+//! batch out over [`try_parallel_map`] workers (each point owns its
+//! session and simulator, so per-point timing is bit-identical to a
+//! serial run), journal each result in batch order, feed the scores back
+//! to the strategy. Batches are composed from results only — never from
+//! worker timing — so the journal sequence and the front are identical
+//! for any `--parallel` setting.
+//!
+//! **Fault isolation.** A failing point — compile error, runtime error,
+//! or a panic caught by `try_parallel_map` — costs exactly itself: it is
+//! journaled as an [`Evaluation::Failed`] quarantine record and the run
+//! continues. Resume retries journaled failures exactly once (a success
+//! supersedes them); [`Explorer::retry_failed`]`(false)` keeps them
+//! skipped instead. A wall-clock deadline or an external [`CancelToken`]
+//! interrupts the run *cooperatively* — workers finish or skip their
+//! current item, the journal stays flushed and resumable, and the
+//! [`Outcome`] is marked interrupted.
 //!
 //! Two hot-loop mechanisms keep large explorations cheap without touching
 //! results: a shared [`TraceCache`] compiles each geometry's transaction
@@ -22,6 +32,7 @@
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::dse::evaluate::{Evaluation, Evaluator, ParetoFront};
 use crate::dse::journal::{self, Journal};
@@ -30,8 +41,9 @@ use crate::dse::strategy::{Ctx, Strategy};
 use crate::layout::registry;
 use crate::layout::LayoutRegistry;
 use crate::memsim::TraceCache;
-use crate::util::par::parallel_map;
-use anyhow::Result;
+use crate::util::faults;
+use crate::util::par::{try_parallel_map, CancelToken};
+use anyhow::{anyhow, Result};
 
 /// Configured exploration run; build with [`Explorer::new`] + setters,
 /// execute with [`Explorer::explore`].
@@ -44,6 +56,9 @@ pub struct Explorer {
     out: Option<PathBuf>,
     resume: Option<PathBuf>,
     trace_cache: bool,
+    retry_failed: bool,
+    cancel: CancelToken,
+    deadline: Option<Duration>,
 }
 
 /// What an exploration produced.
@@ -53,20 +68,31 @@ pub struct Outcome {
     pub strategy: String,
     /// Size of the enumerated space.
     pub points_total: usize,
-    /// Evaluations resumed from the journal (no work performed).
+    /// Evaluations resumed from the journal (no work performed) —
+    /// successes, plus kept failures when retry is disabled.
     pub resumed: usize,
     /// Fresh evaluations performed by this run.
     pub evaluated: usize,
-    /// Points attempted this run that failed to compile/run (skipped).
+    /// Points attempted this run that failed (quarantined, journaled).
     pub failed: usize,
-    /// Every evaluation, journal order: resumed first, then fresh.
+    /// Journaled failures this run re-attempted instead of skipping.
+    pub retried: usize,
+    /// True iff the run stopped at the deadline / cancellation token
+    /// rather than exhausting its strategy or budget.
+    pub interrupted: bool,
+    /// Every successful evaluation, journal order: resumed first, then
+    /// fresh. Quarantined failures are *not* listed here.
     pub all: Vec<Evaluation>,
+    /// Quarantine records freshly journaled by this run.
+    pub quarantined: Vec<Evaluation>,
     /// The non-dominated subset of `all` (bandwidth up, BRAM down).
     pub front: Vec<Evaluation>,
 }
 
 impl Outcome {
-    /// Human summary: one status line plus the front, one line per point.
+    /// Human summary: one status line plus the front, one line per point;
+    /// quarantine and interruption notes only when there is something to
+    /// say (clean-run output is unchanged).
     pub fn summary(&self) -> String {
         let mut s = format!(
             "dse[{}]: {} points in space; evaluated {} new points \
@@ -83,6 +109,22 @@ impl Outcome {
             s.push_str(&e.summary());
             s.push('\n');
         }
+        if self.failed > 0 || self.retried > 0 {
+            s.push_str(&format!(
+                "  quarantine: {} new failures journaled, {} journaled failures retried\n",
+                self.failed, self.retried
+            ));
+            for e in &self.quarantined {
+                s.push_str(&format!(
+                    "    {}: {}\n",
+                    e.fingerprint(),
+                    e.error().unwrap_or("?")
+                ));
+            }
+        }
+        if self.interrupted {
+            s.push_str("  interrupted: deadline/cancellation reached; journal is resumable\n");
+        }
         s
     }
 }
@@ -98,6 +140,9 @@ impl Explorer {
             out: None,
             resume: None,
             trace_cache: true,
+            retry_failed: true,
+            cancel: CancelToken::new(),
+            deadline: None,
         }
     }
 
@@ -135,9 +180,34 @@ impl Explorer {
         self
     }
 
-    /// Skip every point already journaled in this JSONL file.
+    /// Skip every point already journaled in this JSONL file. A torn
+    /// trailing line (killed writer) is salvaged, not an error; journaled
+    /// failures are retried once unless [`Explorer::retry_failed`]`(false)`.
     pub fn resume(mut self, path: impl Into<PathBuf>) -> Explorer {
         self.resume = Some(path.into());
+        self
+    }
+
+    /// Whether resumed quarantine records are re-attempted (default: true).
+    /// `false` treats a journaled failure like a journaled success: the
+    /// point is skipped and counted as resumed.
+    pub fn retry_failed(mut self, enabled: bool) -> Explorer {
+        self.retry_failed = enabled;
+        self
+    }
+
+    /// Cooperative cancellation: the run checks this token between items
+    /// and between batches, finishing with a flushed, resumable journal
+    /// and `interrupted = true`.
+    pub fn cancel_token(mut self, token: CancelToken) -> Explorer {
+        self.cancel = token;
+        self
+    }
+
+    /// Wall-clock deadline for the whole exploration, observed at the
+    /// same cooperative points as the cancellation token.
+    pub fn deadline_secs(mut self, secs: u64) -> Explorer {
+        self.deadline = Some(Duration::from_secs(secs));
         self
     }
 
@@ -162,17 +232,48 @@ impl Explorer {
             all.push(eval);
         };
         let mut resumed = 0usize;
+        let mut retried = 0usize;
+        // failures kept skipped (retry disabled); rewritten into a fresh
+        // out-journal so it stays complete
+        let mut kept_failures: Vec<Evaluation> = Vec::new();
         if let Some(path) = &self.resume {
-            for eval in journal::read(path)? {
+            let (records, torn) = journal::read_salvage(path)?;
+            if torn > 0 {
+                eprintln!(
+                    "dse: resume journal {}: ignored a torn trailing line ({torn} bytes); \
+                     the lost point will be re-evaluated",
+                    path.display()
+                );
+            }
+            // first per index wins among failures; successes supersede
+            // failures regardless of line order
+            let mut failed_first: BTreeMap<usize, Evaluation> = BTreeMap::new();
+            for eval in records {
                 let Some(&i) = fp_to_idx.get(&eval.fingerprint()) else {
                     // a journal may span a larger space than this run's;
                     // foreign points are ignored, not errors
                     continue;
                 };
-                if attempted.insert(i) {
+                if eval.is_failed() {
+                    failed_first.entry(i).or_insert(eval);
+                } else if attempted.insert(i) {
                     scores.insert(i, eval.effective_mb_s());
                     offer(&mut front, &mut all, eval);
                     resumed += 1;
+                }
+            }
+            for (i, eval) in failed_first {
+                if attempted.contains(&i) {
+                    continue; // a journaled success supersedes the failure
+                }
+                if self.retry_failed {
+                    // leave unattempted: the strategy proposes it again and
+                    // the fresh outcome lands in the journal
+                    retried += 1;
+                } else {
+                    attempted.insert(i);
+                    resumed += 1;
+                    kept_failures.push(eval);
                 }
             }
         }
@@ -192,6 +293,9 @@ impl Explorer {
                     for e in &all {
                         w.push(e)?;
                     }
+                    for e in &kept_failures {
+                        w.push(e)?;
+                    }
                 }
                 Some(w)
             }
@@ -200,12 +304,24 @@ impl Explorer {
         let mut evaluator = Evaluator::new(&self.space, self.registry.clone());
         if self.trace_cache {
             // one cache for the whole run, shared by reference across the
-            // parallel_map workers below (sharded internally)
+            // parallel workers below (sharded internally)
             evaluator = evaluator.with_trace_cache(Arc::new(TraceCache::new()));
         }
+        // the cooperative stop signal: an external token or the deadline,
+        // checked between batches and before each item
+        let cancel = self.cancel.clone();
+        let deadline = self.deadline.map(|d| Instant::now() + d);
+        let cancelled =
+            move || cancel.is_cancelled() || deadline.is_some_and(|t| Instant::now() >= t);
         let mut evaluated = 0usize;
         let mut failed = 0usize;
+        let mut quarantined: Vec<Evaluation> = Vec::new();
+        let mut interrupted = false;
         loop {
+            if cancelled() {
+                interrupted = true;
+                break;
+            }
             let remaining = match self.budget {
                 Some(b) => b.saturating_sub(evaluated),
                 None => usize::MAX,
@@ -226,12 +342,29 @@ impl Explorer {
             if batch.is_empty() {
                 break;
             }
-            let results = parallel_map(&batch, self.parallel, |&i| {
-                evaluator.evaluate(&enumerated.points()[i])
+            // panic-isolated fan-out: one panicking point costs exactly
+            // itself; items claimed after cancellation are skipped (None)
+            // so an expired deadline ends the batch within one item
+            let results = try_parallel_map(&batch, self.parallel, |&i| {
+                if cancelled() {
+                    return None;
+                }
+                faults::check("dse::evaluate");
+                Some(evaluator.evaluate(&enumerated.points()[i]))
             });
             for (&i, result) in batch.iter().zip(results) {
+                let outcome = match result {
+                    Ok(Some(r)) => r,
+                    Ok(None) => {
+                        // skipped at cancellation: not attempted, so a
+                        // resume re-proposes it
+                        interrupted = true;
+                        continue;
+                    }
+                    Err(p) => Err(anyhow!("evaluation panicked: {}", p.message())),
+                };
                 attempted.insert(i);
-                match result {
+                match outcome {
                     Ok(eval) => {
                         if let Some(w) = writer.as_mut() {
                             w.push(&eval)?;
@@ -241,10 +374,20 @@ impl Explorer {
                         evaluated += 1;
                     }
                     Err(e) => {
-                        eprintln!("dse: skip {}: {e:#}", enumerated.points()[i].fingerprint());
+                        let fp = enumerated.points()[i].fingerprint();
+                        eprintln!("dse: quarantine {fp}: {e:#}");
+                        let record =
+                            Evaluation::failed(enumerated.points()[i].clone(), format!("{e:#}"));
+                        if let Some(w) = writer.as_mut() {
+                            w.push(&record)?;
+                        }
+                        quarantined.push(record);
                         failed += 1;
                     }
                 }
+            }
+            if interrupted {
+                break;
             }
         }
 
@@ -263,7 +406,10 @@ impl Explorer {
             resumed,
             evaluated,
             failed,
+            retried,
+            interrupted,
             all,
+            quarantined,
             front,
         })
     }
@@ -289,8 +435,14 @@ mod tests {
         assert_eq!(out.evaluated, 8);
         assert_eq!(out.resumed, 0);
         assert_eq!(out.failed, 0);
+        assert_eq!(out.retried, 0);
+        assert!(!out.interrupted);
+        assert!(out.quarantined.is_empty());
         assert!(!out.front.is_empty());
         assert!(out.summary().contains("evaluated 8 new points"));
+        // a clean run's summary carries no quarantine/interruption noise
+        assert!(!out.summary().contains("quarantine"));
+        assert!(!out.summary().contains("interrupted"));
     }
 
     #[test]
@@ -339,5 +491,28 @@ mod tests {
         fa.sort();
         fb.sort();
         assert_eq!(fa, fb);
+    }
+
+    #[test]
+    fn pre_cancelled_run_is_interrupted_with_zero_evaluations() {
+        let token = CancelToken::new();
+        token.cancel();
+        let out = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+            .cancel_token(token)
+            .explore()
+            .unwrap();
+        assert_eq!(out.evaluated, 0);
+        assert!(out.interrupted);
+        assert!(out.summary().contains("interrupted"));
+    }
+
+    #[test]
+    fn expired_deadline_interrupts_between_items() {
+        let out = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+            .deadline_secs(0)
+            .explore()
+            .unwrap();
+        assert_eq!(out.evaluated, 0);
+        assert!(out.interrupted);
     }
 }

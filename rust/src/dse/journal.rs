@@ -6,6 +6,15 @@
 //! explorer skips every journaled fingerprint — a resume with a full
 //! journal performs zero evaluations and reproduces the front from the
 //! parsed records alone (the JSON encoding round-trips `f64` exactly).
+//!
+//! **Crash salvage.** A `kill -9` (or power cut) can land mid-`write`,
+//! leaving a torn final line with no trailing newline. [`read_salvage`]
+//! treats exactly the newline-terminated prefix as authoritative and
+//! reports how many torn bytes it ignored; [`Journal::append_to`]
+//! truncates that torn tail (with a logged warning) before appending, so
+//! an in-place resume never concatenates a fresh record onto half of an
+//! old one. Corruption *inside* the terminated prefix is still a hard
+//! error — salvage recovers from interrupted writes, not from bit rot.
 
 use std::fs::{File, OpenOptions};
 use std::io::{BufRead, BufReader, BufWriter, Write};
@@ -15,7 +24,14 @@ use crate::dse::evaluate::Evaluation;
 use crate::util::json;
 use anyhow::{anyhow, Context, Result};
 
-/// Read every evaluation of a JSONL journal (blank lines ignored).
+fn parse_line(path: &Path, ln: usize, line: &str) -> Result<Evaluation> {
+    let j = json::parse(line).map_err(|e| anyhow!("{}:{}: {e}", path.display(), ln + 1))?;
+    Evaluation::from_json(&j).with_context(|| format!("{}:{}", path.display(), ln + 1))
+}
+
+/// Read every evaluation of a JSONL journal (blank lines ignored). Strict:
+/// any unparsable line — including a torn final line — is an error. Resume
+/// paths that must survive a crash use [`read_salvage`] instead.
 pub fn read(path: &Path) -> Result<Vec<Evaluation>> {
     let f = File::open(path).with_context(|| format!("opening journal {}", path.display()))?;
     let mut out = Vec::new();
@@ -24,13 +40,67 @@ pub fn read(path: &Path) -> Result<Vec<Evaluation>> {
         if line.trim().is_empty() {
             continue;
         }
-        let j = json::parse(&line)
-            .map_err(|e| anyhow!("{}:{}: {e}", path.display(), ln + 1))?;
-        let eval = Evaluation::from_json(&j)
-            .with_context(|| format!("{}:{}", path.display(), ln + 1))?;
-        out.push(eval);
+        out.push(parse_line(path, ln, &line)?);
     }
     Ok(out)
+}
+
+/// Read the newline-terminated prefix of a journal, ignoring a torn
+/// (unterminated) trailing line. Returns the parsed records plus the
+/// number of torn tail bytes that were ignored — `0` for a clean file.
+/// Lines *within* the terminated prefix still parse strictly: an
+/// interrupted append only ever tears the final line, so anything else
+/// is real corruption and stays an error.
+pub fn read_salvage(path: &Path) -> Result<(Vec<Evaluation>, usize)> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("opening journal {}", path.display()))?;
+    let clean_len = match bytes.iter().rposition(|&b| b == b'\n') {
+        Some(i) => i + 1,
+        None => 0,
+    };
+    let torn = bytes.len() - clean_len;
+    let text = std::str::from_utf8(&bytes[..clean_len])
+        .with_context(|| format!("journal {} is not UTF-8", path.display()))?;
+    let mut out = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        out.push(parse_line(path, ln, line)?);
+    }
+    Ok((out, torn))
+}
+
+/// Truncate a torn (newline-less) trailing line off `path`, logging what
+/// was dropped. No-op when the file is absent, empty, or cleanly
+/// terminated. Returns the number of bytes truncated.
+pub fn truncate_torn_tail(path: &Path) -> Result<usize> {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        // nothing to salvage; let the subsequent open surface real errors
+        Err(_) => return Ok(0),
+    };
+    if bytes.is_empty() || bytes.ends_with(b"\n") {
+        return Ok(0);
+    }
+    let keep = bytes
+        .iter()
+        .rposition(|&b| b == b'\n')
+        .map(|i| i + 1)
+        .unwrap_or(0);
+    let torn = bytes.len() - keep;
+    let f = OpenOptions::new()
+        .write(true)
+        .open(path)
+        .with_context(|| format!("salvaging journal {}", path.display()))?;
+    f.set_len(keep as u64)
+        .with_context(|| format!("salvaging journal {}", path.display()))?;
+    eprintln!(
+        "dse: journal {}: truncated a torn trailing line ({torn} bytes); \
+         the lost point will be re-evaluated",
+        path.display()
+    );
+    Ok(torn)
 }
 
 /// Flushing JSONL writer.
@@ -42,16 +112,18 @@ pub struct Journal {
 impl Journal {
     /// Create (truncating any existing file).
     pub fn create(path: &Path) -> Result<Journal> {
-        let f = File::create(path)
-            .with_context(|| format!("creating journal {}", path.display()))?;
+        let f = File::create(path).with_context(|| format!("creating journal {}", path.display()))?;
         Ok(Journal {
             path: path.to_path_buf(),
             out: BufWriter::new(f),
         })
     }
 
-    /// Open for appending (the resume-in-place case).
+    /// Open for appending (the resume-in-place case). A torn trailing line
+    /// left by a killed writer is truncated first, so appended records
+    /// always start at a line boundary.
     pub fn append_to(path: &Path) -> Result<Journal> {
+        truncate_torn_tail(path)?;
         let f = OpenOptions::new()
             .create(true)
             .append(true)
@@ -67,9 +139,11 @@ impl Journal {
         &self.path
     }
 
-    /// Append one record and flush it to disk.
+    /// Append one record and flush it to disk. Fault site:
+    /// `dse::journal::push`.
     pub fn push(&mut self, eval: &Evaluation) -> Result<()> {
-        writeln!(self.out, "{}", eval.to_json().to_string_compact())
+        crate::util::faults::check_io("dse::journal::push")
+            .and_then(|()| writeln!(self.out, "{}", eval.to_json().to_string_compact()))
             .and_then(|()| self.out.flush())
             .with_context(|| format!("writing journal {}", self.path.display()))
     }
@@ -110,8 +184,8 @@ mod tests {
         for (a, b) in back.iter().zip(&evals) {
             assert_eq!(a.fingerprint(), b.fingerprint());
             assert_eq!(a.effective_mb_s().to_bits(), b.effective_mb_s().to_bits());
-            assert_eq!(a.report.timing, b.report.timing);
-            assert_eq!(a.area, b.area);
+            assert_eq!(a.report().unwrap().timing, b.report().unwrap().timing);
+            assert_eq!(a.area().unwrap(), b.area().unwrap());
         }
         // appending extends without clobbering
         let more = sample_evals(4);
@@ -123,11 +197,88 @@ mod tests {
     }
 
     #[test]
+    fn failed_records_round_trip() {
+        let evals = sample_evals(1);
+        let failed = Evaluation::failed(evals[0].point().clone(), "synthetic: boom");
+        let path = std::env::temp_dir().join("cfa_dse_journal_failed.jsonl");
+        let mut j = Journal::create(&path).unwrap();
+        j.push(&evals[0]).unwrap();
+        j.push(&failed).unwrap();
+        drop(j);
+        let back = read(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert!(!back[0].is_failed());
+        assert!(back[1].is_failed());
+        assert_eq!(back[1].fingerprint(), failed.fingerprint());
+        assert_eq!(back[1].error(), Some("synthetic: boom"));
+        assert!(back[1].report().is_none() && back[1].area().is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn corrupt_lines_are_rejected_with_position() {
         let path = std::env::temp_dir().join("cfa_dse_journal_corrupt.jsonl");
         std::fs::write(&path, "{\"point\": 3}\n").unwrap();
         let err = format!("{:#}", read(&path).unwrap_err());
         assert!(err.contains(":1"), "{err}");
+        // the line is newline-terminated, so salvage rejects it too:
+        // torn-tail recovery is not a license to skip corrupt records
+        let err = format!("{:#}", read_salvage(&path).unwrap_err());
+        assert!(err.contains(":1"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn salvage_ignores_exactly_the_torn_tail() {
+        let evals = sample_evals(2);
+        let path = std::env::temp_dir().join("cfa_dse_journal_salvage.jsonl");
+        let mut j = Journal::create(&path).unwrap();
+        for e in &evals {
+            j.push(e).unwrap();
+        }
+        drop(j);
+        let clean = std::fs::read(&path).unwrap();
+        // every truncation point mid-final-line salvages the first record
+        // and reports the rest as torn; line boundaries salvage cleanly
+        let first_line_end = clean.iter().position(|&b| b == b'\n').unwrap() + 1;
+        for cut in first_line_end..=clean.len() {
+            std::fs::write(&path, &clean[..cut]).unwrap();
+            let (records, torn) = read_salvage(&path).unwrap();
+            if cut == clean.len() {
+                assert_eq!((records.len(), torn), (2, 0));
+            } else {
+                assert_eq!(records.len(), 1, "cut={cut}");
+                assert_eq!(torn, cut - first_line_end, "cut={cut}");
+            }
+            assert_eq!(records[0].fingerprint(), evals[0].fingerprint());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn append_to_truncates_a_torn_tail_before_appending() {
+        let evals = sample_evals(2);
+        let path = std::env::temp_dir().join("cfa_dse_journal_torn_append.jsonl");
+        let mut j = Journal::create(&path).unwrap();
+        j.push(&evals[0]).unwrap();
+        drop(j);
+        // simulate a kill mid-append: half a second record, no newline
+        let torn_half = &evals[1].to_json().to_string_compact()[..20];
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(torn_half.as_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(read(&path).is_err(), "strict read must reject the torn file");
+        // append_to salvages: the torn bytes vanish, the append lands clean
+        let mut j = Journal::append_to(&path).unwrap();
+        j.push(&evals[1]).unwrap();
+        drop(j);
+        let back = read(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[1].fingerprint(), evals[1].fingerprint());
+        // a clean file is untouched by the salvage pass
+        let before = std::fs::read(&path).unwrap();
+        assert_eq!(truncate_torn_tail(&path).unwrap(), 0);
+        assert_eq!(std::fs::read(&path).unwrap(), before);
         std::fs::remove_file(&path).ok();
     }
 }

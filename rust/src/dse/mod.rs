@@ -29,6 +29,12 @@
 //!   memory simulator's coalesced fast path — bit-identical to the
 //!   plan-walk path, just without re-deriving the stream per point.
 //!
+//! Exploration is fault-isolated and crash-safe: a failing or panicking
+//! point becomes a journaled [`Evaluation::Failed`] quarantine record
+//! (retried once on resume), a torn journal tail from a killed run is
+//! salvaged, and a wall-clock deadline / [`CancelToken`] stops the run
+//! cooperatively with a flushed, resumable journal (see `explore`).
+//!
 //! The figure sweeps are thin wrappers over `Exhaustive` spaces
 //! ([`Space::fig15`] / [`Space::area`]; see `harness::figures`), and the
 //! CLI exposes the tuner as `cfa tune`.
@@ -52,6 +58,7 @@ pub mod journal;
 pub mod space;
 pub mod strategy;
 
+pub use crate::util::par::CancelToken;
 pub use evaluate::{
     dominates, geometry_key, pareto_front, pareto_indices, Evaluation, Evaluator, ParetoFront,
 };

@@ -85,17 +85,19 @@ pub fn measure_bandwidth_named(
     })
 }
 
-/// Project one dse [`Evaluation`] onto a Fig-15 data point.
+/// Project one dse [`Evaluation`] onto a Fig-15 data point. Sweeps run
+/// exhaustively over known-good spaces, so every record is a success.
 pub fn bandwidth_point_of(e: &Evaluation) -> BandwidthPoint {
+    let report = e.report().expect("figure sweeps journal successes only");
     BandwidthPoint {
-        benchmark: e.point.workload.clone(),
-        tile: e.point.tile.clone(),
-        alloc: e.report.layout.clone(),
-        raw_mb_s: e.report.raw_mb_s,
-        effective_mb_s: e.report.effective_mb_s,
-        transactions: e.report.transactions,
-        raw_bytes: e.report.raw_bytes,
-        useful_bytes: e.report.useful_bytes,
+        benchmark: e.point().workload.clone(),
+        tile: e.point().tile.clone(),
+        alloc: report.layout.clone(),
+        raw_mb_s: report.raw_mb_s,
+        effective_mb_s: report.effective_mb_s,
+        transactions: report.transactions,
+        raw_bytes: report.raw_bytes,
+        useful_bytes: report.useful_bytes,
     }
 }
 
@@ -213,13 +215,14 @@ pub fn area_sweep_parallel(
     )
 }
 
-/// Project one dse [`Evaluation`] onto a Fig-16/17 data point.
+/// Project one dse [`Evaluation`] onto a Fig-16/17 data point. Sweeps run
+/// exhaustively over known-good spaces, so every record is a success.
 pub fn area_point_of(e: &Evaluation) -> AreaPoint {
     AreaPoint {
-        benchmark: e.point.workload.clone(),
-        tile: e.point.tile.clone(),
-        alloc: e.point.layout.clone(),
-        est: e.area,
+        benchmark: e.point().workload.clone(),
+        tile: e.point().tile.clone(),
+        alloc: e.point().layout.clone(),
+        est: *e.area().expect("figure sweeps journal successes only"),
     }
 }
 

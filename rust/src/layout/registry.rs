@@ -215,18 +215,28 @@ fn global_lock() -> &'static RwLock<LayoutRegistry> {
 /// Snapshot of the process-global registry (built-ins pre-registered).
 /// The snapshot is an independent value: later global registrations do not
 /// retroactively appear in it, so sweeps see a consistent layout set.
+///
+/// A thread that panics while holding the lock poisons it, but never
+/// leaves the registry itself inconsistent: entries are only pushed after
+/// validation, and no layout constructor runs under the lock. Readers and
+/// writers therefore recover by reading through the poison marker —
+/// registry contents are kept, unlike the clear-on-recovery trace cache.
 pub fn global() -> LayoutRegistry {
-    global_lock().read().expect("layout registry poisoned").clone()
+    match global_lock().read() {
+        Ok(guard) => guard.clone(),
+        Err(poisoned) => poisoned.into_inner().clone(),
+    }
 }
 
 /// Register a layout in the process-global registry, making it visible to
 /// every registry-enumerating consumer (figure sweeps, `cfa layouts`,
-/// spec-by-name sessions that use the default registry).
+/// spec-by-name sessions that use the default registry). Recovers from a
+/// poisoned lock the same way [`global`] does.
 pub fn register_global(name: &str, aliases: &[&str], ctor: LayoutCtor) -> anyhow::Result<()> {
-    global_lock()
-        .write()
-        .expect("layout registry poisoned")
-        .register(name, aliases, ctor)
+    match global_lock().write() {
+        Ok(mut guard) => guard.register(name, aliases, ctor),
+        Err(poisoned) => poisoned.into_inner().register(name, aliases, ctor),
+    }
 }
 
 #[cfg(test)]
@@ -298,5 +308,26 @@ mod tests {
         let r = global();
         assert!(r.len() >= 4);
         assert_eq!(r.canonical("bounding-box"), Some(names::BBOX));
+    }
+
+    #[test]
+    fn poisoned_global_lock_recovers_with_contents_intact() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        // poison the global lock: panic while holding the write guard
+        let unwound = catch_unwind(AssertUnwindSafe(|| {
+            let _guard = global_lock().write().unwrap_or_else(|p| p.into_inner());
+            panic!("poisoning panic");
+        }));
+        assert!(unwound.is_err());
+        // reads recover and keep every entry (nothing is cleared) ...
+        let r = global();
+        assert!(r.len() >= 4);
+        assert_eq!(r.canonical("bounding-box"), Some(names::BBOX));
+        // ... and writes recover too: this one reaches normal validation
+        // (duplicate name) instead of dying on the poisoned lock. Note it
+        // must NOT register a new name — other tests in this binary
+        // enumerate the global registry and count its layouts.
+        let err = register_global(names::CFA, &[], Arc::new(build_cfa)).unwrap_err();
+        assert!(err.to_string().contains("already registered"), "{err}");
     }
 }

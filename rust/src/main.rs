@@ -28,6 +28,12 @@ use cfa::util::cli::{env_args, Command};
 use cfa::util::table::{Align, Table};
 
 fn main() {
+    // deterministic fault injection (robustness tests / CI fault-smoke):
+    // no-op unless CFA_FAULTS is set
+    if let Err(e) = cfa::util::faults::arm_from_env() {
+        eprintln!("error: CFA_FAULTS: {e:#}");
+        std::process::exit(1);
+    }
     let args: Vec<String> = std::env::args().skip(1).collect();
     let sub = args.first().map(|s| s.as_str()).unwrap_or("help");
     let result = match sub {
@@ -60,7 +66,8 @@ fn print_help() {
          \x20 run                  end-to-end verified run (--benchmark, --alloc, --channels N, --striping P, --parallel N, ...)\n\
          \x20 bench                figure sweeps (--figure fig15|fig16|fig17, --quick, --parallel N, --json PATH)\n\
          \x20 tune                 design-space exploration (--space, --strategy, --budget, --parallel,\n\
-         \x20                      --channels LIST, --striping LIST, --out, --resume, --trace-cache)\n\
+         \x20                      --channels LIST, --striping LIST, --out, --resume, --no-retry-failed,\n\
+         \x20                      --deadline-secs N, --trace-cache)\n\
          \x20 codegen              emit HLS C (--benchmark, --tile)\n\n\
          layouts are named through the open registry (`cfa layouts`); every\n\
          --alloc option accepts a canonical name, an alias, or 'all'.\n"
@@ -333,24 +340,27 @@ fn cmd_bench() -> anyhow::Result<()> {
                 print!("{}", figures::render_fig15(&pts, w.name, &mem));
             }
             if let Some(path) = a.get("out") {
-                std::fs::write(path, figures::fig15_csv(&pts))?;
+                cfa::util::fsx::write_atomic(path, figures::fig15_csv(&pts))?;
                 println!("wrote {path}");
             }
             if let Some(path) = a.get("json") {
-                std::fs::write(path, figures::fig15_json(&pts, &mem).to_string_pretty())?;
+                cfa::util::fsx::write_atomic(
+                    path,
+                    figures::fig15_json(&pts, &mem).to_string_pretty(),
+                )?;
                 println!("wrote {path}");
             }
         }
         "fig16" | "fig17" => {
             let pts = figures::area_sweep_parallel(&wl, mem.elem_bytes, 3, threads);
             if let Some(path) = a.get("out") {
-                std::fs::write(path, figures::area_csv(&pts))?;
+                cfa::util::fsx::write_atomic(path, figures::area_csv(&pts))?;
                 println!("wrote {path}");
             } else if a.get("json").is_none() {
                 println!("{}", figures::area_csv(&pts));
             }
             if let Some(path) = a.get("json") {
-                std::fs::write(path, figures::area_json(&pts).to_string_pretty())?;
+                cfa::util::fsx::write_atomic(path, figures::area_json(&pts).to_string_pretty())?;
                 println!("wrote {path}");
             }
         }
@@ -372,6 +382,15 @@ fn cmd_tune() -> anyhow::Result<()> {
         .opt("seed", "seed for the random/hill strategies", Some("0"))
         .opt("out", "JSONL results journal path", Some("tune.jsonl"))
         .opt("resume", "journal to resume from (skips evaluated points)", None)
+        .flag(
+            "no-retry-failed",
+            "skip journaled failures on resume instead of retrying them once",
+        )
+        .opt(
+            "deadline-secs",
+            "wall-clock deadline; the run stops cooperatively with a resumable journal (0 = none)",
+            Some("0"),
+        )
         .opt(
             "channels",
             "override the space's channel axis, comma-separated (e.g. 1,4)",
@@ -445,12 +464,17 @@ fn cmd_tune() -> anyhow::Result<()> {
         "off" => false,
         s => anyhow::bail!("--trace-cache must be 'on' or 'off', got '{s}'"),
     };
+    let deadline = a.get_usize("deadline-secs", 0).map_err(anyhow::Error::msg)?;
     let mut explorer = Explorer::new(space, strategy)
         .parallel(parallel)
         .journal(&out)
-        .trace_cache(trace_cache);
+        .trace_cache(trace_cache)
+        .retry_failed(!a.flag("no-retry-failed"));
     if budget > 0 {
         explorer = explorer.budget(budget);
+    }
+    if deadline > 0 {
+        explorer = explorer.deadline_secs(deadline as u64);
     }
     if let Some(resume) = a.get("resume") {
         explorer = explorer.resume(resume);

@@ -26,8 +26,8 @@ use crate::memsim::{Dir, Txn};
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 /// A compiled, config-independent transaction trace in SoA form.
 ///
@@ -124,7 +124,42 @@ impl TxnTrace {
 const SHARDS: usize = 16;
 
 /// One cache shard: a mutex-guarded slice of the key space.
-type Shard = Mutex<HashMap<String, Arc<TxnTrace>>>;
+///
+/// Shards survive a panicking holder instead of propagating the poison to
+/// every later caller (the explorer quarantines panicking evaluations, so
+/// the process keeps running). Recovery policy: poisoned shard = cleared
+/// shard — the cache is a cache, so dropping its entries is always safe,
+/// and the first post-panic caller does exactly that. The `std` mutex has
+/// no `clear_poison` at our MSRV, so the flag makes the clear one-shot and
+/// later lock attempts simply read through the (permanently set) poison
+/// marker.
+struct Shard {
+    map: Mutex<HashMap<String, Arc<TxnTrace>>>,
+    recovered: AtomicBool,
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            map: Mutex::new(HashMap::new()),
+            recovered: AtomicBool::new(false),
+        }
+    }
+
+    /// Lock the shard, recovering from poison (see the type docs).
+    fn lock(&self) -> MutexGuard<'_, HashMap<String, Arc<TxnTrace>>> {
+        match self.map.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => {
+                let mut guard = poisoned.into_inner();
+                if !self.recovered.swap(true, Ordering::Relaxed) {
+                    guard.clear();
+                }
+                guard
+            }
+        }
+    }
+}
 
 /// A shared cache of compiled traces, keyed by geometry fingerprint.
 ///
@@ -143,7 +178,7 @@ pub struct TraceCache {
 impl TraceCache {
     pub fn new() -> TraceCache {
         TraceCache {
-            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            shards: (0..SHARDS).map(|_| Shard::new()).collect(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
@@ -157,12 +192,7 @@ impl TraceCache {
 
     /// The cached trace for `key`, if present (counts as a hit).
     pub fn get(&self, key: &str) -> Option<Arc<TxnTrace>> {
-        let found = self
-            .shard(key)
-            .lock()
-            .expect("trace cache poisoned")
-            .get(key)
-            .cloned();
+        let found = self.shard(key).lock().get(key).cloned();
         if found.is_some() {
             self.hits.fetch_add(1, Ordering::Relaxed);
         } else {
@@ -172,20 +202,22 @@ impl TraceCache {
     }
 
     /// The trace for `key`, compiling it with `compile` on a miss.
+    /// Fault site: `trace::compile` (the miss path only).
     pub fn get_or_compile(
         &self,
         key: &str,
         compile: impl FnOnce() -> TxnTrace,
     ) -> Arc<TxnTrace> {
-        if let Some(t) = self.shard(key).lock().expect("trace cache poisoned").get(key) {
+        if let Some(t) = self.shard(key).lock().get(key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return t.clone();
         }
         // compile outside the lock: a cold geometry must not block other
         // geometries that hash to the same shard
+        crate::util::faults::check("trace::compile");
         let built = Arc::new(compile());
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut shard = self.shard(key).lock().expect("trace cache poisoned");
+        let mut shard = self.shard(key).lock();
         shard.entry(key.to_string()).or_insert(built).clone()
     }
 
@@ -201,10 +233,7 @@ impl TraceCache {
 
     /// Number of cached traces.
     pub fn len(&self) -> usize {
-        self.shards
-            .iter()
-            .map(|s| s.lock().expect("trace cache poisoned").len())
-            .sum()
+        self.shards.iter().map(|s| s.lock().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -214,7 +243,7 @@ impl TraceCache {
     /// Drop every cached trace (counters keep accumulating).
     pub fn clear(&self) {
         for s in &self.shards {
-            s.lock().expect("trace cache poisoned").clear();
+            s.lock().clear();
         }
     }
 }
@@ -276,6 +305,36 @@ mod tests {
         assert_eq!(cache.len(), 1);
         cache.clear();
         assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn poisoned_shard_recovers_as_a_cleared_shard() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let cache = TraceCache::new();
+        cache.get_or_compile("k", || sample_trace(4));
+        // a key in a different shard, to prove poison stays local
+        let not_with_k =
+            |i: &u64| !std::ptr::eq(cache.shard(&format!("other{i}")), cache.shard("k"));
+        let other = format!("other{}", (0..).find(not_with_k).unwrap());
+        cache.get_or_compile(&other, || sample_trace(2));
+        assert_eq!(cache.len(), 2);
+        // poison the shard holding "k": panic while holding its guard
+        let unwound = catch_unwind(AssertUnwindSafe(|| {
+            let _guard = cache.shard("k").lock();
+            panic!("poisoning panic");
+        }));
+        assert!(unwound.is_err());
+        assert!(cache.shard("k").map.is_poisoned());
+        // recovery: the poisoned shard comes back cleared and refills;
+        // the sibling shard is untouched
+        assert!(cache.get("k").is_none(), "poisoned shard must be cleared");
+        let t = cache.get_or_compile("k", || sample_trace(4));
+        assert_eq!(*t, sample_trace(4));
+        let o = cache.get_or_compile(&other, || panic!("cached"));
+        assert_eq!(*o, sample_trace(2));
+        assert_eq!(cache.len(), 2);
+        // repeated use of the once-poisoned shard keeps its contents now
+        assert!(cache.get("k").is_some());
     }
 
     #[test]

@@ -1,0 +1,337 @@
+//! Deterministic, seed-keyed fault injection for robustness tests.
+//!
+//! Production code plants named *sites* on its failure-relevant paths —
+//! [`check`] for panic/delay faults, [`check_io`] where an injected
+//! `io::Error` makes sense — and this module decides, from an armed plan,
+//! whether the Nth arrival at a site fires. Everything is deterministic:
+//! a plan names exact hit indices (or derives them from a seed via the
+//! project RNG), and per-site counters restart from zero on every
+//! [`arm`]. Disarmed (the default), a site costs one relaxed atomic load.
+//!
+//! Plans are comma-separated `KIND@SITE#HITS` entries:
+//!
+//! * `KIND` — `panic` | `io` | `delay<MS>` (e.g. `delay10`);
+//! * `SITE` — the exact site label (`dse::evaluate`,
+//!   `dse::journal::push`, `fsx::write_atomic`, `trace::compile`);
+//! * `HITS` — `N` (the Nth arrival), `N+M+…` (each listed arrival), or
+//!   `rand:K/N/SEED` (K distinct arrivals drawn from `1..=N` with
+//!   [`Rng`](crate::util::rng::Rng) seeded by `SEED`).
+//!
+//! Example: `panic@dse::evaluate#rand:2/8/42` panics two seed-chosen
+//! evaluations out of the first eight. The `cfa` binary arms from the
+//! `CFA_FAULTS` environment variable at startup ([`arm_from_env`]), which
+//! is what the CI `fault-smoke` job drives.
+//!
+//! The armed plan is process-global; tests that arm must serialize (see
+//! `tests/fault_isolation.rs`) and [`disarm`] when done. A fired panic
+//! never corrupts the harness itself: the action is decided under the
+//! state lock but performed after the guard is dropped, and the state lock
+//! recovers from poisoning by reading through.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Result};
+
+/// What an armed site does when a hit fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `panic!` at the site (exercises unwind paths).
+    Panic,
+    /// Return an injected `io::Error` from [`check_io`] sites.
+    Io,
+    /// Sleep this many milliseconds (exercises timeout/deadline paths).
+    DelayMs(u64),
+}
+
+#[derive(Clone, Debug)]
+struct SiteFault {
+    kind: FaultKind,
+    hits: BTreeSet<u64>,
+}
+
+#[derive(Clone, Debug, Default)]
+struct State {
+    /// Armed faults per site label.
+    sites: BTreeMap<String, Vec<SiteFault>>,
+    /// Arrivals observed per site since the last [`arm`].
+    counts: BTreeMap<String, u64>,
+}
+
+/// Fast-path gate: off means [`check`]/[`check_io`] return immediately.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static STATE: Mutex<Option<State>> = Mutex::new(None);
+
+fn state_lock() -> std::sync::MutexGuard<'static, Option<State>> {
+    // a panic fired *by* the harness unwinds with no guard held, but a
+    // caller could still die between unrelated sites; read through poison
+    STATE.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Parse one `HITS` spec into the set of firing arrival indices.
+fn parse_hits(spec: &str) -> Result<BTreeSet<u64>> {
+    if let Some(rest) = spec.strip_prefix("rand:") {
+        let parts: Vec<&str> = rest.split('/').collect();
+        let [k, n, seed] = parts.as_slice() else {
+            bail!("rand hits must be 'rand:K/N/SEED', got 'rand:{rest}'");
+        };
+        let k: u64 = k.parse().map_err(|_| anyhow!("bad K in 'rand:{rest}'"))?;
+        let n: u64 = n.parse().map_err(|_| anyhow!("bad N in 'rand:{rest}'"))?;
+        let seed: u64 = seed
+            .parse()
+            .map_err(|_| anyhow!("bad SEED in 'rand:{rest}'"))?;
+        if k > n {
+            bail!("rand hits: K={k} exceeds N={n}");
+        }
+        let mut rng = Rng::new(seed);
+        let mut hits = BTreeSet::new();
+        while (hits.len() as u64) < k {
+            hits.insert(rng.gen_range(n) + 1); // arrivals are 1-based
+        }
+        return Ok(hits);
+    }
+    let mut hits = BTreeSet::new();
+    for part in spec.split('+') {
+        let n: u64 = part
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("bad hit index '{part}' in '{spec}'"))?;
+        if n == 0 {
+            bail!("hit indices are 1-based; 0 in '{spec}'");
+        }
+        hits.insert(n);
+    }
+    Ok(hits)
+}
+
+fn parse_entry(entry: &str) -> Result<(String, SiteFault)> {
+    let (kind_str, rest) = entry
+        .split_once('@')
+        .ok_or_else(|| anyhow!("fault entry '{entry}' is missing '@' (KIND@SITE#HITS)"))?;
+    let (site, hits_str) = rest
+        .split_once('#')
+        .ok_or_else(|| anyhow!("fault entry '{entry}' is missing '#' (KIND@SITE#HITS)"))?;
+    if site.is_empty() {
+        bail!("fault entry '{entry}' names an empty site");
+    }
+    let kind = match kind_str {
+        "panic" => FaultKind::Panic,
+        "io" => FaultKind::Io,
+        s => match s.strip_prefix("delay") {
+            Some(ms) => FaultKind::DelayMs(
+                ms.parse()
+                    .map_err(|_| anyhow!("bad delay milliseconds in '{entry}'"))?,
+            ),
+            None => bail!("unknown fault kind '{kind_str}' (panic | io | delay<MS>)"),
+        },
+    };
+    Ok((
+        site.to_string(),
+        SiteFault {
+            kind,
+            hits: parse_hits(hits_str)?,
+        },
+    ))
+}
+
+/// Arm a fault plan (see the module docs for the grammar). Resets every
+/// per-site arrival counter, so plans are reproducible back-to-back.
+pub fn arm(spec: &str) -> Result<()> {
+    let mut state = State::default();
+    for entry in spec.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let (site, fault) = parse_entry(entry)?;
+        state.sites.entry(site).or_default().push(fault);
+    }
+    let mut g = state_lock();
+    if state.sites.is_empty() {
+        *g = None;
+        ARMED.store(false, Ordering::Relaxed);
+    } else {
+        *g = Some(state);
+        ARMED.store(true, Ordering::Relaxed);
+    }
+    Ok(())
+}
+
+/// Arm from the `CFA_FAULTS` environment variable (no-op when unset or
+/// empty). The `cfa` binary calls this once at startup.
+pub fn arm_from_env() -> Result<()> {
+    match std::env::var("CFA_FAULTS") {
+        Ok(spec) if !spec.trim().is_empty() => arm(&spec),
+        _ => Ok(()),
+    }
+}
+
+/// Drop the armed plan; every site returns to the one-load fast path.
+pub fn disarm() {
+    let mut g = state_lock();
+    *g = None;
+    ARMED.store(false, Ordering::Relaxed);
+}
+
+/// True iff a plan is armed.
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Arrivals observed at `site` since the last [`arm`] (testing aid).
+pub fn arrivals(site: &str) -> u64 {
+    state_lock()
+        .as_ref()
+        .and_then(|s| s.counts.get(site).copied())
+        .unwrap_or(0)
+}
+
+/// Count one arrival at `site` and return the fault to perform, if any.
+/// The lock is released before the caller acts, so a fired panic cannot
+/// poison the harness state.
+fn fire(site: &str) -> Option<(FaultKind, u64)> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let mut g = state_lock();
+    let state = g.as_mut()?;
+    let n = {
+        let c = state.counts.entry(site.to_string()).or_insert(0);
+        *c += 1;
+        *c
+    };
+    state
+        .sites
+        .get(site)
+        .and_then(|faults| faults.iter().find(|f| f.hits.contains(&n)))
+        .map(|f| (f.kind, n))
+}
+
+/// A panic/delay fault site. Counts one arrival; fires the armed fault for
+/// this arrival index, if any. An armed `io` fault at a plain site panics
+/// (it marks a plan/site mismatch the test author must fix).
+pub fn check(site: &str) {
+    match fire(site) {
+        None => {}
+        Some((FaultKind::Panic, n)) => panic!("fault injected: panic at {site} (arrival {n})"),
+        Some((FaultKind::DelayMs(ms), _)) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms))
+        }
+        Some((FaultKind::Io, n)) => {
+            panic!("fault plan error: io fault armed at non-io site {site} (arrival {n})")
+        }
+    }
+}
+
+/// An IO fault site. Like [`check`], but an armed `io` fault surfaces as
+/// an injected [`std::io::Error`] for the caller's normal error path.
+pub fn check_io(site: &str) -> std::io::Result<()> {
+    match fire(site) {
+        None => Ok(()),
+        Some((FaultKind::Io, n)) => Err(std::io::Error::other(format!(
+            "fault injected: io error at {site} (arrival {n})"
+        ))),
+        Some((FaultKind::Panic, n)) => panic!("fault injected: panic at {site} (arrival {n})"),
+        Some((FaultKind::DelayMs(ms), _)) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The plan is process-global: tests arming it take this lock.
+    pub(crate) fn serialize() -> std::sync::MutexGuard<'static, ()> {
+        static GATE: Mutex<()> = Mutex::new(());
+        GATE.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    struct Disarm;
+    impl Drop for Disarm {
+        fn drop(&mut self) {
+            disarm();
+        }
+    }
+
+    #[test]
+    fn disarmed_sites_are_inert() {
+        let _gate = serialize();
+        let _cleanup = Disarm;
+        disarm();
+        assert!(!armed());
+        check("nowhere");
+        assert!(check_io("nowhere").is_ok());
+        assert_eq!(arrivals("nowhere"), 0);
+    }
+
+    #[test]
+    fn nth_hit_fires_and_counters_reset_on_arm() {
+        let _gate = serialize();
+        let _cleanup = Disarm;
+        arm("panic@site::a#2").unwrap();
+        assert!(armed());
+        check("site::a"); // arrival 1: quiet
+        let err = std::panic::catch_unwind(|| check("site::a")).unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("site::a") && msg.contains("arrival 2"), "{msg}");
+        check("site::a"); // arrival 3: quiet again
+        assert_eq!(arrivals("site::a"), 3);
+        // re-arming restarts the count, so the same plan replays exactly
+        arm("panic@site::a#2").unwrap();
+        assert_eq!(arrivals("site::a"), 0);
+        check("site::a");
+        assert!(std::panic::catch_unwind(|| check("site::a")).is_err());
+    }
+
+    #[test]
+    fn hit_lists_and_io_and_delay_kinds() {
+        let _gate = serialize();
+        let _cleanup = Disarm;
+        arm("io@site::w#1+3, delay0@site::d#1").unwrap();
+        assert!(check_io("site::w").is_err());
+        assert!(check_io("site::w").is_ok());
+        let e = check_io("site::w").unwrap_err();
+        assert!(e.to_string().contains("fault injected"), "{e}");
+        check("site::d"); // a zero-ms delay is just a scheduling point
+        check("other::site"); // unarmed sites count but never fire
+        assert_eq!(arrivals("other::site"), 1);
+    }
+
+    #[test]
+    fn rand_hits_are_seed_deterministic_and_in_range() {
+        let _gate = serialize();
+        let _cleanup = Disarm;
+        let a = parse_hits("rand:3/16/7").unwrap();
+        let b = parse_hits("rand:3/16/7").unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 3);
+        assert!(a.iter().all(|&h| (1..=16).contains(&h)), "{a:?}");
+        let c = parse_hits("rand:3/16/8").unwrap();
+        assert_ne!(a, c, "different seeds should differ (16 choose 3)");
+        // arming with a rand plan fires exactly K times over N arrivals
+        arm("panic@site::r#rand:2/8/42").unwrap();
+        let fired = (0..8)
+            .filter(|_| std::panic::catch_unwind(|| check("site::r")).is_err())
+            .count();
+        assert_eq!(fired, 2);
+    }
+
+    #[test]
+    fn bad_plans_are_rejected() {
+        let _gate = serialize();
+        assert!(arm("panic@site#0").is_err(), "0 is not a 1-based hit");
+        assert!(arm("panic@site").is_err(), "missing hits");
+        assert!(arm("panicsite#1").is_err(), "missing site separator");
+        assert!(arm("zap@site#1").is_err(), "unknown kind");
+        assert!(arm("delayx@site#1").is_err(), "bad delay ms");
+        assert!(arm("panic@site#rand:9/4/1").is_err(), "K > N");
+        assert!(arm("panic@#1").is_err(), "empty site");
+        assert!(arm("").is_ok(), "empty plan disarms");
+        assert!(!armed());
+    }
+}

@@ -1,0 +1,67 @@
+//! Crash-safe filesystem helpers.
+//!
+//! [`write_atomic`] is the project's one way to publish a result file
+//! (bench `BENCH_*.json` schema seeds, figure CSVs): the bytes land in a
+//! sibling `<name>.tmp` first and reach the destination via `rename`,
+//! which POSIX makes atomic within a filesystem. A bench killed mid-write
+//! therefore leaves either the old file or the new one — never a
+//! truncated JSON that would poison downstream tooling. (Journals are
+//! different: they are *append-only* logs with their own torn-line
+//! salvage in `dse::journal`.)
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write `contents` to `path` atomically: temp sibling + `rename`.
+/// On failure the destination is untouched and the temp file is cleaned
+/// up best-effort. Fault site: `fsx::write_atomic`.
+pub fn write_atomic(path: impl AsRef<Path>, contents: impl AsRef<[u8]>) -> std::io::Result<()> {
+    let path = path.as_ref();
+    crate::util::faults::check_io("fsx::write_atomic")?;
+    let mut tmp_name = path.file_name().unwrap_or_default().to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = path.with_file_name(tmp_name);
+    let result = (|| {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(contents.as_ref())?;
+        // the rename publishes; sync first so a crash right after the
+        // rename cannot surface a present-but-empty file
+        f.sync_all()?;
+        std::fs::rename(&tmp, path)
+    })();
+    if result.is_err() {
+        std::fs::remove_file(&tmp).ok();
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(name: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(name);
+        std::fs::remove_file(&p).ok();
+        p
+    }
+
+    #[test]
+    fn writes_and_overwrites_without_leftover_temp() {
+        let p = tmp_path("cfa_fsx_atomic.json");
+        write_atomic(&p, "{\"v\":1}").unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "{\"v\":1}");
+        write_atomic(&p, "{\"v\":2}").unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "{\"v\":2}");
+        let tmp = p.with_file_name("cfa_fsx_atomic.json.tmp");
+        assert!(!tmp.exists(), "temp sibling must not survive");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn failed_write_leaves_destination_untouched() {
+        let p = tmp_path("cfa_fsx_fail_dir/never.json");
+        // parent directory does not exist: create of the temp file fails
+        assert!(write_atomic(&p, "x").is_err());
+        assert!(!p.exists());
+    }
+}

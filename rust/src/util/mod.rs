@@ -1,5 +1,6 @@
 //! Support substrates: randomness, statistics, property testing, JSON,
-//! CLI parsing, text rendering and fork-join parallelism.
+//! CLI parsing, text rendering, fork-join parallelism, fault injection
+//! and crash-safe file writes.
 //!
 //! The offline crate set ships none of the usual ecosystem helpers
 //! (rand / criterion / proptest / serde / clap / rayon), so this module
@@ -7,6 +8,8 @@
 //! deterministic and dependency-free.
 
 pub mod cli;
+pub mod faults;
+pub mod fsx;
 pub mod json;
 pub mod par;
 pub mod prop;

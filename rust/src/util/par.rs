@@ -11,8 +11,19 @@
 //! Work is claimed item-by-item (dynamic self-scheduling), so heavily
 //! skewed workloads — one 128³ tile plan next to many tiny boundary tiles —
 //! still balance across workers.
+//!
+//! **Fault isolation.** [`try_parallel_map`] is the panic-safe entry point:
+//! every item runs under `catch_unwind`, so one panicking item costs exactly
+//! one `Err` slot (carrying the payload and the item index) while sibling
+//! items keep running to completion. [`parallel_map`] is its thin infallible
+//! wrapper: on any panic it re-raises the *lowest-index* payload, which is
+//! exactly the panic a sequential `items.iter().map(f)` would have surfaced
+//! — serial and parallel failures report identically.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
 
 /// Sensible default worker count: the machine's available parallelism
 /// (1 when it cannot be determined). [`parallel_map`] itself clamps the
@@ -24,25 +35,94 @@ pub fn default_threads() -> usize {
         .unwrap_or(1)
 }
 
-/// Map `f` over `items` with `threads` workers, returning the results in
-/// input order. `threads <= 1` (or a single item) runs inline with no
-/// thread spawned. Panics in `f` propagate.
-pub fn parallel_map<I, T, F>(items: &[I], threads: usize, f: F) -> Vec<T>
+/// A captured panic from one mapped item: the input index it was processing
+/// plus the raw panic payload.
+pub struct WorkerPanic {
+    /// Index of the item whose closure panicked.
+    pub index: usize,
+    payload: Box<dyn Any + Send + 'static>,
+}
+
+impl WorkerPanic {
+    /// Best-effort human rendering of the payload (`panic!` with a string
+    /// literal or a formatted message covers essentially every panic in
+    /// this codebase).
+    pub fn message(&self) -> String {
+        if let Some(s) = self.payload.downcast_ref::<&'static str>() {
+            (*s).to_string()
+        } else if let Some(s) = self.payload.downcast_ref::<String>() {
+            s.clone()
+        } else {
+            "non-string panic payload".to_string()
+        }
+    }
+
+    /// The raw payload, e.g. for [`std::panic::resume_unwind`].
+    pub fn into_payload(self) -> Box<dyn Any + Send + 'static> {
+        self.payload
+    }
+}
+
+impl std::fmt::Debug for WorkerPanic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPanic")
+            .field("index", &self.index)
+            .field("message", &self.message())
+            .finish()
+    }
+}
+
+impl std::fmt::Display for WorkerPanic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "item {} panicked: {}", self.index, self.message())
+    }
+}
+
+/// A cooperative cancellation token: cheap to clone, safe to share across
+/// threads. Holders *observe* cancellation ([`CancelToken::is_cancelled`])
+/// at their own safe points — nothing is interrupted preemptively, so a
+/// cancelled explorer still finishes its in-flight items and flushes its
+/// journal before returning.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request cancellation (idempotent, visible to every clone).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Map `f` over `items` with `threads` workers, returning per-item
+/// `Result`s in input order: `Err(WorkerPanic)` for items whose closure
+/// panicked, `Ok` for everything else. A panic costs exactly its own item —
+/// sibling items (including later items claimed by the same worker) run to
+/// completion. `threads <= 1` (or a single item) runs inline, with the same
+/// per-item isolation.
+pub fn try_parallel_map<I, T, F>(items: &[I], threads: usize, f: F) -> Vec<Result<T, WorkerPanic>>
 where
     I: Sync,
     T: Send,
     F: Fn(&I) -> T + Sync,
 {
+    let run_one = |i: usize| -> Result<T, WorkerPanic> {
+        catch_unwind(AssertUnwindSafe(|| f(&items[i])))
+            .map_err(|payload| WorkerPanic { index: i, payload })
+    };
     let threads = threads.clamp(1, items.len().max(1));
     if threads <= 1 {
-        let mut out = Vec::with_capacity(items.len());
-        for item in items {
-            out.push(f(item));
-        }
-        return out;
+        return (0..items.len()).map(run_one).collect();
     }
     let next = AtomicUsize::new(0);
-    let parts: Vec<Vec<(usize, T)>> = std::thread::scope(|s| {
+    let parts: Vec<Vec<(usize, Result<T, WorkerPanic>)>> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..threads)
             .map(|_| {
                 s.spawn(|| {
@@ -52,7 +132,7 @@ where
                         if i >= items.len() {
                             break;
                         }
-                        local.push((i, f(&items[i])));
+                        local.push((i, run_one(i)));
                     }
                     local
                 })
@@ -60,10 +140,12 @@ where
             .collect();
         handles
             .into_iter()
-            .map(|h| h.join().expect("parallel_map worker panicked"))
+            // run_one never unwinds (the item's panic was caught), so a
+            // worker can only die to something unrecoverable like OOM
+            .map(|h| h.join().expect("parallel_map worker died outside f"))
             .collect()
     });
-    let mut out: Vec<Option<T>> = (0..items.len()).map(|_| None).collect();
+    let mut out: Vec<Option<Result<T, WorkerPanic>>> = (0..items.len()).map(|_| None).collect();
     for part in parts {
         for (i, v) in part {
             debug_assert!(out[i].is_none(), "item {i} mapped twice");
@@ -73,6 +155,27 @@ where
     out.into_iter()
         .map(|v| v.expect("parallel_map missed an item"))
         .collect()
+}
+
+/// Map `f` over `items` with `threads` workers, returning the results in
+/// input order. `threads <= 1` (or a single item) runs inline with no
+/// thread spawned. If any item panics, the panic of the **lowest-index**
+/// panicking item is re-raised with its original payload — deterministic,
+/// and identical to what the sequential map would have raised.
+pub fn parallel_map<I, T, F>(items: &[I], threads: usize, f: F) -> Vec<T>
+where
+    I: Sync,
+    T: Send,
+    F: Fn(&I) -> T + Sync,
+{
+    let mut out = Vec::with_capacity(items.len());
+    for r in try_parallel_map(items, threads, f) {
+        match r {
+            Ok(v) => out.push(v),
+            Err(p) => std::panic::resume_unwind(p.into_payload()),
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -116,5 +219,107 @@ mod tests {
     #[test]
     fn default_threads_is_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    /// Silence the default panic-hook backtrace chatter while `f` runs.
+    /// The hook is process-global, so tests that panic on purpose funnel
+    /// through here (the mutex also keeps them from clobbering each other).
+    fn with_quiet_panics<R>(f: impl FnOnce() -> R) -> R {
+        use std::sync::Mutex;
+        static HOOK: Mutex<()> = Mutex::new(());
+        let _guard = HOOK.lock().unwrap_or_else(|p| p.into_inner());
+        let saved = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let out = f();
+        std::panic::set_hook(saved);
+        out
+    }
+
+    #[test]
+    fn try_map_isolates_panicking_items() {
+        with_quiet_panics(|| {
+            let items: Vec<u64> = (0..40).collect();
+            for threads in [1, 4] {
+                let out = try_parallel_map(&items, threads, |&x| {
+                    if x % 10 == 3 {
+                        panic!("boom {x}");
+                    }
+                    x * 2
+                });
+                assert_eq!(out.len(), items.len(), "threads={threads}");
+                for (i, r) in out.iter().enumerate() {
+                    if i % 10 == 3 {
+                        let p = r.as_ref().unwrap_err();
+                        assert_eq!(p.index, i);
+                        assert_eq!(p.message(), format!("boom {i}"));
+                    } else {
+                        assert_eq!(*r.as_ref().unwrap(), i as u64 * 2);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn try_map_serial_and_parallel_agree() {
+        with_quiet_panics(|| {
+            let items: Vec<u64> = (0..64).collect();
+            let flag = |r: &Result<u64, WorkerPanic>| match r {
+                Ok(v) => format!("ok {v}"),
+                Err(p) => format!("err {} {}", p.index, p.message()),
+            };
+            let ser: Vec<String> = try_parallel_map(&items, 1, |&x| {
+                if x == 7 || x == 31 {
+                    panic!("fail {x}")
+                }
+                x + 1
+            })
+            .iter()
+            .map(flag)
+            .collect();
+            let par: Vec<String> = try_parallel_map(&items, 8, |&x| {
+                if x == 7 || x == 31 {
+                    panic!("fail {x}")
+                }
+                x + 1
+            })
+            .iter()
+            .map(flag)
+            .collect();
+            assert_eq!(ser, par);
+        });
+    }
+
+    #[test]
+    fn wrapper_propagates_the_lowest_index_payload() {
+        with_quiet_panics(|| {
+            for threads in [1, 4] {
+                let items: Vec<u64> = (0..32).collect();
+                let err = catch_unwind(AssertUnwindSafe(|| {
+                    parallel_map(&items, threads, |&x| {
+                        if x >= 5 {
+                            panic!("first failure at {x}");
+                        }
+                        x
+                    })
+                }))
+                .unwrap_err();
+                // the payload must be item 5's — the one the serial loop
+                // would have raised — not whichever worker lost the race
+                let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+                assert_eq!(msg, "first failure at 5", "threads={threads}");
+            }
+        });
+    }
+
+    #[test]
+    fn cancel_token_is_shared_across_clones() {
+        let t = CancelToken::new();
+        let t2 = t.clone();
+        assert!(!t.is_cancelled() && !t2.is_cancelled());
+        t2.cancel();
+        assert!(t.is_cancelled() && t2.is_cancelled());
+        t.cancel(); // idempotent
+        assert!(t.is_cancelled());
     }
 }

@@ -40,8 +40,12 @@ fn assert_same_evals(a: &[Evaluation], b: &[Evaluation], ctx: &str) {
             "{ctx}: {}",
             x.fingerprint()
         );
-        assert_eq!(x.report.timing, y.report.timing, "{ctx}");
-        assert_eq!(x.area, y.area, "{ctx}");
+        assert_eq!(
+            x.report().unwrap().timing,
+            y.report().unwrap().timing,
+            "{ctx}"
+        );
+        assert_eq!(x.area().unwrap(), y.area().unwrap(), "{ctx}");
     }
 }
 

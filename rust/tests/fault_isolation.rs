@@ -1,0 +1,292 @@
+//! Fault isolation & crash recovery, end to end:
+//!
+//! * the acceptance property — with K panics injected at seed-chosen
+//!   evaluations, exploration completes, quarantines exactly K
+//!   fingerprints, and after one resume (faults disarmed) the journal's
+//!   successful records are byte-identical to a fault-free run;
+//! * `--no-retry-failed` keeps quarantined points skipped;
+//! * an injected IO error at the journal surfaces as a run error but
+//!   leaves a salvageable journal behind;
+//! * the `kill -9` property — truncating a journal at *every* byte offset
+//!   salvages exactly the terminated prefix, and resuming re-evaluates
+//!   only the lost points, reconverging byte-identically;
+//! * cancellation ends a run with a resumable journal.
+//!
+//! The fault plan is process-global, so every test here serializes on one
+//! gate (and they live in their own binary, away from the fault-free
+//! explorer tests).
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use cfa::dse::{journal, CancelToken, Exhaustive, Explorer, Space};
+use cfa::util::faults;
+
+/// One gate for the whole binary: armed plans and the quieted panic hook
+/// are process-global.
+fn gate() -> std::sync::MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    GATE.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Disarm + restore the panic hook when a test ends, pass or fail.
+struct Cleanup;
+impl Drop for Cleanup {
+    fn drop(&mut self) {
+        faults::disarm();
+        let _ = std::panic::take_hook();
+    }
+}
+
+/// Intentional panics are part of these tests; keep them off the console.
+fn quiet_panics() -> Cleanup {
+    std::panic::set_hook(Box::new(|_| {}));
+    Cleanup
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(name);
+    std::fs::remove_file(&p).ok();
+    p
+}
+
+fn tiny() -> Space {
+    Space::builtin("tiny").unwrap()
+}
+
+/// Journal lines split into (success, failure) record sets, as raw bytes.
+fn journal_lines(path: &Path) -> (Vec<String>, Vec<String>) {
+    let text = std::fs::read_to_string(path).unwrap();
+    let (mut ok, mut failed) = (Vec::new(), Vec::new());
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let j = cfa::util::json::parse(line).unwrap();
+        if j.get("error").is_some() {
+            failed.push(line.to_string());
+        } else {
+            ok.push(line.to_string());
+        }
+    }
+    (ok, failed)
+}
+
+fn sorted(mut v: Vec<String>) -> Vec<String> {
+    v.sort();
+    v
+}
+
+#[test]
+fn injected_panics_are_quarantined_and_resume_reconverges() {
+    let _gate = gate();
+    let _cleanup = quiet_panics();
+
+    // the fault-free reference journal
+    let clean = tmp("cfa_fault_clean.jsonl");
+    let reference = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+        .journal(&clean)
+        .explore()
+        .unwrap();
+    assert_eq!(reference.evaluated, 8);
+
+    // K=2 panics at seed-chosen evaluations: the run completes anyway
+    let path = tmp("cfa_fault_quarantine.jsonl");
+    faults::arm("panic@dse::evaluate#rand:2/8/42").unwrap();
+    let faulted = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+        .journal(&path)
+        .explore()
+        .unwrap();
+    faults::disarm();
+    assert_eq!(faulted.failed, 2);
+    assert_eq!(faulted.evaluated, 6);
+    assert_eq!(faulted.quarantined.len(), 2);
+    for q in &faulted.quarantined {
+        assert!(q.error().unwrap().contains("panicked"), "{:?}", q.error());
+    }
+    assert!(faulted.summary().contains("quarantine: 2 new failures"));
+    let (ok1, failed1) = journal_lines(&path);
+    assert_eq!((ok1.len(), failed1.len()), (6, 2));
+    // the journal round-trips, failures included
+    assert_eq!(journal::read(&path).unwrap().len(), 8);
+
+    // one resume with faults disarmed retries exactly the quarantined
+    // fingerprints and reconverges
+    let resumed = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+        .resume(&path)
+        .journal(&path)
+        .explore()
+        .unwrap();
+    assert_eq!(resumed.resumed, 6);
+    assert_eq!(resumed.retried, 2);
+    assert_eq!(resumed.evaluated, 2);
+    assert_eq!(resumed.failed, 0);
+    let fresh: Vec<String> = resumed.all[6..]
+        .iter()
+        .map(|e| e.fingerprint())
+        .collect();
+    let quarantined: Vec<String> = faulted
+        .quarantined
+        .iter()
+        .map(|e| e.fingerprint())
+        .collect();
+    assert_eq!(sorted(fresh), sorted(quarantined));
+    // acceptance: successful records byte-identical to the fault-free run
+    let (ok2, failed2) = journal_lines(&path);
+    assert_eq!(failed2, failed1, "old quarantine lines are kept, not rewritten");
+    let (clean_ok, clean_failed) = journal_lines(&clean);
+    assert!(clean_failed.is_empty());
+    assert_eq!(sorted(ok2), sorted(clean_ok));
+
+    // a further resume is a no-op: successes supersede the stale failures
+    let done = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+        .resume(&path)
+        .journal(&path)
+        .explore()
+        .unwrap();
+    assert_eq!((done.resumed, done.retried, done.evaluated), (8, 0, 0));
+    std::fs::remove_file(&clean).ok();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn no_retry_failed_keeps_quarantined_points_skipped() {
+    let _gate = gate();
+    let _cleanup = quiet_panics();
+    let path = tmp("cfa_fault_noretry.jsonl");
+    faults::arm("panic@dse::evaluate#2").unwrap();
+    let faulted = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+        .journal(&path)
+        .explore()
+        .unwrap();
+    faults::disarm();
+    assert_eq!((faulted.evaluated, faulted.failed), (7, 1));
+
+    // resume without retry: the failure counts as resumed, nothing runs
+    let out = tmp("cfa_fault_noretry_out.jsonl");
+    let resumed = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+        .resume(&path)
+        .journal(&out)
+        .retry_failed(false)
+        .explore()
+        .unwrap();
+    assert_eq!((resumed.resumed, resumed.retried, resumed.evaluated), (8, 0, 0));
+    // the rewritten journal stays complete: the kept failure is carried
+    // over so a later (retrying) resume still knows about it
+    let (ok, failed) = journal_lines(&out);
+    assert_eq!((ok.len(), failed.len()), (7, 1));
+    let retrying = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+        .resume(&out)
+        .journal(&out)
+        .explore()
+        .unwrap();
+    assert_eq!((retrying.resumed, retrying.retried, retrying.evaluated), (7, 1, 1));
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&out).ok();
+}
+
+#[test]
+fn io_fault_at_journal_push_fails_the_run_but_salvages() {
+    let _gate = gate();
+    let _cleanup = quiet_panics();
+    let path = tmp("cfa_fault_journal_io.jsonl");
+    faults::arm("io@dse::journal::push#3").unwrap();
+    let err = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+        .journal(&path)
+        .explore()
+        .unwrap_err();
+    faults::disarm();
+    assert!(format!("{err:#}").contains("fault injected"), "{err:#}");
+    // the first two records were flushed before the fault — resumable
+    let (records, torn) = journal::read_salvage(&path).unwrap();
+    assert_eq!((records.len(), torn), (2, 0));
+    let resumed = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+        .resume(&path)
+        .journal(&path)
+        .explore()
+        .unwrap();
+    assert_eq!((resumed.resumed, resumed.evaluated), (2, 6));
+    assert_eq!(journal::read(&path).unwrap().len(), 8);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn kill9_truncation_at_every_byte_offset_resumes_losslessly() {
+    let _gate = gate();
+    let clean = tmp("cfa_fault_kill9.jsonl");
+    Explorer::new(tiny(), Box::new(Exhaustive::new()))
+        .journal(&clean)
+        .explore()
+        .unwrap();
+    let bytes = std::fs::read(&clean).unwrap();
+    let clean_text = String::from_utf8(bytes.clone()).unwrap();
+    let line_ends: Vec<usize> = bytes
+        .iter()
+        .enumerate()
+        .filter_map(|(i, &b)| (b == b'\n').then_some(i + 1))
+        .collect();
+    assert_eq!(line_ends.len(), 8);
+
+    // cheap property at EVERY offset: salvage returns exactly the records
+    // of the newline-terminated prefix, never an error
+    let work = tmp("cfa_fault_kill9_cut.jsonl");
+    for cut in 0..=bytes.len() {
+        std::fs::write(&work, &bytes[..cut]).unwrap();
+        let (records, torn) = journal::read_salvage(&work).unwrap();
+        let complete = line_ends.iter().filter(|&&e| e <= cut).count();
+        let clean_len = line_ends
+            .iter()
+            .rev()
+            .find(|&&e| e <= cut)
+            .copied()
+            .unwrap_or(0);
+        assert_eq!((records.len(), torn), (complete, cut - clean_len), "cut={cut}");
+    }
+
+    // full resume at a spread of offsets (line boundaries and torn cuts):
+    // only the lost points re-evaluate, and the journal reconverges to the
+    // clean bytes exactly (exhaustive order is the journal order)
+    let mut cuts: Vec<usize> = line_ends.clone();
+    cuts.extend([0, line_ends[0] / 2, line_ends[3] + 7, bytes.len() - 1]);
+    for cut in cuts {
+        std::fs::write(&work, &bytes[..cut]).unwrap();
+        let complete = line_ends.iter().filter(|&&e| e <= cut).count();
+        let resumed = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+            .resume(&work)
+            .journal(&work)
+            .explore()
+            .unwrap();
+        assert_eq!(resumed.resumed, complete, "cut={cut}");
+        assert_eq!(resumed.evaluated, 8 - complete, "cut={cut}");
+        assert_eq!(
+            std::fs::read_to_string(&work).unwrap(),
+            clean_text,
+            "cut={cut}"
+        );
+    }
+    std::fs::remove_file(&clean).ok();
+    std::fs::remove_file(&work).ok();
+}
+
+#[test]
+fn cancellation_leaves_a_flushed_resumable_journal() {
+    let _gate = gate();
+    let path = tmp("cfa_fault_cancel.jsonl");
+    let token = CancelToken::new();
+    token.cancel();
+    let interrupted = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+        .cancel_token(token)
+        .journal(&path)
+        .explore()
+        .unwrap();
+    assert!(interrupted.interrupted);
+    assert_eq!(interrupted.evaluated, 0);
+    assert!(interrupted.summary().contains("interrupted"));
+    // the journal exists (created, empty) and resumes to a full run
+    let resumed = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+        .resume(&path)
+        .journal(&path)
+        .explore()
+        .unwrap();
+    assert!(!resumed.interrupted);
+    assert_eq!((resumed.resumed, resumed.evaluated), (0, 8));
+    assert_eq!(journal::read(&path).unwrap().len(), 8);
+    std::fs::remove_file(&path).ok();
+}
