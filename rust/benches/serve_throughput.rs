@@ -1,0 +1,278 @@
+//! `cfa serve` request throughput: tune requests through the daemon cold
+//! vs warm shared caches, and two concurrent same-geometry tenants on the
+//! shared single-flight caches vs two private explorers.
+//!
+//! Run: `cargo bench --bench serve_throughput [-- --smoke] [-- --out PATH]`
+//!
+//! Every run first asserts the daemon's identities — a tune journal
+//! written through `serve` is byte-identical to a standalone explorer's,
+//! and two racing same-geometry tenants cost exactly one compile per
+//! distinct geometry — then records machine-readable results to
+//! `BENCH_serve.json` at the repo root (override with `--out`). `--smoke`
+//! runs check the rig, not the numbers: without an explicit `--out` they
+//! write `BENCH_serve.smoke.json`, so a CI smoke pass can never clobber
+//! real recorded results.
+
+use std::io::{Cursor, Write};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use cfa::dse::{Exhaustive, Explorer, Space};
+use cfa::layout::registry;
+use cfa::serve::Server;
+use cfa::util::json::Json;
+use cfa::util::stats::{black_box, Bencher, Measurement};
+
+fn measurement_json(m: &Measurement) -> Json {
+    let mut fields = vec![
+        ("name", Json::str(m.name.clone())),
+        ("median_s", Json::num(m.summary.median)),
+        ("p05_s", Json::num(m.summary.p05)),
+        ("p95_s", Json::num(m.summary.p95)),
+        ("samples", Json::num(m.summary.n as f64)),
+    ];
+    if let Some(e) = m.elems_per_sec() {
+        fields.push(("points_per_s", Json::num(e)));
+    }
+    Json::obj(fields)
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(name);
+    std::fs::remove_file(&p).ok();
+    p
+}
+
+fn sink() -> (Arc<Mutex<Vec<u8>>>, Arc<Mutex<dyn Write + Send>>) {
+    let buf: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
+    (buf.clone(), buf as Arc<Mutex<dyn Write + Send>>)
+}
+
+fn tune_script(id: &str, out: Option<&PathBuf>) -> String {
+    match out {
+        Some(p) => format!(
+            "{{\"cmd\":\"tune\",\"id\":\"{id}\",\"space\":\"tiny\",\"out\":\"{}\"}}\n",
+            p.display()
+        ),
+        None => format!("{{\"cmd\":\"tune\",\"id\":\"{id}\",\"space\":\"tiny\"}}\n"),
+    }
+}
+
+/// Spin until the terminal reply for `id` shows up in the sink (the
+/// connection returns at EOF while the job still runs on a worker).
+fn wait_terminal(buf: &Arc<Mutex<Vec<u8>>>, id: &str) {
+    let done = format!("\"event\":\"done\",\"id\":\"{id}\"");
+    let err = format!("\"event\":\"error\",\"id\":\"{id}\"");
+    loop {
+        {
+            let bytes = buf.lock().unwrap();
+            let text = String::from_utf8_lossy(&bytes);
+            if text.contains(&done) {
+                return;
+            }
+            assert!(!text.contains(&err), "request {id} errored: {text}");
+        }
+        std::thread::yield_now();
+    }
+}
+
+/// One tune request through an already-running daemon, waited to
+/// completion.
+fn daemon_tune(server: &Server, id: &str, out: Option<&PathBuf>) {
+    let (buf, writer) = sink();
+    server.serve_connection(Cursor::new(tune_script(id, out)), writer, false);
+    wait_terminal(&buf, id);
+}
+
+/// Two tenants on their own connections, racing through one daemon.
+fn daemon_tune_pair(server: &Arc<Server>) {
+    let handles: Vec<_> = ["p0", "p1"]
+        .into_iter()
+        .map(|id| {
+            let server = server.clone();
+            std::thread::spawn(move || {
+                let (buf, writer) = sink();
+                server.serve_connection(Cursor::new(tune_script(id, None)), writer, false);
+                wait_terminal(&buf, id);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| {
+            if smoke {
+                concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.smoke.json").to_string()
+            } else {
+                concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json").to_string()
+            }
+        });
+    let b = if smoke { Bencher::quick() } else { Bencher::default() };
+    let mut results: Vec<Measurement> = Vec::new();
+    let reg = registry::global();
+    let n_points = Space::builtin("tiny")
+        .unwrap()
+        .enumerate(&reg)
+        .unwrap()
+        .len() as u64;
+
+    // ---- identity gate 1: a daemon tune journal is byte-identical to a
+    // standalone explorer's
+    let ref_path = tmp("cfa_bench_serve_ref.jsonl");
+    Explorer::new(Space::builtin("tiny").unwrap(), Box::new(Exhaustive::new()))
+        .registry(reg.clone())
+        .journal(&ref_path)
+        .explore()
+        .unwrap();
+    let daemon_path = tmp("cfa_bench_serve_daemon.jsonl");
+    {
+        let server = Server::new(2, 8);
+        daemon_tune(&server, "gate", Some(&daemon_path));
+        server.shutdown_and_join();
+    }
+    assert_eq!(
+        std::fs::read(&daemon_path).unwrap(),
+        std::fs::read(&ref_path).unwrap(),
+        "daemon journal bytes == cfa tune journal bytes"
+    );
+
+    // ---- identity gate 2: two racing same-geometry tenants cost exactly
+    // one compile per distinct geometry (single-flight batching)
+    {
+        let server = Arc::new(Server::new(4, 16));
+        daemon_tune_pair(&server);
+        let s = server.state().traces().stats();
+        assert_eq!(s.misses, n_points, "misses == distinct geometries");
+        assert_eq!(s.hits + s.misses, 2 * n_points, "every request accounted");
+        server.shutdown_and_join();
+    }
+    println!(
+        "identity: daemon tune bytes == standalone tune; \
+         2-tenant race compiles each of {n_points} geometries once"
+    );
+
+    // ---- baseline: one standalone explorer, no daemon in the way
+    results.push(
+        b.bench("tune standalone (private explorer)", || {
+            let out = Explorer::new(Space::builtin("tiny").unwrap(), Box::new(Exhaustive::new()))
+                .registry(reg.clone())
+                .explore()
+                .unwrap();
+            black_box(out.evaluated);
+        })
+        .with_work(n_points, n_points),
+    );
+
+    // ---- request through a cold daemon: fresh caches every iteration
+    results.push(
+        b.bench("tune via daemon (cold shared caches)", || {
+            let server = Server::new(2, 8);
+            daemon_tune(&server, "cold", None);
+            server.shutdown_and_join();
+        })
+        .with_work(n_points, n_points),
+    );
+    let m_cold = results.last().unwrap().summary.median;
+
+    // ---- request through a warm daemon: the steady state a long-lived
+    // service actually runs in
+    let warm = Server::new(2, 8);
+    daemon_tune(&warm, "prewarm", None);
+    results.push(
+        b.bench("tune via daemon (warm shared caches)", || {
+            daemon_tune(&warm, "warm", None);
+        })
+        .with_work(n_points, n_points),
+    );
+    let m_warm = results.last().unwrap().summary.median;
+    assert!(warm.state().traces().stats().hits > 0);
+    warm.shutdown_and_join();
+
+    // ---- two concurrent same-geometry tenants: private explorers
+    // (every tenant compiles everything) vs one daemon (single-flight)
+    results.push(
+        b.bench("2 tenants, private explorers", || {
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let reg = reg.clone();
+                    std::thread::spawn(move || {
+                        Explorer::new(
+                            Space::builtin("tiny").unwrap(),
+                            Box::new(Exhaustive::new()),
+                        )
+                        .registry(reg)
+                        .explore()
+                        .unwrap()
+                        .evaluated
+                    })
+                })
+                .collect();
+            for h in handles {
+                black_box(h.join().unwrap());
+            }
+        })
+        .with_work(2 * n_points, 2 * n_points),
+    );
+    let m_private = results.last().unwrap().summary.median;
+    results.push(
+        b.bench("2 tenants via daemon (shared single-flight)", || {
+            let server = Arc::new(Server::new(4, 16));
+            daemon_tune_pair(&server);
+            server.shutdown_and_join();
+        })
+        .with_work(2 * n_points, 2 * n_points),
+    );
+    let m_shared = results.last().unwrap().summary.median;
+
+    let warm_speedup = m_cold / m_warm;
+    let shared_speedup = m_private / m_shared;
+
+    println!("\nserve-throughput benchmarks:");
+    for m in &results {
+        println!("  {}", m.line());
+    }
+    println!(
+        "\nspeedups: warm daemon {warm_speedup:.2}x vs cold, shared caches \
+         {shared_speedup:.2}x vs private for 2 same-geometry tenants"
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("serve_throughput")),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "workload",
+            Json::obj(vec![
+                ("space", Json::str("tiny")),
+                ("tune_points", Json::num(n_points as f64)),
+                ("tenants", Json::num(2.0)),
+            ]),
+        ),
+        (
+            "speedups",
+            Json::obj(vec![
+                ("tune_warm_vs_cold", Json::num(warm_speedup)),
+                ("shared_vs_private_two_tenants", Json::num(shared_speedup)),
+            ]),
+        ),
+        ("identity_asserted", Json::Bool(true)),
+        (
+            "measurements",
+            Json::arr(results.iter().map(measurement_json)),
+        ),
+    ]);
+    // temp-then-rename: a killed bench never leaves a truncated schema seed
+    match cfa::util::fsx::write_atomic(&out_path, json.to_string_pretty()) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+}

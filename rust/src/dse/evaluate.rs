@@ -28,9 +28,9 @@
 
 use crate::area::{AreaEstimate, AreaModel};
 use crate::dse::space::{Point, Space};
-use crate::experiment::{ExperimentSpec, Mode, Report, ScheduleKind};
+use crate::experiment::{ExperimentSpec, Mode, Report, ScheduleKind, Session, SessionCache};
 use crate::layout::LayoutRegistry;
-use crate::memsim::TraceCache;
+use crate::memsim::{TraceCache, TraceProvider};
 use crate::poly::vec::IVec;
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
@@ -223,11 +223,16 @@ impl Evaluation {
 
 /// Evaluates points of one space against one layout registry, optionally
 /// reusing compiled transaction traces across the mem/PE variants of a
-/// geometry (see the module docs).
+/// geometry (see the module docs) and compiled session cores across
+/// evaluations sharing a geometry. The trace source is any
+/// [`TraceProvider`] — a plain [`TraceCache`] for a private exploration,
+/// or the serve daemon's coalescing batcher so concurrent tenants share
+/// one process-wide cache.
 pub struct Evaluator<'a> {
     space: &'a Space,
     registry: LayoutRegistry,
-    traces: Option<Arc<TraceCache>>,
+    traces: Option<Arc<dyn TraceProvider>>,
+    sessions: Option<Arc<SessionCache>>,
 }
 
 /// The trace-cache key of a point's transaction-stream geometry: every
@@ -261,19 +266,34 @@ impl<'a> Evaluator<'a> {
             space,
             registry,
             traces: None,
+            sessions: None,
         }
     }
 
     /// Share a trace cache across evaluations (and, via `Arc`, across the
     /// explorer's `parallel_map` workers). Cache hits replay bit-identically
     /// to cold compiles, so this changes throughput only, never results.
-    pub fn with_trace_cache(mut self, traces: Arc<TraceCache>) -> Evaluator<'a> {
+    pub fn with_trace_cache(self, traces: Arc<TraceCache>) -> Evaluator<'a> {
+        self.with_trace_provider(traces)
+    }
+
+    /// [`Evaluator::with_trace_cache`] over any [`TraceProvider`] — the
+    /// serve daemon injects its single-flight batcher here.
+    pub fn with_trace_provider(mut self, traces: Arc<dyn TraceProvider>) -> Evaluator<'a> {
         self.traces = Some(traces);
         self
     }
 
-    /// The shared trace cache, when one was attached.
-    pub fn trace_cache(&self) -> Option<&Arc<TraceCache>> {
+    /// Share compiled session cores across evaluations: points that differ
+    /// only in mem/channels/striping/PE reuse one allocation and one
+    /// canonical plan. Results are unchanged (cores are immutable).
+    pub fn with_session_cache(mut self, sessions: Arc<SessionCache>) -> Evaluator<'a> {
+        self.sessions = Some(sessions);
+        self
+    }
+
+    /// The shared trace provider, when one was attached.
+    pub fn trace_provider(&self) -> Option<&Arc<dyn TraceProvider>> {
         self.traces.as_ref()
     }
 
@@ -289,7 +309,7 @@ impl<'a> Evaluator<'a> {
             .ok_or_else(|| anyhow!("point references unknown mem variant '{}'", p.mem))?;
         let space_box: IVec = p.tile.iter().map(|t| t * self.space.tiles_per_dim).collect();
         let key = geometry_key(p, &space_box, &w.deps);
-        let session = ExperimentSpec::builder()
+        let spec = ExperimentSpec::builder()
             .custom(p.workload.clone(), space_box, p.tile.clone(), w.deps.clone())
             .layout(p.layout.clone())
             .schedule(ScheduleKind::Flat)
@@ -298,12 +318,16 @@ impl<'a> Evaluator<'a> {
             .mem(mv.cfg.clone())
             .channels(p.channels)
             .striping(p.striping.clone())
-            .registry(self.registry.clone())
-            .compile()
+            .spec()
             .with_context(|| format!("compiling {}", p.fingerprint()))?;
+        let session = match &self.sessions {
+            Some(cache) => Session::compile_with_cache(spec, &self.registry, cache),
+            None => Session::compile_with(spec, &self.registry),
+        }
+        .with_context(|| format!("compiling {}", p.fingerprint()))?;
         let mut report = match &self.traces {
             Some(cache) => {
-                let trace = cache.get_or_compile(&key, || session.compile_trace());
+                let trace = cache.get_or_compile_with(&key, &mut || session.compile_trace());
                 session.run_trace(&trace)?
             }
             None => session.run(Mode::Timing)?,

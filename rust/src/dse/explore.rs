@@ -38,9 +38,10 @@ use crate::dse::evaluate::{Evaluation, Evaluator, ParetoFront};
 use crate::dse::journal::{self, Journal};
 use crate::dse::space::Space;
 use crate::dse::strategy::{Ctx, Strategy};
+use crate::experiment::SessionCache;
 use crate::layout::registry;
 use crate::layout::LayoutRegistry;
-use crate::memsim::TraceCache;
+use crate::memsim::{CacheStats, TraceCache, TraceProvider};
 use crate::util::faults;
 use crate::util::par::{try_parallel_map, CancelToken};
 use anyhow::{anyhow, Result};
@@ -56,6 +57,9 @@ pub struct Explorer {
     out: Option<PathBuf>,
     resume: Option<PathBuf>,
     trace_cache: bool,
+    traces_ext: Option<Arc<dyn TraceProvider>>,
+    sessions: Option<Arc<SessionCache>>,
+    on_evaluation: Option<Box<dyn Fn(&Evaluation) + Send + Sync>>,
     retry_failed: bool,
     cancel: CancelToken,
     deadline: Option<Duration>,
@@ -87,6 +91,9 @@ pub struct Outcome {
     pub quarantined: Vec<Evaluation>,
     /// The non-dominated subset of `all` (bandwidth up, BRAM down).
     pub front: Vec<Evaluation>,
+    /// Trace-cache counters for this run, when a cache (internal or an
+    /// injected provider) was active; `None` with `--trace-cache off`.
+    pub trace_cache: Option<CacheStats>,
 }
 
 impl Outcome {
@@ -108,6 +115,12 @@ impl Outcome {
             s.push_str("  ");
             s.push_str(&e.summary());
             s.push('\n');
+        }
+        if let Some(cs) = &self.trace_cache {
+            s.push_str(&format!(
+                "  trace cache: {} hits, {} compiles, {} entries\n",
+                cs.hits, cs.misses, cs.entries
+            ));
         }
         if self.failed > 0 || self.retried > 0 {
             s.push_str(&format!(
@@ -140,6 +153,9 @@ impl Explorer {
             out: None,
             resume: None,
             trace_cache: true,
+            traces_ext: None,
+            sessions: None,
+            on_evaluation: None,
             retry_failed: true,
             cancel: CancelToken::new(),
             deadline: None,
@@ -152,6 +168,37 @@ impl Explorer {
     /// benchmarking and for the identity tests that prove it.
     pub fn trace_cache(mut self, enabled: bool) -> Explorer {
         self.trace_cache = enabled;
+        self
+    }
+
+    /// Compile traces through an external [`TraceProvider`] instead of a
+    /// run-private [`TraceCache`] — the serve daemon injects its
+    /// process-wide single-flight batcher here, so concurrent tenants
+    /// exploring the same geometries share one compile. Implies the trace
+    /// cache is on; results are bit-identical to every other cache mode.
+    pub fn trace_provider(mut self, traces: Arc<dyn TraceProvider>) -> Explorer {
+        self.traces_ext = Some(traces);
+        self.trace_cache = true;
+        self
+    }
+
+    /// Share compiled session cores (allocation + canonical plan) through
+    /// an external [`SessionCache`]. Results are unchanged; geometry
+    /// compiles collapse across points and across tenants.
+    pub fn session_cache(mut self, sessions: Arc<SessionCache>) -> Explorer {
+        self.sessions = Some(sessions);
+        self
+    }
+
+    /// Observe every freshly journaled record (successes and quarantined
+    /// failures, journal order) as it lands — the daemon streams these to
+    /// the requesting client. Resumed records are not replayed through the
+    /// callback.
+    pub fn on_evaluation(
+        mut self,
+        f: impl Fn(&Evaluation) + Send + Sync + 'static,
+    ) -> Explorer {
+        self.on_evaluation = Some(Box::new(f));
         self
     }
 
@@ -302,10 +349,15 @@ impl Explorer {
         };
 
         let mut evaluator = Evaluator::new(&self.space, self.registry.clone());
-        if self.trace_cache {
+        if let Some(traces) = &self.traces_ext {
+            evaluator = evaluator.with_trace_provider(traces.clone());
+        } else if self.trace_cache {
             // one cache for the whole run, shared by reference across the
             // parallel workers below (sharded internally)
             evaluator = evaluator.with_trace_cache(Arc::new(TraceCache::new()));
+        }
+        if let Some(sessions) = &self.sessions {
+            evaluator = evaluator.with_session_cache(sessions.clone());
         }
         // the cooperative stop signal: an external token or the deadline,
         // checked between batches and before each item
@@ -369,6 +421,9 @@ impl Explorer {
                         if let Some(w) = writer.as_mut() {
                             w.push(&eval)?;
                         }
+                        if let Some(cb) = &self.on_evaluation {
+                            cb(&eval);
+                        }
                         scores.insert(i, eval.effective_mb_s());
                         offer(&mut front, &mut all, eval);
                         evaluated += 1;
@@ -380,6 +435,9 @@ impl Explorer {
                             Evaluation::failed(enumerated.points()[i].clone(), format!("{e:#}"));
                         if let Some(w) = writer.as_mut() {
                             w.push(&record)?;
+                        }
+                        if let Some(cb) = &self.on_evaluation {
+                            cb(&record);
                         }
                         quarantined.push(record);
                         failed += 1;
@@ -400,6 +458,7 @@ impl Explorer {
         );
         let front: Vec<Evaluation> =
             front.indices().into_iter().map(|i| all[i].clone()).collect();
+        let trace_cache = evaluator.trace_provider().map(|p| p.stats());
         Ok(Outcome {
             strategy: self.strategy.name().to_string(),
             points_total: enumerated.len(),
@@ -411,6 +470,7 @@ impl Explorer {
             all,
             quarantined,
             front,
+            trace_cache,
         })
     }
 }
@@ -476,6 +536,70 @@ mod tests {
             );
         }
         assert_eq!(cached.front.len(), cold.front.len());
+    }
+
+    #[test]
+    fn summary_reports_cache_counters_only_when_on() {
+        let cached = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+            .explore()
+            .unwrap();
+        let cs = cached.trace_cache.expect("default cache is on");
+        assert_eq!(cs.hits + cs.misses, 8);
+        assert!(cached.summary().contains("trace cache: "), "{}", cached.summary());
+        let cold = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+            .trace_cache(false)
+            .explore()
+            .unwrap();
+        assert!(cold.trace_cache.is_none());
+        assert!(!cold.summary().contains("trace cache"));
+    }
+
+    #[test]
+    fn streaming_callback_sees_fresh_records_in_journal_order() {
+        use std::sync::Mutex;
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let sink = seen.clone();
+        let out = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+            .parallel(4)
+            .on_evaluation(move |e| sink.lock().unwrap().push(e.fingerprint()))
+            .explore()
+            .unwrap();
+        let fps: Vec<String> = out.all.iter().map(Evaluation::fingerprint).collect();
+        assert_eq!(*seen.lock().unwrap(), fps);
+    }
+
+    #[test]
+    fn injected_provider_and_session_cache_share_without_changing_results() {
+        let provider = Arc::new(TraceCache::new());
+        let sessions = Arc::new(SessionCache::new());
+        let a = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+            .trace_provider(provider.clone())
+            .session_cache(sessions.clone())
+            .explore()
+            .unwrap();
+        let (compiles, cores) = (provider.misses(), sessions.misses());
+        assert!(compiles > 0 && cores > 0);
+        // a second run over the same space recompiles nothing
+        let b = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+            .trace_provider(provider.clone())
+            .session_cache(sessions.clone())
+            .explore()
+            .unwrap();
+        assert_eq!(provider.misses(), compiles, "second tenant must not recompile");
+        assert_eq!(sessions.misses(), cores);
+        // ... and both runs are byte-identical to a fully private one
+        let cold = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+            .trace_cache(false)
+            .explore()
+            .unwrap();
+        for (x, y) in a.all.iter().zip(&cold.all).chain(b.all.iter().zip(&cold.all)) {
+            assert_eq!(
+                x.to_json().to_string_compact(),
+                y.to_json().to_string_compact()
+            );
+        }
+        // the injected provider's process-wide stats land in the outcome
+        assert_eq!(b.trace_cache.unwrap().misses, compiles);
     }
 
     #[test]

@@ -57,6 +57,7 @@ use crate::poly::vec::IVec;
 use crate::runtime::Runtime;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// What program the experiment runs.
@@ -532,10 +533,15 @@ impl Report {
     }
 }
 
-/// A compiled experiment: the allocation, schedule and plan cache built
-/// once from an [`ExperimentSpec`], runnable any number of times.
-pub struct Session {
-    spec: ExperimentSpec,
+/// The compiled, immutable half of a [`Session`]: everything derived from
+/// the *geometry* (workload × iteration space × tile × layout × schedule
+/// kind) and nothing from the memory configuration or PE throughput. Built
+/// once, then shared behind an `Arc` — two sessions that differ only in
+/// `MemConfig`/channels/striping/PE can (and, through [`SessionCache`], do)
+/// point at the same core, so one geometry pays the allocation build and
+/// the canonical-plan derivation exactly once no matter how many tenants
+/// ask for it.
+pub struct SessionCore {
     benchmark: String,
     layout: String,
     tiling: Tiling,
@@ -545,9 +551,137 @@ pub struct Session {
     cache: PlanCacheState,
 }
 
+impl SessionCore {
+    /// Build a core from already-resolved geometry inputs (the expensive
+    /// step: allocation build + schedule construction + plan-cache
+    /// fingerprinting).
+    fn build(
+        benchmark: String,
+        tiling: Tiling,
+        deps: DepPattern,
+        entry: &crate::layout::LayoutEntry,
+        schedule_kind: ScheduleKind,
+    ) -> Result<SessionCore> {
+        let alloc = entry.build(&tiling, &deps)?;
+        let layout = entry.name().to_string();
+        let schedule = match schedule_kind {
+            ScheduleKind::Flat => Schedule::flat(&tiling),
+            ScheduleKind::Wavefront => Schedule::wavefront(&tiling, &deps),
+        };
+        let cache = PlanCacheState::new(alloc.as_ref());
+        Ok(SessionCore {
+            benchmark,
+            layout,
+            tiling,
+            deps,
+            alloc,
+            schedule,
+            cache,
+        })
+    }
+
+    /// The geometry fingerprint this core was built from (see
+    /// [`Session::compile_trace`] for what it does and does not include).
+    fn trace_geometry(&self, schedule_kind: ScheduleKind) -> String {
+        format!(
+            "{}|d{:?}|{}|s{:?}|t{:?}|{:?}",
+            self.benchmark,
+            self.deps.vecs(),
+            self.layout,
+            self.tiling.space,
+            self.tiling.tile,
+            schedule_kind
+        )
+    }
+
+    /// The plan-memoization state (counter readout for `stats`).
+    pub fn plan_cache_state(&self) -> &PlanCacheState {
+        &self.cache
+    }
+}
+
+/// A process-wide cache of compiled [`SessionCore`]s, keyed by geometry
+/// fingerprint. The serve daemon owns one so concurrent tenants asking for
+/// the same geometry share one allocation and one canonical plan; the
+/// explorer can ride the same cache. Compilation runs outside the lock
+/// (same policy as [`TraceCache`]: racing compiles build identical cores,
+/// first insert wins), and a poisoned map is recovered by taking the inner
+/// value — the map itself is never left mid-mutation by `HashMap` ops.
+#[derive(Default)]
+pub struct SessionCache {
+    cores: std::sync::Mutex<std::collections::HashMap<String, Arc<SessionCore>>>,
+    hits: std::sync::atomic::AtomicU64,
+    misses: std::sync::atomic::AtomicU64,
+}
+
+impl SessionCache {
+    pub fn new() -> SessionCache {
+        SessionCache::default()
+    }
+
+    fn lock(
+        &self,
+    ) -> std::sync::MutexGuard<'_, std::collections::HashMap<String, Arc<SessionCore>>> {
+        self.cores
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Cores served from the cache so far.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Core compilations so far.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Number of cached cores.
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of the hit/miss/entry counters.
+    pub fn stats(&self) -> crate::memsim::CacheStats {
+        crate::memsim::CacheStats {
+            hits: self.hits(),
+            misses: self.misses(),
+            entries: self.len(),
+        }
+    }
+
+    /// Summed plan-cache counters across every cached core:
+    /// `(rebase_hits, fresh_plans)`.
+    pub fn plan_counters(&self) -> (u64, u64) {
+        self.lock().values().fold((0, 0), |(r, f), core| {
+            (
+                r + core.cache.rebase_hits(),
+                f + core.cache.fresh_plans(),
+            )
+        })
+    }
+}
+
+/// A compiled experiment: the allocation, schedule and plan cache built
+/// once from an [`ExperimentSpec`], runnable any number of times. The
+/// compiled state lives in an [`Arc<SessionCore>`], so cloning a session —
+/// or compiling a second spec with the same geometry through a
+/// [`SessionCache`] — shares it rather than rebuilding it.
+#[derive(Clone)]
+pub struct Session {
+    spec: ExperimentSpec,
+    core: Arc<SessionCore>,
+}
+
 impl Session {
-    /// Resolve and validate `spec` against `registry`.
-    pub fn compile_with(spec: ExperimentSpec, registry: &LayoutRegistry) -> Result<Session> {
+    /// Validate the non-geometry half of `spec` (memory config, channels,
+    /// striping) — runs on every compile, cached core or not.
+    fn validate_spec(spec: &ExperimentSpec) -> Result<()> {
         spec.mem
             .validate()
             .context("experiment spec has an invalid memory configuration")?;
@@ -558,25 +692,73 @@ impl Session {
             .striping
             .validate(spec.mem.elem_bytes)
             .context("experiment spec has an invalid striping")?;
+        Ok(())
+    }
+
+    /// Resolve and validate `spec` against `registry`.
+    pub fn compile_with(spec: ExperimentSpec, registry: &LayoutRegistry) -> Result<Session> {
+        Session::validate_spec(&spec)?;
         let (benchmark, tiling, deps) = resolve_workload(&spec.workload)?;
         let entry = registry.resolve_or_err(&spec.layout.name)?;
-        let alloc = entry.build(&tiling, &deps)?;
-        let layout = entry.name().to_string();
-        let schedule = match spec.exec.schedule {
-            ScheduleKind::Flat => Schedule::flat(&tiling),
-            ScheduleKind::Wavefront => Schedule::wavefront(&tiling, &deps),
-        };
-        let cache = PlanCacheState::new(alloc.as_ref());
+        let core = SessionCore::build(benchmark, tiling, deps, entry, spec.exec.schedule)?;
         Ok(Session {
             spec,
+            core: Arc::new(core),
+        })
+    }
+
+    /// [`Session::compile_with`], sharing compiled cores through `cache`:
+    /// a geometry seen before skips the allocation build entirely and the
+    /// new session points at the cached core. Spec validation and workload
+    /// resolution still run per call — a cache hit never launders an
+    /// invalid spec.
+    pub fn compile_with_cache(
+        spec: ExperimentSpec,
+        registry: &LayoutRegistry,
+        cache: &SessionCache,
+    ) -> Result<Session> {
+        Session::validate_spec(&spec)?;
+        let (benchmark, tiling, deps) = resolve_workload(&spec.workload)?;
+        let entry = registry.resolve_or_err(&spec.layout.name)?;
+        // key on the same fingerprint compiled traces carry; compute it
+        // from the resolved inputs without building the allocation
+        let key = format!(
+            "{}|d{:?}|{}|s{:?}|t{:?}|{:?}",
             benchmark,
-            layout,
+            deps.vecs(),
+            entry.name(),
+            tiling.space,
+            tiling.tile,
+            spec.exec.schedule
+        );
+        if let Some(core) = cache.lock().get(&key) {
+            cache
+                .hits
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            return Ok(Session {
+                spec,
+                core: core.clone(),
+            });
+        }
+        // compile outside the lock; identical racers are resolved by
+        // first-insert-wins, so results do not depend on the race
+        let built = Arc::new(SessionCore::build(
+            benchmark,
             tiling,
             deps,
-            alloc,
-            schedule,
-            cache,
-        })
+            entry,
+            spec.exec.schedule,
+        )?);
+        cache
+            .misses
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let core = cache.lock().entry(key).or_insert(built).clone();
+        Ok(Session { spec, core })
+    }
+
+    /// The shared compiled core (tests assert sharing via `Arc::ptr_eq`).
+    pub fn core(&self) -> &Arc<SessionCore> {
+        &self.core
     }
 
     pub fn spec(&self) -> &ExperimentSpec {
@@ -589,35 +771,36 @@ impl Session {
 
     /// Report label of the workload.
     pub fn benchmark(&self) -> &str {
-        &self.benchmark
+        &self.core.benchmark
     }
 
     /// Canonical layout name.
     pub fn layout(&self) -> &str {
-        &self.layout
+        &self.core.layout
     }
 
     pub fn tiling(&self) -> &Tiling {
-        &self.tiling
+        &self.core.tiling
     }
 
     pub fn deps(&self) -> &DepPattern {
-        &self.deps
+        &self.core.deps
     }
 
-    /// The allocation this session owns.
+    /// The allocation this session shares with its core.
     pub fn allocation(&self) -> &dyn Allocation {
-        self.alloc.as_ref()
+        self.core.alloc.as_ref()
     }
 
     pub fn schedule(&self) -> &Schedule {
-        &self.schedule
+        &self.core.schedule
     }
 
-    /// A plan-cache view over the session-owned memoization state (the
-    /// canonical interior plan is derived once per session).
+    /// A plan-cache view over the core-owned memoization state (the
+    /// canonical interior plan is derived once per core, however many
+    /// sessions share it).
     pub fn cache(&self) -> PlanCache<'_> {
-        PlanCache::with_state(self.alloc.as_ref(), &self.cache)
+        PlanCache::with_state(self.core.alloc.as_ref(), &self.core.cache)
     }
 
     /// Compile this session's schedule into a flat, config-independent
@@ -630,7 +813,7 @@ impl Session {
     /// `dse` trace cache does exactly this).
     pub fn compile_trace(&self) -> TxnTrace {
         let cache = self.cache();
-        let mut trace = batch::compile_trace(&cache, &self.schedule, self.spec.exec.threads);
+        let mut trace = batch::compile_trace(&cache, &self.core.schedule, self.spec.exec.threads);
         trace.geometry = self.trace_geometry();
         trace
     }
@@ -642,15 +825,7 @@ impl Session {
     /// mem/PE accept each other's traces, and a trace from a different
     /// layout (or a same-named workload with different deps) is rejected.
     fn trace_geometry(&self) -> String {
-        format!(
-            "{}|d{:?}|{}|s{:?}|t{:?}|{:?}",
-            self.benchmark,
-            self.deps.vecs(),
-            self.layout,
-            self.tiling.space,
-            self.tiling.tile,
-            self.spec.exec.schedule
-        )
+        self.core.trace_geometry(self.spec.exec.schedule)
     }
 
     /// `Mode::Timing` over a pre-compiled trace: replay `trace` through the
@@ -671,13 +846,15 @@ impl Session {
             };
             bail!("trace geometry mismatch: got '{got}', session expects '{expected}'");
         }
-        if trace.tiles != self.schedule.num_tiles() || trace.waves != self.schedule.num_waves() {
+        if trace.tiles != self.core.schedule.num_tiles()
+            || trace.waves != self.core.schedule.num_waves()
+        {
             bail!(
                 "trace shape mismatch: trace has {} tiles / {} waves, session schedule has {} / {}",
                 trace.tiles,
                 trace.waves,
-                self.schedule.num_tiles(),
-                self.schedule.num_waves()
+                self.core.schedule.num_tiles(),
+                self.core.schedule.num_waves()
             );
         }
         let wall0 = Instant::now();
@@ -693,9 +870,11 @@ impl Session {
     fn replay_trace(&self, trace: &TxnTrace) -> Result<BatchReport> {
         let exec = &self.spec.exec;
         let (cycles, timing) = if exec.channels > 1 {
-            let map =
-                exec.striping
-                    .resolve(self.alloc.as_ref(), self.spec.mem.elem_bytes, exec.channels)?;
+            let map = exec.striping.resolve(
+                self.core.alloc.as_ref(),
+                self.spec.mem.elem_bytes,
+                exec.channels,
+            )?;
             let mut mp = MultiPortSim::new(self.spec.mem.clone(), exec.channels, map);
             mp.run_trace_parallel(trace, exec.threads);
             (mp.now(), mp.aggregate_timing())
@@ -768,14 +947,14 @@ impl Session {
                 self.spec.exec.channels
             );
         }
-        if !self.schedule.is_dependence_safe() {
+        if !self.core.schedule.is_dependence_safe() {
             bail!(
                 "Mode::Data needs a dependence-respecting schedule: compile the session \
                  with ScheduleKind::Wavefront (ScheduleKind::Flat is timing-only)"
             );
         }
         let wall0 = Instant::now();
-        let (rep, host) = self.coordinator(&self.schedule).run_data(seed);
+        let (rep, host) = self.coordinator(&self.core.schedule).run_data(seed);
         let report = self.report_from_batch("data", &rep, wall0.elapsed().as_secs_f64());
         Ok((report, host))
     }
@@ -792,16 +971,16 @@ impl Session {
                 Ok(self.report_from_batch("timing", &rep, wall0.elapsed().as_secs_f64()))
             }
             Mode::Timing => {
-                let rep = self.coordinator(&self.schedule).run_timing();
+                let rep = self.coordinator(&self.core.schedule).run_timing();
                 Ok(self.report_from_batch("timing", &rep, wall0.elapsed().as_secs_f64()))
             }
             Mode::Sweep if multi => {
                 // flat replay order regardless of the session schedule
                 let flat;
                 let schedule = if self.spec.exec.schedule == ScheduleKind::Flat {
-                    &self.schedule
+                    &self.core.schedule
                 } else {
-                    flat = Schedule::flat(&self.tiling);
+                    flat = Schedule::flat(&self.core.tiling);
                     &flat
                 };
                 let cache = self.cache();
@@ -812,10 +991,10 @@ impl Session {
             Mode::Sweep => {
                 // the memory-bound rig always replays flat, back-to-back
                 if self.spec.exec.schedule == ScheduleKind::Flat {
-                    let rep = self.coordinator(&self.schedule).run_timing();
+                    let rep = self.coordinator(&self.core.schedule).run_timing();
                     Ok(self.report_from_batch("sweep", &rep, wall0.elapsed().as_secs_f64()))
                 } else {
-                    let flat = Schedule::flat(&self.tiling);
+                    let flat = Schedule::flat(&self.core.tiling);
                     let rep = self.coordinator(&flat).run_timing();
                     Ok(self.report_from_batch("sweep", &rep, wall0.elapsed().as_secs_f64()))
                 }
@@ -828,9 +1007,9 @@ impl Session {
     }
 
     fn coordinator<'a>(&'a self, schedule: &'a Schedule) -> BatchCoordinator<'a> {
-        BatchCoordinator::new(self.alloc.as_ref(), schedule, self.spec.mem.clone())
+        BatchCoordinator::new(self.core.alloc.as_ref(), schedule, self.spec.mem.clone())
             .threads(self.spec.exec.threads)
-            .cache_state(&self.cache)
+            .cache_state(&self.core.cache)
     }
 
     fn report_from_batch(
@@ -844,8 +1023,8 @@ impl Session {
         let raw_bytes = rep.raw_elems * mem.elem_bytes;
         let useful_bytes = rep.useful_elems * mem.elem_bytes;
         Report {
-            benchmark: self.benchmark.clone(),
-            layout: self.layout.clone(),
+            benchmark: self.core.benchmark.clone(),
+            layout: self.core.layout.clone(),
             mode: mode.to_string(),
             tiles: rep.tiles,
             waves: rep.waves,
@@ -970,6 +1149,71 @@ mod tests {
     fn alias_resolves_to_canonical_layout() {
         let s = quick_session("bounding-box");
         assert_eq!(s.layout(), registry::names::BBOX);
+    }
+
+    #[test]
+    fn session_cache_shares_cores_and_counts() {
+        let reg = LayoutRegistry::with_builtins();
+        let cache = SessionCache::new();
+        let spec = || {
+            ExperimentSpec::builder()
+                .named("jacobi2d5p", vec![8, 8, 8], 3)
+                .layout("cfa")
+                .schedule(ScheduleKind::Wavefront)
+                .spec()
+                .expect("spec")
+        };
+        let a = Session::compile_with_cache(spec(), &reg, &cache).expect("compile a");
+        assert_eq!((cache.hits(), cache.misses(), cache.len()), (0, 1, 1));
+        // same geometry, different memory interface: the core is shared
+        let mut spec_b = spec();
+        spec_b.exec.threads = 4;
+        let b = Session::compile_with_cache(spec_b, &reg, &cache).expect("compile b");
+        assert_eq!((cache.hits(), cache.misses(), cache.len()), (1, 1, 1));
+        assert!(Arc::ptr_eq(a.core(), b.core()));
+        // a clone shares too, without touching the cache
+        let c = a.clone();
+        assert!(Arc::ptr_eq(a.core(), c.core()));
+        assert_eq!(cache.hits(), 1);
+        // a different geometry compiles its own core
+        let d = Session::compile_with_cache(
+            ExperimentSpec::builder()
+                .named("jacobi2d5p", vec![8, 8, 8], 3)
+                .layout("original")
+                .schedule(ScheduleKind::Wavefront)
+                .spec()
+                .expect("spec"),
+            &reg,
+            &cache,
+        )
+        .expect("compile d");
+        assert!(!Arc::ptr_eq(a.core(), d.core()));
+        assert_eq!((cache.misses(), cache.len()), (2, 2));
+        // shared cores replay identically to privately compiled ones
+        let solo = quick_session("cfa");
+        let ra = a.run(Mode::Timing).expect("run a");
+        let rb = b.run(Mode::Timing).expect("run b");
+        let rs = solo.run(Mode::Timing).expect("run solo");
+        assert_eq!(ra.makespan_cycles, rs.makespan_cycles);
+        assert_eq!(rb.makespan_cycles, rs.makespan_cycles);
+        assert_eq!(ra.timing, rs.timing);
+        // a cache hit never launders an invalid spec
+        let mut bad = spec();
+        bad.exec.channels = 0;
+        assert!(Session::compile_with_cache(bad, &reg, &cache).is_err());
+    }
+
+    #[test]
+    fn plan_cache_counters_cover_every_tile() {
+        let s = quick_session("cfa");
+        let state = s.core().plan_cache_state();
+        assert_eq!((state.rebase_hits(), state.fresh_plans()), (0, 0));
+        s.run(Mode::Timing).expect("run");
+        // 3x3x3 exact tiling: exactly one interior tile rebases, the other
+        // 26 boundary tiles plan fresh (plus the canonical derivation,
+        // which goes through alloc.plan directly and is not counted)
+        assert_eq!(state.rebase_hits(), 1);
+        assert_eq!(state.fresh_plans(), 26);
     }
 
     #[test]

@@ -40,4 +40,5 @@ pub mod layout;
 pub mod memsim;
 pub mod poly;
 pub mod runtime;
+pub mod serve;
 pub mod util;

@@ -7,6 +7,7 @@
 //!   run        end-to-end run (layout + memsim + PJRT compute + verify)
 //!   bench      regenerate a figure sweep (fig15 | fig16 | fig17)
 //!   tune       design-space exploration (tiling x layout x memory), resumable
+//!   serve      persistent multi-tenant autotuning daemon (shared compiled-state caches)
 //!   codegen    emit the HLS C the compiler pass produces (Fig 12/13)
 //!
 //! Every experiment-shaped subcommand goes through the `experiment`
@@ -43,6 +44,7 @@ fn main() {
         "run" => cmd_run(),
         "bench" => cmd_bench(),
         "tune" => cmd_tune(),
+        "serve" => cmd_serve(),
         "codegen" => cmd_codegen(),
         _ => {
             print_help();
@@ -68,6 +70,9 @@ fn print_help() {
          \x20 tune                 design-space exploration (--space, --strategy, --budget, --parallel,\n\
          \x20                      --channels LIST, --striping LIST, --out, --resume, --no-retry-failed,\n\
          \x20                      --deadline-secs N, --trace-cache)\n\
+         \x20 serve                persistent autotuning daemon over line-delimited JSON\n\
+         \x20                      (--addr HOST:PORT | --stdio, --workers N, --queue N);\n\
+         \x20                      tenants share one session + trace cache across requests\n\
          \x20 codegen              emit HLS C (--benchmark, --tile)\n\n\
          layouts are named through the open registry (`cfa layouts`); every\n\
          --alloc option accepts a canonical name, an alias, or 'all'.\n"
@@ -465,11 +470,17 @@ fn cmd_tune() -> anyhow::Result<()> {
         s => anyhow::bail!("--trace-cache must be 'on' or 'off', got '{s}'"),
     };
     let deadline = a.get_usize("deadline-secs", 0).map_err(anyhow::Error::msg)?;
+    // Ctrl-C / SIGTERM cancel cooperatively: the explorer stops at the
+    // next point boundary, flushes the journal, and the summary carries
+    // the `interrupted` marker instead of the process dying mid-append
+    let token = cfa::dse::CancelToken::new();
+    cfa::util::signals::watch(token.clone());
     let mut explorer = Explorer::new(space, strategy)
         .parallel(parallel)
         .journal(&out)
         .trace_cache(trace_cache)
-        .retry_failed(!a.flag("no-retry-failed"));
+        .retry_failed(!a.flag("no-retry-failed"))
+        .cancel_token(token);
     if budget > 0 {
         explorer = explorer.budget(budget);
     }
@@ -483,6 +494,39 @@ fn cmd_tune() -> anyhow::Result<()> {
     print!("{}", outcome.summary());
     println!("journal: {out}");
     Ok(())
+}
+
+fn cmd_serve() -> anyhow::Result<()> {
+    let cmd = Command::new("cfa serve", "persistent multi-tenant autotuning service")
+        .opt("addr", "TCP listen address", Some("127.0.0.1:7070"))
+        .flag(
+            "stdio",
+            "serve one connection over stdin/stdout (tests/CI), then drain",
+        )
+        .opt(
+            "workers",
+            "worker threads for request execution (0 = one per core)",
+            Some("0"),
+        )
+        .opt(
+            "queue",
+            "queued requests before backpressure ('rejected' replies)",
+            Some("32"),
+        );
+    let a = cmd.parse(&env_args(1)).map_err(anyhow::Error::msg)?;
+    let mut workers = a.get_usize("workers", 0).map_err(anyhow::Error::msg)?;
+    if workers == 0 {
+        workers = cfa::util::par::default_threads();
+    }
+    let depth = a.get_usize("queue", 32).map_err(anyhow::Error::msg)?;
+    if depth == 0 {
+        anyhow::bail!("--queue must be >= 1");
+    }
+    if a.flag("stdio") {
+        cfa::serve::serve_stdio(workers, depth)
+    } else {
+        cfa::serve::serve_tcp(a.get_or("addr", "127.0.0.1:7070"), workers, depth)
+    }
 }
 
 fn cmd_codegen() -> anyhow::Result<()> {

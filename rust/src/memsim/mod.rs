@@ -23,7 +23,7 @@ pub mod trace;
 
 pub use engine::{MemSim, ReplayState, Timing};
 pub use multiport::{cfa_port_map, MultiPortSim, PortMap, Striping};
-pub use trace::{TraceCache, TxnTrace};
+pub use trace::{CacheStats, TraceCache, TraceProvider, TxnTrace};
 
 /// Transfer direction.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -119,6 +119,51 @@ impl TxnTrace {
     }
 }
 
+/// Point-in-time counters of a trace cache (or any [`TraceProvider`]).
+/// `misses` counts actual compilations, so a provider that coalesces
+/// concurrent same-key requests (the serve batcher) reports exactly one
+/// miss per distinct geometry — the number a "zero recompiles" assertion
+/// wants to read.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups served from the cache.
+    pub hits: u64,
+    /// Lookups that compiled (one per cached entry under coalescing).
+    pub misses: u64,
+    /// Entries currently cached.
+    pub entries: usize,
+}
+
+impl CacheStats {
+    /// `{"entries": N, "hits": N, "misses": N}` for the daemon's `stats`
+    /// reply and bench records.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("hits", Json::num(self.hits as f64)),
+            ("misses", Json::num(self.misses as f64)),
+            ("entries", Json::num(self.entries as f64)),
+        ])
+    }
+}
+
+/// Anything that can serve compiled traces by geometry key. Implemented by
+/// [`TraceCache`] itself and by the serve batcher, which wraps a cache with
+/// single-flight coalescing; the `dse` evaluator only talks to this trait,
+/// so the daemon can route explorer compiles through its shared cache
+/// without a `dse` → `serve` dependency.
+///
+/// Object-safe on purpose (`&mut dyn FnMut` rather than `impl FnOnce`):
+/// callers hold an `Arc<dyn TraceProvider>`.
+pub trait TraceProvider: Send + Sync {
+    /// The trace for `key`, compiling it with `compile` when absent.
+    fn get_or_compile_with(&self, key: &str, compile: &mut dyn FnMut() -> TxnTrace)
+        -> Arc<TxnTrace>;
+
+    /// Current hit/miss/entry counters.
+    fn stats(&self) -> CacheStats;
+}
+
 /// Shard count of the [`TraceCache`] (power of two; bounds lock contention
 /// between `parallel_map` workers compiling different geometries).
 const SHARDS: usize = 16;
@@ -246,6 +291,29 @@ impl TraceCache {
             s.lock().clear();
         }
     }
+
+    /// Snapshot of the hit/miss/entry counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits(),
+            misses: self.misses(),
+            entries: self.len(),
+        }
+    }
+}
+
+impl TraceProvider for TraceCache {
+    fn get_or_compile_with(
+        &self,
+        key: &str,
+        compile: &mut dyn FnMut() -> TxnTrace,
+    ) -> Arc<TxnTrace> {
+        self.get_or_compile(key, || compile())
+    }
+
+    fn stats(&self) -> CacheStats {
+        TraceCache::stats(self)
+    }
 }
 
 impl Default for TraceCache {
@@ -305,6 +373,25 @@ mod tests {
         assert_eq!(cache.len(), 1);
         cache.clear();
         assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn stats_snapshot_and_trait_object_agree() {
+        let cache = TraceCache::new();
+        cache.get_or_compile("k", || sample_trace(3));
+        let _ = cache.get_or_compile("k", || panic!("cached"));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        // the trait object path shares counters with the inherent API
+        let p: &dyn TraceProvider = &cache;
+        let t = p.get_or_compile_with("k2", &mut || sample_trace(2));
+        assert_eq!(*t, sample_trace(2));
+        let s = TraceProvider::stats(p);
+        assert_eq!((s.hits, s.misses, s.entries), (1, 2, 2));
+        assert_eq!(
+            s.to_json().to_string_compact(),
+            r#"{"entries":2,"hits":1,"misses":2}"#
+        );
     }
 
     #[test]

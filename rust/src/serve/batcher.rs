@@ -1,0 +1,254 @@
+//! Same-geometry request batching: a single-flight front for the shared
+//! [`TraceCache`].
+//!
+//! The cache alone already deduplicates *storage* (first insert wins),
+//! but under concurrency it does not deduplicate *work*: two tenants
+//! hitting the same cold geometry at the same instant would both miss
+//! and both compile, and the second compile is thrown away. The batcher
+//! closes that window with per-key flights — the first requester of a
+//! cold key becomes the leader and compiles through
+//! [`TraceCache::get_or_compile`]; every concurrent requester of the
+//! same key waits on the flight and then reads the cache (a guaranteed
+//! hit, because the leader inserts before it lands the flight).
+//!
+//! The payoff is an exact accounting identity the serve tests lean on:
+//! `misses == distinct geometries actually compiled`, no matter how many
+//! tenants raced. Note the batcher never calls [`TraceCache::get`] —
+//! that method counts a miss just for *peeking* at an absent key, which
+//! would break the identity.
+//!
+//! A leader that panics mid-compile (injected faults at
+//! `trace::compile`) lands its flight on unwind, so waiters wake, find
+//! the cache still cold, and the first of them becomes the new leader —
+//! a poisoned flight never wedges the key.
+
+use crate::memsim::{CacheStats, TraceCache, TraceProvider, TxnTrace};
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+
+/// One in-progress compile; waiters block on the condvar.
+struct Flight {
+    done: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Flight {
+    fn new() -> Flight {
+        Flight {
+            done: Mutex::new(false),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn wait(&self) {
+        let mut done = self.done.lock().unwrap_or_else(PoisonError::into_inner);
+        while !*done {
+            done = self
+                .cv
+                .wait(done)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    fn finish(&self) {
+        *self.done.lock().unwrap_or_else(PoisonError::into_inner) = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Single-flight [`TraceProvider`] wrapping one shared [`TraceCache`].
+pub struct Batcher {
+    cache: Arc<TraceCache>,
+    inflight: Mutex<HashMap<String, Arc<Flight>>>,
+}
+
+/// Lands the leader's flight even when `compile` unwinds.
+struct FlightGuard<'a> {
+    batcher: &'a Batcher,
+    key: &'a str,
+    flight: Arc<Flight>,
+}
+
+impl Drop for FlightGuard<'_> {
+    fn drop(&mut self) {
+        self.batcher
+            .inflight
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .remove(self.key);
+        self.flight.finish();
+    }
+}
+
+impl Batcher {
+    pub fn new() -> Batcher {
+        Batcher::with_cache(Arc::new(TraceCache::new()))
+    }
+
+    /// Wrap an existing cache (tests hand in a pre-warmed one).
+    pub fn with_cache(cache: Arc<TraceCache>) -> Batcher {
+        Batcher {
+            cache,
+            inflight: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The wrapped cache (its counters are the batcher's counters).
+    pub fn cache(&self) -> &Arc<TraceCache> {
+        &self.cache
+    }
+
+    /// Snapshot of the wrapped cache's hit/miss/entry counters. With
+    /// single-flight in front, `misses` equals the number of distinct
+    /// geometries actually compiled.
+    pub fn stats(&self) -> crate::memsim::CacheStats {
+        self.cache.stats()
+    }
+
+    /// Keys currently being compiled (observability; racy by nature).
+    pub fn inflight_len(&self) -> usize {
+        self.inflight
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .len()
+    }
+
+    fn get_or_compile_impl(
+        &self,
+        key: &str,
+        compile: &mut dyn FnMut() -> TxnTrace,
+    ) -> Arc<TxnTrace> {
+        loop {
+            let flight = {
+                let mut inflight = self
+                    .inflight
+                    .lock()
+                    .unwrap_or_else(PoisonError::into_inner);
+                match inflight.get(key) {
+                    Some(f) => f.clone(),
+                    None => {
+                        let f = Arc::new(Flight::new());
+                        inflight.insert(key.to_string(), f.clone());
+                        // leader: compile (or hit, after a prior leader
+                        // landed) and release the flight either way
+                        drop(inflight);
+                        let guard = FlightGuard {
+                            batcher: self,
+                            key,
+                            flight: f,
+                        };
+                        let trace = self.cache.get_or_compile(key, || compile());
+                        drop(guard);
+                        return trace;
+                    }
+                }
+            };
+            // follower: wait the leader out, then loop. The re-check
+            // either finds no flight and becomes a (cache-hitting)
+            // leader, or — if the old leader panicked cold — elects
+            // exactly one new compiling leader.
+            flight.wait();
+        }
+    }
+}
+
+impl Default for Batcher {
+    fn default() -> Batcher {
+        Batcher::new()
+    }
+}
+
+impl TraceProvider for Batcher {
+    fn get_or_compile_with(
+        &self,
+        key: &str,
+        compile: &mut dyn FnMut() -> TxnTrace,
+    ) -> Arc<TxnTrace> {
+        self.get_or_compile_impl(key, compile)
+    }
+
+    fn stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn trace_with_len(n: usize) -> TxnTrace {
+        let mut t = TxnTrace::new();
+        for i in 0..n {
+            t.push(crate::memsim::Dir::Read, i as u64 * 64, 16);
+        }
+        t
+    }
+
+    #[test]
+    fn racing_requesters_compile_once() {
+        let batcher = Arc::new(Batcher::new());
+        let compiles = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let b = batcher.clone();
+            let c = compiles.clone();
+            handles.push(std::thread::spawn(move || {
+                let t = b.get_or_compile_with(
+                    "geom-a",
+                    &mut || {
+                        c.fetch_add(1, Ordering::SeqCst);
+                        // hold the flight open long enough that the other
+                        // threads genuinely arrive while it is in progress
+                        std::thread::sleep(std::time::Duration::from_millis(50));
+                        trace_with_len(3)
+                    },
+                );
+                t.len()
+            }));
+        }
+        let lens: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(lens.iter().all(|&l| l == 3), "all tenants share one trace");
+        assert_eq!(compiles.load(Ordering::SeqCst), 1, "exactly one compile");
+        let s = batcher.stats();
+        assert_eq!(s.misses, 1, "misses == compiles, even under a race");
+        assert_eq!(s.hits, 7);
+        assert_eq!(s.entries, 1);
+    }
+
+    #[test]
+    fn distinct_keys_do_not_serialize_on_each_other() {
+        let batcher = Arc::new(Batcher::new());
+        let mut handles = Vec::new();
+        for k in 0..4 {
+            let b = batcher.clone();
+            handles.push(std::thread::spawn(move || {
+                let key = format!("geom-{k}");
+                b.get_or_compile_with(&key, &mut || trace_with_len(k + 1)).len()
+            }));
+        }
+        let mut lens: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        lens.sort_unstable();
+        assert_eq!(lens, vec![1, 2, 3, 4]);
+        let s = batcher.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 4, 4));
+        assert_eq!(batcher.inflight_len(), 0, "all flights landed");
+    }
+
+    #[test]
+    fn leader_panic_elects_a_new_leader_instead_of_wedging() {
+        let batcher = Arc::new(Batcher::new());
+        let b = batcher.clone();
+        let bomb = std::thread::spawn(move || {
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                b.get_or_compile_with("geom-p", &mut || panic!("compile bomb"))
+            }));
+            assert!(result.is_err());
+        });
+        bomb.join().unwrap();
+        // the flight landed on unwind; the key must be compilable again
+        let t = batcher.get_or_compile_with("geom-p", &mut || trace_with_len(2));
+        assert_eq!(t.len(), 2);
+        assert_eq!(batcher.inflight_len(), 0);
+    }
+}

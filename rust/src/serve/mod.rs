@@ -1,0 +1,47 @@
+//! `cfa serve` — a persistent, multi-tenant autotuning service.
+//!
+//! One long-running daemon accepts concurrent `run` / `tune` / `plan` /
+//! `stats` / `shutdown` requests over a line-delimited JSON protocol
+//! (one compact-JSON object per line, each way) and executes them on a
+//! bounded worker pool. The point of the daemon over one-shot `cfa tune`
+//! processes is *shared compiled state*: every tenant's requests go
+//! through one process-wide [`SessionCache`](crate::experiment::SessionCache)
+//! (compiled allocation + schedule + plan cache per geometry) and one
+//! process-wide [`TraceCache`](crate::memsim::TraceCache) fronted by a
+//! same-geometry single-flight [`Batcher`] — so a geometry is compiled
+//! once, ever, no matter how many tenants ask for it or how concurrently
+//! they ask.
+//!
+//! Layering (everything here is std-only — `TcpListener`, threads, one
+//! bounded `sync_channel`):
+//!
+//! * [`protocol`] — the wire grammar: request parsing and the atomic
+//!   line-writer ([`Reply`]) every response goes through.
+//! * [`batcher`] — the single-flight trace provider shared by tenants.
+//! * [`queue`] — the bounded worker pool with explicit backpressure
+//!   (`rejected` replies, never silent queueing).
+//! * [`server`] — connection loops (TCP and `--stdio`), request
+//!   execution, shared-state plumbing, graceful drain.
+//!
+//! Safety properties, in the same spirit as the explorer's quarantine:
+//! a malformed line gets an `error` reply and the connection keeps
+//! serving; a request that panics (including injected `CFA_FAULTS`
+//! panics at `serve::parse` / `serve::enqueue` / `serve::respond`)
+//! errors that request only; a client disconnect cancels that tenant's
+//! work through its [`CancelToken`](crate::dse::CancelToken); SIGINT /
+//! SIGTERM cancel every tenant cooperatively so journals stay
+//! resumable. Tune journals written by the daemon are byte-identical to
+//! the ones plain `cfa tune` writes, cache sharing or not.
+//!
+//! See `DESIGN.md` §"Tune-as-a-service" for the protocol grammar and
+//! ownership diagram.
+
+pub mod batcher;
+pub mod protocol;
+pub mod queue;
+pub mod server;
+
+pub use batcher::Batcher;
+pub use protocol::{parse_line, PlanRequest, Reply, Request, RunRequest, TuneRequest};
+pub use queue::{Job, WorkerPool};
+pub use server::{serve_stdio, serve_tcp, ServeState, Server};

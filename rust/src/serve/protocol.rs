@@ -1,0 +1,432 @@
+//! Wire grammar for `cfa serve`.
+//!
+//! Requests and responses are both line-delimited compact JSON: one
+//! object per line, no intra-object newlines. Every request carries an
+//! `id` chosen by the client; every response line echoes it, so a client
+//! can multiplex requests over one connection and correlate the replies.
+//! `Json` objects render with sorted keys, so response lines are
+//! byte-deterministic — CI greps for exact substrings like
+//! `"event":"done","id":"a"`.
+//!
+//! Request grammar (`cmd` selects the variant; unknown keys are ignored
+//! so clients can annotate freely):
+//!
+//! ```text
+//! {"cmd":"tune","id":ID, "space":"tiny"|{...}, "strategy":"exhaustive",
+//!  "seed":0, "budget":0, "parallel":1, "out":PATH?, "resume":PATH?,
+//!  "retry_failed":true, "deadline_secs":0, "trace_cache":true,
+//!  "stream":false}
+//! {"cmd":"run","id":ID, "workload":"jacobi2d5p", "tile":[16,16,16],
+//!  "tiles_per_dim":3, "layout":"cfa", "mode":"timing"|"sweep",
+//!  "channels":1, "striping":"address:4096"?, "threads":1}
+//! {"cmd":"plan","id":ID, "workload":..., "tile":[...],
+//!  "tiles_per_dim":3, "layout":"cfa"}
+//! {"cmd":"stats","id":ID}
+//! {"cmd":"shutdown","id":ID}
+//! ```
+//!
+//! Response events: `accepted` (queued), `rejected` (queue full —
+//! explicit backpressure, resend later), `row` (one streamed journal
+//! row, only when `stream` is on), `done` (terminal success, payload in
+//! `data`), `error` (terminal failure, message in `error`).
+
+use crate::dse::Space;
+use crate::memsim::Striping;
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{self, Write};
+use std::sync::{Arc, Mutex, PoisonError};
+
+/// A parsed request (the variant behind `cmd`).
+pub enum Request {
+    Run(RunRequest),
+    Tune(Box<TuneRequest>),
+    Plan(PlanRequest),
+    Stats,
+    Shutdown,
+}
+
+impl Request {
+    /// `stats` and `shutdown` are answered synchronously on the
+    /// connection thread; everything else goes through the worker pool.
+    pub fn is_inline(&self) -> bool {
+        matches!(self, Request::Stats | Request::Shutdown)
+    }
+}
+
+/// `{"cmd":"tune",...}` — one explorer run, same knobs as `cfa tune`.
+pub struct TuneRequest {
+    pub space: Space,
+    pub strategy: String,
+    pub seed: u64,
+    pub budget: usize,
+    pub parallel: usize,
+    pub out: Option<String>,
+    pub resume: Option<String>,
+    pub retry_failed: bool,
+    pub deadline_secs: u64,
+    pub trace_cache: bool,
+    pub stream: bool,
+}
+
+/// `{"cmd":"run",...}` — one experiment session, timing or sweep mode
+/// (the data-verified PJRT path needs artifacts and stays on the CLI).
+pub struct RunRequest {
+    pub workload: String,
+    pub tile: Vec<i64>,
+    pub tiles_per_dim: i64,
+    pub layout: String,
+    pub mode: String,
+    pub channels: usize,
+    pub striping: Option<Striping>,
+    pub threads: usize,
+}
+
+/// `{"cmd":"plan",...}` — layout facts for one geometry, no simulation.
+pub struct PlanRequest {
+    pub workload: String,
+    pub tile: Vec<i64>,
+    pub tiles_per_dim: i64,
+    pub layout: String,
+}
+
+fn field_str(j: &Json, key: &str) -> Option<String> {
+    j.get(key).and_then(Json::as_str).map(str::to_string)
+}
+
+fn field_u64(j: &Json, key: &str, default: u64) -> Result<u64> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => {
+            let n = v
+                .as_f64()
+                .ok_or_else(|| anyhow!("'{key}' must be a number"))?;
+            if n < 0.0 || n.fract() != 0.0 {
+                bail!("'{key}' must be a non-negative integer, got {n}");
+            }
+            Ok(n as u64)
+        }
+    }
+}
+
+fn field_bool(j: &Json, key: &str, default: bool) -> Result<bool> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => v
+            .as_bool()
+            .ok_or_else(|| anyhow!("'{key}' must be a boolean")),
+    }
+}
+
+fn field_tile(j: &Json, key: &str) -> Result<Vec<i64>> {
+    let arr = j
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("'{key}' must be an array of tile sizes"))?;
+    if arr.is_empty() {
+        bail!("'{key}' must not be empty");
+    }
+    arr.iter()
+        .map(|v| {
+            let n = v
+                .as_f64()
+                .ok_or_else(|| anyhow!("'{key}' entries must be numbers"))?;
+            if n < 1.0 || n.fract() != 0.0 {
+                bail!("'{key}' entries must be positive integers, got {n}");
+            }
+            Ok(n as i64)
+        })
+        .collect()
+}
+
+/// The `space` field: a builtin name string or an inline space object
+/// (the `--space PATH` JSON grammar, passed by value — the daemon never
+/// reads client-side files for it).
+fn parse_space(j: &Json) -> Result<Space> {
+    let v = j
+        .get("space")
+        .ok_or_else(|| anyhow!("tune request needs 'space' (builtin name or inline object)"))?;
+    match v.as_str() {
+        Some(name) => Space::builtin(name).ok_or_else(|| {
+            anyhow!("unknown builtin space '{name}' (pass an inline space object for custom spaces)")
+        }),
+        None => Space::from_json(v).context("inline 'space' object"),
+    }
+}
+
+fn parse_tune(j: &Json) -> Result<TuneRequest> {
+    Ok(TuneRequest {
+        space: parse_space(j)?,
+        strategy: field_str(j, "strategy").unwrap_or_else(|| "exhaustive".to_string()),
+        seed: field_u64(j, "seed", 0)?,
+        budget: field_u64(j, "budget", 0)? as usize,
+        parallel: field_u64(j, "parallel", 1)?.max(1) as usize,
+        out: field_str(j, "out"),
+        resume: field_str(j, "resume"),
+        retry_failed: field_bool(j, "retry_failed", true)?,
+        deadline_secs: field_u64(j, "deadline_secs", 0)?,
+        trace_cache: field_bool(j, "trace_cache", true)?,
+        stream: field_bool(j, "stream", false)?,
+    })
+}
+
+fn parse_run(j: &Json) -> Result<RunRequest> {
+    let mode = field_str(j, "mode").unwrap_or_else(|| "timing".to_string());
+    if mode != "timing" && mode != "sweep" {
+        bail!("'mode' must be 'timing' or 'sweep', got '{mode}'");
+    }
+    let striping = match field_str(j, "striping") {
+        Some(s) => Some(Striping::parse(&s).context("'striping'")?),
+        None => None,
+    };
+    Ok(RunRequest {
+        workload: field_str(j, "workload")
+            .ok_or_else(|| anyhow!("run request needs 'workload'"))?,
+        tile: field_tile(j, "tile")?,
+        tiles_per_dim: field_u64(j, "tiles_per_dim", 3)?.max(1) as i64,
+        layout: field_str(j, "layout").unwrap_or_else(|| "cfa".to_string()),
+        mode,
+        channels: field_u64(j, "channels", 1)?.max(1) as usize,
+        striping,
+        threads: field_u64(j, "threads", 1)?.max(1) as usize,
+    })
+}
+
+fn parse_plan(j: &Json) -> Result<PlanRequest> {
+    Ok(PlanRequest {
+        workload: field_str(j, "workload")
+            .ok_or_else(|| anyhow!("plan request needs 'workload'"))?,
+        tile: field_tile(j, "tile")?,
+        tiles_per_dim: field_u64(j, "tiles_per_dim", 3)?.max(1) as i64,
+        layout: field_str(j, "layout").unwrap_or_else(|| "cfa".to_string()),
+    })
+}
+
+/// Parse one request line. The `id` is extracted leniently *first* so an
+/// `error` reply for a bad request still carries the client's id; only a
+/// line that is not JSON at all falls back to the empty id.
+pub fn parse_line(line: &str) -> (String, Result<Request>) {
+    let j = match json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return (String::new(), Err(anyhow!("request is not JSON: {e}"))),
+    };
+    let id = field_str(&j, "id").unwrap_or_default();
+    let req = (|| -> Result<Request> {
+        let cmd = field_str(&j, "cmd")
+            .ok_or_else(|| anyhow!("request needs 'cmd' (run|tune|plan|stats|shutdown)"))?;
+        match cmd.as_str() {
+            "run" => Ok(Request::Run(parse_run(&j)?)),
+            "tune" => Ok(Request::Tune(Box::new(parse_tune(&j)?))),
+            "plan" => Ok(Request::Plan(parse_plan(&j)?)),
+            "stats" => Ok(Request::Stats),
+            "shutdown" => Ok(Request::Shutdown),
+            c => bail!("unknown cmd '{c}' (run|tune|plan|stats|shutdown)"),
+        }
+    })();
+    (id, req)
+}
+
+/// The shared, line-atomic response writer for one connection. Cloned
+/// into every job spawned from the connection so workers stream rows and
+/// terminal replies directly, without going back through the connection
+/// thread. Each send holds the lock across one `writeln!` + flush, so
+/// concurrent senders interleave whole lines, never bytes.
+#[derive(Clone)]
+pub struct Reply {
+    writer: Arc<Mutex<dyn Write + Send>>,
+}
+
+impl Reply {
+    pub fn new(writer: Arc<Mutex<dyn Write + Send>>) -> Reply {
+        Reply { writer }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, dyn Write + Send> {
+        // a panicked sender mid-writeln leaves at worst a torn line;
+        // poisoning must not silence every later reply on the connection
+        self.writer.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Write one response line. Fault site: `serve::respond`.
+    pub fn send(&self, j: &Json) -> io::Result<()> {
+        crate::util::faults::check_io("serve::respond")?;
+        let mut w = self.lock();
+        writeln!(w, "{}", j.to_string_compact())?;
+        w.flush()
+    }
+
+    /// Run `action` and write the line it returns as one atomic step:
+    /// the writer lock is held across both, so a worker that picks a
+    /// just-queued job up instantly still cannot emit its first row
+    /// ahead of the `accepted` line.
+    pub fn send_atomically(&self, action: impl FnOnce() -> Json) -> io::Result<()> {
+        crate::util::faults::check_io("serve::respond")?;
+        let mut w = self.lock();
+        let j = action();
+        writeln!(w, "{}", j.to_string_compact())?;
+        w.flush()
+    }
+}
+
+/// `{"event":"accepted","id":ID}` — the request is queued.
+pub fn accepted(id: &str) -> Json {
+    Json::obj(vec![("event", Json::str("accepted")), ("id", Json::str(id))])
+}
+
+/// `{"error":REASON,"event":"rejected","id":ID}` — backpressure.
+pub fn rejected(id: &str, reason: &str) -> Json {
+    Json::obj(vec![
+        ("error", Json::str(reason)),
+        ("event", Json::str("rejected")),
+        ("id", Json::str(id)),
+    ])
+}
+
+/// `{"data":ROW,"event":"row","id":ID}` — one streamed journal row.
+pub fn row(id: &str, data: Json) -> Json {
+    Json::obj(vec![
+        ("data", data),
+        ("event", Json::str("row")),
+        ("id", Json::str(id)),
+    ])
+}
+
+/// `{"data":PAYLOAD,"event":"done","id":ID}` — terminal success.
+pub fn done(id: &str, data: Json) -> Json {
+    Json::obj(vec![
+        ("data", data),
+        ("event", Json::str("done")),
+        ("id", Json::str(id)),
+    ])
+}
+
+/// `{"error":MSG,"event":"error","id":ID}` — terminal failure.
+pub fn error_event(id: &str, msg: &str) -> Json {
+    Json::obj(vec![
+        ("error", Json::str(msg)),
+        ("event", Json::str("error")),
+        ("id", Json::str(id)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tune_line_parses_with_defaults() {
+        let (id, req) = parse_line(r#"{"cmd":"tune","id":"a","space":"tiny"}"#);
+        assert_eq!(id, "a");
+        match req.unwrap() {
+            Request::Tune(t) => {
+                assert_eq!(t.strategy, "exhaustive");
+                assert_eq!(t.seed, 0);
+                assert_eq!(t.budget, 0);
+                assert_eq!(t.parallel, 1);
+                assert!(t.retry_failed);
+                assert!(t.trace_cache);
+                assert!(!t.stream);
+                assert!(t.out.is_none());
+                let reg = crate::layout::registry::global();
+                assert_eq!(
+                    t.space.enumerate(&reg).unwrap().len(),
+                    8,
+                    "tiny space is 8 points"
+                );
+            }
+            _ => panic!("expected tune"),
+        }
+    }
+
+    #[test]
+    fn inline_space_objects_parse() {
+        let (_, req) = parse_line(
+            r#"{"cmd":"tune","id":"x","space":{"workloads":["jacobi2d5p"],"quick":true,"tiles":[[8,8,8]]}}"#,
+        );
+        match req.unwrap() {
+            Request::Tune(t) => {
+                let reg = crate::layout::registry::global();
+                assert!(!t.space.enumerate(&reg).unwrap().is_empty());
+            }
+            _ => panic!("expected tune"),
+        }
+    }
+
+    #[test]
+    fn bad_lines_keep_their_id_when_json_parses() {
+        // not JSON at all: empty id
+        let (id, req) = parse_line("this is not json");
+        assert_eq!(id, "");
+        assert!(req.is_err());
+        // JSON but bad cmd: id survives into the error path
+        let (id, req) = parse_line(r#"{"cmd":"frobnicate","id":"k7"}"#);
+        assert_eq!(id, "k7");
+        assert!(req.unwrap_err().to_string().contains("unknown cmd"));
+        // tune without a space names the missing field
+        let (id, req) = parse_line(r#"{"cmd":"tune","id":"k8"}"#);
+        assert_eq!(id, "k8");
+        assert!(req.unwrap_err().to_string().contains("space"));
+    }
+
+    #[test]
+    fn run_request_validates_mode_and_striping() {
+        let (_, req) = parse_line(
+            r#"{"cmd":"run","id":"r","workload":"jacobi2d5p","tile":[8,8,8],"mode":"sweep","channels":4,"striping":"facet"}"#,
+        );
+        match req.unwrap() {
+            Request::Run(r) => {
+                assert_eq!(r.mode, "sweep");
+                assert_eq!(r.channels, 4);
+                assert_eq!(r.tile, vec![8, 8, 8]);
+                assert!(r.striping.is_some());
+            }
+            _ => panic!("expected run"),
+        }
+        let (_, req) = parse_line(
+            r#"{"cmd":"run","id":"r","workload":"jacobi2d5p","tile":[8,8,8],"mode":"data"}"#,
+        );
+        assert!(req.unwrap_err().to_string().contains("mode"));
+    }
+
+    #[test]
+    fn response_lines_are_sorted_key_compact_json() {
+        // pinned byte-for-byte: CI greps these exact substrings
+        assert_eq!(
+            done("a", Json::Bool(true)).to_string_compact(),
+            r#"{"data":true,"event":"done","id":"a"}"#
+        );
+        assert_eq!(
+            error_event("b", "boom").to_string_compact(),
+            r#"{"error":"boom","event":"error","id":"b"}"#
+        );
+        assert_eq!(
+            accepted("c").to_string_compact(),
+            r#"{"event":"accepted","id":"c"}"#
+        );
+    }
+
+    #[test]
+    fn reply_interleaves_whole_lines() {
+        let buf: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
+        let reply = Reply::new(buf.clone() as Arc<Mutex<dyn Write + Send>>);
+        let mut handles = Vec::new();
+        for i in 0..8 {
+            let r = reply.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    r.send(&accepted(&format!("t{i}"))).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 8 * 50);
+        for line in lines {
+            let j = json::parse(line).expect("every line is whole JSON");
+            assert_eq!(j.get("event").and_then(Json::as_str), Some("accepted"));
+        }
+    }
+}

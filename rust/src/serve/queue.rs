@@ -1,0 +1,164 @@
+//! Bounded worker pool with explicit backpressure.
+//!
+//! One `std::sync::mpsc::sync_channel` of depth `depth` feeds `workers`
+//! threads that share the receiver behind a mutex (dispatch is handed
+//! out one job at a time; execution is fully parallel). A full queue is
+//! a *visible* condition — [`WorkerPool::submit`] hands the job back and
+//! the connection loop turns it into a `rejected` reply — never a silent
+//! unbounded backlog, which is what an `mpsc::channel` would give a
+//! daemon under a misbehaving client.
+//!
+//! Shutdown is drain-by-disconnect: [`WorkerPool::join`] drops the
+//! sender, workers keep pulling until the channel is both disconnected
+//! *and* empty, so every accepted job still runs to completion (its
+//! [`CancelToken`] decides whether "completion" means finishing or
+//! cooperatively stopping with a resumable journal).
+
+use crate::dse::CancelToken;
+use crate::serve::protocol::{Reply, Request};
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::thread::JoinHandle;
+
+/// One accepted request, carrying everything a worker needs to answer
+/// the client directly: the reply writer and the tenant's cancel token.
+pub struct Job {
+    pub id: String,
+    pub req: Request,
+    pub reply: Reply,
+    pub cancel: CancelToken,
+}
+
+/// The bounded pool. `run` is the job executor (the server's dispatch);
+/// workers own nothing else.
+pub struct WorkerPool {
+    tx: Option<SyncSender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn new<F>(workers: usize, depth: usize, run: F) -> WorkerPool
+    where
+        F: Fn(Job) + Send + Sync + 'static,
+    {
+        let (tx, rx) = mpsc::sync_channel::<Job>(depth.max(1));
+        let rx: Arc<Mutex<Receiver<Job>>> = Arc::new(Mutex::new(rx));
+        let run = Arc::new(run);
+        let handles = (0..workers.max(1))
+            .map(|i| {
+                let rx = rx.clone();
+                let run = run.clone();
+                std::thread::Builder::new()
+                    .name(format!("cfa-serve-worker-{i}"))
+                    .spawn(move || loop {
+                        // take the receiver lock only to pull one job;
+                        // blocking in recv while holding it is fine — the
+                        // holder is by definition the only idle worker
+                        // that could have gotten the next job anyway
+                        let job = {
+                            let guard = rx.lock().unwrap_or_else(PoisonError::into_inner);
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => run(job),
+                            // disconnected AND drained: the pool is done
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        WorkerPool {
+            tx: Some(tx),
+            handles,
+        }
+    }
+
+    /// Try to queue a job. `Err(job)` means the queue is full (or the
+    /// pool is already draining) — the caller owns the job again and
+    /// replies `rejected`.
+    pub fn submit(&self, job: Job) -> Result<(), Job> {
+        match self.tx.as_ref() {
+            None => Err(job),
+            Some(tx) => match tx.try_send(job) {
+                Ok(()) => Ok(()),
+                Err(TrySendError::Full(j)) | Err(TrySendError::Disconnected(j)) => Err(j),
+            },
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Drain and stop: drop the sender, then join every worker. Queued
+    /// jobs all execute before the workers see the disconnect.
+    pub fn join(mut self) {
+        self.tx = None;
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn job(id: &str) -> Job {
+        let sink: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
+        Job {
+            id: id.to_string(),
+            req: Request::Stats,
+            reply: Reply::new(sink as Arc<Mutex<dyn Write + Send>>),
+            cancel: CancelToken::new(),
+        }
+    }
+
+    #[test]
+    fn join_drains_every_accepted_job() {
+        let ran = Arc::new(AtomicU64::new(0));
+        let r = ran.clone();
+        let pool = WorkerPool::new(2, 16, move |_job| {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            r.fetch_add(1, Ordering::SeqCst);
+        });
+        for i in 0..10 {
+            pool.submit(job(&format!("j{i}"))).map_err(|_| ()).unwrap();
+        }
+        pool.join();
+        assert_eq!(ran.load(Ordering::SeqCst), 10, "queued jobs ran before exit");
+    }
+
+    #[test]
+    fn full_queue_hands_the_job_back() {
+        // one worker parked on a slow job + depth 1 → the third submit
+        // must bounce instead of queueing invisibly
+        let gate = Arc::new(Mutex::new(()));
+        let hold = gate.lock().unwrap();
+        let g = gate.clone();
+        let pool = WorkerPool::new(1, 1, move |_job| {
+            let _wait = g.lock().unwrap_or_else(PoisonError::into_inner);
+        });
+        pool.submit(job("running")).map_err(|_| ()).unwrap();
+        // the worker may not have picked the first job up yet; the queue
+        // slot is full once two jobs are in flight
+        let mut bounced = None;
+        for i in 0..50 {
+            match pool.submit(job(&format!("q{i}"))) {
+                Ok(()) => std::thread::sleep(std::time::Duration::from_millis(2)),
+                Err(j) => {
+                    bounced = Some(j.id.clone());
+                    break;
+                }
+            }
+        }
+        let bounced = bounced.expect("a submit must eventually bounce on a stuffed queue");
+        assert!(bounced.starts_with('q'));
+        drop(hold);
+        pool.join();
+    }
+}

@@ -1,0 +1,662 @@
+//! The daemon itself: shared state, connection loops, request execution.
+//!
+//! Ownership diagram (one process, N connections, W workers):
+//!
+//! ```text
+//!             TcpListener / stdin            ┌── worker 0 ──┐
+//!   client ──► connection thread ──► queue ──┤   worker 1   ├─► Reply ─► client
+//!               (parse, stats,     (bounded) └── worker W ──┘  (line-atomic,
+//!                shutdown inline)                               per-connection)
+//!                      │                            │
+//!                      ▼                            ▼
+//!               Arc<ServeState> ◄───────────────────┘
+//!        registry · SessionCache · Batcher(TraceCache) · counters
+//! ```
+//!
+//! Everything compiled is process-wide: the [`SessionCache`] (compiled
+//! allocation + schedule per geometry) and the [`Batcher`]'s
+//! [`TraceCache`](crate::memsim::TraceCache) outlive every request, so
+//! tenant N+1 of a geometry pays zero compiles. Execution state is
+//! per-request: each job runs under its own quarantine
+//! ([`try_parallel_map`] with one item) and its connection's
+//! [`CancelToken`].
+//!
+//! Shutdown matrix:
+//!
+//! * `shutdown` request → reply, stop reading, **drain** the pool
+//!   (in-flight tunes finish; their journals complete).
+//! * SIGINT / SIGTERM → drain **and cancel** every token (tunes stop
+//!   cooperatively at the next point boundary; journals stay resumable).
+//! * client disconnect (TCP EOF) → cancel that connection's token only.
+//! * stdio EOF → drain without cancelling (a pipe's EOF is the end of
+//!   the request script, not an abandoned client).
+
+use crate::dse::{CancelToken, Exhaustive, Explorer, HillClimb, RandomSearch, Strategy};
+use crate::experiment::{ExperimentSpec, Mode, Session, SessionCache};
+use crate::harness::workloads;
+use crate::layout::{Allocation as _, LayoutRegistry};
+use crate::memsim::TraceProvider;
+use crate::poly::deps::DepPattern;
+use crate::poly::tiling::Tiling;
+use crate::serve::batcher::Batcher;
+use crate::serve::protocol::{self, parse_line, Reply, Request, RunRequest, TuneRequest};
+use crate::serve::queue::{Job, WorkerPool};
+use crate::util::json::Json;
+use crate::util::par::try_parallel_map;
+use crate::util::{faults, signals};
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Duration;
+
+/// Process-wide shared state: the compiled-state caches every tenant
+/// shares, plus the daemon's counters and shutdown machinery.
+pub struct ServeState {
+    registry: LayoutRegistry,
+    sessions: Arc<SessionCache>,
+    traces: Arc<Batcher>,
+    requests: AtomicU64,
+    rejected: AtomicU64,
+    errors: AtomicU64,
+    active: AtomicU64,
+    shutdown: AtomicBool,
+    tokens: Mutex<Vec<CancelToken>>,
+}
+
+impl ServeState {
+    fn new() -> ServeState {
+        ServeState {
+            registry: crate::layout::registry::global(),
+            sessions: Arc::new(SessionCache::new()),
+            traces: Arc::new(Batcher::new()),
+            requests: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            active: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+            tokens: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The shared session cache (tests read its counters).
+    pub fn sessions(&self) -> &Arc<SessionCache> {
+        &self.sessions
+    }
+
+    /// The shared single-flight trace provider (tests read its counters).
+    pub fn traces(&self) -> &Arc<Batcher> {
+        &self.traces
+    }
+
+    /// Request lines seen (including malformed ones).
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    /// Requests bounced by backpressure.
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Requests that ended in an `error` reply.
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    /// Jobs currently executing on workers.
+    pub fn active(&self) -> u64 {
+        self.active.load(Ordering::Relaxed)
+    }
+
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Cancel every connection's token (signal-driven drain).
+    pub fn cancel_all(&self) {
+        let tokens = self.tokens.lock().unwrap_or_else(PoisonError::into_inner);
+        for t in tokens.iter() {
+            t.cancel();
+        }
+    }
+
+    fn register_token(&self) -> CancelToken {
+        let token = CancelToken::new();
+        self.tokens
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .push(token.clone());
+        token
+    }
+
+    /// The `stats` payload: daemon counters plus every shared cache's.
+    pub fn stats_json(&self) -> Json {
+        let (rebases, fresh) = self.sessions.plan_counters();
+        Json::obj(vec![
+            ("active", Json::num(self.active() as f64)),
+            ("errors", Json::num(self.errors() as f64)),
+            (
+                "plans",
+                Json::obj(vec![
+                    ("fresh", Json::num(fresh as f64)),
+                    ("rebase_hits", Json::num(rebases as f64)),
+                ]),
+            ),
+            ("rejected", Json::num(self.rejected() as f64)),
+            ("requests", Json::num(self.requests() as f64)),
+            ("sessions", self.sessions.stats().to_json()),
+            ("traces", self.traces.stats().to_json()),
+        ])
+    }
+}
+
+/// The daemon: shared state plus the worker pool. The pool sits behind
+/// `Mutex<Option<..>>` so [`Server::shutdown_and_join`] can drain it
+/// through `&self` while detached connection threads still hold the
+/// `Arc<Server>`.
+pub struct Server {
+    state: Arc<ServeState>,
+    pool: Mutex<Option<WorkerPool>>,
+}
+
+impl Server {
+    pub fn new(workers: usize, depth: usize) -> Server {
+        let state = Arc::new(ServeState::new());
+        let st = state.clone();
+        let pool = WorkerPool::new(workers, depth, move |job| run_job(&st, job));
+        Server {
+            state,
+            pool: Mutex::new(Some(pool)),
+        }
+    }
+
+    pub fn state(&self) -> &Arc<ServeState> {
+        &self.state
+    }
+
+    fn submit(&self, job: Job) -> std::result::Result<(), Job> {
+        match &*self.pool.lock().unwrap_or_else(PoisonError::into_inner) {
+            Some(p) => p.submit(job),
+            None => Err(job),
+        }
+    }
+
+    /// Serve one client: read request lines until EOF, error, or a
+    /// `shutdown` request. `stats`/`shutdown` are answered inline;
+    /// `run`/`tune`/`plan` go through the pool. A malformed or panicking
+    /// line costs an `error` reply, never the loop. `cancel_on_eof`
+    /// decides what an input EOF means: an abandoned tenant (TCP — cancel
+    /// its in-flight work) or the end of a request script (stdio — let
+    /// queued work drain).
+    pub fn serve_connection<R: BufRead>(
+        &self,
+        mut reader: R,
+        writer: Arc<Mutex<dyn Write + Send>>,
+        cancel_on_eof: bool,
+    ) {
+        let reply = Reply::new(writer);
+        let token = self.state.register_token();
+        let mut graceful = false;
+        let mut line = String::new();
+        loop {
+            if self.state.shutdown_requested() {
+                graceful = true;
+                break;
+            }
+            line.clear();
+            match reader.read_line(&mut line) {
+                Err(_) | Ok(0) => break,
+                Ok(_) => {}
+            }
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            self.state.requests.fetch_add(1, Ordering::Relaxed);
+            // parse under quarantine: a panic (incl. CFA_FAULTS at
+            // serve::parse) errors this line only
+            let parsed = try_parallel_map(std::slice::from_ref(&trimmed), 1, |l: &&str| {
+                faults::check("serve::parse");
+                parse_line(l)
+            })
+            .pop()
+            .expect("one item in, one result out");
+            let (id, req) = match parsed {
+                Err(p) => {
+                    self.state.errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = reply.send(&protocol::error_event("", &p.message()));
+                    continue;
+                }
+                Ok((id, Err(e))) => {
+                    self.state.errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = reply.send(&protocol::error_event(&id, &format!("{e:#}")));
+                    continue;
+                }
+                Ok((id, Ok(req))) => (id, req),
+            };
+            match req {
+                Request::Stats => {
+                    let _ = reply.send(&protocol::done(&id, self.state.stats_json()));
+                }
+                Request::Shutdown => {
+                    let _ = reply.send(&protocol::done(
+                        &id,
+                        Json::obj(vec![("shutting_down", Json::Bool(true))]),
+                    ));
+                    self.state.request_shutdown();
+                    graceful = true;
+                    break;
+                }
+                req => {
+                    // the enqueue fault site, quarantined the same way
+                    let fault = try_parallel_map(&[()], 1, |_: &()| {
+                        faults::check("serve::enqueue");
+                    })
+                    .pop()
+                    .expect("one item in, one result out");
+                    if let Err(p) = fault {
+                        self.state.errors.fetch_add(1, Ordering::Relaxed);
+                        let _ = reply.send(&protocol::error_event(&id, &p.message()));
+                        continue;
+                    }
+                    let job = Job {
+                        id: id.clone(),
+                        req,
+                        reply: reply.clone(),
+                        cancel: token.clone(),
+                    };
+                    // accept/reject is written under the same writer lock
+                    // as the submit, so a worker that grabs the job
+                    // instantly still emits its rows after the accept
+                    let _ = reply.send_atomically(|| match self.submit(job) {
+                        Ok(()) => protocol::accepted(&id),
+                        Err(_) => {
+                            self.state.rejected.fetch_add(1, Ordering::Relaxed);
+                            protocol::rejected(&id, "queue full; resend when earlier requests finish")
+                        }
+                    });
+                }
+            }
+        }
+        if !graceful && cancel_on_eof {
+            token.cancel();
+        }
+    }
+
+    /// Stop accepting, drain the pool (queued + in-flight jobs run to
+    /// completion), join the workers.
+    pub fn shutdown_and_join(&self) {
+        self.state.request_shutdown();
+        let pool = self
+            .pool
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .take();
+        if let Some(p) = pool {
+            p.join();
+        }
+    }
+}
+
+/// One worker iteration: execute under per-request quarantine, then send
+/// the terminal reply.
+fn run_job(state: &Arc<ServeState>, job: Job) {
+    let Job {
+        id,
+        req,
+        reply,
+        cancel,
+    } = job;
+    state.active.fetch_add(1, Ordering::SeqCst);
+    let result = try_parallel_map(std::slice::from_ref(&req), 1, |r: &Request| {
+        execute(state, &id, r, &reply, &cancel)
+    })
+    .pop()
+    .expect("one item in, one result out");
+    match result {
+        Ok(Ok(data)) => {
+            let _ = reply.send(&protocol::done(&id, data));
+        }
+        Ok(Err(e)) => {
+            state.errors.fetch_add(1, Ordering::Relaxed);
+            let _ = reply.send(&protocol::error_event(&id, &format!("{e:#}")));
+        }
+        Err(p) => {
+            state.errors.fetch_add(1, Ordering::Relaxed);
+            let _ = reply.send(&protocol::error_event(&id, &p.message()));
+        }
+    }
+    state.active.fetch_sub(1, Ordering::SeqCst);
+}
+
+fn execute(
+    state: &Arc<ServeState>,
+    id: &str,
+    req: &Request,
+    reply: &Reply,
+    cancel: &CancelToken,
+) -> Result<Json> {
+    match req {
+        Request::Tune(t) => execute_tune(state, id, t, reply, cancel),
+        Request::Run(r) => execute_run(state, r),
+        Request::Plan(p) => execute_plan(state, p),
+        // handled inline on the connection thread; answered here too so
+        // a future dispatch change cannot drop them silently
+        Request::Stats | Request::Shutdown => Ok(state.stats_json()),
+    }
+}
+
+fn make_strategy(name: &str, seed: u64) -> Result<Box<dyn Strategy>> {
+    Ok(match name {
+        "exhaustive" => Box::new(Exhaustive::new()),
+        "random" => Box::new(RandomSearch::new(seed)),
+        "hill" | "hillclimb" => Box::new(HillClimb::new(seed)),
+        s => bail!("unknown strategy '{s}' (exhaustive | random | hill)"),
+    })
+}
+
+/// A tune request is exactly a `cfa tune` run wired into the shared
+/// caches: the explorer gets the daemon's [`Batcher`] as its trace
+/// provider and the process-wide [`SessionCache`], so its journal bytes
+/// are identical to a standalone run while its compiles are shared.
+fn execute_tune(
+    state: &Arc<ServeState>,
+    id: &str,
+    t: &TuneRequest,
+    reply: &Reply,
+    cancel: &CancelToken,
+) -> Result<Json> {
+    let strategy = make_strategy(&t.strategy, t.seed)?;
+    let mut ex = Explorer::new(t.space.clone(), strategy)
+        .registry(state.registry.clone())
+        .parallel(t.parallel)
+        .retry_failed(t.retry_failed)
+        .cancel_token(cancel.clone());
+    if t.trace_cache {
+        ex = ex
+            .trace_provider(state.traces.clone() as Arc<dyn TraceProvider>)
+            .session_cache(state.sessions.clone());
+    } else {
+        ex = ex.trace_cache(false);
+    }
+    if let Some(out) = &t.out {
+        ex = ex.journal(out);
+    }
+    if let Some(resume) = &t.resume {
+        ex = ex.resume(resume);
+    }
+    if t.budget > 0 {
+        ex = ex.budget(t.budget);
+    }
+    if t.deadline_secs > 0 {
+        ex = ex.deadline_secs(t.deadline_secs);
+    }
+    if t.stream {
+        let reply = reply.clone();
+        let id = id.to_string();
+        ex = ex.on_evaluation(move |e| {
+            let _ = reply.send(&protocol::row(&id, e.to_json()));
+        });
+    }
+    let out = ex.explore()?;
+    Ok(Json::obj(vec![
+        ("evaluated", Json::num(out.evaluated as f64)),
+        ("failed", Json::num(out.failed as f64)),
+        (
+            "front",
+            Json::arr(out.front.iter().map(|e| Json::str(e.fingerprint()))),
+        ),
+        ("interrupted", Json::Bool(out.interrupted)),
+        ("points_total", Json::num(out.points_total as f64)),
+        ("resumed", Json::num(out.resumed as f64)),
+        ("summary", Json::str(out.summary())),
+        (
+            "trace_cache",
+            match &out.trace_cache {
+                Some(cs) => cs.to_json(),
+                None => Json::Null,
+            },
+        ),
+    ]))
+}
+
+fn execute_run(state: &Arc<ServeState>, r: &RunRequest) -> Result<Json> {
+    let mut b = ExperimentSpec::builder()
+        .named(&r.workload, r.tile.clone(), r.tiles_per_dim)
+        .layout(&r.layout)
+        .threads(r.threads)
+        .channels(r.channels);
+    if let Some(s) = &r.striping {
+        b = b.striping(s.clone());
+    }
+    let spec = b.spec()?;
+    // through the shared cache: a repeat geometry reuses the compiled core
+    let session = Session::compile_with_cache(spec, &state.registry, &state.sessions)?;
+    let mode = if r.mode == "sweep" {
+        Mode::Sweep
+    } else {
+        Mode::Timing
+    };
+    let report = session.run(mode)?;
+    Ok(Json::obj(vec![
+        ("report", report.to_json()),
+        ("summary", Json::str(report.summary())),
+    ]))
+}
+
+fn execute_plan(state: &Arc<ServeState>, p: &crate::serve::protocol::PlanRequest) -> Result<Json> {
+    let w = workloads::by_name(&p.workload)
+        .ok_or_else(|| anyhow!("unknown benchmark '{}' (see `cfa list`)", p.workload))?;
+    if p.tile.len() != w.dims {
+        bail!(
+            "tile {:?} has {} dims but '{}' is {}-d",
+            p.tile,
+            p.tile.len(),
+            p.workload,
+            w.dims
+        );
+    }
+    let deps = DepPattern::new(w.deps.clone())?;
+    let tiling = Tiling::new(w.space_for(&p.tile, p.tiles_per_dim), p.tile.clone());
+    let alloc = state.registry.build(&p.layout, &tiling, &deps)?;
+    let counts = tiling.tile_counts();
+    let mid: Vec<i64> = counts.iter().map(|&c| (c - 1).min(1)).collect();
+    let plan = alloc.plan(&mid);
+    Ok(Json::obj(vec![
+        ("arrays", Json::num(alloc.num_arrays() as f64)),
+        ("footprint_elems", Json::num(alloc.footprint() as f64)),
+        ("layout", Json::str(alloc.name())),
+        ("read_bursts", Json::num(plan.read_runs.len() as f64)),
+        ("read_raw", Json::num(plan.read_raw() as f64)),
+        ("read_useful", Json::num(plan.read_useful as f64)),
+        ("write_bursts", Json::num(plan.write_runs.len() as f64)),
+        ("write_raw", Json::num(plan.write_raw() as f64)),
+        ("write_useful", Json::num(plan.write_useful as f64)),
+    ]))
+}
+
+/// On SIGINT/SIGTERM: stop accepting, cancel every tenant, give
+/// in-flight requests a bounded window to land their (resumable)
+/// journals, then exit — even if a connection thread is still parked in
+/// a blocking read.
+fn spawn_signal_monitor(state: Arc<ServeState>) {
+    signals::install();
+    std::thread::spawn(move || loop {
+        if signals::triggered() {
+            state.request_shutdown();
+            state.cancel_all();
+            let deadline = std::time::Instant::now() + Duration::from_secs(10);
+            while state.active() > 0 && std::time::Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            std::process::exit(130);
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    });
+}
+
+/// `cfa serve --stdio`: one connection over stdin/stdout, then drain.
+/// This is the tests/CI transport — a fixed request script piped in, the
+/// response lines on stdout.
+pub fn serve_stdio(workers: usize, depth: usize) -> Result<()> {
+    let server = Server::new(workers, depth);
+    spawn_signal_monitor(server.state.clone());
+    let stdin = io::stdin();
+    let writer: Arc<Mutex<dyn Write + Send>> = Arc::new(Mutex::new(io::stdout()));
+    server.serve_connection(stdin.lock(), writer, false);
+    server.shutdown_and_join();
+    Ok(())
+}
+
+/// `cfa serve --addr HOST:PORT`: accept loop with one thread per
+/// connection. The listener polls non-blocking so it can notice shutdown
+/// (a client's `shutdown` request or a signal) within ~25 ms.
+pub fn serve_tcp(addr: &str, workers: usize, depth: usize) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    listener
+        .set_nonblocking(true)
+        .context("listener non-blocking mode")?;
+    let server = Arc::new(Server::new(workers, depth));
+    spawn_signal_monitor(server.state.clone());
+    println!("cfa serve: listening on {addr} ({} workers)", {
+        let pool = server.pool.lock().unwrap_or_else(PoisonError::into_inner);
+        pool.as_ref().map(|p| p.workers()).unwrap_or(0)
+    });
+    loop {
+        if server.state.shutdown_requested() || signals::triggered() {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let server = server.clone();
+                // detached: a connection thread may sit in a blocking
+                // read for the client's lifetime; workers are what get
+                // joined, and process exit reaps the readers
+                std::thread::spawn(move || {
+                    let _ = stream.set_nonblocking(false);
+                    let writer: Arc<Mutex<dyn Write + Send>> = match stream.try_clone() {
+                        Ok(w) => Arc::new(Mutex::new(w)),
+                        Err(_) => return,
+                    };
+                    let reader = BufReader::new(stream);
+                    // a dropped socket is an abandoned tenant
+                    server.serve_connection(reader, writer, true);
+                });
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(e) => return Err(e).context("accepting a connection"),
+        }
+    }
+    if signals::triggered() {
+        server.state.cancel_all();
+    }
+    server.shutdown_and_join();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn sink() -> (Arc<Mutex<Vec<u8>>>, Arc<Mutex<dyn Write + Send>>) {
+        let buf: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
+        (buf.clone(), buf as Arc<Mutex<dyn Write + Send>>)
+    }
+
+    fn lines(buf: &Arc<Mutex<Vec<u8>>>) -> Vec<Json> {
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        text.lines()
+            .map(|l| crate::util::json::parse(l).expect("reply lines are JSON"))
+            .collect()
+    }
+
+    fn event_of<'a>(replies: &'a [Json], id: &str, event: &str) -> Option<&'a Json> {
+        replies.iter().find(|j| {
+            j.get("id").and_then(Json::as_str) == Some(id)
+                && j.get("event").and_then(Json::as_str) == Some(event)
+        })
+    }
+
+    #[test]
+    fn malformed_lines_error_without_killing_the_connection() {
+        let server = Server::new(2, 8);
+        let (buf, writer) = sink();
+        let script = concat!(
+            "not json at all\n",
+            "{\"cmd\":\"frobnicate\",\"id\":\"bad\"}\n",
+            "\n",
+            "{\"cmd\":\"stats\",\"id\":\"s1\"}\n",
+            "{\"cmd\":\"plan\",\"id\":\"p1\",\"workload\":\"jacobi2d5p\",\"tile\":[8,8,8]}\n",
+            "{\"cmd\":\"shutdown\",\"id\":\"z\"}\n",
+        );
+        server.serve_connection(Cursor::new(script), writer, false);
+        server.shutdown_and_join();
+        let replies = lines(&buf);
+        // both garbage lines errored, with the id preserved when extractable
+        assert!(event_of(&replies, "", "error").is_some(), "non-JSON line");
+        let bad = event_of(&replies, "bad", "error").expect("unknown cmd");
+        assert!(bad
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap()
+            .contains("unknown cmd"));
+        // ... and the connection kept serving everything after them
+        assert!(event_of(&replies, "s1", "done").is_some(), "stats answered");
+        assert!(event_of(&replies, "p1", "accepted").is_some());
+        let plan = event_of(&replies, "p1", "done").expect("plan answered");
+        let data = plan.get("data").unwrap();
+        assert!(data.get("read_bursts").and_then(Json::as_f64).unwrap() > 0.0);
+        let z = event_of(&replies, "z", "done").expect("shutdown acknowledged");
+        assert_eq!(
+            z.get("data").and_then(|d| d.get("shutting_down")),
+            Some(&Json::Bool(true))
+        );
+        assert_eq!(server.state().errors(), 2);
+    }
+
+    #[test]
+    fn run_request_executes_through_the_shared_session_cache() {
+        let server = Server::new(1, 4);
+        let (buf, writer) = sink();
+        // same geometry twice: the second compile must be a cache hit
+        let script = concat!(
+            "{\"cmd\":\"run\",\"id\":\"r1\",\"workload\":\"jacobi2d5p\",\"tile\":[8,8,8],\"tiles_per_dim\":2}\n",
+            "{\"cmd\":\"run\",\"id\":\"r2\",\"workload\":\"jacobi2d5p\",\"tile\":[8,8,8],\"tiles_per_dim\":2}\n",
+            "{\"cmd\":\"shutdown\",\"id\":\"z\"}\n",
+        );
+        server.serve_connection(Cursor::new(script), writer, false);
+        server.shutdown_and_join();
+        let replies = lines(&buf);
+        let r1 = event_of(&replies, "r1", "done").expect("first run");
+        let r2 = event_of(&replies, "r2", "done").expect("second run");
+        let cyc = |j: &Json| {
+            j.get("data")
+                .and_then(|d| d.get("report"))
+                .and_then(|r| r.get("makespan_cycles"))
+                .and_then(Json::as_f64)
+        };
+        assert_eq!(cyc(r1), cyc(r2), "shared core replays identically");
+        assert_eq!(server.state().sessions().misses(), 1);
+        assert_eq!(server.state().sessions().hits(), 1);
+    }
+
+    #[test]
+    fn stats_payload_has_sorted_cache_sections() {
+        let state = ServeState::new();
+        let j = state.stats_json();
+        let s = j.to_string_compact();
+        // sorted keys pin the grep-able shape
+        assert!(s.starts_with(r#"{"active":0,"errors":0,"plans":"#), "{s}");
+        assert!(s.contains(r#""sessions":{"entries":0,"hits":0,"misses":0}"#));
+        assert!(s.contains(r#""traces":{"entries":0,"hits":0,"misses":0}"#));
+    }
+}

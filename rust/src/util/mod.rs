@@ -14,5 +14,6 @@ pub mod json;
 pub mod par;
 pub mod prop;
 pub mod rng;
+pub mod signals;
 pub mod stats;
 pub mod table;

@@ -1,0 +1,119 @@
+//! Minimal SIGINT/SIGTERM observation without the `libc` crate.
+//!
+//! The crate has no signal-handling dependency, and the only thing the
+//! CLI and the serve daemon need is a *flag*: "a termination signal has
+//! arrived, drain and exit". So the handler is the smallest
+//! async-signal-safe thing possible — it stores into a process-global
+//! atomic — installed through a raw FFI declaration of POSIX `signal(2)`.
+//! Consumers poll [`triggered`] at their own safe points (the daemon's
+//! accept loop) or bridge it to a [`CancelToken`] with [`watch`] (plain
+//! `cfa tune`), which turns Ctrl-C into the explorer's cooperative
+//! cancellation: the journal is flushed mid-append-safe and the run exits
+//! with the `interrupted` marker instead of dying on the default handler.
+//!
+//! Non-unix builds compile to no-ops: [`install`] does nothing and
+//! [`triggered`] is always false, so callers need no cfg of their own.
+
+use crate::util::par::CancelToken;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Set by the handler; read by everyone else.
+static TRIGGERED: AtomicBool = AtomicBool::new(false);
+/// Signals observed since [`install`] (a second Ctrl-C is visible here).
+static COUNT: AtomicU64 = AtomicU64::new(0);
+
+#[cfg(unix)]
+mod imp {
+    use super::{Ordering, COUNT, TRIGGERED};
+
+    // POSIX signal(2). `sighandler_t` is a code pointer; `usize` has the
+    // same representation on every supported unix, which keeps the
+    // declaration free of the libc crate.
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    /// The handler itself: only atomic stores, which are async-signal-safe.
+    extern "C" fn on_signal(_signum: i32) {
+        TRIGGERED.store(true, Ordering::SeqCst);
+        COUNT.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub(super) fn install() {
+        let h = on_signal as extern "C" fn(i32) as usize;
+        unsafe {
+            signal(SIGINT, h);
+            signal(SIGTERM, h);
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod imp {
+    pub(super) fn install() {}
+}
+
+/// Install the SIGINT/SIGTERM handler (idempotent; no-op off unix).
+pub fn install() {
+    imp::install();
+}
+
+/// True once a SIGINT or SIGTERM has arrived after [`install`].
+pub fn triggered() -> bool {
+    TRIGGERED.load(Ordering::SeqCst)
+}
+
+/// Number of signals observed so far (callers that want "second Ctrl-C
+/// exits hard" read this).
+pub fn count() -> u64 {
+    COUNT.load(Ordering::SeqCst)
+}
+
+/// Bridge signals to a [`CancelToken`]: a detached watcher thread polls
+/// [`triggered`] every 50 ms and cancels `token` once it fires, then
+/// exits. Installs the handler as a side effect. Intended for one-shot
+/// CLI runs (`cfa tune`), where the watcher's lifetime is the process's.
+pub fn watch(token: CancelToken) {
+    install();
+    std::thread::spawn(move || loop {
+        if triggered() {
+            token.cancel();
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn install_is_idempotent() {
+        // no signal is raised in-process here (raising SIGINT would hit
+        // sibling tests sharing the process), and no global is asserted
+        // (the watch test pokes TRIGGERED concurrently) — this only pins
+        // that repeated installs are safe
+        install();
+        install();
+    }
+
+    #[test]
+    fn watch_cancels_after_trigger() {
+        // simulate the handler's store directly: raise(2) would hit the
+        // whole test process
+        let token = CancelToken::new();
+        watch(token.clone());
+        assert!(!token.is_cancelled());
+        TRIGGERED.store(true, Ordering::SeqCst);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while !token.is_cancelled() && std::time::Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert!(token.is_cancelled());
+        TRIGGERED.store(false, Ordering::SeqCst);
+    }
+}

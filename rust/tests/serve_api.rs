@@ -1,0 +1,294 @@
+//! Acceptance tests for `cfa serve`, the persistent multi-tenant
+//! autotuning daemon:
+//!
+//! * protocol round-trip: malformed requests get `error` replies with
+//!   the id preserved and the connection keeps serving;
+//! * N concurrent tune tenants produce journals byte-identical to a
+//!   standalone `cfa tune` run, and the shared single-flight trace
+//!   cache proves the second (and third) same-geometry tenant performed
+//!   **zero** trace compiles;
+//! * an injected per-request fault (`CFA_FAULTS=panic@serve::enqueue#1`,
+//!   in a spawned daemon process so the process-global fault plan cannot
+//!   leak into sibling tests) errors exactly that request while the
+//!   other tenant runs to a correct journal;
+//! * kill -9 mid-tune, restart, resume: journaled evaluations are
+//!   resumed, not re-evaluated.
+
+use std::io::{BufRead, BufReader, Cursor, Write};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex};
+
+use cfa::dse::{Exhaustive, Explorer, Space};
+use cfa::layout::registry;
+use cfa::serve::Server;
+use cfa::util::json::{self, Json};
+
+fn tmp(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(name);
+    std::fs::remove_file(&p).ok();
+    p
+}
+
+fn sink() -> (Arc<Mutex<Vec<u8>>>, Arc<Mutex<dyn Write + Send>>) {
+    let buf: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
+    (buf.clone(), buf as Arc<Mutex<dyn Write + Send>>)
+}
+
+fn replies(buf: &Arc<Mutex<Vec<u8>>>) -> Vec<Json> {
+    let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+    text.lines()
+        .map(|l| json::parse(l).expect("reply lines parse as JSON"))
+        .collect()
+}
+
+fn find<'a>(rs: &'a [Json], id: &str, event: &str) -> Option<&'a Json> {
+    rs.iter().find(|j| {
+        j.get("id").and_then(Json::as_str) == Some(id)
+            && j.get("event").and_then(Json::as_str) == Some(event)
+    })
+}
+
+/// The standalone-`cfa tune` reference journal for the tiny space.
+fn reference_journal(path: &PathBuf) {
+    Explorer::new(Space::builtin("tiny").unwrap(), Box::new(Exhaustive::new()))
+        .registry(registry::global())
+        .journal(path)
+        .explore()
+        .unwrap();
+}
+
+#[test]
+fn protocol_round_trip_quarantines_bad_lines() {
+    let server = Server::new(2, 8);
+    let (buf, writer) = sink();
+    let script = concat!(
+        "{\"cmd\":\"tune\",\"id\":\"nospace\"}\n",
+        "garbage that is not json\n",
+        "{\"cmd\":\"stats\",\"id\":\"s\"}\n",
+        "{\"cmd\":\"plan\",\"id\":\"p\",\"workload\":\"jacobi2d5p\",\"tile\":[8,8,8],\"layout\":\"cfa\"}\n",
+        "{\"cmd\":\"run\",\"id\":\"r\",\"workload\":\"jacobi2d5p\",\"tile\":[8,8,8],\"tiles_per_dim\":2,\"channels\":2,\"striping\":\"facet\"}\n",
+        "{\"cmd\":\"shutdown\",\"id\":\"z\"}\n",
+    );
+    server.serve_connection(Cursor::new(script), writer, false);
+    server.shutdown_and_join();
+    let rs = replies(&buf);
+    // the two bad lines errored without killing anything after them
+    let nospace = find(&rs, "nospace", "error").expect("tune without space errors");
+    assert!(nospace
+        .get("error")
+        .and_then(Json::as_str)
+        .unwrap()
+        .contains("space"));
+    assert!(find(&rs, "", "error").is_some(), "non-JSON line errors with empty id");
+    assert!(find(&rs, "s", "done").is_some(), "stats still answered");
+    assert!(find(&rs, "p", "done").is_some(), "plan still answered");
+    let run = find(&rs, "r", "done").expect("multi-channel run still answered");
+    let cycles = run
+        .get("data")
+        .and_then(|d| d.get("report"))
+        .and_then(|r| r.get("makespan_cycles"))
+        .and_then(Json::as_f64)
+        .unwrap();
+    assert!(cycles > 0.0);
+    assert!(find(&rs, "z", "done").is_some(), "shutdown acknowledged");
+    assert_eq!(server.state().errors(), 2);
+}
+
+#[test]
+fn concurrent_tenants_share_compiles_and_match_tune_bytes() {
+    let ref_path = tmp("cfa_serve_ref.jsonl");
+    reference_journal(&ref_path);
+    let ref_bytes = std::fs::read(&ref_path).unwrap();
+    assert!(!ref_bytes.is_empty());
+
+    let server = Arc::new(Server::new(4, 16));
+    let out_a = tmp("cfa_serve_tenant_a.jsonl");
+    let out_b = tmp("cfa_serve_tenant_b.jsonl");
+    // two tenants, two connections, same geometry space, at the same time
+    let mut handles = Vec::new();
+    for (id, out) in [("a", &out_a), ("b", &out_b)] {
+        let server = server.clone();
+        let script = format!(
+            "{{\"cmd\":\"tune\",\"id\":\"{id}\",\"space\":\"tiny\",\"out\":\"{}\"}}\n",
+            out.display()
+        );
+        handles.push(std::thread::spawn(move || {
+            let (buf, writer) = sink();
+            server.serve_connection(Cursor::new(script), writer, false);
+            buf
+        }));
+    }
+    let bufs: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    // connections returned at EOF; the tunes drain through the pool
+    server.shutdown_and_join();
+    for (buf, id) in bufs.iter().zip(["a", "b"]) {
+        let rs = replies(buf);
+        assert!(find(&rs, id, "accepted").is_some(), "tenant {id} accepted");
+        assert!(find(&rs, id, "done").is_some(), "tenant {id} finished");
+    }
+    // journals are byte-identical to standalone `cfa tune`
+    assert_eq!(std::fs::read(&out_a).unwrap(), ref_bytes, "tenant a bytes");
+    assert_eq!(std::fs::read(&out_b).unwrap(), ref_bytes, "tenant b bytes");
+    // the tiny space is 8 geometries: 16 trace requests across the two
+    // tenants must cost exactly 8 compiles — the single-flight batcher
+    // turned every duplicate into a hit, even when they raced
+    let traces = server.state().traces().stats();
+    assert_eq!(traces.misses, 8, "misses == compiles == distinct geometries");
+    assert_eq!(traces.hits + traces.misses, 16, "every request accounted");
+    assert_eq!(traces.entries, 8);
+    let sessions = server.state().sessions().stats();
+    assert_eq!(sessions.misses, 8, "one compiled core per geometry");
+    assert_eq!(sessions.hits, 8, "the other tenant reused every core");
+}
+
+#[test]
+fn a_later_tenant_compiles_nothing_at_all() {
+    let ref_path = tmp("cfa_serve_ref_warm.jsonl");
+    reference_journal(&ref_path);
+    let server = Server::new(2, 8);
+    let out_warmup = tmp("cfa_serve_warmup.jsonl");
+    let out_late = tmp("cfa_serve_late.jsonl");
+    let (buf, writer) = sink();
+    let script = format!(
+        "{{\"cmd\":\"tune\",\"id\":\"w\",\"space\":\"tiny\",\"out\":\"{}\"}}\n",
+        out_warmup.display()
+    );
+    server.serve_connection(Cursor::new(script), writer, false);
+    // first tenant still draining is fine — the acceptance claim is about
+    // totals after both finish; serve the second tenant now
+    let (buf2, writer2) = sink();
+    let script2 = format!(
+        "{{\"cmd\":\"tune\",\"id\":\"l\",\"space\":\"tiny\",\"out\":\"{}\"}}\n",
+        out_late.display()
+    );
+    server.serve_connection(Cursor::new(script2), writer2, false);
+    server.shutdown_and_join();
+    assert!(find(&replies(&buf), "w", "done").is_some());
+    assert!(find(&replies(&buf2), "l", "done").is_some());
+    let traces = server.state().traces().stats();
+    assert_eq!(traces.misses, 8, "the warm tenant recompiled nothing");
+    assert_eq!(server.state().sessions().misses(), 8);
+    let ref_bytes = std::fs::read(&ref_path).unwrap();
+    assert_eq!(std::fs::read(&out_late).unwrap(), ref_bytes);
+}
+
+// --- spawned-daemon tests (process isolation for faults and kill -9) ---
+
+fn spawn_daemon(envs: &[(&str, &str)]) -> Child {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_cfa"));
+    cmd.args(["serve", "--stdio", "--workers", "2"])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null());
+    for (k, v) in envs {
+        cmd.env(k, v);
+    }
+    cmd.spawn().expect("spawn cfa serve --stdio")
+}
+
+/// Read daemon stdout until the terminal reply for `id` arrives; panics
+/// (with the transcript) on EOF first.
+fn read_until_terminal(reader: &mut impl BufRead, id: &str) -> (String, Vec<String>) {
+    let mut seen = Vec::new();
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line).unwrap() == 0 {
+            panic!("daemon EOF before terminal reply for {id}; transcript: {seen:#?}");
+        }
+        let l = line.trim().to_string();
+        if l.is_empty() {
+            continue;
+        }
+        let j = json::parse(&l).expect("daemon lines are JSON");
+        let this_id = j.get("id").and_then(Json::as_str).unwrap_or("");
+        let event = j.get("event").and_then(Json::as_str).unwrap_or("");
+        seen.push(l);
+        if this_id == id && (event == "done" || event == "error" || event == "rejected") {
+            return (event.to_string(), seen);
+        }
+    }
+}
+
+#[test]
+fn injected_fault_errors_one_request_and_spares_the_next() {
+    let ref_path = tmp("cfa_serve_fault_ref.jsonl");
+    reference_journal(&ref_path);
+    let out_b = tmp("cfa_serve_fault_b.jsonl");
+    // first arrival at the enqueue site panics: request "a" is the victim
+    let mut child = spawn_daemon(&[("CFA_FAULTS", "panic@serve::enqueue#1")]);
+    let mut stdin = child.stdin.take().unwrap();
+    let mut stdout = BufReader::new(child.stdout.take().unwrap());
+    writeln!(stdin, "{{\"cmd\":\"tune\",\"id\":\"a\",\"space\":\"tiny\"}}").unwrap();
+    writeln!(
+        stdin,
+        "{{\"cmd\":\"tune\",\"id\":\"b\",\"space\":\"tiny\",\"out\":\"{}\"}}",
+        out_b.display()
+    )
+    .unwrap();
+    writeln!(stdin, "{{\"cmd\":\"shutdown\",\"id\":\"z\"}}").unwrap();
+    drop(stdin);
+    let (event_a, _) = read_until_terminal(&mut stdout, "a");
+    assert_eq!(event_a, "error", "the faulted request errors");
+    let (event_b, transcript) = read_until_terminal(&mut stdout, "b");
+    assert_eq!(event_b, "done", "the sibling request is untouched: {transcript:#?}");
+    let fault_line = transcript
+        .iter()
+        .find(|l| l.contains("\"id\":\"a\"") && l.contains("\"event\":\"error\""))
+        .unwrap();
+    assert!(
+        fault_line.contains("fault injected"),
+        "the error names the injected fault: {fault_line}"
+    );
+    let status = child.wait().unwrap();
+    assert!(status.success(), "daemon exited cleanly after the fault");
+    assert_eq!(
+        std::fs::read(&out_b).unwrap(),
+        std::fs::read(&ref_path).unwrap(),
+        "the surviving tenant's journal is still byte-identical to cfa tune"
+    );
+}
+
+#[test]
+fn kill_nine_mid_run_resumes_without_reevaluating() {
+    let journal = tmp("cfa_serve_kill9.jsonl");
+    // phase 1: tune with a budget of 4 (of 8), then SIGKILL the daemon
+    let mut child = spawn_daemon(&[]);
+    let mut stdin = child.stdin.take().unwrap();
+    let mut stdout = BufReader::new(child.stdout.take().unwrap());
+    writeln!(
+        stdin,
+        "{{\"cmd\":\"tune\",\"id\":\"t1\",\"space\":\"tiny\",\"budget\":4,\"out\":\"{}\"}}",
+        journal.display()
+    )
+    .unwrap();
+    let (event, _) = read_until_terminal(&mut stdout, "t1");
+    assert_eq!(event, "done");
+    child.kill().unwrap(); // SIGKILL: no drain, no cleanup
+    let _ = child.wait();
+    // phase 2: a fresh daemon resumes the same journal with no budget
+    let mut child = spawn_daemon(&[]);
+    let mut stdin = child.stdin.take().unwrap();
+    let mut stdout = BufReader::new(child.stdout.take().unwrap());
+    writeln!(
+        stdin,
+        "{{\"cmd\":\"tune\",\"id\":\"t2\",\"space\":\"tiny\",\"out\":\"{p}\",\"resume\":\"{p}\"}}",
+        p = journal.display()
+    )
+    .unwrap();
+    writeln!(stdin, "{{\"cmd\":\"shutdown\",\"id\":\"z\"}}").unwrap();
+    drop(stdin);
+    let (event, transcript) = read_until_terminal(&mut stdout, "t2");
+    assert_eq!(event, "done", "{transcript:#?}");
+    let done = json::parse(transcript.last().unwrap()).unwrap();
+    let summary = done
+        .get("data")
+        .and_then(|d| d.get("summary"))
+        .and_then(Json::as_str)
+        .unwrap();
+    assert!(
+        summary.contains("evaluated 4 new points (4 resumed"),
+        "journaled work is resumed, not re-evaluated: {summary}"
+    );
+    let _ = child.wait();
+}
