@@ -146,6 +146,7 @@ pub fn plan_tiles(alloc: &dyn Allocation, tiles: &[IVec], threads: usize) -> Vec
 /// [`plan_tiles`] against a caller-owned [`PlanCache`] (share one cache
 /// across waves/chunks so the canonical interior plan is derived once).
 pub fn plan_tiles_cached(cache: &PlanCache, tiles: &[IVec], threads: usize) -> Vec<TilePlan> {
+    let _span = crate::obs::span("batch::plan");
     parallel_map(tiles, threads, |coords| cache.plan(coords))
 }
 
@@ -166,6 +167,7 @@ pub fn compile_trace<'a>(
     schedule: &'a Schedule,
     threads: usize,
 ) -> TxnTrace {
+    let _span = crate::obs::span("batch::compile_trace");
     let mut trace = TxnTrace::new();
     trace.waves = schedule.num_waves();
     for wave in schedule.waves() {
@@ -451,12 +453,14 @@ impl<'a> BatchCoordinator<'a> {
             // buffer and counter) is identical for any worker count.
             for chunk in wave.chunks(PLAN_CHUNK) {
                 let host_ref = &host;
-                let results: Vec<(TilePlan, Vec<(u64, f32)>)> =
+                let results: Vec<(TilePlan, Vec<(u64, f32)>)> = {
+                    let _span = crate::obs::span("batch::marshal");
                     parallel_map(chunk, self.threads, |coords| {
                         let plan = cache.plan(coords);
                         let writes = execute_tile(self.alloc, &plan, host_ref, seed);
                         (plan, writes)
-                    });
+                    })
+                };
                 for (_, writes) in &results {
                     for &(addr, v) in writes {
                         host.write(addr, v);

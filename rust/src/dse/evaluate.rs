@@ -299,6 +299,7 @@ impl<'a> Evaluator<'a> {
 
     /// Compile and run one point; see the module docs for the semantics.
     pub fn evaluate(&self, p: &Point) -> Result<Evaluation> {
+        let _span = crate::obs::span("dse::evaluate");
         let w = self
             .space
             .workload(&p.workload)

@@ -607,16 +607,27 @@ impl SessionCore {
 /// (same policy as [`TraceCache`]: racing compiles build identical cores,
 /// first insert wins), and a poisoned map is recovered by taking the inner
 /// value — the map itself is never left mid-mutation by `HashMap` ops.
-#[derive(Default)]
 pub struct SessionCache {
     cores: std::sync::Mutex<std::collections::HashMap<String, Arc<SessionCore>>>,
-    hits: std::sync::atomic::AtomicU64,
-    misses: std::sync::atomic::AtomicU64,
+    /// Registry-backed (`cfa.session_cache.{hits,misses}`); one cell per
+    /// cache instance, summed by the process-wide registry snapshot.
+    hits: crate::obs::metrics::Counter,
+    misses: crate::obs::metrics::Counter,
+}
+
+impl Default for SessionCache {
+    fn default() -> SessionCache {
+        SessionCache::new()
+    }
 }
 
 impl SessionCache {
     pub fn new() -> SessionCache {
-        SessionCache::default()
+        SessionCache {
+            cores: std::sync::Mutex::new(std::collections::HashMap::new()),
+            hits: crate::obs::registry().counter("cfa.session_cache.hits"),
+            misses: crate::obs::registry().counter("cfa.session_cache.misses"),
+        }
     }
 
     fn lock(
@@ -629,12 +640,12 @@ impl SessionCache {
 
     /// Cores served from the cache so far.
     pub fn hits(&self) -> u64 {
-        self.hits.load(std::sync::atomic::Ordering::Relaxed)
+        self.hits.get()
     }
 
     /// Core compilations so far.
     pub fn misses(&self) -> u64 {
-        self.misses.load(std::sync::atomic::Ordering::Relaxed)
+        self.misses.get()
     }
 
     /// Number of cached cores.
@@ -732,9 +743,7 @@ impl Session {
             spec.exec.schedule
         );
         if let Some(core) = cache.lock().get(&key) {
-            cache
-                .hits
-                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            cache.hits.inc();
             return Ok(Session {
                 spec,
                 core: core.clone(),
@@ -749,9 +758,7 @@ impl Session {
             entry,
             spec.exec.schedule,
         )?);
-        cache
-            .misses
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        cache.misses.inc();
         let core = cache.lock().entry(key).or_insert(built).clone();
         Ok(Session { spec, core })
     }
@@ -837,6 +844,37 @@ impl Session {
     /// cannot distinguish two layouts over the same tiling, and a foreign
     /// trace would replay silently wrong numbers.
     pub fn run_trace(&self, trace: &TxnTrace) -> Result<Report> {
+        self.validate_trace(trace)?;
+        let wall0 = Instant::now();
+        let (rep, _) = self.replay_trace(trace, None)?;
+        Ok(self.report_from_batch("timing", &rep, wall0.elapsed().as_secs_f64()))
+    }
+
+    /// [`Session::run_trace`] plus a cycle-domain bandwidth
+    /// [`Timeline`](crate::obs::Timeline) sampled every `epoch_cycles`
+    /// simulated cycles (one channel list per memory channel). The
+    /// report is bit-identical to the unsampled [`Session::run_trace`]
+    /// — sampling is passive — and the timeline's epoch sums equal the
+    /// report's aggregate `Timing` counters exactly.
+    pub fn run_trace_with_timeline(
+        &self,
+        trace: &TxnTrace,
+        epoch_cycles: u64,
+    ) -> Result<(Report, crate::obs::Timeline)> {
+        self.validate_trace(trace)?;
+        let wall0 = Instant::now();
+        let (rep, tl) = self.replay_trace(trace, Some(epoch_cycles))?;
+        let tl = tl.expect("a sampler was attached");
+        anyhow::ensure!(
+            tl.matches(&rep.timing),
+            "timeline epochs do not sum to the aggregate Timing counters"
+        );
+        let report = self.report_from_batch("timing", &rep, wall0.elapsed().as_secs_f64());
+        Ok((report, tl))
+    }
+
+    /// The geometry/shape guard shared by the trace-replay entry points.
+    fn validate_trace(&self, trace: &TxnTrace) -> Result<()> {
         let expected = self.trace_geometry();
         if trace.geometry != expected {
             let got = if trace.geometry.is_empty() {
@@ -857,9 +895,7 @@ impl Session {
                 self.core.schedule.num_waves()
             );
         }
-        let wall0 = Instant::now();
-        let rep = self.replay_trace(trace)?;
-        Ok(self.report_from_batch("timing", &rep, wall0.elapsed().as_secs_f64()))
+        Ok(())
     }
 
     /// Replay a trace through the session's memory interface: the
@@ -867,31 +903,48 @@ impl Session {
     /// pre-multichannel path), a [`MultiPortSim`] with the striping
     /// resolved against this session's allocation otherwise (one routing
     /// pass, then parallel per-channel replay).
-    fn replay_trace(&self, trace: &TxnTrace) -> Result<BatchReport> {
+    fn replay_trace(
+        &self,
+        trace: &TxnTrace,
+        sample_epoch: Option<u64>,
+    ) -> Result<(BatchReport, Option<crate::obs::Timeline>)> {
         let exec = &self.spec.exec;
-        let (cycles, timing) = if exec.channels > 1 {
+        let (cycles, timing, timeline) = if exec.channels > 1 {
             let map = exec.striping.resolve(
                 self.core.alloc.as_ref(),
                 self.spec.mem.elem_bytes,
                 exec.channels,
             )?;
             let mut mp = MultiPortSim::new(self.spec.mem.clone(), exec.channels, map);
+            if let Some(epoch) = sample_epoch {
+                mp.set_sampler(epoch);
+            }
             mp.run_trace_parallel(trace, exec.threads);
-            (mp.now(), mp.aggregate_timing())
+            (mp.now(), mp.aggregate_timing(), mp.timeline())
         } else {
             let mut sim = MemSim::new(self.spec.mem.clone());
+            if let Some(epoch) = sample_epoch {
+                sim.set_sampler(epoch);
+            }
             sim.run_trace(trace);
-            (sim.now(), sim.timing().clone())
+            let tl = sim.take_sampler().map(|s| crate::obs::Timeline {
+                epoch_cycles: s.epoch_cycles(),
+                channels: vec![s.into_epochs()],
+            });
+            (sim.now(), sim.timing().clone(), tl)
         };
-        Ok(BatchReport {
-            tiles: trace.tiles,
-            waves: trace.waves,
-            cycles,
-            timing,
-            raw_elems: trace.raw_elems,
-            useful_elems: trace.useful_elems,
-            transactions: trace.transactions(),
-        })
+        Ok((
+            BatchReport {
+                tiles: trace.tiles,
+                waves: trace.waves,
+                cycles,
+                timing,
+                raw_elems: trace.raw_elems,
+                useful_elems: trace.useful_elems,
+                transactions: trace.transactions(),
+            },
+            timeline,
+        ))
     }
 
     /// Execute the session. End-to-end workloads in `Mode::Data` open the
@@ -967,7 +1020,7 @@ impl Session {
                 // multi-channel timing goes through the compiled trace —
                 // the coordinator stays single-port and untouched
                 let trace = self.compile_trace();
-                let rep = self.replay_trace(&trace)?;
+                let (rep, _) = self.replay_trace(&trace, None)?;
                 Ok(self.report_from_batch("timing", &rep, wall0.elapsed().as_secs_f64()))
             }
             Mode::Timing => {
@@ -985,7 +1038,7 @@ impl Session {
                 };
                 let cache = self.cache();
                 let trace = batch::compile_trace(&cache, schedule, self.spec.exec.threads);
-                let rep = self.replay_trace(&trace)?;
+                let (rep, _) = self.replay_trace(&trace, None)?;
                 Ok(self.report_from_batch("sweep", &rep, wall0.elapsed().as_secs_f64()))
             }
             Mode::Sweep => {

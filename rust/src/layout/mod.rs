@@ -333,10 +333,12 @@ pub struct PlanCacheState {
     /// pairing.
     fingerprint: (u64, usize),
     canon: std::sync::OnceLock<Option<(IVec, TilePlan)>>,
-    /// Plans served by rebasing the canonical interior plan.
-    rebases: std::sync::atomic::AtomicU64,
-    /// Plans derived fresh (boundary tiles, opted-out allocations).
-    fresh: std::sync::atomic::AtomicU64,
+    /// Plans served by rebasing the canonical interior plan
+    /// (registry-backed: `cfa.plan_cache.rebase_hits`).
+    rebases: crate::obs::metrics::Counter,
+    /// Plans derived fresh (boundary tiles, opted-out allocations;
+    /// registry-backed: `cfa.plan_cache.fresh_plans`).
+    fresh: crate::obs::metrics::Counter,
 }
 
 impl PlanCacheState {
@@ -351,19 +353,19 @@ impl PlanCacheState {
             enabled,
             fingerprint: (alloc.footprint(), alloc.num_arrays()),
             canon: std::sync::OnceLock::new(),
-            rebases: std::sync::atomic::AtomicU64::new(0),
-            fresh: std::sync::atomic::AtomicU64::new(0),
+            rebases: crate::obs::registry().counter("cfa.plan_cache.rebase_hits"),
+            fresh: crate::obs::registry().counter("cfa.plan_cache.fresh_plans"),
         }
     }
 
     /// Plans served by rebasing the memoized canonical interior plan.
     pub fn rebase_hits(&self) -> u64 {
-        self.rebases.load(std::sync::atomic::Ordering::Relaxed)
+        self.rebases.get()
     }
 
     /// Plans derived by the full per-tile pipeline.
     pub fn fresh_plans(&self) -> u64 {
-        self.fresh.load(std::sync::atomic::Ordering::Relaxed)
+        self.fresh.get()
     }
 
     /// True iff `coords` belongs to the memoizable interior class.
@@ -401,14 +403,12 @@ impl PlanCacheState {
         if self.is_interior(coords) {
             if let Some((c0, plan)) = self.canon(alloc) {
                 if let Some(rebased) = alloc.rebase_plan(plan, c0, coords) {
-                    self.rebases
-                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    self.rebases.inc();
                     return rebased;
                 }
             }
         }
-        self.fresh
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.fresh.inc();
         alloc.plan(coords)
     }
 }

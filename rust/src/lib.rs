@@ -38,6 +38,7 @@ pub mod harness;
 pub mod hlsgen;
 pub mod layout;
 pub mod memsim;
+pub mod obs;
 pub mod poly;
 pub mod runtime;
 pub mod serve;

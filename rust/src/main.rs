@@ -65,11 +65,12 @@ fn print_help() {
          \x20 list                 print the Table I benchmark registry\n\
          \x20 layouts              print the layout registry (canonical names + aliases)\n\
          \x20 plan                 show layout + burst plan (--benchmark, --tile, --alloc)\n\
-         \x20 run                  end-to-end verified run (--benchmark, --alloc, --channels N, --striping P, --parallel N, ...)\n\
+         \x20 run                  end-to-end verified run (--benchmark, --alloc, --channels N, --striping P, --parallel N,\n\
+         \x20                      --timeline PATH --epoch-cycles N for a per-epoch bandwidth timeline, ...)\n\
          \x20 bench                figure sweeps (--figure fig15|fig16|fig17, --quick, --parallel N, --json PATH)\n\
          \x20 tune                 design-space exploration (--space, --strategy, --budget, --parallel,\n\
          \x20                      --channels LIST, --striping LIST, --out, --resume, --no-retry-failed,\n\
-         \x20                      --deadline-secs N, --trace-cache)\n\
+         \x20                      --deadline-secs N, --trace-cache, --profile PATH for a span trace)\n\
          \x20 serve                persistent autotuning daemon over line-delimited JSON\n\
          \x20                      (--addr HOST:PORT | --stdio, --workers N, --queue N);\n\
          \x20                      tenants share one session + trace cache across requests\n\
@@ -198,8 +199,24 @@ fn cmd_plan() -> anyhow::Result<()> {
 /// shapes come from the loaded artifact (as the legacy drivers did), so
 /// regenerated artifacts are picked up without touching this table;
 /// `--n`/`--steps` override the grid, validated at compile.
+/// Tile shape for an artifact: from the loaded artifact when a runtime
+/// is open, else parsed from the `_t8x32x32` suffix every artifact name
+/// carries (timing-only runs never touch the artifacts directory).
+fn artifact_tile(rt: Option<&Runtime>, artifact: &str) -> anyhow::Result<Vec<i64>> {
+    if let Some(rt) = rt {
+        return Ok(rt.load(artifact)?.info.tile.clone());
+    }
+    artifact
+        .rsplit_once("_t")
+        .and_then(|(_, dims)| {
+            let tile: Option<Vec<i64>> = dims.split('x').map(|d| d.parse().ok()).collect();
+            tile.filter(|t| !t.is_empty() && t.iter().all(|&d| d > 0))
+        })
+        .ok_or_else(|| anyhow::anyhow!("artifact '{artifact}' has no _t<dims> tile suffix"))
+}
+
 fn run_session(
-    rt: &Runtime,
+    rt: Option<&Runtime>,
     bench: &str,
     layout: &str,
     n_override: Option<i64>,
@@ -219,7 +236,7 @@ fn run_session(
     Ok(match bench {
         "sw3" | "smith-waterman-3seq" => {
             let artifact = "sw3_t16x16x16";
-            let tile = rt.load(artifact)?.info.tile.clone();
+            let tile = artifact_tile(rt, artifact)?;
             let n = n_override.unwrap_or(48);
             let session = builder.sw3(artifact, tile, n, n, n).compile()?;
             (session, 7)
@@ -231,7 +248,7 @@ fn run_session(
                 "gaussian" => ("gaussian_t4x16x16", StencilKind::Gaussian),
                 _ => anyhow::bail!("unknown benchmark '{name}' (see `cfa list`)"),
             };
-            let tile = rt.load(artifact)?.info.tile.clone();
+            let tile = artifact_tile(rt, artifact)?;
             // grid defaults sized for each artifact family
             let (mut n, mut steps) = if name == "jacobi2d5p" {
                 (96, 32)
@@ -260,11 +277,22 @@ fn cmd_run() -> anyhow::Result<()> {
         .opt("steps", "time steps (stencils)", None)
         .opt("parallel", "worker threads for burst planning", Some("1"))
         .opt("channels", "memory channels (>1 runs the timing model, no data verify)", Some("1"))
-        .opt("striping", "channel striping: address[:BYTES] | facet | tile", Some("address:4096"));
+        .opt("striping", "channel striping: address[:BYTES] | facet | tile", Some("address:4096"))
+        .opt("timeline", "write a per-epoch bandwidth timeline JSON to PATH (timing model: no data verify, no artifacts needed)", None)
+        .opt("epoch-cycles", "timeline epoch length in bus cycles", Some("4096"));
     let a = cmd.parse(&env_args(1)).map_err(anyhow::Error::msg)?;
     let parallel = a.get_usize("parallel", 1).map_err(anyhow::Error::msg)?;
-    let rt = Runtime::open(a.get_or("artifacts", "artifacts"))?;
-    println!("PJRT platform: {}", rt.platform());
+    // --timeline runs the timing model only: no compute backend and no
+    // artifacts directory needed, so it works in offline (pjrt-disabled)
+    // builds — the CI obs-smoke job relies on this
+    let rt = if a.get("timeline").is_some() {
+        None
+    } else {
+        Some(Runtime::open(a.get_or("artifacts", "artifacts"))?)
+    };
+    if let Some(rt) = &rt {
+        println!("PJRT platform: {}", rt.platform());
+    }
     let mem = MemConfig {
         elem_bytes: 4,
         ..MemConfig::default()
@@ -290,10 +318,15 @@ fn cmd_run() -> anyhow::Result<()> {
     striping
         .validate(mem.elem_bytes)
         .map_err(|e| anyhow::anyhow!("--striping: {e}"))?;
+    let timeline_path = a.get("timeline").map(str::to_string);
+    let epoch_cycles = a.get_usize("epoch-cycles", 4096).map_err(anyhow::Error::msg)? as u64;
+    if timeline_path.is_some() && layouts.len() > 1 {
+        anyhow::bail!("--timeline writes one file; pick a single layout with --alloc");
+    }
     let bench = a.get_or("benchmark", "jacobi2d5p").to_string();
     for layout in layouts {
         let (session, seed) = run_session(
-            &rt,
+            rt.as_ref(),
             &bench,
             layout.as_str(),
             n_override,
@@ -304,11 +337,32 @@ fn cmd_run() -> anyhow::Result<()> {
             &striping,
         )?;
         // the data path drives a single memory interface; multi-channel
-        // sessions report the timing model instead of verifying data
-        let report = if channels > 1 {
+        // sessions report the timing model instead of verifying data, as
+        // do --timeline runs (the sampler rides the timing replay)
+        let report = if let Some(path) = &timeline_path {
+            let trace = session.compile_trace();
+            let (report, tl) = session.run_trace_with_timeline(&trace, epoch_cycles)?;
+            let useful_ratio = if report.raw_bytes == 0 {
+                0.0
+            } else {
+                report.useful_bytes as f64 / report.raw_bytes as f64
+            };
+            cfa::util::fsx::write_atomic(path, tl.to_json(&mem, useful_ratio).to_string_pretty())?;
+            let epochs: usize = tl.channels.iter().map(Vec::len).sum();
+            // the "sum exactly" identity is asserted inside
+            // run_trace_with_timeline; reaching this line proves it held
+            println!(
+                "timeline: wrote {path} ({} channel(s), {epochs} epochs of {} cycles; \
+                 epoch sums match aggregate timing)",
+                tl.channels.len(),
+                tl.epoch_cycles
+            );
+            report
+        } else if channels > 1 {
             session.run(Mode::Timing)?
         } else {
-            session.run_with_runtime(&rt, Mode::Data { seed })?
+            let rt = rt.as_ref().expect("runtime is open unless --timeline");
+            session.run_with_runtime(rt, Mode::Data { seed })?
         };
         println!("{}", report.summary());
         if report.max_abs_err.unwrap_or(0.0) > 1e-4 {
@@ -318,7 +372,9 @@ fn cmd_run() -> anyhow::Result<()> {
             );
         }
     }
-    if channels > 1 {
+    if timeline_path.is_some() {
+        println!("timing-only run (--timeline): data verify skipped");
+    } else if channels > 1 {
         println!("timing-only run ({channels} channels, {striping} striping): data verify skipped");
     } else {
         println!("verification: OK");
@@ -410,6 +466,11 @@ fn cmd_tune() -> anyhow::Result<()> {
             "trace-cache",
             "reuse compiled txn traces across mem/PE variants (on | off; results identical)",
             Some("on"),
+        )
+        .opt(
+            "profile",
+            "write a Chrome trace-event span profile (Perfetto-loadable) to PATH; journal bytes are unaffected",
+            None,
         );
     let a = cmd.parse(&env_args(1)).map_err(anyhow::Error::msg)?;
     let space_arg = a.get_or("space", "fig15-quick");
@@ -490,7 +551,15 @@ fn cmd_tune() -> anyhow::Result<()> {
     if let Some(resume) = a.get("resume") {
         explorer = explorer.resume(resume);
     }
+    // span capture encloses the whole exploration; wall time is advisory
+    // and never feeds the journal (byte-identical with or without this)
+    let profile = a.get("profile").map(str::to_string);
+    let capture = profile.as_ref().map(|_| cfa::obs::begin_capture());
     let outcome = explorer.explore()?;
+    if let (Some(cap), Some(path)) = (capture, &profile) {
+        cap.export(path)?;
+        println!("profile: wrote {path}");
+    }
     print!("{}", outcome.summary());
     println!("journal: {out}");
     Ok(())

@@ -11,6 +11,7 @@
 //! pay latency on every transaction.
 
 use crate::memsim::{Bandwidth, Dir, MemConfig, Txn, TxnTrace};
+use crate::obs::timeline::TimelineSampler;
 use std::collections::VecDeque;
 
 /// Detailed timing of one simulated run.
@@ -172,6 +173,12 @@ pub struct MemSim {
     cfg: MemConfig,
     stream: Option<StreamCfg>,
     state: ReplayState,
+    /// Optional cycle-domain bandwidth sampler ([`crate::obs::timeline`]).
+    /// Deliberately *not* part of [`ReplayState`]: snapshots/restores and
+    /// the state-equality identity tests see the simulation, not the
+    /// observer. The sampler only ever reads `state`, so a sampled run's
+    /// `ReplayState` is bit-identical to an unsampled one.
+    sampler: Option<TimelineSampler>,
 }
 
 impl MemSim {
@@ -189,6 +196,7 @@ impl MemSim {
             cfg,
             stream,
             state: ReplayState::for_banks(banks),
+            sampler: None,
         }
     }
 
@@ -202,9 +210,41 @@ impl MemSim {
         &self.cfg
     }
 
-    /// Reset time and DRAM state (keeps the configuration).
+    /// Reset time and DRAM state (keeps the configuration). An attached
+    /// sampler restarts with it (same epoch size, empty epochs), so the
+    /// timeline always describes one run from t=0.
     pub fn reset(&mut self) {
         self.state = ReplayState::for_banks(self.cfg.banks as usize);
+        if let Some(s) = &mut self.sampler {
+            *s = TimelineSampler::new(s.epoch_cycles());
+        }
+    }
+
+    /// Attach a bandwidth timeline sampler with `epoch_cycles`-cycle
+    /// epochs (replacing any previous one). Sampling is passive: it
+    /// cannot change the replay's state or timing.
+    pub fn set_sampler(&mut self, epoch_cycles: u64) {
+        self.sampler = Some(TimelineSampler::new(epoch_cycles));
+    }
+
+    /// The attached sampler, if any.
+    pub fn sampler(&self) -> Option<&TimelineSampler> {
+        self.sampler.as_ref()
+    }
+
+    /// Detach and return the sampler (e.g. to fold its epochs into a
+    /// [`crate::obs::Timeline`]).
+    pub fn take_sampler(&mut self) -> Option<TimelineSampler> {
+        self.sampler.take()
+    }
+
+    /// Feed the attached sampler, if any. Called once per submitted
+    /// span, after the span's bursts have completed.
+    #[inline]
+    fn sample(&mut self) {
+        if let Some(s) = &mut self.sampler {
+            s.record(&self.state.timing, self.state.now());
+        }
     }
 
     /// Checkpoint the replay state (e.g. at a wave boundary).
@@ -270,6 +310,7 @@ impl MemSim {
     /// trace's transactions — `tests/trace_replay.rs` pins this across
     /// random streams × random configs.
     pub fn run_trace(&mut self, trace: &TxnTrace) -> u64 {
+        let _span = crate::obs::span("memsim::replay");
         let eb = self.cfg.elem_bytes;
         for i in 0..trace.len() {
             let (dir, addr, len) = trace.entry(i);
@@ -301,6 +342,7 @@ impl MemSim {
             addr_b += chunk;
             remaining_b -= chunk;
         }
+        self.sample();
         done
     }
 
@@ -363,6 +405,11 @@ impl MemSim {
         if remaining > 0 {
             done = self.submit_axi(dir, addr, remaining);
         }
+        // one sample per span, the same granularity as the scalar path
+        // (the no-streaming fallback returned above, sampling inside
+        // submit_span), so scalar and streamed replays of one trace
+        // produce identical timelines
+        self.sample();
         done
     }
 
@@ -878,6 +925,45 @@ mod tests {
         streamed.submit_streamed(&txn);
         assert_eq!(scalar.snapshot(), streamed.snapshot());
         assert!(scalar.timing().axi_bursts > 100);
+    }
+
+    #[test]
+    fn sampling_never_perturbs_the_replay_and_sums_exactly() {
+        // the timeline contract: sampler on ≡ off for the full replay
+        // state, and the epoch deltas sum to the aggregate counters —
+        // on both the scalar and the streamed kernel
+        let txns: Vec<Txn> = (0..40)
+            .map(|i| Txn {
+                dir: if i % 5 == 0 { Dir::Write } else { Dir::Read },
+                addr: i * 977,
+                len: 1 + (i * 131) % 3000,
+            })
+            .collect();
+        let mut plain = sim();
+        let mut sampled = sim();
+        sampled.set_sampler(256);
+        for t in &txns {
+            plain.submit_streamed(t);
+            sampled.submit_streamed(t);
+        }
+        assert_eq!(plain.snapshot(), sampled.snapshot(), "sampling is passive");
+        let epochs = sampled.sampler().unwrap().epochs().to_vec();
+        assert!(!epochs.is_empty());
+        let tl = crate::obs::Timeline {
+            epoch_cycles: 256,
+            channels: vec![epochs.clone()],
+        };
+        assert!(tl.matches(sampled.timing()), "epochs sum to the aggregate");
+        // and the scalar kernel records the identical timeline
+        let mut scalar = sim();
+        scalar.set_sampler(256);
+        for t in &txns {
+            scalar.submit(t);
+        }
+        assert_eq!(scalar.sampler().unwrap().epochs(), &epochs[..]);
+        // reset restarts the sampler with the run
+        scalar.reset();
+        assert!(scalar.sampler().unwrap().epochs().is_empty());
     }
 
     #[test]

@@ -33,6 +33,7 @@
 //! stripes that don't fall on element boundaries at every front door.
 
 use crate::memsim::{Bandwidth, MemConfig, MemSim, ReplayState, Timing, Txn, TxnTrace};
+use crate::obs::Timeline;
 use crate::util::par::parallel_map;
 use anyhow::bail;
 
@@ -367,6 +368,7 @@ impl MultiPortSim {
     ///
     /// [`run_trace`]: MultiPortSim::run_trace
     pub fn run_trace_parallel(&mut self, trace: &TxnTrace, threads: usize) -> u64 {
+        let _span = crate::obs::span("memsim::replay_parallel");
         self.submitted_elems += trace.total_elems();
         let subs = self.split_trace(trace);
         let items: Vec<(MemSim, TxnTrace)> =
@@ -399,6 +401,36 @@ impl MultiPortSim {
     /// Per-channel replay state (bit-for-bit identity tests).
     pub fn channel_snapshots(&self) -> Vec<ReplayState> {
         self.channels.iter().map(|c| c.snapshot()).collect()
+    }
+
+    /// Attach a bandwidth timeline sampler to every channel (see
+    /// [`MemSim::set_sampler`]). Samplers ride along the pre-split
+    /// parallel replay because [`MultiPortSim::run_trace_parallel`]
+    /// keeps the mutated per-channel clones — so the parallel timeline
+    /// is bit-identical to the entry-wise serial one.
+    pub fn set_sampler(&mut self, epoch_cycles: u64) {
+        for c in &mut self.channels {
+            c.set_sampler(epoch_cycles);
+        }
+    }
+
+    /// Harvest the per-channel samplers into one [`Timeline`] (empty
+    /// channel lists for channels that saw no traffic). `None` when no
+    /// sampler was attached.
+    pub fn timeline(&self) -> Option<Timeline> {
+        let epoch_cycles = self.channels.first()?.sampler()?.epoch_cycles();
+        Some(Timeline {
+            epoch_cycles,
+            channels: self
+                .channels
+                .iter()
+                .map(|c| {
+                    c.sampler()
+                        .map(|s| s.epochs().to_vec())
+                        .unwrap_or_default()
+                })
+                .collect(),
+        })
     }
 
     /// Cross-channel aggregate: counters summed, `cycles` the slowest
@@ -553,6 +585,39 @@ mod tests {
         pre_split.run_trace_parallel(&trace, 3);
         assert_eq!(pre_split.channel_snapshots(), by_trace.channel_snapshots());
         assert_eq!(pre_split.bandwidth(0).raw_bytes, by_trace.bandwidth(0).raw_bytes);
+    }
+
+    #[test]
+    fn timelines_are_identical_across_serial_and_parallel_replay() {
+        let mut trace = TxnTrace::new();
+        for i in 0..96u64 {
+            trace.push(
+                if i % 3 == 0 { Dir::Write } else { Dir::Read },
+                i * 511,
+                1 + (i * 73) % 900,
+            );
+        }
+        let map = || PortMap::Interleaved { stripe_elems: 128 };
+        let mut serial = MultiPortSim::new(cfg(), 3, map());
+        serial.set_sampler(512);
+        serial.run_trace(&trace);
+        let mut par = MultiPortSim::new(cfg(), 3, map());
+        par.set_sampler(512);
+        par.run_trace_parallel(&trace, 3);
+        let tl_serial = serial.timeline().expect("sampler attached");
+        let tl_par = par.timeline().expect("samplers survive parallel replay");
+        assert_eq!(tl_serial, tl_par, "timeline is replay-path independent");
+        assert!(
+            tl_serial.matches(&serial.aggregate_timing()),
+            "epochs sum to the aggregate counters"
+        );
+        assert_eq!(tl_serial.channels.len(), 3);
+        assert!(tl_serial.imbalance() >= 1.0);
+        // unsampled run: same channel states bit for bit
+        let mut plain = MultiPortSim::new(cfg(), 3, map());
+        plain.run_trace_parallel(&trace, 3);
+        assert_eq!(plain.channel_snapshots(), par.channel_snapshots());
+        assert!(plain.timeline().is_none());
     }
 
     #[test]

@@ -23,10 +23,11 @@
 //! to a cold compile — the contract `tests/trace_replay.rs` pins down.
 
 use crate::memsim::{Dir, Txn};
+use crate::obs::metrics::{registry, Counter};
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 
 /// A compiled, config-independent transaction trace in SoA form.
@@ -216,16 +217,20 @@ impl Shard {
 /// insert wins, so results are deterministic either way.
 pub struct TraceCache {
     shards: Vec<Shard>,
-    hits: AtomicU64,
-    misses: AtomicU64,
+    /// Registry-backed counters (`cfa.trace_cache.{hits,misses}`): one
+    /// fresh cell per cache instance, so instances count independently
+    /// (private explorer caches vs the daemon's shared one) while the
+    /// process-wide registry snapshot sums them.
+    hits: Counter,
+    misses: Counter,
 }
 
 impl TraceCache {
     pub fn new() -> TraceCache {
         TraceCache {
             shards: (0..SHARDS).map(|_| Shard::new()).collect(),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
+            hits: registry().counter("cfa.trace_cache.hits"),
+            misses: registry().counter("cfa.trace_cache.misses"),
         }
     }
 
@@ -239,41 +244,43 @@ impl TraceCache {
     pub fn get(&self, key: &str) -> Option<Arc<TxnTrace>> {
         let found = self.shard(key).lock().get(key).cloned();
         if found.is_some() {
-            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.hits.inc();
         } else {
-            self.misses.fetch_add(1, Ordering::Relaxed);
+            self.misses.inc();
         }
         found
     }
 
     /// The trace for `key`, compiling it with `compile` on a miss.
-    /// Fault site: `trace::compile` (the miss path only).
+    /// Fault site: `trace::compile`; span site: `trace::compile` (the
+    /// miss path only — hits are lock-lookup cheap and stay unspanned).
     pub fn get_or_compile(
         &self,
         key: &str,
         compile: impl FnOnce() -> TxnTrace,
     ) -> Arc<TxnTrace> {
         if let Some(t) = self.shard(key).lock().get(key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.hits.inc();
             return t.clone();
         }
         // compile outside the lock: a cold geometry must not block other
         // geometries that hash to the same shard
+        let _span = crate::obs::span("trace::compile");
         crate::util::faults::check("trace::compile");
         let built = Arc::new(compile());
-        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.misses.inc();
         let mut shard = self.shard(key).lock();
         shard.entry(key.to_string()).or_insert(built).clone()
     }
 
     /// Cache hits observed so far.
     pub fn hits(&self) -> u64 {
-        self.hits.load(Ordering::Relaxed)
+        self.hits.get()
     }
 
     /// Cache misses (compilations) observed so far.
     pub fn misses(&self) -> u64 {
-        self.misses.load(Ordering::Relaxed)
+        self.misses.get()
     }
 
     /// Number of cached traces.

@@ -1,0 +1,330 @@
+//! Process-wide metrics registry: named counters, gauges, and histograms.
+//!
+//! The design problem this solves: the crate grew one ad-hoc pair of
+//! `AtomicU64`s per cache (`TraceCache`, `SessionCache`, `PlanCache`)
+//! plus hand-rolled depth/rejected counts in `serve`, and every surface
+//! that wanted a number (the tune summary, the serve `stats` reply, the
+//! benches) collected fields by hand. The registry replaces the
+//! *plumbing*, not the *semantics*:
+//!
+//! - A metric handle ([`Counter`], [`Gauge`], [`Histogram`]) is a cheap
+//!   clonable `Arc` around one relaxed `AtomicU64` cell. The owning
+//!   struct keeps the handle exactly where its bare atomic used to
+//!   live, so **per-instance counts are preserved** — two `TraceCache`s
+//!   still count independently, which the cache tests pin.
+//! - Creating a handle registers a [`Weak`] reference under a dotted
+//!   name (`cfa.trace_cache.hits`). [`Registry::snapshot`] sums every
+//!   live cell per name, so the process-wide view is the sum of the
+//!   instance views, and dropping an instance removes its contribution.
+//! - Reads and writes are `Ordering::Relaxed` — identical cost to the
+//!   bare atomics these replace. There is no enable/disable knob here
+//!   because the counters *are* the product (they feed `stats` replies
+//!   and tune summaries); the disable fast path lives in
+//!   [`crate::obs::span`], which records wall time.
+//!
+//! Naming scheme: `cfa.<subsystem>.<metric>`, all lowercase,
+//! underscores inside segments. The scheme is documented in DESIGN.md
+//! §Observability and asserted by `snapshot_names_are_sorted` below.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError, Weak};
+
+use crate::util::json::Json;
+
+/// One named atomic cell; the payload shared by [`Counter`] and
+/// [`Gauge`].
+#[derive(Debug)]
+struct Cell {
+    name: &'static str,
+    value: AtomicU64,
+}
+
+impl Cell {
+    fn new(name: &'static str) -> Arc<Cell> {
+        Arc::new(Cell {
+            name,
+            value: AtomicU64::new(0),
+        })
+    }
+}
+
+/// Monotonically increasing counter handle.
+///
+/// Clones share the same cell, so a struct can hand out views of its
+/// own counter (the caches do this for their `hits()` accessors).
+#[derive(Clone, Debug)]
+pub struct Counter(Arc<Cell>);
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self) {
+        self.0.value.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Up/down gauge handle (queue depth, active jobs).
+///
+/// `dec` saturates at zero rather than wrapping, so a stray unpaired
+/// decrement shows up as a floor, not a number near `u64::MAX`.
+#[derive(Clone, Debug)]
+pub struct Gauge(Arc<Cell>);
+
+impl Gauge {
+    #[inline]
+    pub fn inc(&self) {
+        self.0.value.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn dec(&self) {
+        let _ = self
+            .0
+            .value
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_sub(1))
+            });
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.value.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Power-of-two bucketed histogram (count, sum, 32 log2 buckets).
+///
+/// Bucket `i` holds values whose bit length is `i` (bucket 0 is the
+/// value zero); values with more than 31 significant bits land in the
+/// last bucket. Good enough for latency-in-micros distributions without
+/// any float math on the record path.
+#[derive(Debug)]
+struct HistCell {
+    name: &'static str,
+    count: AtomicU64,
+    sum: AtomicU64,
+    buckets: [AtomicU64; 32],
+}
+
+#[derive(Clone, Debug)]
+pub struct Histogram(Arc<HistCell>);
+
+impl Histogram {
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+        self.0.sum.fetch_add(v, Ordering::Relaxed);
+        let idx = (64 - v.leading_zeros() as usize).min(31);
+        self.0.buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    pub fn sum(&self) -> u64 {
+        self.0.sum.load(Ordering::Relaxed)
+    }
+
+    /// Bucket counts (index = bit length of the recorded value).
+    pub fn buckets(&self) -> [u64; 32] {
+        let mut out = [0u64; 32];
+        for (o, b) in out.iter_mut().zip(self.0.buckets.iter()) {
+            *o = b.load(Ordering::Relaxed);
+        }
+        out
+    }
+}
+
+/// The process-wide registry. Obtain it with [`registry`]; there is
+/// exactly one per process.
+pub struct Registry {
+    counters: Mutex<Vec<Weak<Cell>>>,
+    gauges: Mutex<Vec<Weak<Cell>>>,
+    histograms: Mutex<Vec<Weak<HistCell>>>,
+}
+
+/// The process-wide registry singleton.
+pub fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(|| Registry {
+        counters: Mutex::new(Vec::new()),
+        gauges: Mutex::new(Vec::new()),
+        histograms: Mutex::new(Vec::new()),
+    })
+}
+
+fn register<T>(slot: &Mutex<Vec<Weak<T>>>, cell: &Arc<T>) {
+    let mut v = slot.lock().unwrap_or_else(PoisonError::into_inner);
+    // prune cells whose owners dropped, so the registry does not grow
+    // without bound across short-lived cache instances
+    v.retain(|w| w.strong_count() > 0);
+    v.push(Arc::downgrade(cell));
+}
+
+impl Registry {
+    /// A fresh counter cell registered under `name`. Every call makes a
+    /// new cell: instances count independently and `snapshot` sums.
+    pub fn counter(&self, name: &'static str) -> Counter {
+        let cell = Cell::new(name);
+        register(&self.counters, &cell);
+        Counter(cell)
+    }
+
+    /// A fresh gauge cell registered under `name`.
+    pub fn gauge(&self, name: &'static str) -> Gauge {
+        let cell = Cell::new(name);
+        register(&self.gauges, &cell);
+        Gauge(cell)
+    }
+
+    /// A fresh histogram registered under `name`.
+    pub fn histogram(&self, name: &'static str) -> Histogram {
+        let cell = Arc::new(HistCell {
+            name,
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        });
+        register(&self.histograms, &cell);
+        Histogram(cell)
+    }
+
+    /// Process-wide totals: every live cell summed per name, plus
+    /// `<name>.count` / `<name>.sum` entries for histograms. Sorted by
+    /// name (BTreeMap), so iteration order is deterministic.
+    pub fn snapshot(&self) -> BTreeMap<String, u64> {
+        let mut out: BTreeMap<String, u64> = BTreeMap::new();
+        for kind in [&self.counters, &self.gauges] {
+            let v = kind.lock().unwrap_or_else(PoisonError::into_inner);
+            for cell in v.iter().filter_map(Weak::upgrade) {
+                *out.entry(cell.name.to_string()).or_insert(0) +=
+                    cell.value.load(Ordering::Relaxed);
+            }
+        }
+        let v = self
+            .histograms
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        for cell in v.iter().filter_map(Weak::upgrade) {
+            *out.entry(format!("{}.count", cell.name)).or_insert(0) +=
+                cell.count.load(Ordering::Relaxed);
+            *out.entry(format!("{}.sum", cell.name)).or_insert(0) +=
+                cell.sum.load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// The snapshot as a flat JSON object (sorted keys, integer
+    /// values) — the debugging/export face of the registry.
+    pub fn to_json(&self) -> Json {
+        let snap = self.snapshot();
+        Json::obj(
+            snap.iter()
+                .map(|(k, v)| (k.as_str(), Json::num(*v as f64)))
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instances_count_independently_and_snapshot_sums() {
+        let a = registry().counter("cfa.test.metrics.independent");
+        let b = registry().counter("cfa.test.metrics.independent");
+        a.inc();
+        a.inc();
+        b.add(5);
+        assert_eq!(a.get(), 2);
+        assert_eq!(b.get(), 5);
+        let snap = registry().snapshot();
+        assert_eq!(snap["cfa.test.metrics.independent"], 7);
+    }
+
+    #[test]
+    fn dropped_instances_leave_the_snapshot() {
+        let a = registry().counter("cfa.test.metrics.dropped");
+        a.add(3);
+        assert_eq!(registry().snapshot()["cfa.test.metrics.dropped"], 3);
+        drop(a);
+        // a fresh registration triggers the prune sweep
+        let _keep = registry().counter("cfa.test.metrics.dropped2");
+        assert!(!registry()
+            .snapshot()
+            .contains_key("cfa.test.metrics.dropped"));
+    }
+
+    #[test]
+    fn clones_share_one_cell() {
+        let a = registry().counter("cfa.test.metrics.clone");
+        let b = a.clone();
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), 2);
+        assert_eq!(registry().snapshot()["cfa.test.metrics.clone"], 2);
+    }
+
+    #[test]
+    fn gauge_saturates_at_zero() {
+        let g = registry().gauge("cfa.test.metrics.gauge");
+        g.inc();
+        g.dec();
+        g.dec();
+        assert_eq!(g.get(), 0, "dec below zero floors instead of wrapping");
+        g.set(9);
+        assert_eq!(g.get(), 9);
+    }
+
+    #[test]
+    fn histogram_counts_sum_and_buckets() {
+        let h = registry().histogram("cfa.test.metrics.hist");
+        h.record(0);
+        h.record(1);
+        h.record(2);
+        h.record(3);
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 0u64.wrapping_add(1 + 2 + 3).wrapping_add(u64::MAX));
+        let b = h.buckets();
+        assert_eq!(b[0], 1, "zero lands in bucket 0");
+        assert_eq!(b[1], 1, "1 has bit length 1");
+        assert_eq!(b[2], 2, "2 and 3 have bit length 2");
+        assert_eq!(b[31], 1, "huge values clamp to the last bucket");
+        let snap = registry().snapshot();
+        assert_eq!(snap["cfa.test.metrics.hist.count"], 5);
+    }
+
+    #[test]
+    fn snapshot_names_are_sorted() {
+        let _a = registry().counter("cfa.test.metrics.z_last");
+        let _b = registry().counter("cfa.test.metrics.a_first");
+        let snap = registry().snapshot();
+        let keys: Vec<&String> = snap.keys().collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+        // and the JSON face is an object, compact-printable
+        let j = registry().to_json();
+        assert!(j.to_string_compact().starts_with('{'));
+    }
+}

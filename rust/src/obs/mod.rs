@@ -1,0 +1,31 @@
+//! Observability layer: one registry, two time domains.
+//!
+//! Everything the crate reports about itself flows through this module,
+//! split along the one distinction that matters for reproducibility —
+//! which *clock* a fact lives on:
+//!
+//! * [`metrics`] — clockless monotonic counters/gauges/histograms in a
+//!   process-wide registry (`cfa.<subsystem>.<metric>`). The cache
+//!   hit/miss counters, serve queue depth and request counts live here;
+//!   the serve `stats` reply and the tune summary read these handles.
+//! * [`span`] — **wall-time** phase tracing (compile / plan / marshal /
+//!   replay / evaluate / serve lifecycle) exported as Chrome
+//!   trace-event JSON for Perfetto. Advisory by contract: span data can
+//!   never flow into a journal, report or any other deterministic
+//!   artifact, so `--profile` on/off leaves journals byte-identical.
+//! * [`timeline`] — **cycle-time** bandwidth evolution sampled inside
+//!   the memory simulator. Deterministic by contract: a pure function
+//!   of the replay's counter evolution, byte-identical across
+//!   serial/parallel replay and cache on/off.
+//!
+//! The determinism line between the two time domains is the load-
+//! bearing design decision; DESIGN.md §Observability spells out the
+//! full contract and the span/metric taxonomies.
+
+pub mod metrics;
+pub mod span;
+pub mod timeline;
+
+pub use metrics::{registry, Counter, Gauge, Histogram, Registry};
+pub use span::{begin_capture, enabled, span, Capture, Span, SpanEvent};
+pub use timeline::{EpochSample, Timeline, TimelineSampler};

@@ -1,0 +1,400 @@
+//! Scoped, nestable span tracing with Chrome trace-event export.
+//!
+//! Spans are the *wall-time* half of the observability layer (the
+//! cycle-time half is [`crate::obs::timeline`]). They answer "where did
+//! this tune run spend its seconds" — compile vs plan vs marshal vs
+//! replay vs per-point evaluate — which no aggregate counter can.
+//!
+//! The cost contract, in order of importance:
+//!
+//! 1. **Disabled is free.** [`span`] with no active capture is one
+//!    relaxed atomic load and a two-word stack return — no allocation,
+//!    no clock read, no lock (asserted by `tests/obs_alloc.rs`). Hot
+//!    paths keep their instrumentation permanently; nobody pays until a
+//!    `--profile` flag turns a capture on.
+//! 2. **Enabled is honest but advisory.** Events carry wall-clock
+//!    micros and go through one global mutex. Wall time is *never*
+//!    allowed to feed back into anything deterministic: spans have no
+//!    accessors that reports or journals could read, so a journal
+//!    written under `--profile` is byte-identical to one without
+//!    (pinned in `tests/trace_replay.rs`).
+//!
+//! Span ids are logical (a process-global monotonic counter), not
+//! derived from time, so id assignment order is stable for a serial
+//! run. Thread ids are small dense logical ids in first-use order.
+//!
+//! Capture model: [`begin_capture`] bumps a refcount that enables
+//! recording and remembers the sink high-water mark; finishing drains
+//! the events recorded since. Captures are designed to *enclose* the
+//! spans they observe (the CLI wraps a whole tune; serve wraps a whole
+//! job). Overlapping captures from concurrent serve requests each see
+//! the union window — advisory by design, documented in DESIGN.md.
+//!
+//! Export is the Chrome trace-event JSON array format (`ph: "B"/"E"`
+//! duration events), loadable in Perfetto or `chrome://tracing`.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock, PoisonError};
+use std::time::Instant;
+
+use crate::util::{fsx, json::Json};
+
+/// Number of active captures; recording is on while non-zero. The
+/// relaxed load of this counter is the entire disabled fast path.
+static ENABLED: AtomicUsize = AtomicUsize::new(0);
+
+/// Next span id; ids are logical and process-monotonic, never reused.
+/// Id 0 is reserved for "span recorded while disabled" (a no-op span).
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Next logical thread id, assigned densely in first-use order.
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+/// One begin or end event, as exported.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// Logical span id shared by the B/E pair.
+    pub id: u64,
+    /// Static taxonomy name, e.g. `trace::compile` (see DESIGN.md).
+    pub name: &'static str,
+    /// `true` for the begin ("B") event, `false` for end ("E").
+    pub begin: bool,
+    /// Wall-clock microseconds since the process sink's origin.
+    /// Advisory: feeds profiles only, never journals.
+    pub ts_us: u64,
+    /// Logical thread id (dense, first-use order).
+    pub tid: u64,
+}
+
+struct Sink {
+    origin: Instant,
+    events: Vec<SpanEvent>,
+}
+
+fn sink() -> &'static Mutex<Sink> {
+    static SINK: OnceLock<Mutex<Sink>> = OnceLock::new();
+    SINK.get_or_init(|| {
+        Mutex::new(Sink {
+            origin: Instant::now(),
+            events: Vec::new(),
+        })
+    })
+}
+
+/// Whether any capture is active. One relaxed atomic load.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed) != 0
+}
+
+/// The calling thread's logical tid (as stamped on its events).
+pub fn current_tid() -> u64 {
+    TID.with(|t| *t)
+}
+
+fn push_event(id: u64, name: &'static str, begin: bool) {
+    let tid = TID.with(|t| *t);
+    let mut s = sink().lock().unwrap_or_else(PoisonError::into_inner);
+    let ts_us = s.origin.elapsed().as_micros() as u64;
+    s.events.push(SpanEvent {
+        id,
+        name,
+        begin,
+        ts_us,
+        tid,
+    });
+}
+
+/// RAII guard for one span; dropping it records the end event. Close
+/// order is LIFO by construction — the guard is a stack value.
+pub struct Span {
+    id: u64,
+    name: &'static str,
+}
+
+/// Open a span named `name`. When no capture is active this returns an
+/// inert guard without touching the clock, the sink, or the allocator.
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    if !enabled() {
+        return Span { id: 0, name };
+    }
+    let id = NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed);
+    push_event(id, name, true);
+    Span { id, name }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if self.id != 0 {
+            // record the end even if the capture just finished, so a
+            // B inside a capture window is never left unbalanced by a
+            // racing finish; the stray E lands before any later
+            // capture's start mark and is dropped with the sink reset
+            push_event(self.id, self.name, false);
+        }
+    }
+}
+
+/// An active capture window. Obtain with [`begin_capture`]; consume
+/// with [`Capture::finish`] (events) or [`Capture::export`] (file).
+/// Dropping without finishing discards the window's events.
+pub struct Capture {
+    start: usize,
+    done: bool,
+}
+
+/// Start capturing spans. Enables recording process-wide (refcounted)
+/// and marks the current sink position as this capture's start.
+pub fn begin_capture() -> Capture {
+    // hold the sink lock while enabling so no event can slip in
+    // between reading the high-water mark and the enable becoming
+    // visible — the mark is exact
+    let s = sink().lock().unwrap_or_else(PoisonError::into_inner);
+    let start = s.events.len();
+    ENABLED.fetch_add(1, Ordering::Relaxed);
+    drop(s);
+    Capture { start, done: false }
+}
+
+fn end_capture(start: usize, want_events: bool) -> Vec<SpanEvent> {
+    let mut s = sink().lock().unwrap_or_else(PoisonError::into_inner);
+    let start = start.min(s.events.len());
+    let out = if want_events {
+        s.events[start..].to_vec()
+    } else {
+        Vec::new()
+    };
+    if ENABLED.fetch_sub(1, Ordering::Relaxed) == 1 {
+        // last capture out resets the sink so the buffer never grows
+        // across profiling sessions
+        s.events.clear();
+    }
+    out
+}
+
+impl Capture {
+    /// Stop capturing and return every event recorded in the window.
+    pub fn finish(mut self) -> Vec<SpanEvent> {
+        self.done = true;
+        end_capture(self.start, true)
+    }
+
+    /// Stop capturing and write the window as Chrome trace-event JSON
+    /// (Perfetto-loadable) via an atomic rename.
+    pub fn export(self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let events = self.finish();
+        fsx::write_atomic(path, trace_json(&events).to_string_pretty())
+    }
+}
+
+impl Drop for Capture {
+    fn drop(&mut self) {
+        if !self.done {
+            end_capture(self.start, false);
+        }
+    }
+}
+
+/// Chrome trace-event JSON for a slice of events:
+/// `{"displayTimeUnit":"ms","traceEvents":[{"ph":"B",...},...]}`.
+pub fn trace_json(events: &[SpanEvent]) -> Json {
+    Json::obj(vec![
+        ("displayTimeUnit", Json::str("ms")),
+        (
+            "traceEvents",
+            Json::arr(events.iter().map(|e| {
+                Json::obj(vec![
+                    (
+                        "args",
+                        Json::obj(vec![("span_id", Json::num(e.id as f64))]),
+                    ),
+                    ("cat", Json::str("cfa")),
+                    ("name", Json::str(e.name)),
+                    ("ph", Json::str(if e.begin { "B" } else { "E" })),
+                    ("pid", Json::num(1)),
+                    ("tid", Json::num(e.tid as f64)),
+                    ("ts", Json::num(e.ts_us as f64)),
+                ])
+            })),
+        ),
+    ])
+}
+
+/// True when every begin has a matching end and, per thread, spans
+/// close LIFO (properly nested). Used by tests and the CI smoke.
+pub fn events_balanced(events: &[SpanEvent]) -> bool {
+    use std::collections::HashMap;
+    let mut stacks: HashMap<u64, Vec<u64>> = HashMap::new();
+    for e in events {
+        let stack = stacks.entry(e.tid).or_default();
+        if e.begin {
+            stack.push(e.id);
+        } else {
+            match stack.pop() {
+                Some(top) if top == e.id => {}
+                _ => return false,
+            }
+        }
+    }
+    stacks.values().all(Vec::is_empty)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // span tests share the process-global sink with every other test
+    // in this binary (some of which hit instrumented code paths), so
+    // they serialize on one mutex AND filter captured events down to
+    // their own thread before asserting shapes
+    fn serial() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn mine(events: Vec<SpanEvent>) -> Vec<SpanEvent> {
+        let tid = current_tid();
+        events.into_iter().filter(|e| e.tid == tid).collect()
+    }
+
+    #[test]
+    fn disabled_spans_are_inert() {
+        let _g = serial();
+        let before = NEXT_SPAN_ID.load(Ordering::Relaxed);
+        {
+            let _s = span("test::inert");
+        }
+        // another test's capture may be active concurrently, in which
+        // case the span above legitimately consumed an id; only assert
+        // the strict no-id property when we observed disabled
+        if !enabled() {
+            assert_eq!(
+                NEXT_SPAN_ID.load(Ordering::Relaxed),
+                before,
+                "no id is consumed while disabled"
+            );
+        }
+        let cap = begin_capture();
+        assert!(mine(cap.finish()).is_empty(), "nothing was recorded");
+    }
+
+    #[test]
+    fn nested_spans_close_lifo_and_balance() {
+        let _g = serial();
+        let cap = begin_capture();
+        {
+            let _outer = span("test::outer");
+            {
+                let _inner = span("test::inner");
+            }
+            let _sibling = span("test::sibling");
+        }
+        let events = mine(cap.finish());
+        assert_eq!(events.len(), 6, "three spans, B+E each");
+        assert!(events_balanced(&events));
+        let names: Vec<(&str, bool)> =
+            events.iter().map(|e| (e.name, e.begin)).collect();
+        assert_eq!(
+            names,
+            vec![
+                ("test::outer", true),
+                ("test::inner", true),
+                ("test::inner", false),
+                ("test::sibling", true),
+                // sibling opened after inner closed, and closes before
+                // outer: strict LIFO on one thread
+                ("test::sibling", false),
+                ("test::outer", false),
+            ]
+        );
+    }
+
+    #[test]
+    fn span_ids_are_monotonic_within_a_capture() {
+        let _g = serial();
+        let cap = begin_capture();
+        {
+            let _a = span("test::a");
+            let _b = span("test::b");
+        }
+        let events = mine(cap.finish());
+        let begins: Vec<u64> =
+            events.iter().filter(|e| e.begin).map(|e| e.id).collect();
+        let mut sorted = begins.clone();
+        sorted.sort_unstable();
+        assert_eq!(begins, sorted, "begin order is id order on one thread");
+    }
+
+    #[test]
+    fn capture_windows_do_not_leak_between_sessions() {
+        let _g = serial();
+        {
+            let cap = begin_capture();
+            let _s = span("test::first");
+            drop(_s);
+            let _ = cap.finish();
+        }
+        let cap = begin_capture();
+        {
+            let _s = span("test::second");
+        }
+        let events = mine(cap.finish());
+        assert_eq!(events.len(), 2);
+        assert!(events.iter().all(|e| e.name == "test::second"));
+    }
+
+    #[test]
+    fn trace_json_shape_round_trips() {
+        let _g = serial();
+        let cap = begin_capture();
+        {
+            let _s = span("test::json");
+        }
+        let events = mine(cap.finish());
+        let text = trace_json(&events).to_string_pretty();
+        let parsed = crate::util::json::parse(&text).expect("valid JSON");
+        let arr = parsed
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .expect("traceEvents array");
+        assert_eq!(arr.len(), 2);
+        let b = &arr[0];
+        assert_eq!(b.get("ph").and_then(Json::as_str), Some("B"));
+        assert_eq!(b.get("name").and_then(Json::as_str), Some("test::json"));
+        assert_eq!(b.get("cat").and_then(Json::as_str), Some("cfa"));
+        assert!(b.get("ts").and_then(Json::as_f64).is_some());
+        assert_eq!(arr[1].get("ph").and_then(Json::as_str), Some("E"));
+    }
+
+    #[test]
+    fn unbalanced_event_streams_are_rejected() {
+        let b = |id, tid| SpanEvent {
+            id,
+            name: "x",
+            begin: true,
+            ts_us: 0,
+            tid,
+        };
+        let e = |id, tid| SpanEvent {
+            id,
+            name: "x",
+            begin: false,
+            ts_us: 0,
+            tid,
+        };
+        assert!(events_balanced(&[b(1, 1), b(2, 1), e(2, 1), e(1, 1)]));
+        assert!(!events_balanced(&[b(1, 1), b(2, 1), e(1, 1), e(2, 1)]), "crossed close order");
+        assert!(!events_balanced(&[b(1, 1)]), "dangling begin");
+        assert!(!events_balanced(&[e(1, 1)]), "dangling end");
+        assert!(
+            events_balanced(&[b(1, 1), b(2, 2), e(2, 2), e(1, 1)]),
+            "per-thread stacks are independent"
+        );
+    }
+}

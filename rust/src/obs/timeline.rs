@@ -1,0 +1,364 @@
+//! Cycle-domain bandwidth timelines for the memory simulator.
+//!
+//! The spans in [`crate::obs::span`] answer "where did the *wall time*
+//! go"; timelines answer the paper's question — "what did the memory
+//! interface *do* over the run": effective bandwidth, row-hit rate and
+//! bus utilization per epoch of simulated cycles, per channel.
+//!
+//! Determinism contract (the load-bearing property): a timeline is a
+//! pure function of the replay's counter evolution, which is itself
+//! bit-identical across the scalar/streamed kernels, serial/parallel
+//! multi-channel replay, and trace-cache on/off. [`TimelineSampler`]
+//! reads [`Timing`] *deltas* and the simulated clock — never the wall
+//! clock, never allocation addresses — so sampled runs are byte-stable
+//! and sampling cannot perturb the run (`record` only reads state;
+//! `tests/obs_api.rs` pins sampled ≡ unsampled final `Timing`).
+//!
+//! Granularity: the engine calls [`TimelineSampler::record`] once per
+//! submitted span (after the span completes), and the whole delta is
+//! attributed to the epoch containing the span's completion cycle.
+//! A closed-form `bulk_advance` that jumps many epochs therefore lands
+//! its counters in the completion epoch — attribution-at-completion,
+//! the standard trade for not simulating beat-by-beat. Epochs with no
+//! completions are omitted (sparse representation).
+
+use crate::memsim::{MemConfig, Timing};
+use crate::util::json::Json;
+
+/// Counter deltas attributed to one epoch (sparse: all-zero epochs are
+/// never stored). `epoch` is the index; epoch `e` covers simulated
+/// cycles `[e * epoch_cycles + 1, (e+1) * epoch_cycles]`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct EpochSample {
+    pub epoch: u64,
+    pub data_cycles: u64,
+    pub axi_bursts: u64,
+    pub row_hits: u64,
+    pub row_misses: u64,
+    pub row_switches: u64,
+    pub turnarounds: u64,
+}
+
+impl EpochSample {
+    fn is_zero(&self) -> bool {
+        self.data_cycles == 0
+            && self.axi_bursts == 0
+            && self.row_hits == 0
+            && self.row_misses == 0
+            && self.row_switches == 0
+            && self.turnarounds == 0
+    }
+
+    fn absorb(&mut self, d: &EpochSample) {
+        self.data_cycles += d.data_cycles;
+        self.axi_bursts += d.axi_bursts;
+        self.row_hits += d.row_hits;
+        self.row_misses += d.row_misses;
+        self.row_switches += d.row_switches;
+        self.turnarounds += d.turnarounds;
+    }
+}
+
+/// Per-channel sampler owned by a `MemSim`. Records counter deltas at
+/// span completion; clones with the simulator, so the pre-split
+/// parallel multi-channel replay (which clones each channel, replays,
+/// and keeps the mutated clone) carries its samples back for free.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TimelineSampler {
+    epoch_cycles: u64,
+    last: Timing,
+    epochs: Vec<EpochSample>,
+}
+
+impl TimelineSampler {
+    /// A sampler with `epoch_cycles`-cycle epochs (clamped to >= 1).
+    pub fn new(epoch_cycles: u64) -> TimelineSampler {
+        TimelineSampler {
+            epoch_cycles: epoch_cycles.max(1),
+            last: Timing::default(),
+            epochs: Vec::new(),
+        }
+    }
+
+    pub fn epoch_cycles(&self) -> u64 {
+        self.epoch_cycles
+    }
+
+    /// Record the counter movement since the previous call, attributed
+    /// to the epoch containing simulated cycle `now`. Read-only with
+    /// respect to the simulation: the engine's state never depends on
+    /// whether this ran. Saturating deltas make a `record` after an
+    /// engine `reset`/`restore` harmless (the sampler is reset alongside
+    /// the engine on `reset`; `restore` rewinds are not resampled).
+    pub fn record(&mut self, t: &Timing, now: u64) {
+        let d = EpochSample {
+            epoch: if now == 0 {
+                0
+            } else {
+                (now - 1) / self.epoch_cycles
+            },
+            data_cycles: t.data_cycles.saturating_sub(self.last.data_cycles),
+            axi_bursts: t.axi_bursts.saturating_sub(self.last.axi_bursts),
+            row_hits: t.row_hits.saturating_sub(self.last.row_hits),
+            row_misses: t.row_misses.saturating_sub(self.last.row_misses),
+            row_switches: t.row_switches.saturating_sub(self.last.row_switches),
+            turnarounds: t.turnarounds.saturating_sub(self.last.turnarounds),
+        };
+        self.last = t.clone();
+        if d.is_zero() {
+            return;
+        }
+        match self.epochs.last_mut() {
+            Some(e) if e.epoch == d.epoch => e.absorb(&d),
+            _ => self.epochs.push(d),
+        }
+    }
+
+    /// The recorded epochs (sparse, ascending by construction: `now` is
+    /// monotone within a replay).
+    pub fn epochs(&self) -> &[EpochSample] {
+        &self.epochs
+    }
+
+    /// Consume the sampler into its epoch list.
+    pub fn into_epochs(self) -> Vec<EpochSample> {
+        self.epochs
+    }
+}
+
+/// A finished multi-channel timeline: one sparse epoch list per channel
+/// (a single-channel run is one list).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Timeline {
+    pub epoch_cycles: u64,
+    pub channels: Vec<Vec<EpochSample>>,
+}
+
+impl Timeline {
+    /// Sum of every epoch across every channel. By construction this
+    /// equals the run's aggregate [`Timing`] counters exactly — the
+    /// identity [`Timeline::matches`] checks and CI asserts.
+    pub fn totals(&self) -> EpochSample {
+        let mut out = EpochSample::default();
+        for ch in &self.channels {
+            for e in ch {
+                out.absorb(e);
+                out.epoch = out.epoch.max(e.epoch);
+            }
+        }
+        out
+    }
+
+    /// Per-channel total data beats (imbalance input).
+    pub fn channel_data_cycles(&self) -> Vec<u64> {
+        self.channels
+            .iter()
+            .map(|ch| ch.iter().map(|e| e.data_cycles).sum())
+            .collect()
+    }
+
+    /// Traffic imbalance over channels that saw any traffic:
+    /// max data beats / mean data beats, 1.0 = perfectly balanced.
+    pub fn imbalance(&self) -> f64 {
+        let busy: Vec<u64> = self
+            .channel_data_cycles()
+            .into_iter()
+            .filter(|&d| d > 0)
+            .collect();
+        if busy.is_empty() {
+            return 1.0;
+        }
+        let max = *busy.iter().max().unwrap() as f64;
+        let mean = busy.iter().sum::<u64>() as f64 / busy.len() as f64;
+        max / mean
+    }
+
+    /// True iff the epoch sums reproduce `t`'s additive counters
+    /// exactly (`cycles` is a makespan, not additive, so it is not
+    /// part of the identity).
+    pub fn matches(&self, t: &Timing) -> bool {
+        let s = self.totals();
+        s.data_cycles == t.data_cycles
+            && s.axi_bursts == t.axi_bursts
+            && s.row_hits == t.row_hits
+            && s.row_misses == t.row_misses
+            && s.row_switches == t.row_switches
+            && s.turnarounds == t.turnarounds
+    }
+
+    /// JSON artifact for `cfa run --timeline`. Integer counters come
+    /// straight from the epochs; the derived floats (`bus_util`,
+    /// `row_hit_rate`, `raw_mb_s`, `eff_mb_s`) are pure functions of
+    /// those integers and the config, so the whole document is
+    /// byte-deterministic. `useful_ratio` is the run-level useful/raw
+    /// traffic ratio from the layout plans (epoch-resolved usefulness
+    /// would require tagging every burst; the ratio is constant per
+    /// layout anyway).
+    pub fn to_json(&self, cfg: &MemConfig, useful_ratio: f64) -> Json {
+        let epoch_json = |e: &EpochSample| {
+            let first_beats = e.row_hits + e.row_misses;
+            let hit_rate = if first_beats == 0 {
+                0.0
+            } else {
+                e.row_hits as f64 / first_beats as f64
+            };
+            let bus_util = e.data_cycles as f64 / self.epoch_cycles as f64;
+            // beats/epoch × bytes/beat × cycles/sec ÷ cycles/epoch = B/s
+            let raw_mb_s = e.data_cycles as f64 * cfg.bus_bytes as f64 * cfg.clock_mhz
+                / self.epoch_cycles as f64;
+            Json::obj(vec![
+                ("axi_bursts", Json::num(e.axi_bursts as f64)),
+                ("bus_util", Json::num(bus_util)),
+                ("data_cycles", Json::num(e.data_cycles as f64)),
+                ("eff_mb_s", Json::num(raw_mb_s * useful_ratio)),
+                ("epoch", Json::num(e.epoch as f64)),
+                ("raw_mb_s", Json::num(raw_mb_s)),
+                ("row_hit_rate", Json::num(hit_rate)),
+                ("row_hits", Json::num(e.row_hits as f64)),
+                ("row_misses", Json::num(e.row_misses as f64)),
+                ("row_switches", Json::num(e.row_switches as f64)),
+                ("turnarounds", Json::num(e.turnarounds as f64)),
+            ])
+        };
+        let t = self.totals();
+        Json::obj(vec![
+            (
+                "channels",
+                Json::arr(
+                    self.channels
+                        .iter()
+                        .map(|ch| Json::arr(ch.iter().map(epoch_json))),
+                ),
+            ),
+            ("epoch_cycles", Json::num(self.epoch_cycles as f64)),
+            ("imbalance", Json::num(self.imbalance())),
+            (
+                "totals",
+                Json::obj(vec![
+                    ("axi_bursts", Json::num(t.axi_bursts as f64)),
+                    ("data_cycles", Json::num(t.data_cycles as f64)),
+                    ("row_hits", Json::num(t.row_hits as f64)),
+                    ("row_misses", Json::num(t.row_misses as f64)),
+                    ("row_switches", Json::num(t.row_switches as f64)),
+                    ("turnarounds", Json::num(t.turnarounds as f64)),
+                ]),
+            ),
+            ("useful_ratio", Json::num(useful_ratio)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn timing(data: u64, bursts: u64, hits: u64, misses: u64) -> Timing {
+        Timing {
+            cycles: 0,
+            data_cycles: data,
+            axi_bursts: bursts,
+            row_hits: hits,
+            row_misses: misses,
+            row_switches: 0,
+            turnarounds: 0,
+        }
+    }
+
+    #[test]
+    fn deltas_accumulate_into_completion_epochs() {
+        let mut s = TimelineSampler::new(100);
+        s.record(&timing(10, 1, 0, 1), 50); // epoch 0
+        s.record(&timing(30, 2, 1, 1), 100); // cycle 100 is still epoch 0
+        s.record(&timing(60, 3, 2, 1), 101); // cycle 101 opens epoch 1
+        s.record(&timing(60, 3, 2, 1), 150); // zero delta: skipped
+        s.record(&timing(100, 4, 2, 2), 505); // jump to epoch 5
+        let e = s.epochs();
+        assert_eq!(e.len(), 3, "sparse: only epochs with traffic");
+        assert_eq!((e[0].epoch, e[0].data_cycles, e[0].axi_bursts), (0, 30, 2));
+        assert_eq!((e[1].epoch, e[1].data_cycles), (1, 30));
+        assert_eq!((e[2].epoch, e[2].data_cycles), (5, 40));
+        let tl = Timeline {
+            epoch_cycles: 100,
+            channels: vec![s.into_epochs()],
+        };
+        assert!(tl.matches(&timing(100, 4, 2, 2)), "sums reproduce the final counters");
+        assert!(!tl.matches(&timing(101, 4, 2, 2)));
+    }
+
+    #[test]
+    fn epoch_zero_cycles_clamp() {
+        let mut s = TimelineSampler::new(0); // clamped to 1-cycle epochs
+        assert_eq!(s.epoch_cycles(), 1);
+        s.record(&timing(1, 1, 0, 1), 0); // now=0 lands in epoch 0
+        assert_eq!(s.epochs()[0].epoch, 0);
+    }
+
+    #[test]
+    fn records_after_a_counter_rewind_saturate() {
+        let mut s = TimelineSampler::new(10);
+        s.record(&timing(50, 5, 0, 5), 9);
+        // a restore rewound the engine; deltas clamp to zero, no panic
+        s.record(&timing(20, 2, 0, 2), 5);
+        assert_eq!(s.epochs().len(), 1);
+    }
+
+    #[test]
+    fn imbalance_ignores_idle_channels() {
+        let busy = vec![EpochSample {
+            epoch: 0,
+            data_cycles: 100,
+            ..EpochSample::default()
+        }];
+        let busier = vec![EpochSample {
+            epoch: 0,
+            data_cycles: 300,
+            ..EpochSample::default()
+        }];
+        let tl = Timeline {
+            epoch_cycles: 64,
+            channels: vec![busy, busier, Vec::new()],
+        };
+        assert_eq!(tl.channel_data_cycles(), vec![100, 300, 0]);
+        assert!((tl.imbalance() - 1.5).abs() < 1e-12, "{}", tl.imbalance());
+        let idle = Timeline {
+            epoch_cycles: 64,
+            channels: vec![Vec::new()],
+        };
+        assert_eq!(idle.imbalance(), 1.0);
+    }
+
+    #[test]
+    fn json_shape_and_derived_rates() {
+        let tl = Timeline {
+            epoch_cycles: 100,
+            channels: vec![vec![EpochSample {
+                epoch: 2,
+                data_cycles: 50,
+                axi_bursts: 4,
+                row_hits: 3,
+                row_misses: 1,
+                row_switches: 0,
+                turnarounds: 1,
+            }]],
+        };
+        let cfg = MemConfig::default(); // 8 B/beat, 100 MHz
+        let j = tl.to_json(&cfg, 0.5);
+        let ch = j.get("channels").and_then(Json::as_arr).unwrap();
+        let e = ch[0].idx(0).unwrap();
+        assert_eq!(e.get("epoch").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(e.get("bus_util").and_then(Json::as_f64), Some(0.5));
+        assert_eq!(e.get("row_hit_rate").and_then(Json::as_f64), Some(0.75));
+        // 50 beats × 8 B × 100 MHz / 100 cycles = 400 MB/s raw
+        assert_eq!(e.get("raw_mb_s").and_then(Json::as_f64), Some(400.0));
+        assert_eq!(e.get("eff_mb_s").and_then(Json::as_f64), Some(200.0));
+        assert_eq!(
+            j.get("totals").and_then(|t| t.get("data_cycles")).and_then(Json::as_f64),
+            Some(50.0)
+        );
+        // byte-determinism: same integers → same bytes
+        assert_eq!(
+            j.to_string_pretty(),
+            tl.to_json(&cfg, 0.5).to_string_pretty()
+        );
+    }
+}

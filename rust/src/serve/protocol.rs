@@ -15,10 +15,11 @@
 //! {"cmd":"tune","id":ID, "space":"tiny"|{...}, "strategy":"exhaustive",
 //!  "seed":0, "budget":0, "parallel":1, "out":PATH?, "resume":PATH?,
 //!  "retry_failed":true, "deadline_secs":0, "trace_cache":true,
-//!  "stream":false}
+//!  "stream":false, "profile":PATH?}
 //! {"cmd":"run","id":ID, "workload":"jacobi2d5p", "tile":[16,16,16],
 //!  "tiles_per_dim":3, "layout":"cfa", "mode":"timing"|"sweep",
-//!  "channels":1, "striping":"address:4096"?, "threads":1}
+//!  "channels":1, "striping":"address:4096"?, "threads":1,
+//!  "profile":PATH?}
 //! {"cmd":"plan","id":ID, "workload":..., "tile":[...],
 //!  "tiles_per_dim":3, "layout":"cfa"}
 //! {"cmd":"stats","id":ID}
@@ -67,6 +68,10 @@ pub struct TuneRequest {
     pub deadline_secs: u64,
     pub trace_cache: bool,
     pub stream: bool,
+    /// Server-side span-trace output path: the job runs under a span
+    /// capture and writes Chrome trace-event JSON here. Advisory wall
+    /// time only — journal bytes are unaffected.
+    pub profile: Option<String>,
 }
 
 /// `{"cmd":"run",...}` — one experiment session, timing or sweep mode
@@ -80,6 +85,8 @@ pub struct RunRequest {
     pub channels: usize,
     pub striping: Option<Striping>,
     pub threads: usize,
+    /// Server-side span-trace output path (see [`TuneRequest::profile`]).
+    pub profile: Option<String>,
 }
 
 /// `{"cmd":"plan",...}` — layout facts for one geometry, no simulation.
@@ -167,6 +174,7 @@ fn parse_tune(j: &Json) -> Result<TuneRequest> {
         deadline_secs: field_u64(j, "deadline_secs", 0)?,
         trace_cache: field_bool(j, "trace_cache", true)?,
         stream: field_bool(j, "stream", false)?,
+        profile: field_str(j, "profile"),
     })
 }
 
@@ -189,6 +197,7 @@ fn parse_run(j: &Json) -> Result<RunRequest> {
         channels: field_u64(j, "channels", 1)?.max(1) as usize,
         striping,
         threads: field_u64(j, "threads", 1)?.max(1) as usize,
+        profile: field_str(j, "profile"),
     })
 }
 
@@ -327,6 +336,7 @@ mod tests {
                 assert!(t.trace_cache);
                 assert!(!t.stream);
                 assert!(t.out.is_none());
+                assert!(t.profile.is_none());
                 let reg = crate::layout::registry::global();
                 assert_eq!(
                     t.space.enumerate(&reg).unwrap().len(),
@@ -379,6 +389,7 @@ mod tests {
                 assert_eq!(r.channels, 4);
                 assert_eq!(r.tile, vec![8, 8, 8]);
                 assert!(r.striping.is_some());
+                assert!(r.profile.is_none());
             }
             _ => panic!("expected run"),
         }

@@ -15,6 +15,7 @@
 //! cooperatively stopping with a resumable journal).
 
 use crate::dse::CancelToken;
+use crate::obs::metrics::Gauge;
 use crate::serve::protocol::{Reply, Request};
 use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, PoisonError};
@@ -30,10 +31,13 @@ pub struct Job {
 }
 
 /// The bounded pool. `run` is the job executor (the server's dispatch);
-/// workers own nothing else.
+/// workers own nothing else. Queue occupancy is published as the
+/// registry gauge `cfa.serve.queue_depth` (incremented on a successful
+/// submit, decremented when a worker takes the job).
 pub struct WorkerPool {
     tx: Option<SyncSender<Job>>,
     handles: Vec<JoinHandle<()>>,
+    depth: Gauge,
 }
 
 impl WorkerPool {
@@ -44,10 +48,12 @@ impl WorkerPool {
         let (tx, rx) = mpsc::sync_channel::<Job>(depth.max(1));
         let rx: Arc<Mutex<Receiver<Job>>> = Arc::new(Mutex::new(rx));
         let run = Arc::new(run);
+        let queue_depth = crate::obs::registry().gauge("cfa.serve.queue_depth");
         let handles = (0..workers.max(1))
             .map(|i| {
                 let rx = rx.clone();
                 let run = run.clone();
+                let queue_depth = queue_depth.clone();
                 std::thread::Builder::new()
                     .name(format!("cfa-serve-worker-{i}"))
                     .spawn(move || loop {
@@ -60,7 +66,10 @@ impl WorkerPool {
                             guard.recv()
                         };
                         match job {
-                            Ok(job) => run(job),
+                            Ok(job) => {
+                                queue_depth.dec();
+                                run(job)
+                            }
                             // disconnected AND drained: the pool is done
                             Err(_) => break,
                         }
@@ -71,6 +80,7 @@ impl WorkerPool {
         WorkerPool {
             tx: Some(tx),
             handles,
+            depth: queue_depth,
         }
     }
 
@@ -81,7 +91,10 @@ impl WorkerPool {
         match self.tx.as_ref() {
             None => Err(job),
             Some(tx) => match tx.try_send(job) {
-                Ok(()) => Ok(()),
+                Ok(()) => {
+                    self.depth.inc();
+                    Ok(())
+                }
                 Err(TrySendError::Full(j)) | Err(TrySendError::Disconnected(j)) => Err(j),
             },
         }
@@ -129,8 +142,15 @@ mod tests {
         for i in 0..10 {
             pool.submit(job(&format!("j{i}"))).map_err(|_| ()).unwrap();
         }
+        // the depth gauge is registered while the pool is alive (other
+        // pools in this binary may contribute cells to the same name)
+        assert!(crate::obs::registry()
+            .snapshot()
+            .contains_key("cfa.serve.queue_depth"));
+        let depth = pool.depth.clone();
         pool.join();
         assert_eq!(ran.load(Ordering::SeqCst), 10, "queued jobs ran before exit");
+        assert_eq!(depth.get(), 0, "every queued job was taken off the gauge");
     }
 
     #[test]

@@ -41,40 +41,50 @@ use crate::poly::tiling::Tiling;
 use crate::serve::batcher::Batcher;
 use crate::serve::protocol::{self, parse_line, Reply, Request, RunRequest, TuneRequest};
 use crate::serve::queue::{Job, WorkerPool};
+use crate::obs::metrics::{Counter, Gauge, Histogram};
 use crate::util::json::Json;
 use crate::util::par::try_parallel_map;
 use crate::util::{faults, signals};
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::{self, BufRead, BufReader, Write};
 use std::net::TcpListener;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, PoisonError};
 use std::time::Duration;
 
 /// Process-wide shared state: the compiled-state caches every tenant
 /// shares, plus the daemon's counters and shutdown machinery.
+///
+/// The counters are registry-backed handles ([`crate::obs::metrics`])
+/// named `cfa.serve.{requests,rejected,errors}` (counters),
+/// `cfa.serve.active` (gauge), and `cfa.serve.request_micros`
+/// (histogram); the `stats` reply reads the same handles the registry
+/// snapshot sums.
 pub struct ServeState {
     registry: LayoutRegistry,
     sessions: Arc<SessionCache>,
     traces: Arc<Batcher>,
-    requests: AtomicU64,
-    rejected: AtomicU64,
-    errors: AtomicU64,
-    active: AtomicU64,
+    requests: Counter,
+    rejected: Counter,
+    errors: Counter,
+    active: Gauge,
+    request_micros: Histogram,
     shutdown: AtomicBool,
     tokens: Mutex<Vec<CancelToken>>,
 }
 
 impl ServeState {
     fn new() -> ServeState {
+        let m = crate::obs::registry();
         ServeState {
             registry: crate::layout::registry::global(),
             sessions: Arc::new(SessionCache::new()),
             traces: Arc::new(Batcher::new()),
-            requests: AtomicU64::new(0),
-            rejected: AtomicU64::new(0),
-            errors: AtomicU64::new(0),
-            active: AtomicU64::new(0),
+            requests: m.counter("cfa.serve.requests"),
+            rejected: m.counter("cfa.serve.rejected"),
+            errors: m.counter("cfa.serve.errors"),
+            active: m.gauge("cfa.serve.active"),
+            request_micros: m.histogram("cfa.serve.request_micros"),
             shutdown: AtomicBool::new(false),
             tokens: Mutex::new(Vec::new()),
         }
@@ -92,22 +102,22 @@ impl ServeState {
 
     /// Request lines seen (including malformed ones).
     pub fn requests(&self) -> u64 {
-        self.requests.load(Ordering::Relaxed)
+        self.requests.get()
     }
 
     /// Requests bounced by backpressure.
     pub fn rejected(&self) -> u64 {
-        self.rejected.load(Ordering::Relaxed)
+        self.rejected.get()
     }
 
     /// Requests that ended in an `error` reply.
     pub fn errors(&self) -> u64 {
-        self.errors.load(Ordering::Relaxed)
+        self.errors.get()
     }
 
     /// Jobs currently executing on workers.
     pub fn active(&self) -> u64 {
-        self.active.load(Ordering::Relaxed)
+        self.active.get()
     }
 
     pub fn shutdown_requested(&self) -> bool {
@@ -218,23 +228,26 @@ impl Server {
             if trimmed.is_empty() {
                 continue;
             }
-            self.state.requests.fetch_add(1, Ordering::Relaxed);
+            self.state.requests.inc();
             // parse under quarantine: a panic (incl. CFA_FAULTS at
             // serve::parse) errors this line only
-            let parsed = try_parallel_map(std::slice::from_ref(&trimmed), 1, |l: &&str| {
-                faults::check("serve::parse");
-                parse_line(l)
-            })
-            .pop()
-            .expect("one item in, one result out");
+            let parsed = {
+                let _span = crate::obs::span("serve::parse");
+                try_parallel_map(std::slice::from_ref(&trimmed), 1, |l: &&str| {
+                    faults::check("serve::parse");
+                    parse_line(l)
+                })
+                .pop()
+                .expect("one item in, one result out")
+            };
             let (id, req) = match parsed {
                 Err(p) => {
-                    self.state.errors.fetch_add(1, Ordering::Relaxed);
+                    self.state.errors.inc();
                     let _ = reply.send(&protocol::error_event("", &p.message()));
                     continue;
                 }
                 Ok((id, Err(e))) => {
-                    self.state.errors.fetch_add(1, Ordering::Relaxed);
+                    self.state.errors.inc();
                     let _ = reply.send(&protocol::error_event(&id, &format!("{e:#}")));
                     continue;
                 }
@@ -254,6 +267,7 @@ impl Server {
                     break;
                 }
                 req => {
+                    let _span = crate::obs::span("serve::enqueue");
                     // the enqueue fault site, quarantined the same way
                     let fault = try_parallel_map(&[()], 1, |_: &()| {
                         faults::check("serve::enqueue");
@@ -261,7 +275,7 @@ impl Server {
                     .pop()
                     .expect("one item in, one result out");
                     if let Err(p) = fault {
-                        self.state.errors.fetch_add(1, Ordering::Relaxed);
+                        self.state.errors.inc();
                         let _ = reply.send(&protocol::error_event(&id, &p.message()));
                         continue;
                     }
@@ -277,7 +291,7 @@ impl Server {
                     let _ = reply.send_atomically(|| match self.submit(job) {
                         Ok(()) => protocol::accepted(&id),
                         Err(_) => {
-                            self.state.rejected.fetch_add(1, Ordering::Relaxed);
+                            self.state.rejected.inc();
                             protocol::rejected(&id, "queue full; resend when earlier requests finish")
                         }
                     });
@@ -304,8 +318,21 @@ impl Server {
     }
 }
 
+/// The request's server-side profile path, when the client asked for a
+/// span trace of this job.
+fn profile_path(req: &Request) -> Option<String> {
+    match req {
+        Request::Tune(t) => t.profile.clone(),
+        Request::Run(r) => r.profile.clone(),
+        _ => None,
+    }
+}
+
 /// One worker iteration: execute under per-request quarantine, then send
-/// the terminal reply.
+/// the terminal reply. With a `profile` path on the request, the whole
+/// execution runs under a span capture whose Chrome trace-event JSON is
+/// written server-side (concurrent jobs profiling at once each see the
+/// union window — advisory wall time, never journal input).
 fn run_job(state: &Arc<ServeState>, job: Job) {
     let Job {
         id,
@@ -313,26 +340,43 @@ fn run_job(state: &Arc<ServeState>, job: Job) {
         reply,
         cancel,
     } = job;
-    state.active.fetch_add(1, Ordering::SeqCst);
-    let result = try_parallel_map(std::slice::from_ref(&req), 1, |r: &Request| {
-        execute(state, &id, r, &reply, &cancel)
-    })
-    .pop()
-    .expect("one item in, one result out");
+    state.active.inc();
+    let started = std::time::Instant::now();
+    let capture = profile_path(&req).map(|p| (crate::obs::begin_capture(), p));
+    let result = {
+        let _span = crate::obs::span("serve::run");
+        try_parallel_map(std::slice::from_ref(&req), 1, |r: &Request| {
+            execute(state, &id, r, &reply, &cancel)
+        })
+        .pop()
+        .expect("one item in, one result out")
+    };
+    let profile_err = capture.and_then(|(cap, path)| cap.export(&path).err().map(|e| (path, e)));
+    let _span = crate::obs::span("serve::respond");
     match result {
-        Ok(Ok(data)) => {
-            let _ = reply.send(&protocol::done(&id, data));
-        }
+        Ok(Ok(data)) => match profile_err {
+            None => {
+                let _ = reply.send(&protocol::done(&id, data));
+            }
+            Some((path, e)) => {
+                state.errors.inc();
+                let _ = reply.send(&protocol::error_event(
+                    &id,
+                    &format!("writing profile '{path}': {e}"),
+                ));
+            }
+        },
         Ok(Err(e)) => {
-            state.errors.fetch_add(1, Ordering::Relaxed);
+            state.errors.inc();
             let _ = reply.send(&protocol::error_event(&id, &format!("{e:#}")));
         }
         Err(p) => {
-            state.errors.fetch_add(1, Ordering::Relaxed);
+            state.errors.inc();
             let _ = reply.send(&protocol::error_event(&id, &p.message()));
         }
     }
-    state.active.fetch_sub(1, Ordering::SeqCst);
+    state.request_micros.record(started.elapsed().as_micros() as u64);
+    state.active.dec();
 }
 
 fn execute(

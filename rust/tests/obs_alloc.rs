@@ -1,0 +1,72 @@
+//! The disabled observability fast paths allocate **nothing**.
+//!
+//! This is the contract that lets hot loops (the memsim replay kernel,
+//! the serve dispatch, the dse evaluator) keep their instrumentation
+//! permanently: `span()` with no active capture is one relaxed atomic
+//! load, and metric updates are single atomic RMWs on pre-registered
+//! cells. A counting `#[global_allocator]` pins that to exactly zero
+//! heap traffic.
+//!
+//! This lives in its own integration binary on purpose: the check is
+//! only meaningful while no capture is active and no concurrent test is
+//! allocating, so nothing else may run in this process.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn disabled_spans_and_metric_updates_never_touch_the_heap() {
+    assert!(
+        !cfa::obs::enabled(),
+        "no capture may be active in this binary"
+    );
+
+    // handle creation allocates (registry entry + Arc) — do it up front
+    let m = cfa::obs::registry();
+    let counter = m.counter("cfa.test.alloc_counter");
+    let gauge = m.gauge("cfa.test.alloc_gauge");
+    let histogram = m.histogram("cfa.test.alloc_histogram");
+
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for i in 0..100_000u64 {
+        let _s = cfa::obs::span("alloc::hot");
+        counter.inc();
+        counter.add(2);
+        gauge.inc();
+        gauge.dec();
+        gauge.set(i);
+        histogram.record(i);
+    }
+    let delta = ALLOC_CALLS.load(Ordering::SeqCst) - before;
+    assert_eq!(
+        delta, 0,
+        "disabled span()/metric updates allocated {delta} time(s)"
+    );
+    assert_eq!(counter.get(), 300_000, "the loop really ran");
+    assert_eq!(histogram.count(), 100_000);
+}

@@ -1,0 +1,219 @@
+//! Integration contracts for the observability layer (`cfa::obs`):
+//!
+//! * random span nestings always capture as balanced, per-thread LIFO
+//!   event streams with monotone begin ids (property test);
+//! * `Capture::export` writes Chrome trace-event JSON that round-trips
+//!   through the project's own parser with the documented shape;
+//! * timeline sampling is **passive**: `run_trace_with_timeline`
+//!   reproduces `run_trace` bit for bit, and the epoch sums equal the
+//!   aggregate `Timing` counters exactly, at any epoch granularity;
+//! * multi-channel timelines are identical across serial and parallel
+//!   replay, through the `Session` front door.
+//!
+//! The zero-allocation contract of the disabled span path lives in its
+//! own binary (`tests/obs_alloc.rs`) because it needs a counting global
+//! allocator and no concurrently-capturing neighbours.
+
+use cfa::experiment::{ExperimentSpec, Mode, ScheduleKind, Session};
+use cfa::obs::span::{current_tid, events_balanced};
+use cfa::obs::{begin_capture, span, SpanEvent};
+use cfa::util::json::{self, Json};
+use cfa::util::prop::{run as prop_run, Config, Gen};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Tests that open a capture serialize on this lock: captures are
+/// process-global (refcounted), so two concurrent capturing tests would
+/// each see the union window. Filtering by tid makes that safe, but
+/// serializing keeps the windows small and the assertions sharp.
+fn serial() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Only this thread's events: other tests in this binary run
+/// instrumented code (session replays) whose spans land in the same
+/// process-global sink while our capture is open.
+fn mine(events: Vec<SpanEvent>) -> Vec<SpanEvent> {
+    let tid = current_tid();
+    events.into_iter().filter(|e| e.tid == tid).collect()
+}
+
+const NAMES: [&str; 4] = ["prop::a", "prop::b", "prop::c", "prop::d"];
+
+/// Open a random tree of nested spans; returns the number opened.
+fn weave(g: &Gen, depth: usize) -> usize {
+    let mut opened = 0;
+    for _ in 0..g.usize(0, 3) {
+        let _s = span(NAMES[g.usize(0, NAMES.len() - 1)]);
+        opened += 1;
+        if depth > 0 {
+            opened += weave(g, depth - 1);
+        }
+        // _s drops here: strictly LIFO by construction
+    }
+    opened
+}
+
+#[test]
+fn prop_random_span_nestings_capture_balanced_and_lifo() {
+    let _g = serial();
+    prop_run("span nesting balances", Config::small(32), |g| {
+        let cap = begin_capture();
+        let opened = weave(g, g.usize(0, 3));
+        let events = mine(cap.finish());
+        assert_eq!(events.len(), 2 * opened, "one B and one E per span");
+        assert!(events_balanced(&events), "per-thread LIFO violated");
+        // begin ids are monotone on one thread, and every id closes
+        let begins: Vec<u64> = events.iter().filter(|e| e.begin).map(|e| e.id).collect();
+        let mut sorted = begins.clone();
+        sorted.sort_unstable();
+        assert_eq!(begins, sorted, "begin order is id order");
+        for id in begins {
+            let n = events.iter().filter(|e| e.id == id).count();
+            assert_eq!(n, 2, "span id {id} must appear exactly as a B/E pair");
+        }
+    });
+}
+
+#[test]
+fn exported_profile_round_trips_through_the_project_json_parser() {
+    let _g = serial();
+    let path = std::env::temp_dir().join("cfa_obs_api_profile.json");
+    std::fs::remove_file(&path).ok();
+
+    let cap = begin_capture();
+    {
+        let _outer = span("export::outer");
+        let _inner = span("export::inner");
+    }
+    cap.export(&path).expect("export writes the profile");
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let parsed = json::parse(&text).expect("Perfetto-loadable JSON");
+    assert_eq!(
+        parsed.get("displayTimeUnit").and_then(Json::as_str),
+        Some("ms")
+    );
+    let all = parsed
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    let tid = current_tid() as f64;
+    let ours: Vec<&Json> = all
+        .iter()
+        .filter(|e| e.get("tid").and_then(Json::as_f64) == Some(tid))
+        .collect();
+    assert_eq!(ours.len(), 4, "two spans, B+E each");
+    let mut last_ts = 0.0;
+    for e in &ours {
+        assert_eq!(e.get("cat").and_then(Json::as_str), Some("cfa"));
+        let ph = e.get("ph").and_then(Json::as_str).unwrap();
+        assert!(ph == "B" || ph == "E", "duration events only, got {ph}");
+        assert!(e.get("name").and_then(Json::as_str).is_some());
+        assert!(
+            e.get("args")
+                .and_then(|a| a.get("span_id"))
+                .and_then(Json::as_f64)
+                .is_some(),
+            "span_id rides in args"
+        );
+        let ts = e.get("ts").and_then(Json::as_f64).unwrap();
+        assert!(ts >= last_ts, "timestamps are monotone within a thread");
+        last_ts = ts;
+    }
+    let names: Vec<&str> = ours
+        .iter()
+        .map(|e| e.get("name").and_then(Json::as_str).unwrap())
+        .collect();
+    assert_eq!(
+        names,
+        ["export::outer", "export::inner", "export::inner", "export::outer"]
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+fn tiny_session(channels: usize, threads: usize) -> Session {
+    ExperimentSpec::builder()
+        .named("jacobi2d5p", vec![8, 8, 8], 2)
+        .schedule(ScheduleKind::Flat)
+        .channels(channels)
+        .threads(threads)
+        .compile()
+        .unwrap()
+}
+
+#[test]
+fn timeline_sampling_is_passive_and_epoch_sums_equal_the_timing() {
+    let session = tiny_session(1, 1);
+    let trace = session.compile_trace();
+    let plain = session.run_trace(&trace).unwrap();
+    let (sampled, tl) = session.run_trace_with_timeline(&trace, 256).unwrap();
+
+    // passive: the sampled report is bit-identical to the unsampled one
+    assert_eq!(plain.timing, sampled.timing);
+    assert_eq!(plain.makespan_cycles, sampled.makespan_cycles);
+    assert_eq!(plain.raw_bytes, sampled.raw_bytes);
+    assert_eq!(plain.useful_bytes, sampled.useful_bytes);
+    assert_eq!(plain.transactions, sampled.transactions);
+    assert_eq!(
+        plain.effective_mb_s.to_bits(),
+        sampled.effective_mb_s.to_bits()
+    );
+
+    // the headline identity: epochs sum exactly to the aggregate Timing
+    let timing = sampled.timing.as_ref().expect("timing-mode report");
+    assert!(tl.matches(timing), "epoch sums != aggregate counters");
+    assert_eq!(tl.channels.len(), 1);
+    assert!(!tl.channels[0].is_empty(), "a real run has traffic");
+
+    // granularity invariance: any epoch size sums to the same totals
+    for epoch_cycles in [1, 17, 4096, u64::MAX] {
+        let (_, tl2) = session
+            .run_trace_with_timeline(&trace, epoch_cycles)
+            .unwrap();
+        assert!(tl2.matches(timing), "epoch_cycles={epoch_cycles}");
+        let (a, b) = (tl.totals(), tl2.totals());
+        assert_eq!(a.data_cycles, b.data_cycles);
+        assert_eq!(a.axi_bursts, b.axi_bursts);
+        assert_eq!(a.row_hits, b.row_hits);
+        assert_eq!(a.row_misses, b.row_misses);
+    }
+}
+
+#[test]
+fn multichannel_timelines_identical_across_serial_and_parallel_replay() {
+    let serial_session = tiny_session(4, 1);
+    let parallel_session = tiny_session(4, 4);
+    let trace_s = serial_session.compile_trace();
+    let trace_p = parallel_session.compile_trace();
+
+    let (rep_s, tl_s) = serial_session.run_trace_with_timeline(&trace_s, 512).unwrap();
+    let (rep_p, tl_p) = parallel_session
+        .run_trace_with_timeline(&trace_p, 512)
+        .unwrap();
+
+    assert_eq!(rep_s.timing, rep_p.timing);
+    assert_eq!(tl_s, tl_p, "timeline depends on thread count");
+    assert_eq!(tl_s.channels.len(), 4, "one epoch list per channel");
+    assert!(tl_s.matches(rep_s.timing.as_ref().unwrap()));
+    assert!(tl_s.imbalance() >= 1.0);
+
+    // the artifact itself is byte-deterministic
+    let mem = cfa::memsim::MemConfig::default();
+    assert_eq!(
+        tl_s.to_json(&mem, 1.0).to_string_pretty(),
+        tl_p.to_json(&mem, 1.0).to_string_pretty()
+    );
+}
+
+#[test]
+fn timing_mode_still_matches_trace_replay_with_observability_wired_in() {
+    // regression guard: the spans and samplers added through the replay
+    // path must not perturb the Mode::Timing ≡ trace-replay identity
+    let session = tiny_session(1, 1);
+    let direct = session.run(Mode::Timing).unwrap();
+    let trace = session.compile_trace();
+    let replayed = session.run_trace(&trace).unwrap();
+    assert_eq!(replayed.timing, direct.timing);
+    assert_eq!(replayed.makespan_cycles, direct.makespan_cycles);
+}

@@ -173,6 +173,80 @@ fn a_later_tenant_compiles_nothing_at_all() {
     assert_eq!(std::fs::read(&out_late).unwrap(), ref_bytes);
 }
 
+#[test]
+fn stats_reply_is_registry_backed_with_unchanged_schema() {
+    // the counters moved onto the obs metrics registry; the `stats`
+    // payload must keep the exact pre-migration key set, sorted-compact
+    // shape, and values equal to the state accessors
+    let server = Server::new(1, 4);
+    let (buf, writer) = sink();
+    let script = concat!(
+        "not json\n",
+        "{\"cmd\":\"run\",\"id\":\"r\",\"workload\":\"jacobi2d5p\",\"tile\":[8,8,8],\"tiles_per_dim\":2}\n",
+        "{\"cmd\":\"shutdown\",\"id\":\"z\"}\n",
+    );
+    server.serve_connection(Cursor::new(script), writer, false);
+    server.shutdown_and_join();
+    assert!(find(&replies(&buf), "r", "done").is_some());
+    let state = server.state();
+    let s = state.stats_json().to_string_compact();
+    assert!(
+        s.starts_with(&format!(
+            "{{\"active\":{},\"errors\":{},\"plans\":",
+            state.active(),
+            state.errors()
+        )),
+        "{s}"
+    );
+    assert!(s.contains(&format!("\"rejected\":{}", state.rejected())), "{s}");
+    assert!(s.contains(&format!("\"requests\":{}", state.requests())), "{s}");
+    assert!(s.contains("\"sessions\":{\"entries\":"), "{s}");
+    assert!(s.contains("\"traces\":{\"entries\":"), "{s}");
+    assert_eq!(state.errors(), 1, "the garbage line");
+    assert_eq!(state.requests(), 3);
+    // the per-instance handles feed the same process-wide registry the
+    // snapshot sums, under the documented names
+    // (`cfa.serve.queue_depth` lives on the worker pool, which
+    // shutdown_and_join already dropped — its cell left the snapshot
+    // with it; queue.rs covers it while a pool is alive)
+    let snap = cfa::obs::registry().snapshot();
+    assert!(snap.get("cfa.serve.requests").copied().unwrap_or(0) >= 3);
+}
+
+#[test]
+fn profiled_tune_request_writes_a_span_trace_and_identical_journal() {
+    let ref_path = tmp("cfa_serve_prof_ref.jsonl");
+    reference_journal(&ref_path);
+    let server = Server::new(2, 8);
+    let out = tmp("cfa_serve_prof.jsonl");
+    let prof = tmp("cfa_serve_prof_trace.json");
+    let (buf, writer) = sink();
+    let script = format!(
+        "{{\"cmd\":\"tune\",\"id\":\"t\",\"space\":\"tiny\",\"out\":\"{}\",\"profile\":\"{}\"}}\n",
+        out.display(),
+        prof.display()
+    );
+    server.serve_connection(Cursor::new(script), writer, false);
+    server.shutdown_and_join();
+    assert!(find(&replies(&buf), "t", "done").is_some());
+    // the profile is valid Chrome trace-event JSON with events in it
+    // (balance is not asserted: concurrent capture windows may clip)
+    let text = std::fs::read_to_string(&prof).unwrap();
+    let j = json::parse(&text).expect("profile is valid JSON");
+    let events = j.get("traceEvents").and_then(Json::as_arr).unwrap();
+    assert!(!events.is_empty(), "the capture saw the tune's spans");
+    assert!(events
+        .iter()
+        .any(|e| e.get("name").and_then(Json::as_str) == Some("dse::evaluate")));
+    // ... and profiling never touches journal bytes
+    assert_eq!(
+        std::fs::read(&out).unwrap(),
+        std::fs::read(&ref_path).unwrap(),
+        "profiled tenant journal != cfa tune bytes"
+    );
+    std::fs::remove_file(&prof).ok();
+}
+
 // --- spawned-daemon tests (process isolation for faults and kill -9) ---
 
 fn spawn_daemon(envs: &[(&str, &str)]) -> Child {

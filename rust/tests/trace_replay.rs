@@ -273,6 +273,35 @@ fn tune_journal_bytes_identical_with_cache_on_and_off() {
 }
 
 #[test]
+fn tune_journal_bytes_identical_with_profile_on_and_off() {
+    // span capture records wall time, which must never feed the journal:
+    // a tune run under --profile writes byte-identical records
+    let space = || Space::builtin("tiny").unwrap();
+    let plain = tmp("cfa_trace_tune_noprof.jsonl");
+    let profiled = tmp("cfa_trace_tune_prof.jsonl");
+    Explorer::new(space(), Box::new(Exhaustive::new()))
+        .journal(&plain)
+        .explore()
+        .unwrap();
+    let cap = cfa::obs::begin_capture();
+    Explorer::new(space(), Box::new(Exhaustive::new()))
+        .journal(&profiled)
+        .explore()
+        .unwrap();
+    let events = cap.finish();
+    assert!(
+        events.iter().any(|e| e.name == "dse::evaluate"),
+        "the capture saw the evaluation spans"
+    );
+    let a = std::fs::read(&plain).unwrap();
+    let b = std::fs::read(&profiled).unwrap();
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "span capture changed journal bytes");
+    std::fs::remove_file(&plain).ok();
+    std::fs::remove_file(&profiled).ok();
+}
+
+#[test]
 fn degenerate_space_configs_error_at_parse_time() {
     let err = Space::parse(
         r#"{"workloads": ["jacobi2d5p"],
