@@ -1,0 +1,268 @@
+//! Explorer scaling: model-guided search + early-abort replay vs the
+//! exhaustive full-replay baseline, and sharded exploration folded back
+//! with `journal::merge`.
+//!
+//! Run: `cargo bench --bench explorer_scaling [-- --smoke] [-- --out PATH]`
+//!
+//! Every run first asserts the scaling identities (verification tier 12):
+//! the pruned model-guided front is byte-identical to the exhaustive
+//! front with strictly fewer full replays (the `pruned` counter proves
+//! it), and a 2-shard run merged under the space's enumeration order
+//! reproduces the unsharded journal file byte for byte. Then it records
+//! machine-readable results to `BENCH_dse.json` at the repo root
+//! (override with `--out`). `--smoke` runs check the rig, not the
+//! numbers: without an explicit `--out` they write
+//! `BENCH_dse.smoke.json`, so a CI smoke pass can never clobber real
+//! recorded results.
+
+use std::path::PathBuf;
+
+use cfa::dse::{journal, Evaluation, Exhaustive, Explorer, MemVariant, ModelGuided, Point, Space};
+use cfa::layout::registry;
+use cfa::memsim::MemConfig;
+use cfa::util::json::Json;
+use cfa::util::stats::{black_box, Bencher, Measurement};
+
+fn measurement_json(m: &Measurement) -> Json {
+    let mut fields = vec![
+        ("name", Json::str(m.name.clone())),
+        ("median_s", Json::num(m.summary.median)),
+        ("p05_s", Json::num(m.summary.p05)),
+        ("p95_s", Json::num(m.summary.p95)),
+        ("samples", Json::num(m.summary.n as f64)),
+    ];
+    if let Some(e) = m.elems_per_sec() {
+        fields.push(("points_per_s", Json::num(e)));
+    }
+    Json::obj(fields)
+}
+
+fn render_sorted(evals: &[Evaluation]) -> Vec<String> {
+    let mut v: Vec<String> = evals.iter().map(|e| e.to_json().to_string_compact()).collect();
+    v.sort();
+    v
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(name);
+    std::fs::remove_file(&p).ok();
+    p
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| {
+            if smoke {
+                concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_dse.smoke.json").to_string()
+            } else {
+                concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_dse.json").to_string()
+            }
+        });
+    let b = if smoke { Bencher::quick() } else { Bencher::default() };
+    let mut results: Vec<Measurement> = Vec::new();
+
+    // the tiny space, widened with the HBM-like geometry off-smoke so the
+    // exploration has more than one memory to rank across
+    let mut space = Space::builtin("tiny").unwrap();
+    if !smoke {
+        space.mems = vec![
+            MemVariant::paper_default(),
+            MemVariant::new("hbm", MemConfig::preset("hbm").unwrap()),
+        ];
+    }
+    let reg = registry::global();
+    let points = space.enumerate(&reg).unwrap();
+    let total = points.len();
+    let n_points = total as u64;
+
+    // ---- identity gate 1: exhaustive reference (journaled for the merge
+    // comparison below)
+    let unsharded_journal = tmp("cfa_bench_dse_unsharded.jsonl");
+    let reference = Explorer::new(space.clone(), Box::new(Exhaustive::new()))
+        .journal(&unsharded_journal)
+        .explore()
+        .unwrap();
+    assert_eq!(reference.evaluated, total);
+
+    // the warm-start rows a resumed campaign would hand the model: every
+    // scored point of a prior run
+    let warm_rows: Vec<(Point, f64)> = reference
+        .all
+        .iter()
+        .map(|e| (e.point().clone(), e.effective_mb_s()))
+        .collect();
+
+    // ---- identity gate 2: model-guided + early abort lands on the same
+    // front with strictly fewer full replays
+    let guided = Explorer::new(
+        space.clone(),
+        Box::new(ModelGuided::new(42).with_warm_start(warm_rows.clone())),
+    )
+    .prune(true)
+    .explore()
+    .unwrap();
+    assert_eq!(
+        render_sorted(&reference.front),
+        render_sorted(&guided.front),
+        "early abort changed the surviving front"
+    );
+    assert_eq!(
+        guided.evaluated + guided.pruned,
+        reference.evaluated,
+        "every point must be attempted, as a replay or a prune"
+    );
+    assert!(
+        guided.pruned > 0,
+        "early abort never fired: model-guided ran {} full replays, \
+         same as exhaustive",
+        guided.evaluated
+    );
+    let full = render_sorted(&reference.all);
+    for e in &guided.all {
+        assert!(
+            full.contains(&e.to_json().to_string_compact()),
+            "{} completed with different bytes under pruning",
+            e.fingerprint()
+        );
+    }
+    println!(
+        "identity: pruned model-guided front == exhaustive front \
+         ({} full replays instead of {}, {} pruned)",
+        guided.evaluated, reference.evaluated, guided.pruned
+    );
+
+    // ---- identity gate 3: 2-shard explore + merge reproduces the
+    // unsharded journal byte for byte
+    let shards = 2usize;
+    let shard_paths: Vec<PathBuf> = (0..shards)
+        .map(|i| {
+            let p = tmp(&format!("cfa_bench_dse_shard{i}.jsonl"));
+            let out = Explorer::new(space.clone(), Box::new(Exhaustive::new()))
+                .shard(i, shards)
+                .journal(&p)
+                .explore()
+                .unwrap();
+            assert_eq!(out.evaluated + out.sharded_out, total, "shard {i}");
+            p
+        })
+        .collect();
+    let merged = tmp("cfa_bench_dse_merged.jsonl");
+    let stats = journal::merge(&merged, &shard_paths, Some(&points)).unwrap();
+    assert_eq!(stats.written, total);
+    assert_eq!(stats.duplicates, 0);
+    assert_eq!(
+        std::fs::read_to_string(&unsharded_journal).unwrap(),
+        std::fs::read_to_string(&merged).unwrap(),
+        "merged shard journals differ from the unsharded run's"
+    );
+    println!("identity: {shards}-shard merge == unsharded journal ({total} records)");
+
+    // ---- measurements
+    results.push(
+        b.bench("explore exhaustive (full replays)", || {
+            black_box(
+                Explorer::new(space.clone(), Box::new(Exhaustive::new()))
+                    .explore()
+                    .unwrap(),
+            );
+        })
+        .with_work(n_points, n_points),
+    );
+    let m_exhaustive = results.last().unwrap().summary.median;
+    results.push(
+        b.bench("explore model-guided + prune (warm model)", || {
+            black_box(
+                Explorer::new(
+                    space.clone(),
+                    Box::new(ModelGuided::new(42).with_warm_start(warm_rows.clone())),
+                )
+                .prune(true)
+                .explore()
+                .unwrap(),
+            );
+        })
+        .with_work(n_points, n_points),
+    );
+    let m_guided = results.last().unwrap().summary.median;
+    results.push(
+        b.bench("explore model-guided cold (no warm start)", || {
+            black_box(
+                Explorer::new(space.clone(), Box::new(ModelGuided::new(42)))
+                    .prune(true)
+                    .explore()
+                    .unwrap(),
+            );
+        })
+        .with_work(n_points, n_points),
+    );
+    results.push(
+        b.bench("merge 2 shard journals", || {
+            let out = std::env::temp_dir().join("cfa_bench_dse_merge_iter.jsonl");
+            black_box(journal::merge(&out, &shard_paths, Some(&points)).unwrap());
+        })
+        .with_work(n_points, n_points),
+    );
+
+    let prune_speedup = m_exhaustive / m_guided;
+    println!("\nexplorer-scaling benchmarks:");
+    for m in &results {
+        println!("  {}", m.line());
+    }
+    println!(
+        "\nspeedups: model-guided + early abort {prune_speedup:.2}x over \
+         exhaustive ({} of {} replays pruned)",
+        guided.pruned, total
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("explorer_scaling")),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "workload",
+            Json::obj(vec![
+                ("space", Json::str("tiny")),
+                ("mems", Json::num(space.mems.len().max(1) as f64)),
+                ("points", Json::num(total as f64)),
+                ("shards", Json::num(shards as f64)),
+            ]),
+        ),
+        (
+            "counters",
+            Json::obj(vec![
+                ("full_replays_exhaustive", Json::num(reference.evaluated as f64)),
+                ("full_replays_model_guided", Json::num(guided.evaluated as f64)),
+                ("pruned_replays", Json::num(guided.pruned as f64)),
+            ]),
+        ),
+        (
+            "speedups",
+            Json::obj(vec![(
+                "model_guided_prune_vs_exhaustive",
+                Json::num(prune_speedup),
+            )]),
+        ),
+        ("identity_asserted", Json::Bool(true)),
+        (
+            "measurements",
+            Json::arr(results.iter().map(measurement_json)),
+        ),
+    ]);
+    // temp-then-rename: a killed bench never leaves a truncated schema seed
+    match cfa::util::fsx::write_atomic(&out_path, json.to_string_pretty()) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+
+    std::fs::remove_file(&unsharded_journal).ok();
+    std::fs::remove_file(&merged).ok();
+    for p in &shard_paths {
+        std::fs::remove_file(p).ok();
+    }
+    std::fs::remove_file(std::env::temp_dir().join("cfa_bench_dse_merge_iter.jsonl")).ok();
+}

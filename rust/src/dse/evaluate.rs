@@ -28,7 +28,9 @@
 
 use crate::area::{AreaEstimate, AreaModel};
 use crate::dse::space::{Point, Space};
-use crate::experiment::{ExperimentSpec, Mode, Report, ScheduleKind, Session, SessionCache};
+use crate::experiment::{
+    BoundedRun, ExperimentSpec, Mode, Report, ScheduleKind, Session, SessionCache,
+};
 use crate::layout::LayoutRegistry;
 use crate::memsim::{TraceCache, TraceProvider};
 use crate::poly::vec::IVec;
@@ -52,6 +54,14 @@ pub enum Evaluation {
     /// The point failed to compile/run (or its evaluation panicked); the
     /// rendered error is all that survives.
     Failed { point: Point, error: String },
+    /// The point's replay was early-aborted because its monotone
+    /// effective-bandwidth upper bound was already dominated by the Pareto
+    /// front (see `Explorer::prune`). The bound proves the point could
+    /// never have joined the front, so skipping it leaves the surviving
+    /// front byte-identical to a no-abort run. Resumable like a failure:
+    /// a resumed run retries pruned points (the front that dominated them
+    /// is not an input of a fresh exploration).
+    Pruned { point: Point, bound_mb_s: f64 },
 }
 
 impl Evaluation {
@@ -72,10 +82,20 @@ impl Evaluation {
         }
     }
 
-    /// The evaluated point (both variants carry one).
+    /// An early-abort (bound-dominated) record.
+    pub fn pruned(point: Point, bound_mb_s: f64) -> Evaluation {
+        Evaluation::Pruned {
+            point,
+            bound_mb_s,
+        }
+    }
+
+    /// The evaluated point (every variant carries one).
     pub fn point(&self) -> &Point {
         match self {
-            Evaluation::Success { point, .. } | Evaluation::Failed { point, .. } => point,
+            Evaluation::Success { point, .. }
+            | Evaluation::Failed { point, .. }
+            | Evaluation::Pruned { point, .. } => point,
         }
     }
 
@@ -88,11 +108,24 @@ impl Evaluation {
         matches!(self, Evaluation::Failed { .. })
     }
 
+    pub fn is_pruned(&self) -> bool {
+        matches!(self, Evaluation::Pruned { .. })
+    }
+
     /// The quarantined error, for [`Evaluation::Failed`] records.
     pub fn error(&self) -> Option<&str> {
         match self {
             Evaluation::Failed { error, .. } => Some(error),
-            Evaluation::Success { .. } => None,
+            Evaluation::Success { .. } | Evaluation::Pruned { .. } => None,
+        }
+    }
+
+    /// The abort-time bandwidth upper bound, for [`Evaluation::Pruned`]
+    /// records.
+    pub fn bound_mb_s(&self) -> Option<f64> {
+        match self {
+            Evaluation::Pruned { bound_mb_s, .. } => Some(*bound_mb_s),
+            _ => None,
         }
     }
 
@@ -100,7 +133,7 @@ impl Evaluation {
     pub fn report(&self) -> Option<&Report> {
         match self {
             Evaluation::Success { report, .. } => Some(report),
-            Evaluation::Failed { .. } => None,
+            Evaluation::Failed { .. } | Evaluation::Pruned { .. } => None,
         }
     }
 
@@ -108,25 +141,26 @@ impl Evaluation {
     pub fn area(&self) -> Option<&AreaEstimate> {
         match self {
             Evaluation::Success { area, .. } => Some(area),
-            Evaluation::Failed { .. } => None,
+            Evaluation::Failed { .. } | Evaluation::Pruned { .. } => None,
         }
     }
 
     /// Bandwidth objective (maximize): effective MB/s over the makespan.
-    /// A failure scores `-inf` — never on the front, dominated by anything.
+    /// Failures and pruned points score `-inf` — never on the front,
+    /// dominated by anything.
     pub fn effective_mb_s(&self) -> f64 {
         match self {
             Evaluation::Success { report, .. } => report.effective_mb_s,
-            Evaluation::Failed { .. } => f64::NEG_INFINITY,
+            Evaluation::Failed { .. } | Evaluation::Pruned { .. } => f64::NEG_INFINITY,
         }
     }
 
     /// Area objective (minimize): BRAM-36 blocks of the on-chip buffers.
-    /// A failure costs `u64::MAX` for the same reason.
+    /// Failures and pruned points cost `u64::MAX` for the same reason.
     pub fn bram36(&self) -> u64 {
         match self {
             Evaluation::Success { area, .. } => area.bram36,
-            Evaluation::Failed { .. } => u64::MAX,
+            Evaluation::Failed { .. } | Evaluation::Pruned { .. } => u64::MAX,
         }
     }
 
@@ -158,6 +192,12 @@ impl Evaluation {
                 ("point", point.to_json()),
                 ("error", Json::str(error)),
             ]),
+            Evaluation::Pruned { point, bound_mb_s } => Json::obj(vec![
+                ("fingerprint", Json::str(self.fingerprint())),
+                ("point", point.to_json()),
+                ("pruned", Json::Bool(true)),
+                ("bound_mb_s", Json::num(*bound_mb_s)),
+            ]),
         }
     }
 
@@ -175,6 +215,13 @@ impl Evaluation {
                     point.fingerprint()
                 );
             }
+        }
+        if j.get("pruned").is_some() {
+            let bound = j
+                .get("bound_mb_s")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("evaluation json: pruned record missing 'bound_mb_s'"))?;
+            return Ok(Evaluation::pruned(point, bound));
         }
         if let Some(error) = j.get("error").and_then(Json::as_str) {
             return Ok(Evaluation::failed(point, error));
@@ -217,6 +264,10 @@ impl Evaluation {
             Evaluation::Failed { error, .. } => {
                 format!("{}  FAILED: {error}", self.fingerprint())
             }
+            Evaluation::Pruned { bound_mb_s, .. } => format!(
+                "{}  PRUNED: bound {bound_mb_s:.1} MB/s dominated by the front",
+                self.fingerprint()
+            ),
         }
     }
 }
@@ -339,6 +390,66 @@ impl<'a> Evaluator<'a> {
         let area = AreaModel::default().estimate(session.allocation(), mv.cfg.elem_bytes);
         Ok(Evaluation::success(p.clone(), report, area))
     }
+
+    /// [`Evaluator::evaluate`] with early-abort: replay through
+    /// [`Session::run_trace_bounded`], aborting the moment the point's
+    /// monotone bandwidth upper bound — paired with its (replay-free) area
+    /// estimate — is dominated by any member of `front`, a snapshot of the
+    /// explorer's Pareto front keys ([`ParetoFront::keys`]).
+    ///
+    /// Points that run to completion produce records byte-identical to
+    /// [`Evaluator::evaluate`]'s. Multi-channel sessions have no bounded
+    /// replay mode (arbitration order makes a cheap per-entry bound loose
+    /// to the point of uselessness), so they always run to completion;
+    /// correctness is unaffected, only how much work pruning saves.
+    pub fn evaluate_pruned(&self, p: &Point, front: &[(f64, u64)]) -> Result<Evaluation> {
+        let _span = crate::obs::span("dse::evaluate");
+        let w = self
+            .space
+            .workload(&p.workload)
+            .ok_or_else(|| anyhow!("point references unknown workload '{}'", p.workload))?;
+        let mv = self
+            .space
+            .mem(&p.mem)
+            .ok_or_else(|| anyhow!("point references unknown mem variant '{}'", p.mem))?;
+        let space_box: IVec = p.tile.iter().map(|t| t * self.space.tiles_per_dim).collect();
+        let key = geometry_key(p, &space_box, &w.deps);
+        let spec = ExperimentSpec::builder()
+            .custom(p.workload.clone(), space_box, p.tile.clone(), w.deps.clone())
+            .layout(p.layout.clone())
+            .schedule(ScheduleKind::Flat)
+            .threads(1)
+            .pe_ops_per_cycle(p.pe)
+            .mem(mv.cfg.clone())
+            .channels(p.channels)
+            .striping(p.striping.clone())
+            .spec()
+            .with_context(|| format!("compiling {}", p.fingerprint()))?;
+        let session = match &self.sessions {
+            Some(cache) => Session::compile_with_cache(spec, &self.registry, cache),
+            None => Session::compile_with(spec, &self.registry),
+        }
+        .with_context(|| format!("compiling {}", p.fingerprint()))?;
+        // area is a pure function of the allocation — known before replay,
+        // which is what lets a *bandwidth* bound decide domination
+        let area = AreaModel::default().estimate(session.allocation(), mv.cfg.elem_bytes);
+        // bounded replay needs the trace path; compile one privately when
+        // no shared cache was attached
+        let trace = match &self.traces {
+            Some(cache) => cache.get_or_compile_with(&key, &mut || session.compile_trace()),
+            None => Arc::new(session.compile_trace()),
+        };
+        let bounded = session.run_trace_bounded(&trace, &mut |bound_mb_s| {
+            front.iter().any(|&k| dominates(k, (bound_mb_s, area.bram36)))
+        })?;
+        match bounded {
+            BoundedRun::Completed(mut report) => {
+                report.wall_secs = 0.0;
+                Ok(Evaluation::success(p.clone(), report, area))
+            }
+            BoundedRun::Pruned { bound_mb_s } => Ok(Evaluation::pruned(p.clone(), bound_mb_s)),
+        }
+    }
 }
 
 /// `a` dominates `b`: at least as good on both objectives (bandwidth up,
@@ -405,6 +516,14 @@ impl ParetoFront {
     /// `pareto_indices` over the full insertion sequence.
     pub fn indices(&self) -> Vec<usize> {
         self.members.iter().map(|&(i, _)| i).collect()
+    }
+
+    /// Objective keys of the surviving members, insertion order. This is
+    /// the snapshot the explorer hands to [`Evaluator::evaluate_pruned`]:
+    /// a candidate whose bandwidth *upper bound* is dominated by any of
+    /// these keys can never join the front.
+    pub fn keys(&self) -> Vec<(f64, u64)> {
+        self.members.iter().map(|&(_, k)| k).collect()
     }
 
     pub fn len(&self) -> usize {

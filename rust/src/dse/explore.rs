@@ -28,6 +28,26 @@
 //! byte-identical either way), and the Pareto front is maintained
 //! incrementally per evaluation ([`ParetoFront`]) instead of recomputed
 //! O(n²) at the end.
+//!
+//! **Early-abort replay** ([`Explorer::prune`], off by default): each
+//! point's replay runs through
+//! [`Session::run_trace_bounded`](crate::experiment::Session::run_trace_bounded),
+//! which aborts the moment the point's monotone effective-bandwidth upper
+//! bound — paired with its replay-free area estimate — is dominated by a
+//! snapshot of the Pareto front taken *before the batch fanned out* (so
+//! the decision is a pure function of prior results, not of worker
+//! timing). A dominated bound proves the point could never have joined
+//! the front, so the surviving front and every success record are
+//! byte-identical to a no-abort run; the aborted point is journaled as a
+//! resumable [`Evaluation::Pruned`] record carrying the bound.
+//!
+//! **Sharded exploration** ([`Explorer::shard`]): shard `i/N` pre-marks
+//! every point whose fingerprint does not hash to `i` ([`shard_of`],
+//! FNV-1a — a pure function of the fingerprint, stable across runs and
+//! machines) as attempted, deterministically partitioning any strategy's
+//! proposal stream. Disjoint shards union to exactly the unsharded point
+//! set; `cfa merge` folds their journals back into one whose front equals
+//! the unsharded run's.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::PathBuf;
@@ -46,6 +66,23 @@ use crate::util::faults;
 use crate::util::par::{try_parallel_map, CancelToken};
 use anyhow::{anyhow, Result};
 
+/// Which shard of `shards` owns a fingerprint: FNV-1a over the
+/// fingerprint bytes, mod the shard count. Hand-rolled (not
+/// `DefaultHasher`, whose algorithm is unspecified) so the partition is
+/// stable across runs, machines, and toolchains — the property that lets
+/// `cfa tune --shard i/N` instances run anywhere and still union to
+/// exactly the unsharded point set.
+pub fn shard_of(fingerprint: &str, shards: usize) -> usize {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x1_0000_0000_01b3;
+    let mut h = FNV_OFFSET;
+    for &b in fingerprint.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    (h % shards.max(1) as u64) as usize
+}
+
 /// Configured exploration run; build with [`Explorer::new`] + setters,
 /// execute with [`Explorer::explore`].
 pub struct Explorer {
@@ -63,6 +100,8 @@ pub struct Explorer {
     retry_failed: bool,
     cancel: CancelToken,
     deadline: Option<Duration>,
+    prune: bool,
+    shard: Option<(usize, usize)>,
 }
 
 /// What an exploration produced.
@@ -81,6 +120,13 @@ pub struct Outcome {
     pub failed: usize,
     /// Journaled failures this run re-attempted instead of skipping.
     pub retried: usize,
+    /// Replays early-aborted because the point's bandwidth upper bound was
+    /// dominated by the front (journaled as resumable `Pruned` records;
+    /// they consume no budget — they are exactly the replays *not* run).
+    pub pruned: usize,
+    /// Points owned by other shards (`--shard i/N`): excluded from this
+    /// run's proposal stream, never attempted or journaled here.
+    pub sharded_out: usize,
     /// True iff the run stopped at the deadline / cancellation token
     /// rather than exhausting its strategy or budget.
     pub interrupted: bool,
@@ -122,6 +168,20 @@ impl Outcome {
                 cs.hits, cs.misses, cs.entries
             ));
         }
+        if self.pruned > 0 {
+            s.push_str(&format!(
+                "  pruned: {} replays early-aborted (bandwidth bound dominated by the front)\n",
+                self.pruned
+            ));
+        }
+        if self.sharded_out > 0 {
+            s.push_str(&format!(
+                "  shard: owns {} of {} points ({} owned by other shards)\n",
+                self.points_total - self.sharded_out,
+                self.points_total,
+                self.sharded_out
+            ));
+        }
         if self.failed > 0 || self.retried > 0 {
             s.push_str(&format!(
                 "  quarantine: {} new failures journaled, {} journaled failures retried\n",
@@ -159,7 +219,31 @@ impl Explorer {
             retry_failed: true,
             cancel: CancelToken::new(),
             deadline: None,
+            prune: false,
+            shard: None,
         }
+    }
+
+    /// Early-abort replay (default: off): abort a point's replay the
+    /// moment its monotone bandwidth upper bound is dominated by the
+    /// Pareto front, journaling a resumable [`Evaluation::Pruned`] record
+    /// instead of a score. The surviving front and every success record
+    /// stay byte-identical to a no-abort run (the bound is a true upper
+    /// bound; see the module docs), only the work changes. Score-guided
+    /// strategies see no score for a pruned point — with pruning on, a
+    /// hill climb may walk a different (equally valid) path than without.
+    pub fn prune(mut self, enabled: bool) -> Explorer {
+        self.prune = enabled;
+        self
+    }
+
+    /// Own only shard `index` of `shards` (both 0-based index and total):
+    /// points whose fingerprint hashes elsewhere ([`shard_of`]) are
+    /// pre-marked attempted, so any strategy's stream covers exactly this
+    /// shard. Errors at [`Explorer::explore`] if `index >= shards`.
+    pub fn shard(mut self, index: usize, shards: usize) -> Explorer {
+        self.shard = Some((index, shards));
+        self
     }
 
     /// Reuse compiled transaction traces across the mem/PE variants of a
@@ -280,6 +364,10 @@ impl Explorer {
         };
         let mut resumed = 0usize;
         let mut retried = 0usize;
+        // every in-space index the resume journal mentioned (successes,
+        // failures, pruned) — strategies use it to steer fresh work away
+        // from known ground (e.g. hill-climb restarts)
+        let mut journaled: BTreeSet<usize> = BTreeSet::new();
         // failures kept skipped (retry disabled); rewritten into a fresh
         // out-journal so it stays complete
         let mut kept_failures: Vec<Evaluation> = Vec::new();
@@ -292,8 +380,10 @@ impl Explorer {
                     path.display()
                 );
             }
-            // first per index wins among failures; successes supersede
-            // failures regardless of line order
+            // first per index wins among failures/pruned; successes
+            // supersede both regardless of line order. A pruned record
+            // resumes like a failure: the front that dominated its bound
+            // is not an input of this run, so the point is re-attempted.
             let mut failed_first: BTreeMap<usize, Evaluation> = BTreeMap::new();
             for eval in records {
                 let Some(&i) = fp_to_idx.get(&eval.fingerprint()) else {
@@ -301,7 +391,8 @@ impl Explorer {
                     // foreign points are ignored, not errors
                     continue;
                 };
-                if eval.is_failed() {
+                journaled.insert(i);
+                if eval.is_failed() || eval.is_pruned() {
                     failed_first.entry(i).or_insert(eval);
                 } else if attempted.insert(i) {
                     scores.insert(i, eval.effective_mb_s());
@@ -321,6 +412,25 @@ impl Explorer {
                     attempted.insert(i);
                     resumed += 1;
                     kept_failures.push(eval);
+                }
+            }
+        }
+
+        // shard partition: pre-mark every point another shard owns as
+        // attempted, so any strategy's propose/filter loop skips it and
+        // still terminates (a strategy never distinguishes "attempted" from
+        // "not mine"). Applied after resume so a merged journal's foreign
+        // successes still count as resumed, not sharded out.
+        let mut sharded_out = 0usize;
+        if let Some((index, shards)) = self.shard {
+            if shards == 0 || index >= shards {
+                return Err(anyhow!(
+                    "invalid shard {index}/{shards}: index must be < shards, shards >= 1"
+                ));
+            }
+            for (i, p) in enumerated.points().iter().enumerate() {
+                if shard_of(&p.fingerprint(), shards) != index && attempted.insert(i) {
+                    sharded_out += 1;
                 }
             }
         }
@@ -367,6 +477,7 @@ impl Explorer {
             move || cancel.is_cancelled() || deadline.is_some_and(|t| Instant::now() >= t);
         let mut evaluated = 0usize;
         let mut failed = 0usize;
+        let mut pruned = 0usize;
         let mut quarantined: Vec<Evaluation> = Vec::new();
         let mut interrupted = false;
         loop {
@@ -386,6 +497,8 @@ impl Explorer {
                     space: &enumerated,
                     attempted: &attempted,
                     scores: &scores,
+                    mems: &self.space.mems,
+                    journaled: &journaled,
                 };
                 self.strategy.propose(&ctx, remaining)
             };
@@ -394,15 +507,25 @@ impl Explorer {
             if batch.is_empty() {
                 break;
             }
+            // The prune decision compares against a front snapshot taken
+            // BEFORE the batch fans out: every worker sees the same front
+            // regardless of interleaving, so which points get pruned — and
+            // hence the journal — is identical for any `--parallel`.
+            let front_keys = if self.prune { front.keys() } else { Vec::new() };
             // panic-isolated fan-out: one panicking point costs exactly
             // itself; items claimed after cancellation are skipped (None)
             // so an expired deadline ends the batch within one item
+            let prune = self.prune;
             let results = try_parallel_map(&batch, self.parallel, |&i| {
                 if cancelled() {
                     return None;
                 }
                 faults::check("dse::evaluate");
-                Some(evaluator.evaluate(&enumerated.points()[i]))
+                Some(if prune {
+                    evaluator.evaluate_pruned(&enumerated.points()[i], &front_keys)
+                } else {
+                    evaluator.evaluate(&enumerated.points()[i])
+                })
             });
             for (&i, result) in batch.iter().zip(results) {
                 let outcome = match result {
@@ -417,6 +540,19 @@ impl Explorer {
                 };
                 attempted.insert(i);
                 match outcome {
+                    Ok(eval) if eval.is_pruned() => {
+                        // attempted but unscored: no front offer, no score
+                        // for the strategy, no budget consumed — this is
+                        // exactly the full replay that was *not* run
+                        if let Some(w) = writer.as_mut() {
+                            w.push(&eval)?;
+                        }
+                        if let Some(cb) = &self.on_evaluation {
+                            cb(&eval);
+                        }
+                        crate::obs::registry().counter("cfa.dse.pruned").inc();
+                        pruned += 1;
+                    }
                     Ok(eval) => {
                         if let Some(w) = writer.as_mut() {
                             w.push(&eval)?;
@@ -466,6 +602,8 @@ impl Explorer {
             evaluated,
             failed,
             retried,
+            pruned,
+            sharded_out,
             interrupted,
             all,
             quarantined,
@@ -638,5 +776,91 @@ mod tests {
             .unwrap();
         assert_eq!(out.evaluated, 0);
         assert!(out.interrupted);
+    }
+
+    #[test]
+    fn shard_of_is_a_stable_total_partition() {
+        let fps = ["a|t4x4|cfa|default|c1|addr4096|pe64", "b", "c|x", ""];
+        for fp in fps {
+            let s = shard_of(fp, 3);
+            assert!(s < 3);
+            assert_eq!(s, shard_of(fp, 3), "stable across calls");
+        }
+        assert_eq!(shard_of("anything", 1), 0, "one shard owns everything");
+        // known FNV-1a vector: hash("") = offset basis
+        assert_eq!(shard_of("", usize::MAX >> 1), (0xcbf2_9ce4_8422_2325u64 % ((usize::MAX >> 1) as u64)) as usize);
+    }
+
+    #[test]
+    fn pruned_run_keeps_the_front_byte_identical() {
+        // Exhaustive proposes the whole (unbudgeted) space as one batch,
+        // and the prune snapshot predates the batch — so a multi-batch
+        // strategy is what exercises pruning. ModelGuided batches at its
+        // refit interval; the front it ends with must still equal the
+        // exhaustive reference, record for record.
+        let plain = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+            .explore()
+            .unwrap();
+        let pruned = Explorer::new(tiny(), Box::new(crate::dse::ModelGuided::new(42)))
+            .prune(true)
+            .explore()
+            .unwrap();
+        let render = |f: &[Evaluation]| {
+            let mut v: Vec<String> =
+                f.iter().map(|e| e.to_json().to_string_compact()).collect();
+            v.sort();
+            v
+        };
+        assert_eq!(render(&plain.front), render(&pruned.front));
+        // every point was either fully replayed or pruned, and completed
+        // records are byte-identical to the exhaustive run's (records are
+        // pure functions of the point)
+        assert_eq!(pruned.evaluated + pruned.pruned, plain.evaluated);
+        let plain_json = render(&plain.all);
+        for e in &pruned.all {
+            assert!(
+                plain_json.contains(&e.to_json().to_string_compact()),
+                "completed record diverged: {}",
+                e.fingerprint()
+            );
+        }
+        if pruned.pruned > 0 {
+            assert!(pruned.summary().contains("pruned: "), "{}", pruned.summary());
+        }
+    }
+
+    #[test]
+    fn shards_partition_the_space_and_union_to_it() {
+        let full = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+            .explore()
+            .unwrap();
+        let mut union: Vec<String> = Vec::new();
+        let mut total_sharded_out = 0;
+        for index in 0..2 {
+            let out = Explorer::new(tiny(), Box::new(Exhaustive::new()))
+                .shard(index, 2)
+                .explore()
+                .unwrap();
+            assert_eq!(out.evaluated + out.sharded_out, full.evaluated);
+            total_sharded_out += out.sharded_out;
+            union.extend(out.all.iter().map(Evaluation::fingerprint));
+        }
+        assert_eq!(total_sharded_out, full.evaluated, "each point has exactly one owner");
+        union.sort();
+        let mut expect: Vec<String> = full.all.iter().map(Evaluation::fingerprint).collect();
+        expect.sort();
+        assert_eq!(union, expect);
+    }
+
+    #[test]
+    fn invalid_shard_spec_is_an_error() {
+        assert!(Explorer::new(tiny(), Box::new(Exhaustive::new()))
+            .shard(2, 2)
+            .explore()
+            .is_err());
+        assert!(Explorer::new(tiny(), Box::new(Exhaustive::new()))
+            .shard(0, 0)
+            .explore()
+            .is_err());
     }
 }

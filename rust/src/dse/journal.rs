@@ -16,11 +16,13 @@
 //! old one. Corruption *inside* the terminated prefix is still a hard
 //! error — salvage recovers from interrupted writes, not from bit rot.
 
+use std::collections::{BTreeMap, BTreeSet};
 use std::fs::{File, OpenOptions};
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::{Path, PathBuf};
 
 use crate::dse::evaluate::Evaluation;
+use crate::dse::space::Enumerated;
 use crate::util::json;
 use anyhow::{anyhow, Context, Result};
 
@@ -101,6 +103,99 @@ pub fn truncate_torn_tail(path: &Path) -> Result<usize> {
         path.display()
     );
     Ok(torn)
+}
+
+/// Counters from a [`merge`] run, for the CLI summary line.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MergeStats {
+    /// Input journals read.
+    pub inputs: usize,
+    /// Records parsed across every input (pre-dedup).
+    pub read: usize,
+    /// Torn tail bytes ignored across the inputs.
+    pub torn_bytes: usize,
+    /// Records written to the output.
+    pub written: usize,
+    /// Input records dropped by fingerprint dedup.
+    pub duplicates: usize,
+    /// Written records whose fingerprint is not in the ordering space
+    /// (always 0 without one).
+    pub out_of_space: usize,
+}
+
+/// Fold shard journals (or any set of tune journals) into one:
+/// fingerprint-dedup across every input — a success supersedes a
+/// failure/pruned record regardless of file order, the first success wins
+/// otherwise (success records for one fingerprint are byte-identical by
+/// the journal determinism contract, so "first" is cosmetic) — then write
+/// the survivors to `out`.
+///
+/// With `order` (an enumerated space), in-space records are emitted in
+/// enumeration order, out-of-space records after them in first-seen
+/// order. Because a clean unsharded exhaustive run journals exactly the
+/// space's success records in enumeration order, merging the shards of
+/// such a run under its space reproduces the unsharded journal *file*
+/// byte for byte. Without `order`, records keep first-seen order.
+///
+/// Inputs are salvaged, not strictly read: a shard killed mid-append
+/// merges its clean prefix (the torn byte count is reported).
+pub fn merge(out: &Path, inputs: &[PathBuf], order: Option<&Enumerated>) -> Result<MergeStats> {
+    let mut stats = MergeStats {
+        inputs: inputs.len(),
+        ..MergeStats::default()
+    };
+    let mut best: BTreeMap<String, Evaluation> = BTreeMap::new();
+    let mut seen_order: Vec<String> = Vec::new();
+    for path in inputs {
+        let (records, torn) = read_salvage(path)?;
+        stats.read += records.len();
+        stats.torn_bytes += torn;
+        for eval in records {
+            let fp = eval.fingerprint();
+            match best.get(&fp) {
+                None => {
+                    seen_order.push(fp.clone());
+                    best.insert(fp, eval);
+                }
+                Some(prev) => {
+                    stats.duplicates += 1;
+                    let prev_success = !prev.is_failed() && !prev.is_pruned();
+                    let new_success = !eval.is_failed() && !eval.is_pruned();
+                    if new_success && !prev_success {
+                        best.insert(fp, eval);
+                    }
+                }
+            }
+        }
+    }
+    let mut w = Journal::create(out)?;
+    match order {
+        Some(space) => {
+            let mut rest: BTreeSet<&str> = best.keys().map(String::as_str).collect();
+            for p in space.points() {
+                let fp = p.fingerprint();
+                if let Some(eval) = best.get(&fp) {
+                    w.push(eval)?;
+                    stats.written += 1;
+                    rest.remove(fp.as_str());
+                }
+            }
+            for fp in &seen_order {
+                if rest.contains(fp.as_str()) {
+                    w.push(&best[fp])?;
+                    stats.written += 1;
+                    stats.out_of_space += 1;
+                }
+            }
+        }
+        None => {
+            for fp in &seen_order {
+                w.push(&best[fp])?;
+                stats.written += 1;
+            }
+        }
+    }
+    Ok(stats)
 }
 
 /// Flushing JSONL writer.
@@ -253,6 +348,43 @@ mod tests {
             assert_eq!(records[0].fingerprint(), evals[0].fingerprint());
         }
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn merge_dedups_and_success_supersedes_failure() {
+        let evals = sample_evals(3);
+        let dir = std::env::temp_dir();
+        let (a, b, out) = (
+            dir.join("cfa_dse_merge_a.jsonl"),
+            dir.join("cfa_dse_merge_b.jsonl"),
+            dir.join("cfa_dse_merge_out.jsonl"),
+        );
+        // shard A: a failure for point 0, a success for point 1
+        let mut j = Journal::create(&a).unwrap();
+        j.push(&Evaluation::failed(evals[0].point().clone(), "boom")).unwrap();
+        j.push(&evals[1]).unwrap();
+        drop(j);
+        // shard B: the success for point 0, a pruned duplicate of point 1,
+        // a pruned record for point 2
+        let mut j = Journal::create(&b).unwrap();
+        j.push(&evals[0]).unwrap();
+        j.push(&Evaluation::pruned(evals[1].point().clone(), 123.0)).unwrap();
+        j.push(&Evaluation::pruned(evals[2].point().clone(), 456.0)).unwrap();
+        drop(j);
+        let stats = merge(&out, &[a.clone(), b.clone()], None).unwrap();
+        assert_eq!((stats.inputs, stats.read), (2, 5));
+        assert_eq!((stats.written, stats.duplicates, stats.out_of_space), (3, 2, 0));
+        let back = read(&out).unwrap();
+        assert_eq!(back.len(), 3);
+        // first-seen order without a space; successes superseded both
+        // non-success duplicates
+        assert_eq!(back[0].fingerprint(), evals[0].fingerprint());
+        assert!(!back[0].is_failed(), "success supersedes the failure");
+        assert!(!back[1].is_failed() && !back[1].is_pruned());
+        assert!(back[2].is_pruned(), "unsuperseded pruned records survive");
+        for p in [&a, &b, &out] {
+            std::fs::remove_file(p).ok();
+        }
     }
 
     #[test]

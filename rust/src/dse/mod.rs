@@ -11,8 +11,11 @@
 //!   including burst widths, PE throughputs) with deterministic
 //!   enumeration and structured hill-climb coordinates;
 //! * [`Strategy`] — deterministic proposal streams: [`Exhaustive`],
-//!   seeded [`RandomSearch`], and [`HillClimb`] (±1 step per tile axis /
-//!   adjacent layout, random restarts);
+//!   seeded [`RandomSearch`], [`HillClimb`] (±1 step per tile axis /
+//!   adjacent layout, random restarts that avoid journaled ground), and
+//!   [`ModelGuided`] (rank unexplored points by a cheap analytic cost
+//!   model fitted on the scores so far — [`model`] — refit periodically,
+//!   optionally warm-started from a prior tune journal);
 //! * [`Evaluator`] — every point compiles an
 //!   [`ExperimentSpec`](crate::experiment::ExperimentSpec) and runs
 //!   `Session::run(Mode::Timing)` over a flat schedule (the memory-bound
@@ -35,6 +38,16 @@
 //! salvaged, and a wall-clock deadline / [`CancelToken`] stops the run
 //! cooperatively with a flushed, resumable journal (see `explore`).
 //!
+//! Three scaling features push past exhaustive sweeps (verification
+//! tier 12): early-abort replay (`Explorer::prune`) cuts off a point's
+//! replay the moment its monotone bandwidth upper bound is dominated by
+//! the Pareto front, journaling an [`Evaluation::Pruned`] record while
+//! leaving the surviving front byte-identical; sharded exploration
+//! (`Explorer::shard`, [`explore::shard_of`]) deterministically partitions
+//! any strategy's proposal stream by fingerprint hash so shards run on
+//! disjoint machines; and `cfa merge` folds shard journals back into one
+//! whose front equals the unsharded run's.
+//!
 //! The figure sweeps are thin wrappers over `Exhaustive` spaces
 //! ([`Space::fig15`] / [`Space::area`]; see `harness::figures`), and the
 //! CLI exposes the tuner as `cfa tune`.
@@ -55,6 +68,7 @@
 pub mod evaluate;
 pub mod explore;
 pub mod journal;
+pub mod model;
 pub mod space;
 pub mod strategy;
 
@@ -62,6 +76,7 @@ pub use crate::util::par::CancelToken;
 pub use evaluate::{
     dominates, geometry_key, pareto_front, pareto_indices, Evaluation, Evaluator, ParetoFront,
 };
-pub use explore::{Explorer, Outcome};
+pub use explore::{shard_of, Explorer, Outcome};
+pub use model::{CostModel, FeatureMap};
 pub use space::{Enumerated, MemVariant, Point, Space, SpaceWorkload, TileSet};
-pub use strategy::{Ctx, Exhaustive, HillClimb, RandomSearch, Strategy};
+pub use strategy::{Ctx, Exhaustive, HillClimb, ModelGuided, RandomSearch, Strategy};

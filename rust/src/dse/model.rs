@@ -1,0 +1,263 @@
+//! `dse::model` — a cheap analytic cost model over tune-journal rows.
+//!
+//! The model predicts a point's effective bandwidth from *derived
+//! features* that are pure functions of the point and its memory variant
+//! — burst-length and row-switch estimates, footprint, channel count, PE
+//! throughput, plus a per-layout intercept — so it can score **unexplored**
+//! proposals without planning or replaying anything. Fitting is ridge
+//! least-squares via hand-rolled normal equations (the offline crate set
+//! has no linear algebra), which keeps a refit at O(rows·d²+d³) for a
+//! feature dimension `d` of a dozen or so.
+//!
+//! Determinism contract: [`FeatureMap::for_space`] derives the layout
+//! one-hot ordering from enumeration order, training rows are consumed in
+//! `BTreeMap` (index) order, and the solver is straight-line f64
+//! arithmetic — the same rows always produce bit-identical weights, which
+//! is what makes [`ModelGuided`](crate::dse::ModelGuided) a *deterministic*
+//! proposal stream (verification tier 12).
+
+use crate::dse::space::Point;
+use crate::memsim::{MemConfig, Striping};
+
+/// Maps a [`Point`] to a feature vector. Owns the layout one-hot
+/// dictionary so every fit/predict pair agrees on the encoding.
+#[derive(Clone, Debug)]
+pub struct FeatureMap {
+    layouts: Vec<String>,
+}
+
+/// Number of numeric (non-one-hot) features, intercept included.
+const NUMERIC: usize = 8;
+
+impl FeatureMap {
+    /// Build the layout dictionary from a set of points (first-seen order;
+    /// for an enumerated space this is enumeration order, so the encoding
+    /// is deterministic).
+    pub fn for_space(points: &[Point]) -> FeatureMap {
+        let mut layouts: Vec<String> = Vec::new();
+        for p in points {
+            if !layouts.iter().any(|l| l == &p.layout) {
+                layouts.push(p.layout.clone());
+            }
+        }
+        FeatureMap { layouts }
+    }
+
+    /// Feature dimension (numeric features + one layout indicator each).
+    pub fn dim(&self) -> usize {
+        NUMERIC + self.layouts.len()
+    }
+
+    /// Derive the feature vector of a point under its memory variant.
+    /// Every feature is finite for any validated [`MemConfig`].
+    pub fn features(&self, p: &Point, mem: &MemConfig) -> Vec<f64> {
+        let eb = mem.elem_bytes.max(1) as f64;
+        let volume: f64 = p.tile.iter().map(|&d| d.max(1) as f64).product();
+        let inner = p.tile.last().copied().unwrap_or(1).max(1) as f64;
+        // burst-length proxy: the innermost contiguous run, capped by what
+        // one AXI burst can carry
+        let burst_cap = (mem.max_burst_beats.max(1) * mem.bus_bytes.max(1)) as f64;
+        let burst = (inner * eb).min(burst_cap);
+        // row-switch estimate: how many DRAM rows the tile footprint spans
+        let rows = volume * eb / mem.row_bytes.max(1) as f64;
+        let striping = match p.striping {
+            Striping::Address { .. } => 0.0,
+            Striping::Facet => 1.0,
+            Striping::Tile => 2.0,
+        };
+        let mut x = Vec::with_capacity(self.dim());
+        x.push(1.0); // intercept
+        x.push(burst.ln());
+        x.push((1.0 + volume).ln());
+        x.push((1.0 + rows).ln());
+        x.push(p.channels.max(1) as f64);
+        x.push(mem.peak_mb_s().max(1.0).ln());
+        x.push((1 + p.pe) as f64);
+        x.push(striping);
+        for l in &self.layouts {
+            x.push(if l == &p.layout { 1.0 } else { 0.0 });
+        }
+        x
+    }
+}
+
+/// A fitted linear model: predicted bandwidth = `weights · features`.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    pub weights: Vec<f64>,
+}
+
+impl CostModel {
+    /// Ridge least-squares fit of `ys ≈ X·w` via the normal equations
+    /// `(XᵀX + λI)·w = Xᵀy`. The ridge term keeps the system
+    /// well-conditioned when rows are few or features collinear (one-hot
+    /// columns with an intercept always are). Deterministic: the result
+    /// is a pure function of the rows in the order given.
+    pub fn fit(xs: &[Vec<f64>], ys: &[f64], ridge: f64) -> CostModel {
+        assert_eq!(xs.len(), ys.len(), "row/target count mismatch");
+        let d = xs.first().map(|x| x.len()).unwrap_or(0);
+        if d == 0 {
+            return CostModel { weights: Vec::new() };
+        }
+        let mut a = vec![vec![0.0f64; d]; d];
+        let mut b = vec![0.0f64; d];
+        for (x, &y) in xs.iter().zip(ys) {
+            assert_eq!(x.len(), d, "ragged feature row");
+            for i in 0..d {
+                for j in 0..d {
+                    a[i][j] += x[i] * x[j];
+                }
+                b[i] += x[i] * y;
+            }
+        }
+        for (i, row) in a.iter_mut().enumerate() {
+            row[i] += ridge.max(f64::MIN_POSITIVE);
+        }
+        CostModel {
+            weights: solve(a, b),
+        }
+    }
+
+    /// Predicted bandwidth for a feature vector.
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        self.weights.iter().zip(x).map(|(w, v)| w * v).sum()
+    }
+
+    /// Root-mean-square prediction error over a row set (0 for empty).
+    pub fn rms_error(&self, xs: &[Vec<f64>], ys: &[f64]) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        let sq: f64 = xs
+            .iter()
+            .zip(ys)
+            .map(|(x, &y)| {
+                let e = self.predict(x) - y;
+                e * e
+            })
+            .sum();
+        (sq / xs.len() as f64).sqrt()
+    }
+}
+
+/// Gaussian elimination with partial pivoting on the (symmetric
+/// positive-definite, thanks to the ridge) normal system. A degenerate
+/// pivot — impossible for `ridge > 0`, kept as a guard — zeroes that
+/// weight instead of dividing by ~0.
+fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Vec<f64> {
+    let d = b.len();
+    for col in 0..d {
+        let pivot = (col..d)
+            .max_by(|&i, &j| {
+                a[i][col]
+                    .abs()
+                    .partial_cmp(&a[j][col].abs())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .expect("non-empty pivot range");
+        a.swap(col, pivot);
+        b.swap(col, pivot);
+        let p = a[col][col];
+        if p.abs() < 1e-300 {
+            continue;
+        }
+        for row in col + 1..d {
+            let f = a[row][col] / p;
+            if f == 0.0 {
+                continue;
+            }
+            for k in col..d {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut w = vec![0.0f64; d];
+    for col in (0..d).rev() {
+        let mut acc = b[col];
+        for k in col + 1..d {
+            acc -= a[col][k] * w[k];
+        }
+        w[col] = if a[col][col].abs() < 1e-300 {
+            0.0
+        } else {
+            acc / a[col][col]
+        };
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::MemConfig;
+
+    fn point(layout: &str, tile: Vec<i64>, pe: u64) -> Point {
+        Point {
+            workload: "w".into(),
+            tile,
+            layout: layout.into(),
+            mem: "default".into(),
+            channels: 1,
+            striping: Striping::default(),
+            pe,
+        }
+    }
+
+    #[test]
+    fn features_are_finite_and_fixed_dim() {
+        let pts = vec![
+            point("cfa", vec![32, 32, 32], 64),
+            point("original", vec![8, 8, 8], 128),
+        ];
+        let fm = FeatureMap::for_space(&pts);
+        assert_eq!(fm.dim(), NUMERIC + 2);
+        for p in &pts {
+            let x = fm.features(p, &MemConfig::default());
+            assert_eq!(x.len(), fm.dim());
+            assert!(x.iter().all(|v| v.is_finite()), "{x:?}");
+        }
+    }
+
+    #[test]
+    fn fit_recovers_an_exact_linear_relation() {
+        // y = 3·x1 + 0.5·x2 over a full-rank synthetic design
+        let xs: Vec<Vec<f64>> = (0..12)
+            .map(|i| vec![1.0, i as f64, ((i * 7) % 5) as f64])
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x[1] + 0.5 * x[2]).collect();
+        let m = CostModel::fit(&xs, &ys, 1e-9);
+        assert!(m.rms_error(&xs, &ys) < 1e-6, "{}", m.rms_error(&xs, &ys));
+        for (x, &y) in xs.iter().zip(&ys) {
+            assert!((m.predict(x) - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn fit_is_deterministic_bit_for_bit() {
+        let pts = vec![
+            point("cfa", vec![32, 32, 32], 64),
+            point("original", vec![8, 16, 64], 64),
+            point("bbox", vec![16, 16, 16], 128),
+        ];
+        let fm = FeatureMap::for_space(&pts);
+        let cfg = MemConfig::default();
+        let xs: Vec<Vec<f64>> = pts.iter().map(|p| fm.features(p, &cfg)).collect();
+        let ys = vec![900.0, 220.0, 410.0];
+        let a = CostModel::fit(&xs, &ys, 1e-6);
+        let b = CostModel::fit(&xs, &ys, 1e-6);
+        let bits = |m: &CostModel| m.weights.iter().map(|w| w.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a), bits(&b));
+        assert!(a.rms_error(&xs, &ys).is_finite());
+    }
+
+    #[test]
+    fn degenerate_rows_do_not_panic() {
+        // identical rows: rank-1 design, the ridge keeps it solvable
+        let xs = vec![vec![1.0, 2.0]; 4];
+        let ys = vec![5.0; 4];
+        let m = CostModel::fit(&xs, &ys, 1e-6);
+        assert!(m.predict(&[1.0, 2.0]).is_finite());
+        assert!(m.rms_error(&xs, &ys) < 1.0);
+    }
+}

@@ -603,21 +603,42 @@ fn parse_tile_list(j: Option<&Json>, key: &str) -> Result<Option<Vec<IVec>>> {
     Ok(Some(out))
 }
 
-/// One `mem` entry: `{"name": ..., "<MemConfig field>": value, ...}`,
-/// starting from the paper's defaults. Covers the burst/width knobs the
-/// paper varies plus the rest of [`MemConfig`].
+/// One `mem` entry: `{"name": ..., "preset": ..., "<MemConfig field>":
+/// value, ...}`, starting from the paper's defaults — or from a named
+/// geometry preset ([`MemConfig::preset`]: `zc706`, `hbm`, `hbm-flat`),
+/// which explicit fields then override. Covers the burst/width knobs the
+/// paper varies plus the rest of [`MemConfig`]. An unnamed entry takes
+/// its preset's name when it has one.
 fn mem_variant_from_json(j: &Json, idx: usize) -> Result<MemVariant> {
     let Json::Obj(m) = j else {
         bail!("space json: 'mem' entries must be objects");
     };
+    // a named preset seeds the config first — field order must not matter,
+    // so this is a separate pass — and explicit fields then override it
     let mut cfg = MemConfig::default();
-    let mut name = format!("mem{idx}");
+    let mut preset_name = None;
+    for (k, v) in m {
+        if k.as_str() == "preset" {
+            let p = v
+                .as_str()
+                .ok_or_else(|| anyhow!("space json: mem 'preset' must be a string"))?;
+            cfg = MemConfig::preset(p).ok_or_else(|| {
+                anyhow!(
+                    "space json: unknown mem preset '{p}' (known: {})",
+                    MemConfig::preset_names().join(", ")
+                )
+            })?;
+            preset_name = Some(p.to_string());
+        }
+    }
+    let mut name = preset_name.unwrap_or_else(|| format!("mem{idx}"));
     for (k, v) in m {
         let num = || -> Result<f64> {
             v.as_f64()
                 .ok_or_else(|| anyhow!("space json: mem field '{k}' must be a number"))
         };
         match k.as_str() {
+            "preset" => {} // consumed above
             "name" => {
                 name = v
                     .as_str()
@@ -727,6 +748,35 @@ mod tests {
         assert!(Space::builtin("fig15").is_some());
         assert!(Space::builtin("fig17-quick").is_some());
         assert!(Space::builtin("nope").is_none());
+    }
+
+    #[test]
+    fn mem_presets_parse_seed_and_override() {
+        let space = Space::parse(
+            r#"{"workloads": ["jacobi2d5p"],
+                "mem": [{"preset": "hbm"},
+                        {"preset": "hbm", "name": "hbm-wide", "bus_bytes": 8},
+                        {"bus_bytes": 16}]}"#,
+        )
+        .unwrap();
+        // an unnamed preset entry takes the preset's name
+        assert_eq!(space.mems[0].name, "hbm");
+        let hbm = MemConfig::preset("hbm").unwrap();
+        assert_eq!(space.mems[0].cfg, hbm);
+        // explicit fields override the preset seed, order-independently
+        assert_eq!(space.mems[1].name, "hbm-wide");
+        assert_eq!(space.mems[1].cfg.bus_bytes, 8);
+        assert_eq!(space.mems[1].cfg.banks, hbm.banks);
+        // no preset: paper defaults, positional name
+        assert_eq!(space.mems[2].name, "mem2");
+        assert_eq!(space.mems[2].cfg.row_bytes, MemConfig::default().row_bytes);
+        // unknown presets fail with the known names in the message
+        let err = Space::parse(
+            r#"{"workloads": ["jacobi2d5p"], "mem": [{"preset": "hbm9"}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("unknown mem preset") && err.contains("hbm"), "{err}");
     }
 
     #[test]

@@ -11,16 +11,36 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 
-use crate::dse::space::Enumerated;
+use crate::dse::model::{CostModel, FeatureMap};
+use crate::dse::space::{Enumerated, MemVariant, Point};
+use crate::memsim::MemConfig;
 use crate::util::rng::Rng;
 
 /// What a strategy sees when proposing: the space, which points were
-/// already attempted (evaluated or failed), and the scalar climb score
-/// (effective bandwidth, MB/s) of every successful evaluation.
+/// already attempted (evaluated or failed), the scalar climb score
+/// (effective bandwidth, MB/s) of every successful evaluation, the
+/// space's memory variants (for feature derivation), and which indices
+/// arrived pre-attempted from a resumed journal (as opposed to being
+/// evaluated in this run).
 pub struct Ctx<'a> {
     pub space: &'a Enumerated,
     pub attempted: &'a BTreeSet<usize>,
     pub scores: &'a BTreeMap<usize, f64>,
+    pub mems: &'a [MemVariant],
+    pub journaled: &'a BTreeSet<usize>,
+}
+
+impl Ctx<'_> {
+    /// The [`MemConfig`] a point replays under, resolved by name against
+    /// the space's variants (enumerated points always resolve; the default
+    /// config is a never-taken fallback that keeps this total).
+    fn mem_cfg(&self, p: &Point) -> MemConfig {
+        self.mems
+            .iter()
+            .find(|m| m.name == p.mem)
+            .map(|m| m.cfg.clone())
+            .unwrap_or_default()
+    }
 }
 
 /// A deterministic proposal stream; see the module docs.
@@ -134,14 +154,36 @@ impl Strategy for HillClimb {
     fn propose(&mut self, ctx: &Ctx<'_>, max: usize) -> Vec<usize> {
         loop {
             let Some(cur) = self.current else {
-                // random restart among the unattempted points
+                // Random restart among the unattempted points. Prefer
+                // territory the journal has never seen: a resumed run used
+                // to restart onto journaled fingerprints (they are "free"
+                // until re-proposed, since resume only pre-marks failures'
+                // retries), burning restarts on known ground. Skip them —
+                // counted, so a resumed tune can report it — unless they
+                // are all that is left (preserving full coverage and the
+                // retry-failures-exactly-once contract).
                 let free: Vec<usize> = (0..ctx.space.len())
                     .filter(|i| !ctx.attempted.contains(i))
                     .collect();
                 if free.is_empty() {
                     return Vec::new();
                 }
-                let pick = free[self.rng.gen_usize(free.len())];
+                let unjournaled: Vec<usize> = free
+                    .iter()
+                    .copied()
+                    .filter(|i| !ctx.journaled.contains(i))
+                    .collect();
+                let pool = if unjournaled.is_empty() {
+                    &free
+                } else {
+                    if unjournaled.len() < free.len() {
+                        crate::obs::registry()
+                            .counter("cfa.dse.hill_restart_skips")
+                            .add((free.len() - unjournaled.len()) as u64);
+                    }
+                    &unjournaled
+                };
+                let pick = pool[self.rng.gen_usize(pool.len())];
                 self.current = Some(pick);
                 return vec![pick];
             };
@@ -177,6 +219,137 @@ impl Strategy for HillClimb {
     }
 }
 
+/// Model-guided best-first search: fit the cheap analytic cost model
+/// ([`dse::model`](crate::dse::model)) on every score so far, rank the
+/// unexplored points by predicted bandwidth, and evaluate best-first,
+/// refitting every [`ModelGuided::refit_every`] fresh scores.
+///
+/// Bootstraps with seeded random probes until [`ModelGuided::min_train`]
+/// scores exist (a model fitted on nothing ranks nothing). A warm-start
+/// journal ([`ModelGuided::with_warm_start`]) substitutes for bootstrap
+/// probes: its (point, score) rows join the training set even though the
+/// points may lie outside this space.
+///
+/// Deterministic: training rows are consumed in `BTreeMap` (index) order
+/// after the warm rows, the fit is straight-line arithmetic, and ranking
+/// ties break by enumeration index — the same prior results always produce
+/// the same next batch, preserving the journal's serial ≡ parallel
+/// contract. With an unbounded budget it still visits every point (ranking
+/// proposes all free points, worst-last), so coverage matches the other
+/// strategies.
+pub struct ModelGuided {
+    rng: Rng,
+    /// Scores required before the first fit.
+    min_train: usize,
+    /// Refit after this many fresh training rows (also the ranked batch
+    /// cap, so stale models never steer more than one refit interval).
+    refit_every: usize,
+    ridge: f64,
+    warm: Vec<(Point, f64)>,
+    /// Fitted state: feature map, weights, and how many training rows the
+    /// weights were fitted on (for the refit trigger).
+    fitted: Option<(FeatureMap, CostModel, usize)>,
+}
+
+impl ModelGuided {
+    pub fn new(seed: u64) -> ModelGuided {
+        // small defaults on purpose: even the 8-point CI smoke space gets a
+        // bootstrap batch and then ranked batches (a min_train the size of
+        // the space would degenerate to random search in one batch)
+        ModelGuided {
+            rng: Rng::new(seed),
+            min_train: 4,
+            refit_every: 4,
+            ridge: 1e-3,
+            warm: Vec::new(),
+            fitted: None,
+        }
+    }
+
+    /// Seed the training set with (point, effective MB/s) rows salvaged
+    /// from a prior tune journal — typically of a *different* space, which
+    /// is the point: the feature map only needs each row's mem name to
+    /// resolve against this space's variants (rows that do not resolve are
+    /// dropped; their features would be fiction).
+    pub fn with_warm_start(mut self, rows: Vec<(Point, f64)>) -> ModelGuided {
+        self.warm = rows;
+        self
+    }
+
+    /// Training rows visible right now: warm rows (space-filtered), then
+    /// this run's scores in index order.
+    fn training_rows<'c>(&self, ctx: &Ctx<'c>) -> Vec<(Point, MemConfig, f64)> {
+        let mut rows: Vec<(Point, MemConfig, f64)> = self
+            .warm
+            .iter()
+            .filter(|(p, _)| ctx.mems.iter().any(|m| m.name == p.mem))
+            .map(|(p, y)| (p.clone(), ctx.mem_cfg(p), *y))
+            .collect();
+        for (&i, &y) in ctx.scores {
+            let p = &ctx.space.points()[i];
+            rows.push((p.clone(), ctx.mem_cfg(p), y));
+        }
+        rows
+    }
+}
+
+impl Strategy for ModelGuided {
+    fn name(&self) -> &'static str {
+        "model-guided"
+    }
+
+    fn propose(&mut self, ctx: &Ctx<'_>, max: usize) -> Vec<usize> {
+        let mut free: Vec<usize> = (0..ctx.space.len())
+            .filter(|i| !ctx.attempted.contains(i))
+            .collect();
+        if free.is_empty() || max == 0 {
+            return Vec::new();
+        }
+        let rows = self.training_rows(ctx);
+        if rows.len() < self.min_train {
+            // bootstrap: seeded random probes (without replacement) until
+            // enough scores exist to fit on
+            let need = (self.min_train - rows.len()).min(max).min(free.len());
+            let mut out = Vec::with_capacity(need);
+            while out.len() < need {
+                let k = self.rng.gen_usize(free.len());
+                out.push(free.swap_remove(k));
+            }
+            out.sort_unstable();
+            return out;
+        }
+        let stale = match &self.fitted {
+            None => true,
+            Some((_, _, trained_on)) => rows.len() >= trained_on + self.refit_every,
+        };
+        if stale {
+            let _span = crate::obs::span("dse::model::fit");
+            let fm = FeatureMap::for_space(ctx.space.points());
+            let xs: Vec<Vec<f64>> = rows.iter().map(|(p, m, _)| fm.features(p, m)).collect();
+            let ys: Vec<f64> = rows.iter().map(|(_, _, y)| *y).collect();
+            let model = CostModel::fit(&xs, &ys, self.ridge);
+            crate::obs::registry().counter("cfa.dse.model_refits").inc();
+            self.fitted = Some((fm, model, rows.len()));
+        }
+        let (fm, model, _) = self.fitted.as_ref().expect("fitted above");
+        let mut ranked: Vec<(f64, usize)> = free
+            .iter()
+            .map(|&i| {
+                let p = &ctx.space.points()[i];
+                (model.predict(&fm.features(p, &ctx.mem_cfg(p))), i)
+            })
+            .collect();
+        // best predicted first; ties (and NaN-free f64s generally) break
+        // by enumeration index so the stream is a pure function of scores
+        ranked.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1)));
+        ranked
+            .into_iter()
+            .take(max.min(self.refit_every.max(1)))
+            .map(|(_, i)| i)
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -196,6 +369,16 @@ mod tests {
         space: &Enumerated,
         score: impl Fn(usize) -> f64,
     ) -> Vec<usize> {
+        drain_journaled(strategy, space, score, &BTreeSet::new())
+    }
+
+    fn drain_journaled(
+        strategy: &mut dyn Strategy,
+        space: &Enumerated,
+        score: impl Fn(usize) -> f64,
+        journaled: &BTreeSet<usize>,
+    ) -> Vec<usize> {
+        let mems = [MemVariant::new("default", MemConfig::default())];
         let mut attempted = BTreeSet::new();
         let mut scores = BTreeMap::new();
         let mut order = Vec::new();
@@ -205,6 +388,8 @@ mod tests {
                     space,
                     attempted: &attempted,
                     scores: &scores,
+                    mems: &mems,
+                    journaled,
                 };
                 strategy.propose(&ctx, usize::MAX)
             };
@@ -256,5 +441,97 @@ mod tests {
         let a = drain(&mut HillClimb::new(11), &space, |i| (i % 5) as f64);
         let b = drain(&mut HillClimb::new(11), &space, |i| (i % 5) as f64);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn hill_climb_restarts_prefer_unjournaled_points() {
+        let space = tiny_space();
+        // mark the first half journaled: every restart must land in the
+        // second half until only journaled ground remains
+        let journaled: BTreeSet<usize> = (0..space.len() / 2).collect();
+        let order = drain_journaled(&mut HillClimb::new(3), &space, |i| i as f64, &journaled);
+        let first_restart = order[0];
+        assert!(
+            !journaled.contains(&first_restart),
+            "restart {first_restart} landed on journaled ground"
+        );
+        // coverage is preserved: once unjournaled ground is exhausted the
+        // fallback still visits everything
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..space.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn model_guided_covers_the_space_and_is_deterministic() {
+        let space = tiny_space();
+        let score = |i: usize| ((i * 37) % 11) as f64;
+        let a = drain(&mut ModelGuided::new(5), &space, score);
+        let b = drain(&mut ModelGuided::new(5), &space, score);
+        assert_eq!(a, b, "same seed and scores, same proposal stream");
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(
+            sorted,
+            (0..space.len()).collect::<Vec<_>>(),
+            "unbounded budget still visits every point exactly once"
+        );
+    }
+
+    #[test]
+    fn model_guided_ranks_after_bootstrap() {
+        let space = tiny_space();
+        let mems = [MemVariant::new("default", MemConfig::default())];
+        let mut s = ModelGuided::new(9);
+        let mut attempted = BTreeSet::new();
+        let mut scores = BTreeMap::new();
+        let journaled = BTreeSet::new();
+        // first batch is bootstrap-sized, not the whole space
+        let batch = {
+            let ctx = Ctx {
+                space: &space,
+                attempted: &attempted,
+                scores: &scores,
+                mems: &mems,
+                journaled: &journaled,
+            };
+            s.propose(&ctx, usize::MAX)
+        };
+        assert_eq!(batch.len(), 4.min(space.len()), "bootstrap probes");
+        for i in batch {
+            attempted.insert(i);
+            scores.insert(i, (i % 7) as f64);
+        }
+        // once trained, batches are capped at the refit interval so the
+        // model is refreshed periodically
+        let ranked = {
+            let ctx = Ctx {
+                space: &space,
+                attempted: &attempted,
+                scores: &scores,
+                mems: &mems,
+                journaled: &journaled,
+            };
+            s.propose(&ctx, usize::MAX)
+        };
+        assert!(!ranked.is_empty());
+        assert!(ranked.len() <= 4, "ranked batch respects the refit cap");
+        assert!(ranked.iter().all(|i| !attempted.contains(i)));
+    }
+
+    #[test]
+    fn model_guided_warm_start_skips_unresolvable_rows() {
+        let space = tiny_space();
+        let mut alien = space.points()[0].clone();
+        alien.mem = "no-such-mem".into();
+        let warm = vec![
+            (space.points()[0].clone(), 100.0),
+            (alien, 900.0), // dropped: mem does not resolve in this space
+        ];
+        let mut s = ModelGuided::new(5).with_warm_start(warm);
+        let order = drain(&mut s, &space, |i| i as f64);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..space.len()).collect::<Vec<_>>());
     }
 }

@@ -357,6 +357,15 @@ impl ExperimentBuilder {
     }
 }
 
+/// Outcome of [`Session::run_trace_bounded`]: either a report
+/// bit-identical to [`Session::run_trace`]'s, or an abort carrying the
+/// monotone effective-bandwidth upper bound at the abort point.
+#[derive(Clone, Debug)]
+pub enum BoundedRun {
+    Completed(Report),
+    Pruned { bound_mb_s: f64 },
+}
+
 /// How to run a compiled session.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Mode {
@@ -848,6 +857,63 @@ impl Session {
         let wall0 = Instant::now();
         let (rep, _) = self.replay_trace(trace, None)?;
         Ok(self.report_from_batch("timing", &rep, wall0.elapsed().as_secs_f64()))
+    }
+
+    /// Early-abort variant of [`Session::run_trace`]: before every trace
+    /// entry, `dominated` is consulted with the current **monotone upper
+    /// bound** on the final effective bandwidth (MB/s), derived from
+    /// [`MemSim::min_final_cycles`] — the data bus moves at most one beat
+    /// per cycle, so `final_cycles >= bus_free + remaining_beats` at every
+    /// prefix, and dividing the (known) useful bytes by that lower bound
+    /// gives a bandwidth figure the finished replay can never exceed.
+    /// Returning `true` aborts the replay ([`BoundedRun::Pruned`] with the
+    /// bound); a completed replay returns a report **bit-identical** to
+    /// [`Session::run_trace`]'s. Multi-channel sessions have no bounded
+    /// mode and always run to completion (identical results, never pruned).
+    pub fn run_trace_bounded(
+        &self,
+        trace: &TxnTrace,
+        dominated: &mut dyn FnMut(f64) -> bool,
+    ) -> Result<BoundedRun> {
+        self.validate_trace(trace)?;
+        if self.spec.exec.channels > 1 {
+            return Ok(BoundedRun::Completed(self.run_trace(trace)?));
+        }
+        let wall0 = Instant::now();
+        let mem = &self.spec.mem;
+        let useful_b = trace.useful_elems * mem.elem_bytes;
+        let mut sim = MemSim::new(mem.clone());
+        let mut last_bound = f64::INFINITY;
+        let completed = sim.run_trace_bounded(trace, &mut |lb_cycles| {
+            let bound = if lb_cycles == 0 {
+                f64::INFINITY
+            } else {
+                useful_b as f64 / 1e6 / mem.secs(lb_cycles)
+            };
+            last_bound = bound;
+            dominated(bound)
+        });
+        match completed {
+            None => Ok(BoundedRun::Pruned {
+                bound_mb_s: last_bound,
+            }),
+            Some(cycles) => {
+                let rep = BatchReport {
+                    tiles: trace.tiles,
+                    waves: trace.waves,
+                    cycles,
+                    timing: sim.timing().clone(),
+                    raw_elems: trace.raw_elems,
+                    useful_elems: trace.useful_elems,
+                    transactions: trace.transactions(),
+                };
+                Ok(BoundedRun::Completed(self.report_from_batch(
+                    "timing",
+                    &rep,
+                    wall0.elapsed().as_secs_f64(),
+                )))
+            }
+        }
     }
 
     /// [`Session::run_trace`] plus a cycle-domain bandwidth

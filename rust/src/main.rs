@@ -6,7 +6,9 @@
 //!   plan       show an allocation's layout + burst plan for a benchmark/tile
 //!   run        end-to-end run (layout + memsim + PJRT compute + verify)
 //!   bench      regenerate a figure sweep (fig15 | fig16 | fig17)
-//!   tune       design-space exploration (tiling x layout x memory), resumable
+//!   tune       design-space exploration (tiling x layout x memory), resumable,
+//!              shardable (--shard I/N) and early-abort prunable (--prune)
+//!   merge      fold shard journals into one (fingerprint dedup)
 //!   serve      persistent multi-tenant autotuning daemon (shared compiled-state caches)
 //!   codegen    emit the HLS C the compiler pass produces (Fig 12/13)
 //!
@@ -16,7 +18,7 @@
 //! `--alloc` and enumerated by `--alloc all` / the bench sweeps.
 
 use cfa::coordinator::reference::StencilKind;
-use cfa::dse::{Exhaustive, Explorer, HillClimb, RandomSearch, Space, Strategy};
+use cfa::dse::{Exhaustive, Explorer, HillClimb, ModelGuided, RandomSearch, Space, Strategy};
 use cfa::experiment::{ExperimentSpec, Mode, Session};
 use cfa::harness::{figures, workloads};
 use cfa::layout::cfa::Cfa;
@@ -44,6 +46,7 @@ fn main() {
         "run" => cmd_run(),
         "bench" => cmd_bench(),
         "tune" => cmd_tune(),
+        "merge" => cmd_merge(),
         "serve" => cmd_serve(),
         "codegen" => cmd_codegen(),
         _ => {
@@ -68,9 +71,13 @@ fn print_help() {
          \x20 run                  end-to-end verified run (--benchmark, --alloc, --channels N, --striping P, --parallel N,\n\
          \x20                      --timeline PATH --epoch-cycles N for a per-epoch bandwidth timeline, ...)\n\
          \x20 bench                figure sweeps (--figure fig15|fig16|fig17, --quick, --parallel N, --json PATH)\n\
-         \x20 tune                 design-space exploration (--space, --strategy, --budget, --parallel,\n\
-         \x20                      --channels LIST, --striping LIST, --out, --resume, --no-retry-failed,\n\
-         \x20                      --deadline-secs N, --trace-cache, --profile PATH for a span trace)\n\
+         \x20 tune                 design-space exploration (--space, --strategy exhaustive|random|hill|model-guided,\n\
+         \x20                      --budget, --parallel, --channels LIST, --striping LIST, --mem PRESETS,\n\
+         \x20                      --out, --resume, --no-retry-failed, --deadline-secs N, --trace-cache,\n\
+         \x20                      --prune for early-abort replay, --shard I/N, --warm-start JOURNAL,\n\
+         \x20                      --profile PATH for a span trace)\n\
+         \x20 merge                fold shard journals into one (cfa merge OUT IN...; --space for\n\
+         \x20                      enumeration-order output; success records supersede failures)\n\
          \x20 serve                persistent autotuning daemon over line-delimited JSON\n\
          \x20                      (--addr HOST:PORT | --stdio, --workers N, --queue N);\n\
          \x20                      tenants share one session + trace cache across requests\n\
@@ -430,6 +437,22 @@ fn cmd_bench() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `--space` resolution shared by `tune` and `merge`: a builtin name or a
+/// JSON space file.
+fn load_space(arg: &str) -> anyhow::Result<Space> {
+    match Space::builtin(arg) {
+        Some(s) => Ok(s),
+        None => {
+            let text = std::fs::read_to_string(arg).map_err(|e| {
+                anyhow::anyhow!(
+                    "--space '{arg}' is neither a builtin space nor a readable file: {e}"
+                )
+            })?;
+            Space::parse(&text)
+        }
+    }
+}
+
 fn cmd_tune() -> anyhow::Result<()> {
     let cmd = Command::new("cfa tune", "design-space exploration")
         .opt(
@@ -437,7 +460,11 @@ fn cmd_tune() -> anyhow::Result<()> {
             "builtin (tiny | fig15 | fig15-quick | fig17 | fig17-quick) or a JSON file",
             Some("fig15-quick"),
         )
-        .opt("strategy", "exhaustive | random | hill", Some("exhaustive"))
+        .opt(
+            "strategy",
+            "exhaustive | random | hill | model-guided",
+            Some("exhaustive"),
+        )
         .opt("budget", "max new evaluations this run (0 = no cap)", Some("0"))
         .opt("parallel", "worker threads across points", Some("1"))
         .opt("seed", "seed for the random/hill strategies", Some("0"))
@@ -468,23 +495,45 @@ fn cmd_tune() -> anyhow::Result<()> {
             Some("on"),
         )
         .opt(
+            "mem",
+            "override the space's memory axis with named geometry presets, comma-separated (zc706 | hbm | hbm-flat)",
+            None,
+        )
+        .flag(
+            "prune",
+            "early-abort replays whose bandwidth upper bound the Pareto front already dominates (front is byte-identical; pruned points journal as resumable records)",
+        )
+        .opt(
+            "shard",
+            "own only shard I of N (I/N, 0-based): points are partitioned by fingerprint hash; fold shard journals with `cfa merge`",
+            None,
+        )
+        .opt(
+            "warm-start",
+            "seed the model-guided strategy's training set from a prior tune journal (other strategies ignore it)",
+            None,
+        )
+        .opt(
             "profile",
             "write a Chrome trace-event span profile (Perfetto-loadable) to PATH; journal bytes are unaffected",
             None,
         );
     let a = cmd.parse(&env_args(1)).map_err(anyhow::Error::msg)?;
-    let space_arg = a.get_or("space", "fig15-quick");
-    let mut space = match Space::builtin(space_arg) {
-        Some(s) => s,
-        None => {
-            let text = std::fs::read_to_string(space_arg).map_err(|e| {
+    let mut space = load_space(a.get_or("space", "fig15-quick"))?;
+    if let Some(list) = a.get("mem") {
+        let mut mems = Vec::new();
+        for part in list.split(',') {
+            let name = part.trim();
+            let cfg = MemConfig::preset(name).ok_or_else(|| {
                 anyhow::anyhow!(
-                    "--space '{space_arg}' is neither a builtin space nor a readable file: {e}"
+                    "--mem: unknown preset '{name}' (known: {})",
+                    MemConfig::preset_names().join(", ")
                 )
             })?;
-            Space::parse(&text)?
+            mems.push(cfa::dse::MemVariant::new(name, cfg));
         }
-    };
+        space.mems = mems;
+    }
     if let Some(list) = a.get("channels") {
         let mut channels = Vec::new();
         for part in list.split(',') {
@@ -520,7 +569,38 @@ fn cmd_tune() -> anyhow::Result<()> {
         "exhaustive" => Box::new(Exhaustive::new()),
         "random" => Box::new(RandomSearch::new(seed)),
         "hill" | "hillclimb" => Box::new(HillClimb::new(seed)),
-        s => anyhow::bail!("unknown strategy '{s}' (exhaustive | random | hill)"),
+        "model-guided" | "model" => {
+            let mut s = ModelGuided::new(seed);
+            if let Some(path) = a.get("warm-start") {
+                // salvage, not strict read: a warm-start journal is advice,
+                // and a torn tail from a killed run must not block the tune
+                let (records, _torn) =
+                    cfa::dse::journal::read_salvage(std::path::Path::new(path))?;
+                let rows: Vec<(cfa::dse::Point, f64)> = records
+                    .iter()
+                    .filter(|e| !e.is_failed() && !e.is_pruned())
+                    .map(|e| (e.point().clone(), e.effective_mb_s()))
+                    .collect();
+                println!(
+                    "warm-start: {} training rows from {path} ({} records)",
+                    rows.len(),
+                    records.len()
+                );
+                s = s.with_warm_start(rows);
+            }
+            Box::new(s)
+        }
+        s => anyhow::bail!("unknown strategy '{s}' (exhaustive | random | hill | model-guided)"),
+    };
+    let shard = match a.get("shard") {
+        None => None,
+        Some(spec) => {
+            let (i, n) = spec
+                .split_once('/')
+                .and_then(|(i, n)| Some((i.parse::<usize>().ok()?, n.parse::<usize>().ok()?)))
+                .ok_or_else(|| anyhow::anyhow!("--shard expects I/N (e.g. 0/4), got '{spec}'"))?;
+            Some((i, n))
+        }
     };
     let budget = a.get_usize("budget", 0).map_err(anyhow::Error::msg)?;
     let parallel = a.get_usize("parallel", 1).map_err(anyhow::Error::msg)?;
@@ -541,7 +621,11 @@ fn cmd_tune() -> anyhow::Result<()> {
         .journal(&out)
         .trace_cache(trace_cache)
         .retry_failed(!a.flag("no-retry-failed"))
+        .prune(a.flag("prune"))
         .cancel_token(token);
+    if let Some((i, n)) = shard {
+        explorer = explorer.shard(i, n);
+    }
     if budget > 0 {
         explorer = explorer.budget(budget);
     }
@@ -562,6 +646,39 @@ fn cmd_tune() -> anyhow::Result<()> {
     }
     print!("{}", outcome.summary());
     println!("journal: {out}");
+    Ok(())
+}
+
+fn cmd_merge() -> anyhow::Result<()> {
+    let cmd = Command::new("cfa merge", "fold shard journals into one")
+        .opt(
+            "space",
+            "builtin name or JSON file: emit in-space records in enumeration order (byte-identical to an unsharded exhaustive journal)",
+            None,
+        );
+    let a = cmd.parse(&env_args(1)).map_err(anyhow::Error::msg)?;
+    if a.positional.len() < 2 {
+        anyhow::bail!("usage: cfa merge OUT IN... [--space NAME|PATH]\n\n{}", cmd.usage());
+    }
+    let out = std::path::PathBuf::from(&a.positional[0]);
+    let inputs: Vec<std::path::PathBuf> =
+        a.positional[1..].iter().map(std::path::PathBuf::from).collect();
+    let order = match a.get("space") {
+        None => None,
+        Some(arg) => Some(load_space(arg)?.enumerate(&registry::global())?),
+    };
+    let stats = cfa::dse::journal::merge(&out, &inputs, order.as_ref())?;
+    println!(
+        "merge: {} journals, {} records -> {} written to {} \
+         ({} duplicates dropped, {} out-of-space, {} torn bytes ignored)",
+        stats.inputs,
+        stats.read,
+        stats.written,
+        out.display(),
+        stats.duplicates,
+        stats.out_of_space,
+        stats.torn_bytes
+    );
     Ok(())
 }
 

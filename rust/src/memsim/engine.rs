@@ -319,6 +319,50 @@ impl MemSim {
         self.now()
     }
 
+    /// Lower bound on the cycle when a replay with `remaining_bytes` still
+    /// to stream can possibly finish: the data bus moves at most one beat
+    /// per cycle, so the remaining beats serialize after the current
+    /// `bus_free`, and the command path never rolls back below `cmd_free`.
+    ///
+    /// This is the **monotone** bound the explorer's early-abort mode is
+    /// built on: submitting a span advances `bus_free` by at least the
+    /// beats it carried, while the remaining-beat term shrinks by at most
+    /// that many (⌈(a+b)/w⌉ − ⌈a/w⌉ ≤ ⌈b/w⌉), so the bound never
+    /// decreases as replay proceeds — and the final `now()` always
+    /// satisfies it, so an effective-bandwidth figure derived from it is a
+    /// true upper bound at every prefix (see DESIGN.md §"Scaling the
+    /// explorer").
+    pub fn min_final_cycles(&self, remaining_bytes: u64) -> u64 {
+        let beats = remaining_bytes.div_ceil(self.cfg.bus_bytes);
+        self.state.cmd_free.max(self.state.bus_free + beats)
+    }
+
+    /// Early-abort replay: identical to [`MemSim::run_trace`], except that
+    /// before every entry `dominated` is consulted with the current
+    /// [`MemSim::min_final_cycles`] bound. Returning `true` aborts the
+    /// replay immediately (`None`); a run that completes returns
+    /// `Some(now)` having evolved the state **bit-identically** to
+    /// `run_trace` — the bound is read-only, so a predicate that never
+    /// fires cannot perturb anything.
+    pub fn run_trace_bounded(
+        &mut self,
+        trace: &TxnTrace,
+        dominated: &mut dyn FnMut(u64) -> bool,
+    ) -> Option<u64> {
+        let _span = crate::obs::span("memsim::replay_bounded");
+        let eb = self.cfg.elem_bytes;
+        let mut remaining_b = trace.total_elems() * eb;
+        for i in 0..trace.len() {
+            if dominated(self.min_final_cycles(remaining_b)) {
+                return None;
+            }
+            let (dir, addr, len) = trace.entry(i);
+            self.submit_span_streamed(dir, addr * eb, len * eb);
+            remaining_b -= len * eb;
+        }
+        Some(self.now())
+    }
+
     /// Scalar replay of a compiled [`TxnTrace`]: the per-burst reference
     /// loop, just without a `Txn` list (bench baseline and property-test
     /// oracle for [`MemSim::run_trace`]).
@@ -1031,5 +1075,69 @@ mod tests {
                 "merged {t_merged} > split {t_split} (len {len}, cut {cut})"
             );
         });
+    }
+
+    fn random_trace(g: &crate::util::prop::Gen) -> TxnTrace {
+        let mut t = TxnTrace::new();
+        let n = g.i64(1, 24) as usize;
+        for _ in 0..n {
+            let dir = if g.bool() { Dir::Read } else { Dir::Write };
+            let addr = g.i64(0, 1 << 14) as u64;
+            let len = g.i64(1, 1024) as u64;
+            t.push(dir, addr, len);
+        }
+        t
+    }
+
+    #[test]
+    fn prop_bounded_replay_completion_is_bit_identical() {
+        // a predicate that never fires must leave the state exactly as
+        // run_trace does, and the bound it saw must be monotone and never
+        // exceed the final completion cycle
+        prop_run("bounded replay identity", Config::small(40), |g| {
+            let trace = random_trace(g);
+            let mut plain = sim();
+            let t_plain = plain.run_trace(&trace);
+            let mut bounded = sim();
+            let mut bounds: Vec<u64> = Vec::new();
+            let t_bounded = bounded
+                .run_trace_bounded(&trace, &mut |lb| {
+                    bounds.push(lb);
+                    false
+                })
+                .expect("never aborted");
+            assert_eq!(t_plain, t_bounded);
+            assert_eq!(plain.snapshot(), bounded.snapshot());
+            assert!(
+                bounds.windows(2).all(|w| w[0] <= w[1]),
+                "bound not monotone: {bounds:?}"
+            );
+            assert!(
+                bounds.iter().all(|&lb| lb <= t_plain),
+                "bound above final cycles {t_plain}: {bounds:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn bounded_replay_aborts_at_the_first_dominated_entry() {
+        let mut t = TxnTrace::new();
+        for i in 0..8u64 {
+            t.push(Dir::Read, i * 4096, 256);
+        }
+        let mut s = sim();
+        let mut calls = 0usize;
+        let aborted = s.run_trace_bounded(&t, &mut |_| {
+            calls += 1;
+            calls == 3
+        });
+        assert!(aborted.is_none());
+        assert_eq!(calls, 3, "stops probing after the abort");
+        // the first probe happens before any entry is submitted, so an
+        // immediately-dominated point costs zero replay work
+        let mut s2 = sim();
+        let zero = s2.run_trace_bounded(&t, &mut |_| true);
+        assert!(zero.is_none());
+        assert_eq!(s2.timing().axi_bursts, 0);
     }
 }

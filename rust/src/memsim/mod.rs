@@ -43,7 +43,7 @@ pub struct Txn {
 }
 
 /// Memory interface configuration. Defaults model the ZC706 HP0 port.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct MemConfig {
     /// Bytes per element (the paper transfers f64: 8).
     pub elem_bytes: u64,
@@ -143,6 +143,52 @@ impl MemConfig {
             );
         }
         Ok(())
+    }
+
+    /// Named configuration presets, reachable from the `dse` space JSON
+    /// (`{"preset": "hbm", ...}`) and `cfa tune --mem`.
+    ///
+    /// * `zc706` / `ddr` — the paper's testbed (the [`Default`] config):
+    ///   64-bit HP port, 8 KiB DDR3 rows, 8 banks.
+    /// * `hbm` — an HBM-like *pseudo-channel*: the geometry §VII points
+    ///   at. Narrower bus per channel but faster, many more banks, much
+    ///   shorter rows (1 KiB pages), a deeper outstanding window, and a
+    ///   nonzero shared-command-path cost — so multi-channel sweeps see
+    ///   the controller-wall effect out of the box. Row-friendly layouts
+    ///   gain less per burst (rows are short) but bank-level parallelism
+    ///   forgives scattered traffic more; that tradeoff is exactly what
+    ///   the preset exists to let `cfa tune` explore.
+    /// * `hbm-flat` — the same geometry with `cmd_shared_cycles: 0`, the
+    ///   idealized no-contention variant (useful as an ablation baseline).
+    pub fn preset(name: &str) -> Option<MemConfig> {
+        match name {
+            "zc706" | "ddr" | "default" => Some(MemConfig::default()),
+            "hbm" => Some(MemConfig {
+                elem_bytes: 8,
+                bus_bytes: 4,
+                clock_mhz: 450.0,
+                max_burst_beats: 64,
+                boundary_bytes: 4096,
+                issue_cycles: 4,
+                row_hit_cycles: 16,
+                row_miss_cycles: 36,
+                row_bytes: 1024,
+                banks: 16,
+                max_outstanding: 4,
+                turnaround_cycles: 4,
+                cmd_shared_cycles: 1,
+            }),
+            "hbm-flat" => Some(MemConfig {
+                cmd_shared_cycles: 0,
+                ..MemConfig::preset("hbm").expect("hbm preset exists")
+            }),
+            _ => None,
+        }
+    }
+
+    /// The canonical preset names (`preset` accepts a few aliases too).
+    pub fn preset_names() -> &'static [&'static str] {
+        &["zc706", "hbm", "hbm-flat"]
     }
 
     /// Peak bandwidth in MB/s (the roofline of Fig 15).
@@ -272,6 +318,29 @@ mod tests {
             let err = cfg.validate().expect_err(needle).to_string();
             assert!(err.contains(needle), "'{err}' should mention {needle}");
         }
+    }
+
+    #[test]
+    fn presets_validate_and_resolve() {
+        for &name in MemConfig::preset_names() {
+            let cfg = MemConfig::preset(name).expect(name);
+            cfg.validate().expect(name);
+        }
+        // aliases and the unknown-name contract
+        assert!(MemConfig::preset("ddr").is_some());
+        assert!(MemConfig::preset("default").is_some());
+        assert!(MemConfig::preset("nope").is_none());
+        // the HBM-like geometry is narrower, faster, more banked, shorter-rowed
+        let hbm = MemConfig::preset("hbm").unwrap();
+        let ddr = MemConfig::default();
+        assert!(hbm.bus_bytes < ddr.bus_bytes);
+        assert!(hbm.clock_mhz > ddr.clock_mhz);
+        assert!(hbm.banks > ddr.banks);
+        assert!(hbm.row_bytes < ddr.row_bytes);
+        assert_eq!(
+            MemConfig::preset("hbm-flat").unwrap().cmd_shared_cycles,
+            0
+        );
     }
 
     #[test]

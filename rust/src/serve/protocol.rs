@@ -12,10 +12,11 @@
 //! so clients can annotate freely):
 //!
 //! ```text
-//! {"cmd":"tune","id":ID, "space":"tiny"|{...}, "strategy":"exhaustive",
-//!  "seed":0, "budget":0, "parallel":1, "out":PATH?, "resume":PATH?,
-//!  "retry_failed":true, "deadline_secs":0, "trace_cache":true,
-//!  "stream":false, "profile":PATH?}
+//! {"cmd":"tune","id":ID, "space":"tiny"|{...}, "strategy":"exhaustive"
+//!  |"random"|"hill"|"model-guided", "seed":0, "budget":0, "parallel":1,
+//!  "out":PATH?, "resume":PATH?, "retry_failed":true, "deadline_secs":0,
+//!  "trace_cache":true, "prune":false, "shard":"I/N"?, "stream":false,
+//!  "profile":PATH?}
 //! {"cmd":"run","id":ID, "workload":"jacobi2d5p", "tile":[16,16,16],
 //!  "tiles_per_dim":3, "layout":"cfa", "mode":"timing"|"sweep",
 //!  "channels":1, "striping":"address:4096"?, "threads":1,
@@ -67,6 +68,11 @@ pub struct TuneRequest {
     pub retry_failed: bool,
     pub deadline_secs: u64,
     pub trace_cache: bool,
+    /// Early-abort replay: prune points whose bandwidth upper bound the
+    /// front already dominates (same semantics as `cfa tune --prune`).
+    pub prune: bool,
+    /// `"I/N"` — own only shard I of N (see `cfa tune --shard`).
+    pub shard: Option<(usize, usize)>,
     pub stream: bool,
     /// Server-side span-trace output path: the job runs under a span
     /// capture and writes Chrome trace-event JSON here. Advisory wall
@@ -162,6 +168,20 @@ fn parse_space(j: &Json) -> Result<Space> {
 }
 
 fn parse_tune(j: &Json) -> Result<TuneRequest> {
+    let shard = match field_str(j, "shard") {
+        None => None,
+        Some(spec) => {
+            let parts = spec
+                .split_once('/')
+                .and_then(|(i, n)| Some((i.parse::<usize>().ok()?, n.parse::<usize>().ok()?)));
+            let (i, n) =
+                parts.ok_or_else(|| anyhow!("'shard' must be \"I/N\" (e.g. \"0/4\"), got '{spec}'"))?;
+            if n == 0 || i >= n {
+                bail!("'shard' index must be < shards, shards >= 1 (got {i}/{n})");
+            }
+            Some((i, n))
+        }
+    };
     Ok(TuneRequest {
         space: parse_space(j)?,
         strategy: field_str(j, "strategy").unwrap_or_else(|| "exhaustive".to_string()),
@@ -173,6 +193,8 @@ fn parse_tune(j: &Json) -> Result<TuneRequest> {
         retry_failed: field_bool(j, "retry_failed", true)?,
         deadline_secs: field_u64(j, "deadline_secs", 0)?,
         trace_cache: field_bool(j, "trace_cache", true)?,
+        prune: field_bool(j, "prune", false)?,
+        shard,
         stream: field_bool(j, "stream", false)?,
         profile: field_str(j, "profile"),
     })
@@ -334,6 +356,8 @@ mod tests {
                 assert_eq!(t.parallel, 1);
                 assert!(t.retry_failed);
                 assert!(t.trace_cache);
+                assert!(!t.prune);
+                assert!(t.shard.is_none());
                 assert!(!t.stream);
                 assert!(t.out.is_none());
                 assert!(t.profile.is_none());
@@ -345,6 +369,29 @@ mod tests {
                 );
             }
             _ => panic!("expected tune"),
+        }
+    }
+
+    #[test]
+    fn tune_shard_and_prune_parse_and_validate() {
+        let (_, req) = parse_line(
+            r#"{"cmd":"tune","id":"s","space":"tiny","prune":true,"shard":"1/4"}"#,
+        );
+        match req.unwrap() {
+            Request::Tune(t) => {
+                assert!(t.prune);
+                assert_eq!(t.shard, Some((1, 4)));
+            }
+            _ => panic!("expected tune"),
+        }
+        // malformed specs are rejected with the field name in the error
+        for bad in [r#""shard":"4""#, r#""shard":"4/4""#, r#""shard":"0/0""#, r#""shard":"a/b""#] {
+            let line = format!(r#"{{"cmd":"tune","id":"s","space":"tiny",{bad}}}"#);
+            let (_, req) = parse_line(&line);
+            assert!(
+                req.unwrap_err().to_string().contains("shard"),
+                "{bad} should fail mentioning shard"
+            );
         }
     }
 

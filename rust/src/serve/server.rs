@@ -31,7 +31,7 @@
 //! * stdio EOF → drain without cancelling (a pipe's EOF is the end of
 //!   the request script, not an abandoned client).
 
-use crate::dse::{CancelToken, Exhaustive, Explorer, HillClimb, RandomSearch, Strategy};
+use crate::dse::{CancelToken, Exhaustive, Explorer, HillClimb, ModelGuided, RandomSearch, Strategy};
 use crate::experiment::{ExperimentSpec, Mode, Session, SessionCache};
 use crate::harness::workloads;
 use crate::layout::{Allocation as _, LayoutRegistry};
@@ -401,7 +401,8 @@ fn make_strategy(name: &str, seed: u64) -> Result<Box<dyn Strategy>> {
         "exhaustive" => Box::new(Exhaustive::new()),
         "random" => Box::new(RandomSearch::new(seed)),
         "hill" | "hillclimb" => Box::new(HillClimb::new(seed)),
-        s => bail!("unknown strategy '{s}' (exhaustive | random | hill)"),
+        "model-guided" | "model" => Box::new(ModelGuided::new(seed)),
+        s => bail!("unknown strategy '{s}' (exhaustive | random | hill | model-guided)"),
     })
 }
 
@@ -421,7 +422,11 @@ fn execute_tune(
         .registry(state.registry.clone())
         .parallel(t.parallel)
         .retry_failed(t.retry_failed)
+        .prune(t.prune)
         .cancel_token(cancel.clone());
+    if let Some((i, n)) = t.shard {
+        ex = ex.shard(i, n);
+    }
     if t.trace_cache {
         ex = ex
             .trace_provider(state.traces.clone() as Arc<dyn TraceProvider>)
@@ -458,7 +463,9 @@ fn execute_tune(
         ),
         ("interrupted", Json::Bool(out.interrupted)),
         ("points_total", Json::num(out.points_total as f64)),
+        ("pruned", Json::num(out.pruned as f64)),
         ("resumed", Json::num(out.resumed as f64)),
+        ("sharded_out", Json::num(out.sharded_out as f64)),
         ("summary", Json::str(out.summary())),
         (
             "trace_cache",

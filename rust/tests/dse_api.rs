@@ -9,13 +9,18 @@
 //!   with a full journal performs zero evaluations;
 //! * property tests (the `util::prop` substrate): the reported front is
 //!   actually non-dominated (and complete), and `Exhaustive` over tiny
-//!   random spaces finds exactly the brute-force best point.
+//!   random spaces finds exactly the brute-force best point;
+//! * explorer-scaling identities (verification tier 12): early-abort
+//!   replay preserves the front byte-for-byte on random spaces, an
+//!   N-shard run merged with `journal::merge` reproduces the unsharded
+//!   journal exactly, and the analytic cost model fits finitely and
+//!   deterministically.
 
 use std::path::{Path, PathBuf};
 
 use cfa::dse::{
-    dominates, journal, pareto_indices, Evaluation, Exhaustive, Explorer, HillClimb, MemVariant,
-    Outcome, Space, SpaceWorkload, Strategy, TileSet,
+    dominates, journal, pareto_indices, CostModel, Evaluation, Exhaustive, Explorer, FeatureMap,
+    HillClimb, MemVariant, ModelGuided, Outcome, Space, SpaceWorkload, Strategy, TileSet,
 };
 use cfa::harness::figures::{self, bandwidth_point_of, measure_bandwidth_named, BandwidthPoint};
 use cfa::harness::workloads::table1;
@@ -200,6 +205,193 @@ fn prop_pareto_front_is_non_dominated_and_complete() {
             assert!(front.iter().any(|&i| items[i].0 == best));
         }
     });
+}
+
+#[test]
+fn prop_early_abort_front_matches_no_abort_on_random_spaces() {
+    prop_run("early-abort front == no-abort front", Config::small(4), |g| {
+        let wl = table1(true);
+        let w = g.choose(&wl);
+        let reg = registry::global();
+        let tiles: Vec<IVec> = (0..g.usize(1, 2))
+            .map(|_| g.choose(&w.tile_sizes).clone())
+            .collect();
+        let mut layouts: Vec<&str> = reg.names().into_iter().filter(|_| g.bool()).collect();
+        if layouts.is_empty() {
+            layouts.push(names::CFA);
+        }
+        let space = Space {
+            workloads: vec![SpaceWorkload {
+                name: w.name.to_string(),
+                deps: w.deps.clone(),
+                tiles: TileSet::List(tiles),
+            }],
+            tiles_per_dim: 2,
+            layouts: layouts.iter().map(|s| s.to_string()).collect(),
+            mems: vec![MemVariant::paper_default()],
+            channels: vec![1],
+            stripings: vec![cfa::memsim::Striping::default()],
+            pe: vec![64],
+        };
+        let seed = g.i64(0, 1_000_000) as u64;
+        let reference = Explorer::new(space.clone(), Box::new(Exhaustive::new()))
+            .explore()
+            .unwrap();
+        let pruned = Explorer::new(space, Box::new(ModelGuided::new(seed)))
+            .prune(true)
+            .explore()
+            .unwrap();
+        // the surviving front is byte-identical (order-free: the two
+        // strategies visit points in different orders)
+        let render = |f: &[Evaluation]| {
+            let mut v: Vec<String> = f.iter().map(|e| e.to_json().to_string_compact()).collect();
+            v.sort();
+            v
+        };
+        assert_eq!(
+            render(&reference.front),
+            render(&pruned.front),
+            "seed {seed}: pruning changed the front"
+        );
+        // every point was attempted exactly once, as a replay or a prune
+        assert_eq!(
+            pruned.evaluated + pruned.pruned,
+            reference.evaluated,
+            "seed {seed}: attempted counts diverge"
+        );
+        // completed records are bit-identical to the no-abort run's
+        let full = render(&reference.all);
+        for e in &pruned.all {
+            assert!(
+                full.contains(&e.to_json().to_string_compact()),
+                "seed {seed}: {} completed with different bytes",
+                e.fingerprint()
+            );
+        }
+    });
+}
+
+#[test]
+fn sharded_merge_reproduces_the_unsharded_journal_byte_for_byte() {
+    let space = || Space::builtin("tiny").unwrap();
+    let reg = registry::global();
+    let enumerated = space().enumerate(&reg).unwrap();
+    let total = enumerated.len();
+
+    let unsharded_path = tmp("cfa_dse_unsharded.jsonl");
+    let unsharded = Explorer::new(space(), Box::new(Exhaustive::new()))
+        .journal(&unsharded_path)
+        .explore()
+        .unwrap();
+    assert_eq!(unsharded.evaluated, total);
+
+    let shards = 2usize;
+    let mut shard_paths = Vec::new();
+    let mut evaluated_total = 0usize;
+    for i in 0..shards {
+        let p = tmp(&format!("cfa_dse_shard{i}.jsonl"));
+        let out = Explorer::new(space(), Box::new(Exhaustive::new()))
+            .shard(i, shards)
+            .journal(&p)
+            .explore()
+            .unwrap();
+        // each shard attempts exactly the points the hash assigns it
+        let owned = enumerated
+            .points()
+            .iter()
+            .filter(|p| cfa::dse::shard_of(&p.fingerprint(), shards) == i)
+            .count();
+        assert_eq!(out.evaluated, owned, "shard {i}");
+        assert_eq!(out.sharded_out, total - owned, "shard {i}");
+        evaluated_total += out.evaluated;
+        shard_paths.push(p);
+    }
+    assert_eq!(evaluated_total, total, "shards overlap or miss points");
+
+    let merged_path = tmp("cfa_dse_merged.jsonl");
+    let stats = journal::merge(&merged_path, &shard_paths, Some(&enumerated)).unwrap();
+    assert_eq!(stats.written, total);
+    assert_eq!(stats.duplicates, 0);
+    assert_eq!(stats.out_of_space, 0);
+    assert_eq!(
+        std::fs::read_to_string(&unsharded_path).unwrap(),
+        std::fs::read_to_string(&merged_path).unwrap(),
+        "merged shard journal differs from the unsharded run's"
+    );
+
+    // resuming from the merged journal evaluates nothing new and lands on
+    // the identical front
+    let resumed = Explorer::new(space(), Box::new(Exhaustive::new()))
+        .resume(&merged_path)
+        .explore()
+        .unwrap();
+    assert_eq!(resumed.evaluated, 0);
+    assert_eq!(resumed.resumed, total);
+    assert_same_evals(&resumed.front, &unsharded.front, "merged-resume front");
+
+    std::fs::remove_file(&unsharded_path).ok();
+    std::fs::remove_file(&merged_path).ok();
+    for p in &shard_paths {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn prop_model_fit_is_finite_and_refit_deterministic() {
+    // training rows from a real exploration of the tiny space
+    let reg = registry::global();
+    let space = || Space::builtin("tiny").unwrap();
+    let enumerated = space().enumerate(&reg).unwrap();
+    let outcome = Explorer::new(space(), Box::new(Exhaustive::new()))
+        .explore()
+        .unwrap();
+    let fm = FeatureMap::for_space(enumerated.points());
+    let mem = MemConfig::default();
+    let xs: Vec<Vec<f64>> = outcome
+        .all
+        .iter()
+        .map(|e| fm.features(e.point(), &mem))
+        .collect();
+    let ys: Vec<f64> = outcome.all.iter().map(|e| e.effective_mb_s()).collect();
+    let model = CostModel::fit(&xs, &ys, 1e-3);
+    assert!(model.rms_error(&xs, &ys).is_finite(), "training error diverged");
+    for x in &xs {
+        assert!(model.predict(x).is_finite());
+    }
+    // refitting the same rows is bit-identical
+    let again = CostModel::fit(&xs, &ys, 1e-3);
+    for (a, b) in model.weights.iter().zip(&again.weights) {
+        assert_eq!(a.to_bits(), b.to_bits(), "refit is not deterministic");
+    }
+    // ... and on random targets the solver never emits NaN/inf, even for
+    // degenerate (constant, tiny, colinear) target vectors
+    prop_run("model fit finite on random targets", Config::small(6), |g| {
+        let n = g.usize(1, xs.len());
+        let rows = &xs[..n];
+        let targets: Vec<f64> = (0..n).map(|_| g.i64(-1000, 1000) as f64 * 0.125).collect();
+        let m = CostModel::fit(rows, &targets, 1e-3);
+        assert!(m.rms_error(rows, &targets).is_finite());
+        for x in rows {
+            assert!(m.predict(x).is_finite());
+        }
+    });
+    // a fixed-seed model-guided run is end-to-end deterministic: two runs
+    // journal byte-identical files (refits included)
+    let j1 = tmp("cfa_dse_model_det1.jsonl");
+    let j2 = tmp("cfa_dse_model_det2.jsonl");
+    for p in [&j1, &j2] {
+        Explorer::new(space(), Box::new(ModelGuided::new(17)))
+            .journal(p)
+            .explore()
+            .unwrap();
+    }
+    assert_eq!(
+        std::fs::read_to_string(&j1).unwrap(),
+        std::fs::read_to_string(&j2).unwrap(),
+        "fixed-seed model-guided runs diverged"
+    );
+    std::fs::remove_file(&j1).ok();
+    std::fs::remove_file(&j2).ok();
 }
 
 #[test]
